@@ -1,0 +1,96 @@
+//! Tables 3 & 4 analog: evaluate the trained toy ARMT on the synthetic
+//! BABILong tasks with and without Diagonal Batching.
+//!
+//! Paper claims reproduced at toy scale:
+//!   * Table 3 — both execution modes score the SAME (diagonal batching
+//!     is a drop-in replacement; drift does not change answers);
+//!   * Table 4 — wallclock comparison per length. (On the single-core
+//!     CPU backend the diagonal mode does more arithmetic per launch, so
+//!     the GPU speedups do not transfer; the launch-count ratio — the
+//!     quantity a GPU amortizes — is reported alongside. See
+//!     EXPERIMENTS.md "CPU-testbed caveat".)
+//!
+//! Run: `make toy && cargo run --release --example babilong_eval`
+
+use std::time::Instant;
+
+use diagonal_batching::babilong::{accuracy, Generator, Task};
+use diagonal_batching::bench::Table;
+use diagonal_batching::config::{ExecMode, Manifest};
+use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::scheduler::StepBackend;
+
+fn eval<B: StepBackend>(
+    engine: &mut InferenceEngine<B>,
+    episodes: &[diagonal_batching::babilong::Episode],
+    mode: ExecMode,
+) -> (f64, std::time::Duration, u64) {
+    let seg = engine.config().seg;
+    let mut preds = Vec::new();
+    let mut launches = 0;
+    let t0 = Instant::now();
+    for (i, e) in episodes.iter().enumerate() {
+        let mut req = Request::new(i as u64, e.tokens.clone());
+        req.want_logits = true;
+        req.mode = Some(mode);
+        let resp = engine.process(&req).unwrap();
+        launches += resp.stats.launches;
+        let pos = e.query_pos % seg;
+        preds.push(resp.logits.unwrap().last().unwrap().argmax_rows()[pos] as u32);
+    }
+    (accuracy(episodes, &preds), t0.elapsed(), launches)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let entry = manifest.model("toy")?.clone();
+    if !entry.trained {
+        println!("WARNING: toy weights are untrained (run `make toy`); accuracies are chance-level\n");
+    }
+    let backend = HloBackend::load(&manifest, "toy")?;
+    let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal);
+    let seg = entry.config.seg;
+    let episodes_per_point = 24;
+
+    let mut acc_table = Table::new(
+        "Table 3 analog: BABILong accuracy (%), sequential ARMT vs Diagonal Batching",
+        &["task", "length (tokens)", "ARMT", "ARMT + Diagonal Batching"],
+    );
+    let mut time_table = Table::new(
+        "Table 4 analog: wallclock (s) + launch counts per mode",
+        &["task", "length", "seq time", "diag time", "seq launches", "diag launches"],
+    );
+
+    for task in [Task::QA1, Task::QA2] {
+        for n_segments in [1usize, 2, 4, 8] {
+            let len = n_segments * seg;
+            let mut gen = Generator::new(manifest.babilong.clone(), 7 + n_segments as u64);
+            let eps = gen.batch(task, len, episodes_per_point);
+            let (acc_s, t_s, l_s) = eval(&mut engine, &eps, ExecMode::Sequential);
+            let (acc_d, t_d, l_d) = eval(&mut engine, &eps, ExecMode::Diagonal);
+            acc_table.row(vec![
+                task.to_string(),
+                len.to_string(),
+                format!("{:.1}", acc_s * 100.0),
+                format!("{:.1}", acc_d * 100.0),
+            ]);
+            time_table.row(vec![
+                task.to_string(),
+                len.to_string(),
+                format!("{:.2}", t_s.as_secs_f64()),
+                format!("{:.2}", t_d.as_secs_f64()),
+                l_s.to_string(),
+                l_d.to_string(),
+            ]);
+        }
+    }
+    acc_table.print();
+    time_table.print();
+    println!(
+        "\nchance accuracy: {:.1}%  |  episodes per point: {episodes_per_point}",
+        100.0 / manifest.babilong.n_places as f64
+    );
+    println!("note: equal accuracy columns == the paper's Table 3 claim (drop-in).");
+    Ok(())
+}

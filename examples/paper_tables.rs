@@ -1,0 +1,119 @@
+//! Regenerate EVERY table and figure of the paper's evaluation from the
+//! roofline simulator (DESIGN.md per-experiment index) in one run.
+//!
+//! Run: `cargo run --release --example paper_tables [h100]`
+
+use diagonal_batching::bench::{fmt_s, fmt_x, Table};
+use diagonal_batching::config::Manifest;
+use diagonal_batching::simulator::tables::{
+    exec_time_rows, fig1_rows, fig4_grouped_gemm_rows, fig5_attention_rows, fig6_rows, SEQ_LENS,
+};
+use diagonal_batching::simulator::DeviceSpec;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let dev = if std::env::args().any(|a| a == "h100") {
+        DeviceSpec::h100()
+    } else {
+        DeviceSpec::a100()
+    };
+    println!("=== simulated device: {} ===", dev.name);
+
+    // ---- Tables 1 / 5 / 6 / 7 (+ the 8/9 speedup rows) ---------------------
+    let specs: [(&str, &str, Vec<(usize, usize)>); 4] = [
+        ("Table 7", "llama-160m", vec![(1024, 128), (4096, 128)]),
+        (
+            "Table 1",
+            "llama-3.2-1b",
+            vec![(512, 128), (1024, 128), (2048, 128), (4096, 128)],
+        ),
+        ("Table 5", "llama-3.2-3b", vec![(1024, 128), (4096, 128)]),
+        ("Table 6", "llama-3.1-8b", vec![(1024, 128), (4096, 128)]),
+    ];
+    for (table_id, model, configs) in specs {
+        let base = manifest.any_config(model)?;
+        for (seg, mem) in configs {
+            let rows = exec_time_rows(base, &dev, seg, mem, &SEQ_LENS);
+            let mut t = Table::new(
+                &format!("{table_id}: {model}, configuration ({seg}, {mem})"),
+                &["method", "4096", "8192", "16384", "32768", "65536", "131072"],
+            );
+            let line = |label: &str, f: &dyn Fn(&_) -> String| {
+                std::iter::once(label.to_string()).chain(rows.iter().map(f)).collect()
+            };
+            t.row(line(&format!("{model} (full attn)"), &|r: &_| fmt_s(r.llama_s)));
+            t.row(line("ARMT (sequential)", &|r: &_| fmt_s(r.armt_seq_s)));
+            t.row(line("ARMT (diagonal)", &|r: &_| fmt_s(r.armt_diag_s)));
+            t.row(line("speedup vs ARMT (T9)", &|r: &_| fmt_x(r.speedup_vs_armt())));
+            t.row(line("speedup vs llama (T8)", &|r: &_| fmt_x(r.speedup_vs_llama())));
+            t.print();
+        }
+    }
+
+    // ---- Fig. 1 headline ----------------------------------------------------
+    let base_1b = manifest.any_config("llama-3.2-1b")?;
+    let mut t = Table::new(
+        "Fig. 1: 1B headline (seg 1024, mem 128)",
+        &["seq len", "llama (s)", "ARMT diag (s)", "speedup", "memory saving"],
+    );
+    for r in fig1_rows(base_1b, &dev, &SEQ_LENS) {
+        t.row(vec![
+            r.seq_len.to_string(),
+            fmt_s(r.llama_s),
+            fmt_s(r.armt_diag_s),
+            fmt_x(r.speedup),
+            format!("{:.1}x", r.memory_saving),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig. 4 grouped GEMM --------------------------------------------------
+    let groups = [1usize, 2, 4, 8, 16, 32];
+    for (label, m, n, k) in [
+        ("1B linear (1152 x 2048 x 2048)", 1152usize, 2048usize, 2048usize),
+        ("8B linear (1152 x 4096 x 4096)", 1152, 4096, 4096),
+    ] {
+        let mut t = Table::new(
+            &format!("Fig. 4: grouped GEMM achieved TFLOP/s — {label}"),
+            &["group", "grouped GEMM", "batched GEMM (same shapes)"],
+        );
+        for (g, grouped, batched) in fig4_grouped_gemm_rows(&dev, m, n, k, &groups) {
+            t.row(vec![g.to_string(), format!("{grouped:.1}"), format!("{batched:.1}")]);
+        }
+        t.print();
+    }
+
+    // ---- Fig. 5 attention batching --------------------------------------------
+    for seg_len in [640usize, 1152, 2176, 4224] {
+        let mut t = Table::new(
+            &format!("Fig. 5: attention speedup vs batch (T = {seg_len})"),
+            &["batch", "relative FLOPS"],
+        );
+        for (b, rel) in fig5_attention_rows(&dev, base_1b, seg_len, &[1, 2, 4, 8, 16, 32]) {
+            t.row(vec![b.to_string(), format!("{rel:.2}x")]);
+        }
+        t.print();
+    }
+
+    // ---- Fig. 6 diagonal vs minibatch ------------------------------------------
+    for model in ["llama-160m", "llama-3.2-1b", "llama-3.2-3b", "llama-3.1-8b"] {
+        let base = manifest.any_config(model)?;
+        let mut t = Table::new(
+            &format!("Fig. 6: time per segment — {model} (seg 1024, 32 segments)"),
+            &["batch", "minibatch (s/seg)", "diagonal (s/seg)", "ideal even load (s/seg)"],
+        );
+        for r in fig6_rows(base, &dev, 1024, 128, 32, &[1, 2, 4, 8, 16]) {
+            t.row(vec![
+                r.batch.to_string(),
+                fmt_s(r.minibatch_s),
+                fmt_s(r.diagonal_s),
+                fmt_s(r.ideal_s),
+            ]);
+        }
+        t.print();
+    }
+
+    println!("\n(Table 2 and Tables 3-4 are measured, not simulated — see");
+    println!(" `cargo bench --bench table2_error` and `--example babilong_eval`.)");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: load the AOT artifacts, run one long input through BOTH
+//! schedules on the real PJRT backend, and verify the paper's two core
+//! claims at demo scale:
+//!
+//!   1. launches drop from S*L to S+L-1 (Fig. 3);
+//!   2. outputs match the sequential baseline (Table 2: < 2% drift).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use diagonal_batching::config::{ExecMode, Manifest};
+use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::runtime::HloBackend;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let model = "tiny";
+    println!("loading '{model}' artifacts (PJRT CPU)...");
+    let backend = HloBackend::load(&manifest, model)?;
+    let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal);
+
+    let cfg = engine.config().clone();
+    let n_segments = 12;
+    let tokens: Vec<u32> = (0..n_segments * cfg.seg)
+        .map(|i| ((i as u32) * 31 + 7) % cfg.vocab as u32)
+        .collect();
+    println!(
+        "input: {} tokens = {} segments x {} (model: d={} L={} mem={})\n",
+        tokens.len(),
+        n_segments,
+        cfg.seg,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.mem
+    );
+
+    let mut diag_req = Request::new(1, tokens.clone());
+    diag_req.want_logits = true;
+    diag_req.mode = Some(ExecMode::Diagonal);
+    let mut seq_req = diag_req.clone();
+    seq_req.id = 2;
+    seq_req.mode = Some(ExecMode::Sequential);
+
+    let diag = engine.process(&diag_req)?;
+    let seq = engine.process(&seq_req)?;
+
+    println!("schedule     launches   mean group   wall");
+    println!(
+        "diagonal     {:>8}   {:>10.2}   {:?}",
+        diag.stats.launches,
+        diag.stats.mean_group(),
+        diag.stats.wall
+    );
+    println!(
+        "sequential   {:>8}   {:>10.2}   {:?}",
+        seq.stats.launches,
+        seq.stats.mean_group(),
+        seq.stats.wall
+    );
+    assert_eq!(diag.stats.launches as usize, n_segments + cfg.n_layers - 1);
+    assert_eq!(seq.stats.launches as usize, n_segments * cfg.n_layers);
+
+    // Table 2 drift check.
+    let dl = diag.logits.as_ref().unwrap();
+    let sl = seq.logits.as_ref().unwrap();
+    let mut worst = 0.0f32;
+    for (a, b) in dl.iter().zip(sl) {
+        worst = worst.max(a.rel_error(b));
+    }
+    println!("\nmax relative logits drift diagonal vs sequential: {:.5}%", worst * 100.0);
+    assert!(worst < 0.02, "drift exceeds the paper's 2% bound");
+
+    // greedy decode agreement
+    let agree = dl
+        .iter()
+        .zip(sl)
+        .map(|(a, b)| {
+            let (aa, bb) = (a.argmax_rows(), b.argmax_rows());
+            aa.iter().zip(&bb).filter(|(x, y)| x == y).count()
+        })
+        .sum::<usize>() as f64
+        / (n_segments * cfg.seg) as f64;
+    println!("greedy-token agreement: {:.2}%", agree * 100.0);
+
+    println!("\nOK: diagonal batching preserved outputs with {}x fewer launches", {
+        let s = n_segments as f64 * cfg.n_layers as f64;
+        let d = (n_segments + cfg.n_layers - 1) as f64;
+        format!("{:.1}", s / d)
+    });
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! End-to-end serving driver (the repo's E2E validation run, recorded in
+//! EXPERIMENTS.md): load the TRAINED toy ARMT artifacts on the PJRT
+//! backend, serve batched BABILong-style long-context requests over the
+//! TCP server, and report latency / throughput / answer accuracy —
+//! exactly what a downstream deployment of the paper's system would do.
+//!
+//! Run: `make artifacts && make toy && cargo run --release --example serve_longctx`
+
+use std::time::Instant;
+
+use diagonal_batching::babilong::{accuracy, Generator, Task};
+use diagonal_batching::config::{ExecMode, Manifest};
+use diagonal_batching::coordinator::InferenceEngine;
+use diagonal_batching::json::Value;
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::server::{Client, Server};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let entry = manifest.model("toy")?.clone();
+    println!(
+        "loading 'toy' (trained={}) on PJRT CPU; serving diagonal-batched ARMT",
+        entry.trained
+    );
+    let backend = HloBackend::load(&manifest, "toy")?;
+    let engine = InferenceEngine::new(backend, ExecMode::Diagonal);
+    let server = Server::start(engine, "127.0.0.1:0", 32)?;
+    let addr = server.addr.to_string();
+    println!("server up on {addr}\n");
+
+    let seg = entry.config.seg;
+    let n_clients = 4usize;
+    let per_client = 8usize;
+    let episode_len = 8 * seg; // 8 segments per request
+
+    let mut gen = Generator::new(manifest.babilong.clone(), 2024);
+    // Pre-generate every client's episodes (QA1) so accuracy is scorable.
+    let episodes: Vec<Vec<diagonal_batching::babilong::Episode>> = (0..n_clients)
+        .map(|_| gen.batch(Task::QA1, episode_len, per_client))
+        .collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (ci, eps) in episodes.iter().enumerate() {
+        let addr = addr.clone();
+        let eps = eps.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut lat_ms = Vec::new();
+            let mut preds = Vec::new();
+            for e in &eps {
+                let resp = loop {
+                    match client.infer(&e.tokens, None) {
+                        Ok(r) => break r,
+                        Err(err) if err.to_string().contains("queue full") => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(err) => panic!("client {ci}: {err}"),
+                    }
+                };
+                lat_ms.push(resp.req("latency_ms").unwrap().as_f64().unwrap());
+                // greedy_tail holds the final segment's argmax tokens; the
+                // answer sits at the query position within that segment.
+                let tail = resp.req("greedy_tail").unwrap().as_u32_vec().unwrap();
+                preds.push(tail[(e.query_pos) % tail.len().max(1)]);
+            }
+            (lat_ms, preds)
+        }));
+    }
+
+    let mut all_lat = Vec::new();
+    let mut all_preds = Vec::new();
+    for h in handles {
+        let (lat, preds) = h.join().unwrap();
+        all_lat.extend(lat);
+        all_preds.push(preds);
+    }
+    let wall = t0.elapsed();
+
+    let total_reqs = n_clients * per_client;
+    let total_tokens = total_reqs * episode_len;
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| all_lat[((all_lat.len() as f64 * q) as usize).min(all_lat.len() - 1)];
+
+    println!("requests          : {total_reqs} ({n_clients} concurrent clients)");
+    println!("tokens/request    : {episode_len} ({} segments)", episode_len / seg);
+    println!("total wall        : {wall:?}");
+    println!(
+        "throughput        : {:.1} req/s | {:.0} tokens/s",
+        total_reqs as f64 / wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency ms        : p50 {:.1} | p90 {:.1} | p99 {:.1} | max {:.1}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        all_lat[all_lat.len() - 1]
+    );
+
+    let mut hits = 0usize;
+    for (eps, preds) in episodes.iter().zip(&all_preds) {
+        hits += (accuracy(eps, preds) * eps.len() as f64).round() as usize;
+    }
+    println!(
+        "QA1 answer accuracy: {:.1}% over {} episodes (chance {:.1}%){}",
+        100.0 * hits as f64 / total_reqs as f64,
+        total_reqs,
+        100.0 / manifest.babilong.n_places as f64,
+        if entry.trained { "" } else { "  [untrained weights — run `make toy`]" }
+    );
+
+    // stats endpoint sanity
+    let mut c = Client::connect(&addr)?;
+    let ping = c.roundtrip(&Value::obj(vec![("cmd", Value::Str("ping".into()))]))?;
+    println!("server alive after load: {}", ping.get("ok").is_some());
+
+    server.stop();
+    println!("server stopped cleanly");
+    Ok(())
+}

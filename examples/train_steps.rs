@@ -1,0 +1,158 @@
+//! Training through the diagonal schedule (paper Appendix A: "we
+//! implemented backward pass for diagonal batching to support training").
+//!
+//! This driver runs the diagonal FORWARD wavefront while recording each
+//! iteration's inputs, then runs the REVERSE wavefront through the AOT
+//! `grouped_step_bwd` executable: output cotangents shift down one layer
+//! per reverse iteration (the exact adjoint of the forward shift), state
+//! cotangents (dA, dz) flow right-to-left across iterations, and the
+//! per-layer parameter gradients accumulate across all iterations.
+//!
+//! The objective is a simple L2 pull on the final-layer outputs
+//! (loss = 0.5 Σ ||y_out||²) — enough to demonstrate end-to-end gradient
+//! flow and that SGD on the AOT gradients reduces the loss monotonically.
+//!
+//! Run: `make artifacts && cargo run --release --example train_steps`
+
+use diagonal_batching::config::Manifest;
+use diagonal_batching::model::{PARAM_ORDER};
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::scheduler::StepBackend;
+use diagonal_batching::tensor::{self, Rng, Tensor};
+
+struct StepRecord {
+    x: Tensor,
+    a: Tensor,
+    z: Tensor,
+    mask: Vec<f32>,
+    y: Tensor,
+}
+
+/// Diagonal forward pass, recording per-iteration primals.
+/// Returns (records, loss) with loss = 0.5 * mean(y_out^2).
+fn forward(
+    backend: &mut HloBackend,
+    segments: &[Vec<u32>],
+) -> (Vec<StepRecord>, f64) {
+    let cfg = backend.config().clone();
+    let (l_total, s_total) = (cfg.n_layers, segments.len());
+    let mut x = Tensor::zeros(&[l_total, cfg.seg_total, cfg.d_model]);
+    let mut a = Tensor::zeros(&[l_total, cfg.d_model, cfg.phi_dim]);
+    let mut z = Tensor::zeros(&[l_total, cfg.phi_dim]);
+    let mut active = vec![false; l_total];
+    let mut records = Vec::new();
+    let mut loss = 0.0f64;
+
+    for i in 0..s_total + l_total - 1 {
+        if i < s_total {
+            x.set_index0(0, &backend.embed(&segments[i]).unwrap());
+            active[0] = true;
+        } else {
+            active[0] = false;
+        }
+        let mask: Vec<f32> = active.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        let (y, a2, z2) = backend.grouped_step(&x, &a, &z, &mask).unwrap();
+        if active[l_total - 1] {
+            let y_out = y.index0(l_total - 1);
+            let n = (s_total * y_out.len()) as f64;
+            loss += 0.5 * y_out.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / n;
+        }
+        records.push(StepRecord { x: x.clone(), a: a.clone(), z: z.clone(), mask, y: y.clone() });
+        a = a2;
+        z = z2;
+        for l in (1..l_total).rev() {
+            if active[l - 1] {
+                x.set_index0(l, &y.index0(l - 1));
+            }
+            active[l] = active[l - 1];
+        }
+    }
+    (records, loss)
+}
+
+/// Reverse wavefront: returns parameter gradients in PARAM_ORDER.
+fn backward(backend: &mut HloBackend, records: &[StepRecord]) -> Vec<Tensor> {
+    let cfg = backend.config().clone();
+    let l_total = cfg.n_layers;
+    let mut dx_next = Tensor::zeros(&[l_total, cfg.seg_total, cfg.d_model]);
+    let mut da = Tensor::zeros(&[l_total, cfg.d_model, cfg.phi_dim]);
+    let mut dz = Tensor::zeros(&[l_total, cfg.phi_dim]);
+    let mut param_grads: Option<Vec<Tensor>> = None;
+
+    for rec in records.iter().rev() {
+        // dy: adjoint of the forward shift — what iteration i+1 consumed
+        // from slot l flows back into slot l's output...
+        let mut dy = Tensor::zeros(&[l_total, cfg.seg_total, cfg.d_model]);
+        for l in 0..l_total - 1 {
+            if rec.mask[l] == 1.0 {
+                dy.set_index0(l, &dx_next.index0(l + 1));
+            }
+        }
+        // ...plus the loss tap on completed segments (slot L-1):
+        // d(0.5*mean(y^2))/dy = y / N.
+        if rec.mask[l_total - 1] == 1.0 {
+            let y_out = rec.y.index0(l_total - 1);
+            let n = (records.iter().filter(|r| r.mask[l_total - 1] == 1.0).count()
+                * y_out.len()) as f32;
+            dy.set_index0(l_total - 1, &tensor::scale(&y_out, 1.0 / n));
+        }
+
+        let grads = backend
+            .grouped_step_bwd(&rec.x, &rec.a, &rec.z, &rec.mask, &dy, &da, &dz)
+            .unwrap();
+        dx_next = grads[0].clone();
+        da = grads[1].clone();
+        dz = grads[2].clone();
+        let pg = &grads[3..];
+        param_grads = Some(match param_grads {
+            None => pg.to_vec(),
+            Some(acc) => acc.iter().zip(pg).map(|(a, b)| tensor::add(a, b)).collect(),
+        });
+    }
+    param_grads.unwrap()
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let mut backend = HloBackend::load(&manifest, "toy")?;
+    let cfg = backend.config().clone();
+
+    let mut rng = Rng::new(11);
+    let s_total = 3usize;
+    let segments: Vec<Vec<u32>> = (0..s_total)
+        .map(|_| (0..cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+
+    println!(
+        "training through the diagonal schedule: toy model, {} segments, lr 1e-4",
+        s_total
+    );
+    println!("objective: 0.5 * mean(final-layer outputs^2) (gradient-flow demo)\n");
+
+    let lr = 1e-4f32;
+    let mut prev = f64::INFINITY;
+    let mut current = diagonal_batching::model::Params::load(&manifest, "toy")?;
+    for step in 0..6 {
+        let (records, loss) = forward(&mut backend, &segments);
+        println!("step {step}: loss {loss:.4}");
+        assert!(
+            loss < prev * 1.0001,
+            "loss must not increase (step {step}: {loss} vs {prev})"
+        );
+        prev = loss;
+
+        let grads = backward(&mut backend, &records);
+        assert_eq!(grads.len(), PARAM_ORDER.len());
+
+        // SGD on the stacked per-layer parameters (compounding across
+        // steps via our `current` copy).
+        for (name, g) in PARAM_ORDER.iter().zip(&grads) {
+            let p = current.stacked(name)?;
+            let t = tensor::sub(p, &tensor::scale(g, lr));
+            current.set(name, t)?;
+        }
+        backend.refresh_params(current.clone())?;
+    }
+    println!("\nOK: loss decreased monotonically through the AOT backward executable");
+    Ok(())
+}

@@ -1,0 +1,249 @@
+"""AOT pipeline: lower every L2 program to HLO *text* + dump weights.
+
+Emits, per executable config (tiny, toy):
+
+  artifacts/<model>/<exe>.hlo.txt   -- HLO text (NOT a serialized proto:
+      jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+      rejects; the text parser reassigns ids -- see /opt/xla-example).
+  artifacts/<model>/params.bin      -- little-endian f32 blob.
+  artifacts/manifest.json           -- shapes/dtypes/offsets for rust,
+      plus the paper configs for the roofline simulator and the shared
+      BABILong-style task spec.
+
+Run via `make artifacts` (no-op if outputs are newer than inputs).
+Python never runs again after this.
+"""
+
+import argparse
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (ArmtConfig, BY_NAME, EXECUTABLE_CONFIGS, PAPER_CONFIGS,
+                      TINY, TOY)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_one(fn, in_specs, out_dir, exe_name, input_names):
+    """Lower fn(*in_specs) and return its manifest entry."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{exe_name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *in_specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return {
+        "file": fname,
+        "inputs": [_io_entry(n, s) for n, s in zip(input_names, in_specs)],
+        "outputs": [_io_entry(f"out{i}", s) for i, s in enumerate(outs)],
+        "hlo_bytes": len(text),
+    }
+
+
+def layer_param_specs(cfg: ArmtConfig, g: int):
+    """Specs for PARAM_ORDER with leading group axis g."""
+    d, f, k = cfg.d_model, cfg.d_ff, cfg.k_assoc
+    by_name = {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d),
+        "n1": (d,), "n2": (d,),
+        "aq": (d, k), "ak": (d, k), "av": (d, d), "ab": (d,),
+    }
+    return [spec((g,) + by_name[n]) for n in M.PARAM_ORDER]
+
+
+def dump_params(params: dict, out_dir: str):
+    """Write params.bin (f32 LE, PARAM_ORDER then GLOBAL_ORDER) + index."""
+    index, offset = [], 0
+    blobs = []
+    for name in M.PARAM_ORDER + M.GLOBAL_ORDER:
+        arr = np.asarray(params[name], dtype="<f4")
+        index.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "offset_elems": offset,
+            "size_elems": int(arr.size),
+        })
+        blobs.append(arr.reshape(-1))
+        offset += arr.size
+    with open(os.path.join(out_dir, "params.bin"), "wb") as f:
+        f.write(np.concatenate(blobs).tobytes())
+    return index
+
+
+def build_model_entry(cfg: ArmtConfig, root: str, impl: str) -> dict:
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    L, d, p, T, seg = (cfg.n_layers, cfg.d_model, cfg.phi_dim,
+                       cfg.seg_total, cfg.seg)
+
+    # Trained weights (toy model) override the seed init when present.
+    trained_npz = os.path.join(root, f"{cfg.name}_trained.npz")
+    trained = os.path.exists(trained_npz)
+    if trained:
+        with np.load(trained_npz) as npz:
+            params = {k: jnp.asarray(npz[k]) for k in npz.files}
+    else:
+        params = M.init_params(cfg, seed=0)
+    index = dump_params(params, out_dir)
+
+    exes = {}
+
+    def step_specs(g):
+        return [
+            spec((g, T, d)), spec((g, d, p)), spec((g, p)), spec((g, 1)),
+        ] + layer_param_specs(cfg, g)
+
+    step_names = ["x", "A", "z", "mask"] + list(M.PARAM_ORDER)
+
+    exes["grouped_step"] = lower_one(
+        lambda *a: M.grouped_step(cfg, impl, *a),
+        step_specs(L), out_dir, "grouped_step", step_names)
+    exes["single_step"] = lower_one(
+        lambda *a: M.grouped_step(cfg, impl, *a),
+        step_specs(1), out_dir, "single_step", step_names)
+
+    bwd_specs = (step_specs(L)[:4]
+                 + [spec((L, T, d)), spec((L, d, p)), spec((L, p))]
+                 + layer_param_specs(cfg, L))
+    bwd_names = (["x", "A", "z", "mask", "dy", "dA2", "dz2"]
+                 + list(M.PARAM_ORDER))
+    # Backward always lowers through the ref impl: jax.vjp of the interpret
+    # -mode pallas kernels produces very large HLO for no numeric benefit.
+    exes["grouped_step_bwd"] = lower_one(
+        lambda x, A, z, mask, dy, dA2, dz2, *ps: M.grouped_step_bwd(
+            cfg, "ref", x, A, z, mask, dy, dA2, dz2, *ps),
+        bwd_specs, out_dir, "grouped_step_bwd", bwd_names)
+
+    exes["embed"] = lower_one(
+        lambda t, e, me: M.embed(cfg, t, e, me),
+        [spec((seg,), jnp.int32), spec((cfg.vocab, d)), spec((cfg.mem, d))],
+        out_dir, "embed", ["tokens", "emb", "mem_emb"])
+
+    exes["lm_head"] = lower_one(
+        lambda y, nf, w: M.lm_head(cfg, y, nf, w),
+        [spec((T, d)), spec((d,)), spec((d, cfg.vocab))],
+        out_dir, "lm_head", ["y", "nf", "w_out"])
+
+    # The baseline uses no associative params; passing them would leave
+    # unused HLO parameters that XLA drops during conversion, breaking
+    # the positional-argument contract — so the signature excludes them
+    # and the model fn re-synthesizes dummy assoc tensors at trace time.
+    attn_param_names = [n for n in M.PARAM_ORDER if n not in ("aq", "ak", "av", "ab")]
+    attn_specs = [
+        s for n, s in zip(M.PARAM_ORDER, layer_param_specs(cfg, L))
+        if n in attn_param_names
+    ]
+
+    def full_attn_fn(n):
+        def fn(t, e, nf, w, *ps):
+            by = dict(zip(attn_param_names, ps))
+            full = [
+                by.get(name, jnp.zeros((L, 1, 1), jnp.float32))
+                for name in M.PARAM_ORDER
+            ]
+            return M.full_attn_forward(cfg, n, t, e, nf, w, *full)
+        return fn
+
+    for n_ctx in cfg.attn_buckets:
+        name = f"full_attn_{n_ctx}"
+        exes[name] = lower_one(
+            full_attn_fn(n_ctx),
+            [spec((n_ctx,), jnp.int32), spec((cfg.vocab, d)), spec((d,)),
+             spec((d, cfg.vocab))] + attn_specs,
+            out_dir, name,
+            ["tokens", "emb", "nf", "w_out"] + attn_param_names)
+
+    return {
+        "dir": cfg.name,
+        "impl": impl,
+        "trained": trained,
+        "config": cfg.asdict(),
+        "params_bin": f"{cfg.name}/params.bin",
+        "params": index,
+        "executables": exes,
+    }
+
+
+# Shared task spec: the rust babilong generator mirrors these constants so
+# python-trained toy models and rust-generated eval data agree on the
+# token layout (see DESIGN.md substitution #3).
+BABILONG_SPEC = {
+    "pad": 0, "bos": 1, "query": 2, "sep": 3,
+    "agent_base": 10, "n_agents": 8,
+    "place_base": 24, "n_places": 16,
+    "object_base": 44, "n_objects": 8,
+    "filler_base": 56, "n_filler": 40,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; hlo/params live alongside it")
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "ref"])
+    ap.add_argument("--models", nargs="*",
+                    default=[c.name for c in EXECUTABLE_CONFIGS])
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(root, exist_ok=True)
+
+    # Merge into an existing manifest so `--models toy` (the `make toy`
+    # path) refreshes one bundle without dropping the others.
+    manifest = {
+        "format_version": 1,
+        "impl": args.impl,
+        "models": {},
+        "paper_configs": {c.name: c.asdict() for c in PAPER_CONFIGS},
+        "babilong": BABILONG_SPEC,
+    }
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                manifest["models"] = json.load(f).get("models", {})
+        except (json.JSONDecodeError, OSError):
+            pass
+    for name in args.models:
+        cfg = BY_NAME[name]
+        # micro is launch-overhead-bound by design: lower it through the
+        # plain-jnp impl so interpret-mode grid loops don't add compute.
+        impl = "ref" if name in ("micro", "tiny_ref") else args.impl
+        print(f"[aot] lowering {name} ({impl}) ...", flush=True)
+        manifest["models"][name] = build_model_entry(cfg, root, impl)
+        for exe, ent in manifest["models"][name]["executables"].items():
+            print(f"[aot]   {exe}: {ent['hlo_bytes'] / 1e3:.1f} kB")
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

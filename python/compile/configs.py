@@ -1,0 +1,139 @@
+"""Model configurations shared by the L2 model, the AOT pipeline and the
+toy trainer.
+
+Each config describes an ARMT-ified LLaMA-style decoder. The *paper*
+configurations (160M / 1B / 3B / 8B) are only used by the rust roofline
+simulator (their dims are recorded in the manifest for cost modelling);
+the *tiny* and *toy* configs are actually lowered to HLO and executed on
+the CPU PJRT client.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ArmtConfig:
+    """Architecture + ARMT hyper-parameters for one model variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seg: int            # tokens per segment (paper: segment_size)
+    mem: int            # number of memory tokens appended to each segment
+    k_assoc: int        # associative key dim (paper: assoc memory hidden size)
+    dpfp_nu: int = 3    # DPFP-nu feature map; phi dim = 2 * nu * k_assoc
+    rope_theta: float = 10000.0
+    eps: float = 1e-6   # denominators in eqs. (4) and (6)
+    # Full-attention baseline length buckets lowered to HLO.
+    attn_buckets: List[int] = field(default_factory=lambda: [128, 256, 512])
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def phi_dim(self) -> int:
+        return 2 * self.dpfp_nu * self.k_assoc
+
+    @property
+    def seg_total(self) -> int:
+        """Per-segment sequence length seen by a layer step (seg + mem)."""
+        return self.seg + self.mem
+
+    def asdict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["phi_dim"] = self.phi_dim
+        d["seg_total"] = self.seg_total
+        return d
+
+
+# Lowered + executed on CPU PJRT: shape-validation and the real error /
+# launch-amortization experiments (Tables 2, 9-analog on CPU).
+TINY = ArmtConfig(
+    name="tiny",
+    vocab=512,
+    d_model=64,
+    n_layers=4,
+    n_heads=4,
+    d_ff=128,
+    seg=32,
+    mem=8,
+    k_assoc=16,
+)
+
+# Trained on synthetic BABILong-style QA (Tables 3 / 4 analogs).
+TOY = ArmtConfig(
+    name="toy",
+    vocab=96,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    d_ff=128,
+    seg=32,
+    mem=4,
+    k_assoc=16,
+    attn_buckets=[128],
+)
+
+# Launch-overhead-dominated config: cell compute is so small that PJRT
+# call overhead dominates, which is the regime where diagonal batching
+# wins WALLCLOCK even on the single-core CPU backend (the CPU analog of
+# the paper's kernel-launch amortization; see EXPERIMENTS.md).
+MICRO = ArmtConfig(
+    name="micro",
+    vocab=64,
+    d_model=32,
+    n_layers=8,
+    n_heads=2,
+    d_ff=64,
+    seg=8,
+    mem=2,
+    k_assoc=8,
+    attn_buckets=[],
+)
+
+# Same dims as TINY but lowered through the pure-jnp impl — the §Perf
+# A/B that quantifies interpret-mode Pallas overhead on CPU PJRT
+# (EXPERIMENTS.md §Perf L2). Serving deployments on CPU should prefer
+# this bundle; the pallas bundle is the TPU-shaped path.
+TINY_REF = ArmtConfig(
+    name="tiny_ref",
+    vocab=512,
+    d_model=64,
+    n_layers=4,
+    n_heads=4,
+    d_ff=128,
+    seg=32,
+    mem=8,
+    k_assoc=16,
+    attn_buckets=[],
+)
+
+# Paper configurations — simulator-only (dims feed the roofline model).
+LLAMA_160M = ArmtConfig(
+    name="llama-160m", vocab=32000, d_model=768, n_layers=12, n_heads=12,
+    d_ff=3072, seg=1024, mem=128, k_assoc=64, attn_buckets=[],
+)
+LLAMA_1B = ArmtConfig(
+    name="llama-3.2-1b", vocab=128256, d_model=2048, n_layers=16, n_heads=32,
+    d_ff=8192, seg=1024, mem=128, k_assoc=64, attn_buckets=[],
+)
+LLAMA_3B = ArmtConfig(
+    name="llama-3.2-3b", vocab=128256, d_model=3072, n_layers=28, n_heads=24,
+    d_ff=8192, seg=1024, mem=128, k_assoc=64, attn_buckets=[],
+)
+LLAMA_8B = ArmtConfig(
+    name="llama-3.1-8b", vocab=128256, d_model=4096, n_layers=32, n_heads=32,
+    d_ff=14336, seg=1024, mem=128, k_assoc=64, attn_buckets=[],
+)
+
+PAPER_CONFIGS = [LLAMA_160M, LLAMA_1B, LLAMA_3B, LLAMA_8B]
+EXECUTABLE_CONFIGS = [TINY, TOY, MICRO, TINY_REF]
+
+BY_NAME = {c.name: c for c in EXECUTABLE_CONFIGS + PAPER_CONFIGS}

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for the ARMT diagonal-batching stack.
+
+Every kernel has a pure-jnp oracle in ref.py; pytest enforces allclose.
+All kernels are lowered with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls) -- see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .dpfp import dpfp, dpfp_inline
+from .grouped_gemm import grouped_matmul
+from .associative import assoc_read, assoc_update
+from .attention import fused_attention
+
+__all__ = [
+    "dpfp", "dpfp_inline", "grouped_matmul",
+    "assoc_read", "assoc_update", "fused_attention",
+]

@@ -1,0 +1,122 @@
+"""Associative-memory Pallas kernels: the ARMT read (eq. 6) and the
+delta-rule update (eqs. 3-5).
+
+These are the paper's compute hot-spot *besides* the transformer layer
+itself: every (segment, layer) cell performs one read over T tokens and one
+update over m memory tokens. Both kernels are grouped over the diagonal
+axis G -- one grid step per group member -- so a whole diagonal's reads (or
+updates) are a single kernel launch, mirroring how the paper folds them
+into the grouped schedule.
+
+TPU mapping: per grid step the kernel holds one group member's activations
+[T, d], its projection [d, k], and its state A [d, p] in VMEM. The
+phi-expansion runs on the VPU; the three matmuls (q-projection, A-read,
+outer-product update) hit the MXU. For the tiny AOT configs everything is
+single-tile; the BlockSpecs below keep the layout identical at scale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dpfp import dpfp_inline
+
+EPS = 1e-6
+
+
+def _read_kernel(x_ref, a_ref, z_ref, wq_ref, o_ref, *, nu: int, eps: float):
+    x = x_ref[0]                                   # [T, d]
+    A = a_ref[0]                                   # [d, p]
+    z = z_ref[0]                                   # [p]
+    wq = wq_ref[0]                                 # [d, k]
+    q = dpfp_inline(jnp.dot(x, wq, preferred_element_type=jnp.float32), nu)
+    num = jnp.dot(q, A.T, preferred_element_type=jnp.float32)   # [T, d]
+    den = jnp.dot(q, z[:, None], preferred_element_type=jnp.float32) + eps
+    o_ref[0] = (x + num / den).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "eps", "interpret"))
+def assoc_read(x, A, z, wq, nu: int = 3, eps: float = EPS,
+               interpret: bool = True):
+    """Grouped associative read with residual.
+
+    x: [G, T, d], A: [G, d, p], z: [G, p], wq: [G, d, k] -> [G, T, d].
+    With A = z = 0 (segment 0) this is an exact identity, so the scheduler
+    never needs a skip-read gate.
+    """
+    g, t, d = x.shape
+    p = A.shape[2]
+    k = wq.shape[2]
+    return pl.pallas_call(
+        functools.partial(_read_kernel, nu=nu, eps=eps),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, d, p), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, p), lambda gi: (gi, 0)),
+            pl.BlockSpec((1, d, k), lambda gi: (gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d), lambda gi: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, t, d), x.dtype),
+        interpret=interpret,
+    )(x, A, z, wq)
+
+
+def _update_kernel(y_ref, a_ref, z_ref, ak_ref, av_ref, ab_ref, m_ref,
+                   ao_ref, zo_ref, *, nu: int, eps: float):
+    y = y_ref[0]                                   # [m, d]
+    A = a_ref[0]                                   # [d, p]
+    z = z_ref[0]                                   # [p]
+    mask = m_ref[0]                                # [1] active flag
+    k = dpfp_inline(jnp.dot(y, ak_ref[0], preferred_element_type=jnp.float32), nu)
+    v = jnp.dot(y, av_ref[0], preferred_element_type=jnp.float32)      # [m, d]
+    beta = jax.nn.sigmoid(
+        jnp.dot(y, ab_ref[0][:, None], preferred_element_type=jnp.float32)
+    )                                              # [m, 1]
+    den = jnp.dot(k, z[:, None], preferred_element_type=jnp.float32)   # [m, 1]
+    v_bar = jnp.dot(k, A.T, preferred_element_type=jnp.float32) / (den + eps)
+    norm2 = jnp.sum(k * k, axis=-1, keepdims=True)                     # [m, 1]
+    gamma = 1.0 - den / (norm2 + eps)                                  # [m, 1]
+    dA = jnp.dot((beta * (v - v_bar)).T, k, preferred_element_type=jnp.float32)
+    dz = jnp.dot(gamma.T, k, preferred_element_type=jnp.float32)[0]    # [p]
+    # `mask` zeroes the delta for padded (inactive) diagonal slots so
+    # ramp-up/-down garbage never touches the recurrent state.
+    ao_ref[0] = (A + mask * dA).astype(ao_ref.dtype)
+    zo_ref[0] = (z + mask * dz).astype(zo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "eps", "interpret"))
+def assoc_update(y_mem, A, z, ak, av, ab, mask, nu: int = 3,
+                 eps: float = EPS, interpret: bool = True):
+    """Grouped delta-rule update.
+
+    y_mem: [G, m, d], A: [G, d, p], z: [G, p], ak: [G, d, k],
+    av: [G, d, d], ab: [G, d], mask: [G, 1] -> (A', z').
+    """
+    g, m, d = y_mem.shape
+    p = A.shape[2]
+    k = ak.shape[2]
+    return pl.pallas_call(
+        functools.partial(_update_kernel, nu=nu, eps=eps),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, m, d), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, d, p), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, p), lambda gi: (gi, 0)),
+            pl.BlockSpec((1, d, k), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, d, d), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, d), lambda gi: (gi, 0)),
+            pl.BlockSpec((1, 1), lambda gi: (gi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, p), lambda gi: (gi, 0, 0)),
+            pl.BlockSpec((1, p), lambda gi: (gi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, d, p), A.dtype),
+            jax.ShapeDtypeStruct((g, p), z.dtype),
+        ],
+        interpret=interpret,
+    )(y_mem, A, z, ak, av, ab, mask)

@@ -1,0 +1,116 @@
+"""Grouped fused attention kernel (flash-style) for ARMT segments.
+
+Diagonal batching does not change attention math at all -- it just turns
+the per-layer attention into a *batched* attention with batch = group size
+(paper 4.2). This kernel makes that explicit: the grid's leading axes are
+(group, head) and each step computes one head's attention for one group
+member with an online-softmax KV loop, the TPU rethink of the paper's
+FlashAttention usage:
+
+  * GPU threadblock tiling over (batch, head, q-block) -> Pallas grid
+    (G, H, q-block);
+  * shared-memory KV staging -> VMEM-resident [bk, hd] KV tiles via a
+    fori_loop over lax.dynamic_slice;
+  * warp-level online softmax -> VPU max/exp accumulators carried through
+    the loop.
+
+RoPE and the ARMT mask (causal for segment tokens, full for the trailing
+memory tokens) are applied in-kernel so the whole attention is one fused
+launch per diagonal.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, cos_ref, sin_ref, o_ref,
+                 *, seg: int, block_k: int, scale: float):
+    """Grid = (G, H). Block shapes: q/k/v [1, 1, T, hd], cos/sin [T, hd/2]."""
+    t, hd = q_ref.shape[2], q_ref.shape[3]
+    cos, sin = cos_ref[...], sin_ref[...]
+
+    def rope(x):
+        x1, x2 = x[:, 0::2], x[:, 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x1 * sin + x2 * cos
+        return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+    q = rope(q_ref[0, 0]) * scale                   # [T, hd]
+    k = rope(k_ref[0, 0])                           # [T, hd]
+    v = v_ref[0, 0]                                 # [T, hd]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, block_k), 0)
+    n_blocks = t // block_k
+
+    def body(b, carry):
+        acc, m_prev, l_prev = carry
+        kb = jax.lax.dynamic_slice(k, (b * block_k, 0), (block_k, hd))
+        vb = jax.lax.dynamic_slice(v, (b * block_k, 0), (block_k, hd))
+        s = jnp.dot(q, kb.T, preferred_element_type=jnp.float32)  # [T, bk]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, block_k), 1) + b * block_k
+        allowed = (cols <= rows) | (rows >= seg)
+        s = jnp.where(allowed, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.dot(p, vb, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((t, hd), jnp.float32)
+    m0 = jnp.full((t, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_heads", "seg", "block_k", "theta", "interpret")
+)
+def fused_attention(x, wq, wk, wv, wo, n_heads: int, seg: int,
+                    block_k: int = 0, theta: float = 10000.0,
+                    interpret: bool = True):
+    """Grouped MHA: x [G, T, d], weights [G, d, d] -> [G, T, d].
+
+    The QKV/output projections stay outside the kernel (they belong to the
+    grouped-GEMM path); the kernel fuses RoPE + mask + online softmax.
+    block_k = 0 picks the largest divisor of T that is <= 128.
+    """
+    g, t, d = x.shape
+    hd = d // n_heads
+    if block_k <= 0:
+        block_k = next(b for b in range(min(t, 128), 0, -1) if t % b == 0)
+    assert t % block_k == 0, (t, block_k)
+
+    def proj(w):  # [G, T, d] @ [G, d, d] -> [G, H, T, hd]
+        h = jnp.einsum("gtd,gde->gte", x, w)
+        return h.reshape(g, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj(wq), proj(wk), proj(wv)
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2) / hd))
+    ang = jnp.outer(jnp.arange(t), inv)
+    cos, sin = jnp.cos(ang).astype(x.dtype), jnp.sin(ang).astype(x.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, seg=seg, block_k=block_k, scale=1.0 / (hd ** 0.5)
+        ),
+        grid=(g, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, hd), lambda gi, hi: (gi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda gi, hi: (gi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda gi, hi: (gi, hi, 0, 0)),
+            pl.BlockSpec((t, hd // 2), lambda gi, hi: (0, 0)),
+            pl.BlockSpec((t, hd // 2), lambda gi, hi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, hd), lambda gi, hi: (gi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n_heads, t, hd), x.dtype),
+        interpret=interpret,
+    )(q, k, v, cos, sin)
+    merged = out.transpose(0, 2, 1, 3).reshape(g, t, d)
+    return jnp.einsum("gtd,gde->gte", merged, wo)

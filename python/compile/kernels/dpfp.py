@@ -1,0 +1,51 @@
+"""DPFP-nu feature map as a Pallas kernel plus an in-kernel helper.
+
+DPFP (Deterministic Parameter-Free Projection, Schlag et al. 2021) is the
+untrained nonlinearity phi used by the ARMT associative memory. It expands
+[..., k] -> [..., 2*nu*k] with only elementwise ops, so on TPU it is a pure
+VPU (vector unit) kernel: no MXU traffic, and the natural tiling is "one
+row block in VMEM at a time".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def dpfp_inline(x: jax.Array, nu: int = 3) -> jax.Array:
+    """phi(x) on an in-register/VMEM value. Usable inside other kernels.
+
+    jnp.roll lowers to two slices + concat, which Pallas supports in both
+    interpret and compiled modes.
+    """
+    xx = jax.nn.relu(jnp.concatenate([x, -x], axis=-1))
+    rolled = [xx * jnp.roll(xx, -r, axis=-1) for r in range(1, nu + 1)]
+    return jnp.concatenate(rolled, axis=-1)
+
+
+def _dpfp_kernel(x_ref, o_ref, *, nu: int):
+    o_ref[...] = dpfp_inline(x_ref[...], nu)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "block_rows", "interpret"))
+def dpfp(x: jax.Array, nu: int = 3, block_rows: int = 128,
+         interpret: bool = True) -> jax.Array:
+    """phi(x): [R, k] -> [R, 2*nu*k], tiled over row blocks.
+
+    Each grid step streams a [block_rows, k] tile HBM->VMEM, expands it on
+    the VPU, and writes the [block_rows, 2*nu*k] result back. VMEM footprint
+    per step is block_rows * k * (1 + 2*nu) * 4 bytes.
+    """
+    rows, k = x.shape
+    br = min(block_rows, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        functools.partial(_dpfp_kernel, nu=nu),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 2 * nu * k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2 * nu * k), x.dtype),
+        interpret=interpret,
+    )(x)

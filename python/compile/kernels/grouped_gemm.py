@@ -1,0 +1,74 @@
+"""Grouped GEMM -- the Pallas analog of CUTLASS GroupedGEMM (paper 3.3).
+
+The paper replaces every linear layer of the base model with a grouped
+matmul whose group dimension stacks the weights of all N_layers layers, so
+one kernel launch serves a whole diagonal. On TPU the natural mapping is:
+
+  * group axis  -> leading grid axis (one systolic pass per group member),
+  * (M, N) tile -> MXU-shaped [bm, bn] output tile accumulated in VMEM,
+  * K loop      -> innermost grid axis streaming [bm, bk] x [bk, bn] tile
+                   pairs HBM->VMEM (BlockSpec plays the role the paper's
+                   threadblock scheduling plays on GPU).
+
+The output is pre-allocated as one [G, M, N] tensor and written in place --
+the same "single large tensor partitioned into submatrices" trick the paper
+applies to CUTLASS output pointers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref):
+    """Grid = (G, M/bm, N/bn, K/bk); accumulate over the trailing K axis.
+
+    The output BlockSpec's index map ignores the K grid axis, so the same
+    [1, bm, bn] output tile stays resident in VMEM across the whole K loop
+    and doubles as the accumulator (outputs are f32, so this loses no
+    precision vs a dedicated scratch accumulator).
+    """
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )[None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def grouped_matmul(x: jax.Array, w: jax.Array, bm: int = 128, bn: int = 128,
+                   bk: int = 128, interpret: bool = True) -> jax.Array:
+    """x: [G, M, K] @ w: [G, K, N] -> [G, M, N].
+
+    Tile sizes default to the 128-lane MXU shape; they are clamped to the
+    problem size so tiny AOT configs lower to a single-tile grid.
+    VMEM per grid step: (bm*bk + bk*bn + 2*bm*bn) * 4 bytes.
+    """
+    g, m, k = x.shape
+    g2, k2, n = w.shape
+    assert g == g2 and k == k2, (x.shape, w.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    # M/N tails are safe (padded output rows/cols are dropped on write),
+    # but a padded K tail would inject garbage into the accumulation, so
+    # bk must divide k: take the largest divisor <= the requested bk.
+    bk = next(b for b in range(min(bk, k), 0, -1) if k % b == 0)
+    grid = (g, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, mi, ni, ki: (gi, mi, ki)),
+            pl.BlockSpec((1, bk, bn), lambda gi, mi, ni, ki: (gi, ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, mi, ni, ki: (gi, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,175 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the ground-truth semantics of the ARMT cell (paper eqs. 3-6)
+and of the grouped primitives. pytest checks each Pallas kernel against
+its `ref_*` counterpart with `assert_allclose`; the L2 model can also be
+built entirely on these (impl="ref") which is how grouped-vs-sequential
+bit-level drift is isolated to scheduling rather than kernel bugs.
+
+Shapes use the following conventions:
+  G = group size (number of stacked layers on one diagonal)
+  T = seg + mem  (per-segment sequence length incl. memory tokens)
+  d = d_model,  k = k_assoc,  p = 2 * nu * k  (DPFP feature dim)
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# DPFP-nu feature map (Schlag et al., 2021) -- the untrained nonlinearity phi.
+# ---------------------------------------------------------------------------
+
+def ref_dpfp(x: jax.Array, nu: int = 3) -> jax.Array:
+    """phi(x): [..., k] -> [..., 2*nu*k].
+
+    phi(x) = concat_{r=1..nu}  relu([x, -x]) * roll(relu([x, -x]), -r)
+    All entries are >= 0 and phi(x) != 0 for x != 0, which keeps the
+    associative denominators well-behaved.
+    """
+    xx = jax.nn.relu(jnp.concatenate([x, -x], axis=-1))
+    rolled = [xx * jnp.roll(xx, -r, axis=-1) for r in range(1, nu + 1)]
+    return jnp.concatenate(rolled, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Associative memory (paper eqs. 3-6): quasi-linear attention w/ delta rule.
+# ---------------------------------------------------------------------------
+
+def ref_assoc_read(x, A, z, wq, nu: int = 3, eps: float = EPS):
+    """Eq. (6) with a residual connection.
+
+    x: [T, d], A: [d, p], z: [p], wq: [d, k]  ->  [T, d]
+
+    out_i = x_i + A phi(W_Q x_i) / (z^T phi(W_Q x_i) + eps)
+
+    With A = 0, z = 0 (segment 0) the read is an exact no-op, which is why
+    the scheduler never needs a "skip read" gate.
+    """
+    q = ref_dpfp(x @ wq, nu)                      # [T, p]
+    num = q @ A.T                                 # [T, d]
+    den = q @ z + eps                             # [T]
+    return x + num / den[:, None]
+
+
+def ref_assoc_update(y_mem, A, z, ak, av, ab, nu: int = 3, eps: float = EPS):
+    """Delta-rule memory update, eqs. (3)-(5).
+
+    y_mem: [m, d] (output hidden states at the memory-token positions)
+    A: [d, p], z: [p]; ak: [d, k], av: [d, d], ab: [d]
+    Returns (A', z').
+    """
+    k = ref_dpfp(y_mem @ ak, nu)                  # [m, p]  (phi(k_i))
+    v = y_mem @ av                                # [m, d]
+    beta = jax.nn.sigmoid(y_mem @ ab)             # [m]
+    den = k @ z                                   # [m]     (z^T phi(k_i))
+    v_bar = (k @ A.T) / (den + eps)[:, None]      # [m, d]
+    norm2 = jnp.sum(k * k, axis=-1)               # [m]     ||phi(k_i)||^2
+    gamma = 1.0 - den / (norm2 + eps)             # [m]
+    dA = (beta[:, None] * (v - v_bar)).T @ k      # [d, p]
+    dz = gamma @ k                                # [p]
+    return A + dA, z + dz
+
+
+def ref_assoc_read_g(x, A, z, wq, nu: int = 3, eps: float = EPS):
+    """Grouped read: x [G,T,d], A [G,d,p], z [G,p], wq [G,d,k]."""
+    return jax.vmap(lambda xi, Ai, zi, wi: ref_assoc_read(xi, Ai, zi, wi, nu, eps))(
+        x, A, z, wq
+    )
+
+
+def ref_assoc_update_g(y_mem, A, z, ak, av, ab, nu: int = 3, eps: float = EPS):
+    """Grouped update over leading G axis."""
+    return jax.vmap(
+        lambda yi, Ai, zi, aki, avi, abi: ref_assoc_update(
+            yi, Ai, zi, aki, avi, abi, nu, eps
+        )
+    )(y_mem, A, z, ak, av, ab)
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM -- the CUTLASS GroupedGEMM analog.
+# ---------------------------------------------------------------------------
+
+def ref_grouped_matmul(x, w):
+    """x: [G, M, K], w: [G, K, N] -> [G, M, N] (per-group matmul)."""
+    return jnp.einsum("gmk,gkn->gmn", x, w)
+
+
+# ---------------------------------------------------------------------------
+# Attention (grouped, causal-within-segment, RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_angles(T: int, head_dim: int, theta: float = 10000.0):
+    """Returns (cos, sin) of shape [T, head_dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+    t = jnp.arange(T)
+    ang = jnp.outer(t, inv)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def ref_rope(x, cos, sin):
+    """x: [..., T, head_dim]; rotates pairs (even, odd)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def armt_attn_mask(T: int, seg: int) -> jax.Array:
+    """[T, T] additive mask: segment tokens are causal; the trailing
+    memory (read/write) tokens attend to every position."""
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    allowed = (j <= i) | (i >= seg)
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def ref_attention(x, wq, wk, wv, wo, n_heads: int, seg: int,
+                  theta: float = 10000.0):
+    """Single-group MHA with RoPE and the ARMT mask.
+
+    x: [T, d]; wq/wk/wv/wo: [d, d] -> [T, d]
+    """
+    T, d = x.shape
+    hd = d // n_heads
+
+    def split(h):  # [T, d] -> [H, T, hd]
+        return h.reshape(T, n_heads, hd).transpose(1, 0, 2)
+
+    cos, sin = rope_angles(T, hd, theta)
+    q = ref_rope(split(x @ wq), cos, sin)
+    k = ref_rope(split(x @ wk), cos, sin)
+    v = split(x @ wv)
+    scores = jnp.einsum("hqe,hke->hqk", q, k) / jnp.sqrt(hd)
+    scores = scores + armt_attn_mask(T, seg)[None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hke->hqe", probs, v)           # [H, T, hd]
+    out = out.transpose(1, 0, 2).reshape(T, d)
+    return out @ wo
+
+
+def ref_attention_g(x, wq, wk, wv, wo, n_heads: int, seg: int,
+                    theta: float = 10000.0):
+    """Grouped attention over leading G axis (the paper's "attention as
+    batch over the diagonal group")."""
+    return jax.vmap(
+        lambda xi, a, b, c, o: ref_attention(xi, a, b, c, o, n_heads, seg, theta)
+    )(x, wq, wk, wv, wo)
+
+
+# ---------------------------------------------------------------------------
+# Misc layer pieces shared with model.py
+# ---------------------------------------------------------------------------
+
+def ref_rmsnorm(x, g, eps: float = EPS):
+    """x: [..., d], g: [d] (or broadcastable, e.g. [G, 1, d])."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def ref_swiglu(x, wg, wu, wd):
+    """x: [T, d]; wg/wu: [d, f]; wd: [f, d]."""
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd

@@ -1,0 +1,224 @@
+"""L2: the ARMT model as pure-functional jax, built on the L1 kernels.
+
+Everything here is traced ONCE by aot.py into static HLO programs; nothing
+in this file ever runs on the request path. The rust coordinator composes
+these programs:
+
+  embed        : token ids -> segment hiddens (+ memory-token embeddings)
+  grouped_step : one diagonal iteration -- G stacked (segment, layer) cells
+                 (assoc read -> transformer layer -> delta-rule update)
+  single_step  : the same program specialized to G = 1 (the sequential
+                 ARMT baseline executes L of these per segment)
+  lm_head      : final-layer segment hiddens -> logits
+  full_attn    : the vanilla full-attention LLaMA baseline, per length
+                 bucket (quadratic in N -- the thing the paper beats)
+  grouped_step_bwd : VJP of grouped_step (training support, paper App. A)
+
+Parameter convention: per-layer tensors are stacked on a leading layer
+axis [L, ...] (PARAM_ORDER below); the grouped step consumes G-row slices
+of these stacks assembled by the rust scheduler.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref as R
+from .configs import ArmtConfig
+
+# Stacked per-layer parameters, in the exact order every executable (and
+# the rust side) uses. Shapes (per layer): see init_params.
+PARAM_ORDER = (
+    "wq", "wk", "wv", "wo",      # attention projections   [d, d]
+    "wg", "wu",                  # swiglu gate/up          [d, f]
+    "wd",                        # swiglu down             [f, d]
+    "n1", "n2",                  # rmsnorm gains           [d]
+    "aq", "ak",                  # assoc q/k projections   [d, k]
+    "av",                        # assoc value projection  [d, d]
+    "ab",                        # assoc beta vector       [d]
+)
+# Global (unstacked) parameters.
+GLOBAL_ORDER = ("emb", "mem_emb", "nf", "w_out")
+
+
+def init_params(cfg: ArmtConfig, seed: int = 0) -> dict:
+    """Random init (trained weights for the toy model replace these)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, k, L = cfg.d_model, cfg.d_ff, cfg.k_assoc, cfg.n_layers
+    shapes = {
+        "wq": (L, d, d), "wk": (L, d, d), "wv": (L, d, d), "wo": (L, d, d),
+        "wg": (L, d, f), "wu": (L, d, f), "wd": (L, f, d),
+        "n1": (L, d), "n2": (L, d),
+        "aq": (L, d, k), "ak": (L, d, k), "av": (L, d, d), "ab": (L, d),
+        "emb": (cfg.vocab, d), "mem_emb": (cfg.mem, d),
+        "nf": (d,), "w_out": (d, cfg.vocab),
+    }
+    params = {}
+    for i, (name, shape) in enumerate(shapes.items()):
+        sub = jax.random.fold_in(key, i)
+        if name in ("n1", "n2", "nf"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 0.02 if name in ("emb", "mem_emb") else (1.0 / shape[-2] ** 0.5
+                     if len(shape) >= 2 else 0.02)
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    # Keep the associative write conservative at init so the recurrent
+    # state does not blow up over many segments before training.
+    params["av"] = params["av"] * 0.1
+    return params
+
+
+def _rmsnorm_g(x, g, eps):
+    """x: [G, T, d], g: [G, d]."""
+    return R.ref_rmsnorm(x, g[:, None, :], eps)
+
+
+def grouped_step(cfg: ArmtConfig, impl: str, x, A, z, mask, *layer_params):
+    """One diagonal iteration over a group of G stacked cells.
+
+    x: [G, T, d] hiddens (T = seg + mem), A: [G, d, p], z: [G, p],
+    mask: [G, 1] active flags, layer_params: PARAM_ORDER, each [G, ...].
+    Returns (y [G, T, d], A' [G, d, p], z' [G, p]).
+    """
+    P = dict(zip(PARAM_ORDER, layer_params))
+    nu, eps, seg = cfg.dpfp_nu, cfg.eps, cfg.seg
+
+    if impl == "pallas":
+        xr = K.assoc_read(x, A, z, P["aq"], nu=nu, eps=eps)
+        attn = K.fused_attention(
+            _rmsnorm_g(xr, P["n1"], eps), P["wq"], P["wk"], P["wv"], P["wo"],
+            n_heads=cfg.n_heads, seg=seg, theta=cfg.rope_theta)
+        h = xr + attn
+        hn = _rmsnorm_g(h, P["n2"], eps)
+        mlp = K.grouped_matmul(
+            jax.nn.silu(K.grouped_matmul(hn, P["wg"])) * K.grouped_matmul(hn, P["wu"]),
+            P["wd"])
+        y = h + mlp
+        A2, z2 = K.assoc_update(
+            y[:, seg:, :], A, z, P["ak"], P["av"], P["ab"], mask, nu=nu, eps=eps)
+    else:
+        xr = R.ref_assoc_read_g(x, A, z, P["aq"], nu, eps)
+        attn = R.ref_attention_g(
+            _rmsnorm_g(xr, P["n1"], eps), P["wq"], P["wk"], P["wv"], P["wo"],
+            cfg.n_heads, seg, cfg.rope_theta)
+        h = xr + attn
+        hn = _rmsnorm_g(h, P["n2"], eps)
+        mlp = R.ref_grouped_matmul(
+            jax.nn.silu(R.ref_grouped_matmul(hn, P["wg"]))
+            * R.ref_grouped_matmul(hn, P["wu"]),
+            P["wd"])
+        y = h + mlp
+        dA2, dz2 = R.ref_assoc_update_g(
+            y[:, seg:, :], A, z, P["ak"], P["av"], P["ab"], nu, eps)
+        A2 = A + mask[:, :, None] * (dA2 - A)
+        z2 = z + mask * (dz2 - z)
+    return y, A2, z2
+
+
+def grouped_step_bwd(cfg: ArmtConfig, impl: str, x, A, z, mask,
+                     dy, dA2, dz2, *layer_params):
+    """VJP of grouped_step w.r.t. (x, A, z, layer_params...).
+
+    Enables training through the diagonal schedule (paper Appendix A:
+    "we implemented backward pass for diagonal batching").
+    Returns (dx, dA, dz, *dparams) in PARAM_ORDER.
+    """
+    def fwd(x_, A_, z_, *ps):
+        return grouped_step(cfg, impl, x_, A_, z_, mask, *ps)
+
+    _, vjp = jax.vjp(fwd, x, A, z, *layer_params)
+    return vjp((dy, dA2, dz2))
+
+
+def embed(cfg: ArmtConfig, tokens, emb, mem_emb):
+    """tokens: [seg] i32 -> [T, d] (segment embeddings ++ memory tokens)."""
+    return jnp.concatenate([emb[tokens], mem_emb], axis=0)
+
+
+def lm_head(cfg: ArmtConfig, y, nf, w_out):
+    """Final-layer hiddens [T, d] -> logits [seg, vocab] (memory positions
+    are dropped -- they are state, not output)."""
+    h = R.ref_rmsnorm(y[: cfg.seg], nf, cfg.eps)
+    return h @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Vanilla full-attention LLaMA baseline (no memory, quadratic in N).
+# ---------------------------------------------------------------------------
+
+def full_attn_forward(cfg: ArmtConfig, n_ctx: int, tokens, emb, nf, w_out,
+                      *layer_params):
+    """tokens: [n_ctx] i32 -> logits [n_ctx, vocab].
+
+    Per-layer params are the same stacked tensors; assoc params are unused
+    (the baseline has no memory). Attention is standard causal MHA + RoPE
+    over the full context -- this is the O(N^2) cost the paper compares
+    against (Tables 1/8, Fig. 1).
+    """
+    P = dict(zip(PARAM_ORDER, layer_params))
+    h = emb[tokens]
+    hd = cfg.head_dim
+    cos, sin = R.rope_angles(n_ctx, hd, cfg.rope_theta)
+    i = jnp.arange(n_ctx)
+    causal = jnp.where(i[None, :] <= i[:, None], 0.0, -1e30).astype(jnp.float32)
+
+    for l in range(cfg.n_layers):
+        xn = R.ref_rmsnorm(h, P["n1"][l], cfg.eps)
+
+        def split(u):
+            return u.reshape(n_ctx, cfg.n_heads, hd).transpose(1, 0, 2)
+
+        q = R.ref_rope(split(xn @ P["wq"][l]), cos, sin)
+        k = R.ref_rope(split(xn @ P["wk"][l]), cos, sin)
+        v = split(xn @ P["wv"][l])
+        s = jnp.einsum("hqe,hke->hqk", q, k) / jnp.sqrt(hd) + causal[None]
+        o = jnp.einsum("hqk,hke->hqe", jax.nn.softmax(s, axis=-1), v)
+        h = h + o.transpose(1, 0, 2).reshape(n_ctx, cfg.d_model) @ P["wo"][l]
+        hn = R.ref_rmsnorm(h, P["n2"][l], cfg.eps)
+        h = h + R.ref_swiglu(hn, P["wg"][l], P["wu"][l], P["wd"][l])
+    return R.ref_rmsnorm(h, nf, cfg.eps) @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference forward (used by the trainer and by pytest to check
+# that composing the AOT pieces reproduces the monolithic model).
+# ---------------------------------------------------------------------------
+
+class ArmtState(NamedTuple):
+    A: jax.Array   # [L, d, p]
+    z: jax.Array   # [L, p]
+
+
+def zero_state(cfg: ArmtConfig) -> ArmtState:
+    return ArmtState(
+        A=jnp.zeros((cfg.n_layers, cfg.d_model, cfg.phi_dim), jnp.float32),
+        z=jnp.zeros((cfg.n_layers, cfg.phi_dim), jnp.float32),
+    )
+
+
+def armt_forward(cfg: ArmtConfig, params: dict, tokens, impl: str = "ref"):
+    """Sequential-schedule reference: tokens [S, seg] -> logits [S, seg, V].
+
+    Processes segments in order, layers in order -- the paper's "base ARMT"
+    execution. Segment count S is static (python loop -> unrolled HLO); the
+    rust executors must match this exactly (native backend) or to ~1e-3
+    relative (HLO backend).
+    """
+    S = tokens.shape[0]
+    st = zero_state(cfg)
+    A, z = st.A, st.z
+    mask1 = jnp.ones((1, 1), jnp.float32)
+    outs = []
+    for s in range(S):
+        x = embed(cfg, tokens[s], params["emb"], params["mem_emb"])[None]
+        for l in range(cfg.n_layers):
+            lp = [params[n][l][None] for n in PARAM_ORDER]
+            x, Al, zl = grouped_step(
+                cfg, impl, x, A[l][None], z[l][None], mask1, *lp)
+            A = A.at[l].set(Al[0])
+            z = z.at[l].set(zl[0])
+        outs.append(lm_head(cfg, x[0], params["nf"], params["w_out"]))
+    return jnp.stack(outs)

@@ -1,0 +1,189 @@
+"""Train the toy ARMT on the synthetic BABILong-style QA tasks.
+
+This gives the Table 3/4 analog experiments a model whose accuracy is
+meaningful: a 2-layer ARMT trained with a curriculum over segment counts
+on QA1 (single supporting fact) and QA2 (two supporting facts), mirroring
+the paper's "trained on BABILong with curriculum learning" setup at toy
+scale. Cross-segment episodes force the model to carry the fact through
+the associative memory (there is no other path between segments).
+
+The episode generator here must stay in *distributional* lockstep with
+rust `babilong::Generator` (same token layout from aot.BABILONG_SPEC,
+same task semantics) — the rust side evaluates the trained model on
+freshly generated episodes.
+
+Output: artifacts/toy_trained.npz; `make toy` re-lowers the toy bundle
+with these weights.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .aot import BABILONG_SPEC
+from .configs import TOY
+
+jax.config.update("jax_platform_name", "cpu")
+
+S = BABILONG_SPEC
+
+
+# ---------------------------------------------------------------------------
+# Episode generation (mirrors rust/src/babilong/mod.rs)
+# ---------------------------------------------------------------------------
+
+def gen_episode(rng: np.random.Generator, task: str, length: int):
+    """Returns (tokens [length], answer, query_pos)."""
+    toks = rng.integers(
+        S["filler_base"], S["filler_base"] + S["n_filler"], size=length
+    ).astype(np.int64)
+    toks[0] = S["bos"]
+    body_end = length - 2
+
+    def agent():
+        return S["agent_base"] + rng.integers(S["n_agents"])
+
+    def place():
+        return S["place_base"] + rng.integers(S["n_places"])
+
+    def obj():
+        return S["object_base"] + rng.integers(S["n_objects"])
+
+    if task == "qa1":
+        subject = agent()
+        for _ in range(min(3, (body_end - 1) // 4)):
+            pos = 1 + rng.integers(body_end - 4)
+            toks[pos], toks[pos + 1], toks[pos + 2] = agent(), S["sep"], place()
+        answer = place()
+        pos = 1 + rng.integers(body_end - 4)
+        toks[pos], toks[pos + 1], toks[pos + 2] = subject, S["sep"], answer
+        for i in range(pos + 3, body_end):
+            if toks[i] == subject:
+                toks[i] = S["filler_base"] + rng.integers(S["n_filler"])
+    else:  # qa2
+        a, o, answer = agent(), obj(), place()
+        first = 1 + rng.integers((body_end - 8) // 2)
+        second = first + 3 + rng.integers(body_end - first - 6)
+        toks[first : first + 3] = (a, S["sep"], o)
+        toks[second : second + 3] = (o, S["sep"], answer)
+        for i in range(second + 3, body_end):
+            if toks[i] == o:
+                toks[i] = S["filler_base"] + rng.integers(S["n_filler"])
+        subject = o
+    toks[body_end] = S["query"]
+    toks[body_end + 1] = subject
+    return toks, answer, length - 1
+
+
+def gen_batch(rng, batch, n_segments):
+    length = n_segments * TOY.seg
+    xs = np.zeros((batch, n_segments, TOY.seg), np.int32)
+    ys = np.zeros((batch,), np.int32)
+    for b in range(batch):
+        task = "qa1" if rng.random() < 0.5 else "qa2"
+        toks, ans, _ = gen_episode(rng, task, length)
+        xs[b] = toks.reshape(n_segments, TOY.seg)
+        ys[b] = ans
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+# ---------------------------------------------------------------------------
+# Loss / optimizer (hand-rolled Adam; no optax offline)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, xs, ys):
+    """xs: [B, S, seg] i32, ys: [B] i32 — CE at the final query position."""
+    def one(tokens, y):
+        logits = M.armt_forward(TOY, params, tokens, impl="ref")  # [S, seg, V]
+        final = logits[-1, -1]  # query token is the last position
+        logp = jax.nn.log_softmax(final)
+        return -logp[y], jnp.argmax(final) == y
+
+    losses, hits = jax.vmap(one, in_axes=(0, 0))(xs, ys)
+    return jnp.mean(losses), jnp.mean(hits.astype(jnp.float32))
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1.5e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(steps_per_stage, batch, seed, out_path):
+    rng = np.random.default_rng(seed)
+    params = M.init_params(TOY, seed=seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, xs, ys):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, xs, ys)
+        params, opt = adam_step(params, grads, opt)
+        return params, opt, loss, acc
+
+    # Curriculum over segment counts, as in the paper's BABILong training,
+    # with replay: each stage samples lengths up to its maximum so earlier
+    # lengths are not forgotten (the S=1-only skills collapsed without it).
+    for stage, max_segments in enumerate([1, 2, 4]):
+        t0 = time.time()
+        choices = [s for s in [1, 2, 4] if s <= max_segments]
+        for it in range(steps_per_stage[stage]):
+            n_segments = choices[rng.integers(len(choices))]
+            xs, ys = gen_batch(rng, batch, n_segments)
+            params, opt, loss, acc = step(params, opt, xs, ys)
+            if it % 50 == 0 or it == steps_per_stage[stage] - 1:
+                print(
+                    f"[train] stage<= {max_segments} step {it:4d} (S={n_segments}) "
+                    f"loss {float(loss):.3f} acc {float(acc):.2f} "
+                    f"({time.time() - t0:.0f}s)",
+                    flush=True,
+                )
+
+    # Held-out eval per task / segment count.
+    for task in ["qa1", "qa2"]:
+        for n_segments in [1, 2, 4, 8]:
+            xs = np.zeros((64, n_segments, TOY.seg), np.int32)
+            ys = np.zeros((64,), np.int32)
+            for b in range(64):
+                toks, ans, _ = gen_episode(rng, task, n_segments * TOY.seg)
+                xs[b] = toks.reshape(n_segments, TOY.seg)
+                ys[b] = ans
+            _, acc = jax.jit(loss_fn)(params, jnp.asarray(xs), jnp.asarray(ys))
+            print(f"[eval] {task} S={n_segments}: acc {float(acc):.2f}", flush=True)
+
+    np.savez(out_path, **{k: np.asarray(v) for k, v in params.items()})
+    print(f"[train] wrote {out_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/toy_trained.npz")
+    ap.add_argument("--steps", type=int, nargs=3, default=[300, 500, 900])
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if os.path.exists(args.out) and not args.force:
+        print(f"[train] {args.out} exists; use --force to retrain")
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    train(args.steps, args.batch, args.seed, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""AOT contract tests: the manifest + params.bin + HLO text that rust
+consumes are internally consistent."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ROOT, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_models_present(manifest):
+    assert "tiny" in manifest["models"]
+    assert "toy" in manifest["models"]
+
+
+def test_params_bin_matches_index(manifest):
+    for name, entry in manifest["models"].items():
+        blob = os.path.getsize(os.path.join(ROOT, entry["params_bin"]))
+        total = sum(p["size_elems"] for p in entry["params"])
+        assert blob == 4 * total, name
+        # offsets are contiguous and ordered
+        off = 0
+        for p in entry["params"]:
+            assert p["offset_elems"] == off
+            assert p["size_elems"] == int(np.prod(p["shape"]))
+            off += p["size_elems"]
+
+
+def test_executables_exist_and_are_hlo(manifest):
+    for name, entry in manifest["models"].items():
+        for exe, e in entry["executables"].items():
+            path = os.path.join(ROOT, entry["dir"], e["file"])
+            assert os.path.exists(path), (name, exe)
+            with open(path) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, (name, exe)
+            assert e["inputs"] and e["outputs"]
+
+
+def test_grouped_step_io_shapes(manifest):
+    e = manifest["models"]["tiny"]
+    cfg = e["config"]
+    gs = e["executables"]["grouped_step"]
+    L, T, d, p = (cfg["n_layers"], cfg["seg_total"], cfg["d_model"],
+                  cfg["phi_dim"])
+    by_name = {i["name"]: i["shape"] for i in gs["inputs"]}
+    assert by_name["x"] == [L, T, d]
+    assert by_name["A"] == [L, d, p]
+    assert by_name["z"] == [L, p]
+    assert by_name["mask"] == [L, 1]
+    assert gs["outputs"][0]["shape"] == [L, T, d]
+    ss = e["executables"]["single_step"]
+    assert ss["inputs"][0]["shape"] == [1, T, d]
+
+
+def test_paper_configs_for_simulator(manifest):
+    pc = manifest["paper_configs"]
+    assert set(pc) == {"llama-160m", "llama-3.2-1b", "llama-3.2-3b",
+                       "llama-3.1-8b"}
+    assert pc["llama-3.2-1b"]["n_layers"] == 16
+    assert pc["llama-3.2-1b"]["d_model"] == 2048
+
+
+def test_babilong_spec_token_ranges_disjoint(manifest):
+    s = manifest["babilong"]
+    spans = [
+        (s["agent_base"], s["agent_base"] + s["n_agents"]),
+        (s["place_base"], s["place_base"] + s["n_places"]),
+        (s["object_base"], s["object_base"] + s["n_objects"]),
+        (s["filler_base"], s["filler_base"] + s["n_filler"]),
+    ]
+    spans.sort()
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0
+    assert spans[-1][1] <= 96  # fits the toy vocab

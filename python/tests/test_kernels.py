@@ -1,0 +1,212 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes; fixed-seed numpy provides data. Tolerances are
+f32-level: the kernels and oracles differ only in reduction order.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (assoc_read, assoc_update, dpfp, fused_attention,
+                             grouped_matmul)
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+HYP = dict(deadline=None, max_examples=12, derandomize=True)
+
+
+def arr(rng, *shape, scale=0.5):
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+# ---------------------------------------------------------------- dpfp ----
+
+@settings(**HYP)
+@given(rows=st.integers(1, 70), k=st.integers(1, 24), nu=st.integers(1, 4))
+def test_dpfp_matches_ref(rows, k, nu):
+    rng = np.random.default_rng(rows * 100 + k)
+    x = arr(rng, rows, k)
+    got = dpfp(x, nu=nu)
+    want = R.ref_dpfp(x, nu=nu)
+    assert got.shape == (rows, 2 * nu * k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dpfp_nonnegative():
+    rng = np.random.default_rng(0)
+    x = arr(rng, 33, 16)
+    assert float(jnp.min(dpfp(x))) >= 0.0
+
+
+def test_dpfp_zero_is_zero():
+    z = jnp.zeros((4, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dpfp(z)), 0.0)
+
+
+def test_dpfp_block_tiling_invariant():
+    """Row-block size must not change the result."""
+    rng = np.random.default_rng(3)
+    x = arr(rng, 64, 16)
+    a = dpfp(x, block_rows=8)
+    b = dpfp(x, block_rows=64)
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+# -------------------------------------------------------- grouped gemm ----
+
+@settings(**HYP)
+@given(g=st.integers(1, 8), m=st.integers(1, 48), k=st.integers(1, 48),
+       n=st.integers(1, 48))
+def test_grouped_matmul_matches_ref(g, m, k, n):
+    rng = np.random.default_rng(g * 1000 + m + k + n)
+    x, w = arr(rng, g, m, k), arr(rng, g, k, n)
+    got = grouped_matmul(x, w, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(got, R.ref_grouped_matmul(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+def test_grouped_matmul_tile_invariant(tiles):
+    rng = np.random.default_rng(7)
+    x, w = arr(rng, 4, 40, 64), arr(rng, 4, 64, 24)
+    bm, bn, bk = tiles
+    got = grouped_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, R.ref_grouped_matmul(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_matmul_group_independence():
+    """Each group's output depends only on its own slice."""
+    rng = np.random.default_rng(9)
+    x, w = arr(rng, 3, 8, 8), arr(rng, 3, 8, 8)
+    full = grouped_matmul(x, w)
+    x2 = x.at[1].set(0.0)
+    part = grouped_matmul(x2, w)
+    np.testing.assert_allclose(part[0], full[0], atol=0)
+    np.testing.assert_allclose(part[2], full[2], atol=0)
+    np.testing.assert_allclose(part[1], 0.0, atol=0)
+
+
+# --------------------------------------------------- associative memory ----
+
+def _assoc_inputs(rng, g, t, d, k, nu=3):
+    p = 2 * nu * k
+    return (arr(rng, g, t, d), arr(rng, g, d, p),
+            jnp.abs(arr(rng, g, p)), arr(rng, g, d, k))
+
+
+@settings(**HYP)
+@given(g=st.integers(1, 6), t=st.integers(1, 48), d=st.sampled_from([16, 64]),
+       k=st.sampled_from([4, 16]))
+def test_assoc_read_matches_ref(g, t, d, k):
+    rng = np.random.default_rng(g + t + d + k)
+    x, A, z, wq = _assoc_inputs(rng, g, t, d, k)
+    np.testing.assert_allclose(
+        assoc_read(x, A, z, wq), R.ref_assoc_read_g(x, A, z, wq),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_assoc_read_zero_state_is_identity():
+    """Segment 0: A = z = 0 makes the read an exact no-op (the property
+    that lets the scheduler drop the skip-read gate)."""
+    rng = np.random.default_rng(11)
+    x = arr(rng, 4, 40, 64)
+    A = jnp.zeros((4, 64, 96)); z = jnp.zeros((4, 96))
+    wq = arr(rng, 4, 64, 16)
+    np.testing.assert_allclose(assoc_read(x, A, z, wq), x, atol=1e-6)
+
+
+@settings(**HYP)
+@given(g=st.integers(1, 6), m=st.integers(1, 16), d=st.sampled_from([16, 64]),
+       k=st.sampled_from([4, 16]))
+def test_assoc_update_matches_ref(g, m, d, k):
+    rng = np.random.default_rng(g * 31 + m + d + k)
+    p = 6 * k
+    y = arr(rng, g, m, d)
+    A, z = arr(rng, g, d, p), jnp.abs(arr(rng, g, p))
+    ak, av, ab = arr(rng, g, d, k), arr(rng, g, d, d), arr(rng, g, d)
+    mask = jnp.ones((g, 1), jnp.float32)
+    A2, z2 = assoc_update(y, A, z, ak, av, ab, mask)
+    A2r, z2r = R.ref_assoc_update_g(y, A, z, ak, av, ab)
+    np.testing.assert_allclose(A2, A2r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(z2, z2r, rtol=1e-4, atol=1e-4)
+
+
+def test_assoc_update_mask_freezes_state():
+    """Inactive diagonal slots must leave (A, z) bit-identical."""
+    rng = np.random.default_rng(13)
+    g, m, d, k = 3, 8, 32, 8
+    y = arr(rng, g, m, d)
+    A, z = arr(rng, g, d, 6 * k), jnp.abs(arr(rng, g, 6 * k))
+    ak, av, ab = arr(rng, g, d, k), arr(rng, g, d, d), arr(rng, g, d)
+    mask = jnp.asarray([[1.0], [0.0], [1.0]], jnp.float32)
+    A2, z2 = assoc_update(y, A, z, ak, av, ab, mask)
+    np.testing.assert_array_equal(np.asarray(A2[1]), np.asarray(A[1]))
+    np.testing.assert_array_equal(np.asarray(z2[1]), np.asarray(z[1]))
+    assert not np.allclose(np.asarray(A2[0]), np.asarray(A[0]))
+
+
+def test_assoc_write_then_read_recovers_value():
+    """Delta-rule sanity: after writing (k, v), reading with q = k returns
+    approximately v (the associative recall the ARMT relies on)."""
+    rng = np.random.default_rng(17)
+    d, k = 32, 8
+    p = 6 * k
+    y = arr(rng, 1, 1, d, scale=1.0)            # one memory token
+    A, z = jnp.zeros((1, d, p)), jnp.zeros((1, p))
+    ak, av, ab = arr(rng, 1, d, k), arr(rng, 1, d, d), arr(rng, 1, d)
+    mask = jnp.ones((1, 1), jnp.float32)
+    A2, z2 = assoc_update(y, A, z, ak, av, ab, mask)
+    # read with wq = ak so phi(q) == phi(k); the first write stores
+    # beta * v (v_bar = 0 and gamma = 1 on a zero state)
+    x = y[:, 0:1, :]
+    got = assoc_read(x, A2, z2, ak) - x         # the retrieved value
+    beta = jax.nn.sigmoid(y[0, 0] @ ab[0])
+    want = (beta * (y[0, 0] @ av[0]))[None, None]
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------------ attention ----
+
+@settings(**HYP)
+@given(g=st.integers(1, 4), heads=st.sampled_from([1, 2, 4]),
+       t_seg=st.sampled_from([(8, 4), (40, 32), (24, 16)]))
+def test_attention_matches_ref(g, heads, t_seg):
+    t, seg = t_seg
+    d = 32
+    rng = np.random.default_rng(g * 7 + heads + t)
+    x = arr(rng, g, t, d)
+    ws = [arr(rng, g, d, d) for _ in range(4)]
+    got = fused_attention(x, *ws, n_heads=heads, seg=seg)
+    want = R.ref_attention_g(x, *ws, n_heads=heads, seg=seg)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_block_k_invariant():
+    """Online-softmax KV chunking must not change the output."""
+    rng = np.random.default_rng(23)
+    g, t, d, seg = 2, 40, 64, 32
+    x = arr(rng, g, t, d)
+    ws = [arr(rng, g, d, d) for _ in range(4)]
+    a = fused_attention(x, *ws, n_heads=4, seg=seg, block_k=8)
+    b = fused_attention(x, *ws, n_heads=4, seg=seg, block_k=40)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causal_within_segment():
+    """Changing a *future* segment token must not affect earlier segment
+    positions (memory tokens are exempt -- they see everything)."""
+    rng = np.random.default_rng(29)
+    g, t, d, seg = 1, 40, 32, 32
+    x = arr(rng, g, t, d)
+    ws = [arr(rng, g, d, d) for _ in range(4)]
+    base = fused_attention(x, *ws, n_heads=2, seg=seg)
+    x2 = x.at[0, seg - 1].add(5.0)              # last segment token
+    pert = fused_attention(x2, *ws, n_heads=2, seg=seg)
+    np.testing.assert_allclose(base[0, : seg - 1], pert[0, : seg - 1],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[0, seg:], pert[0, seg:], atol=1e-4)

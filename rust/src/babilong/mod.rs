@@ -1,0 +1,260 @@
+//! Synthetic BABILong-style long-context QA generator + scorer
+//! (DESIGN.md substitution #3).
+//!
+//! Mirrors `python/compile/aot.py::BABILONG_SPEC` exactly, so the toy
+//! model trained in python and the evaluation data generated here agree
+//! on the token layout. Two tasks, shaped after BABILong QA1/QA2:
+//!
+//! * **QA1** (single supporting fact): facts "agent SEP place" are
+//!   scattered in filler text; the query asks the *latest* place of one
+//!   agent.
+//! * **QA2** (two supporting facts): "agent SEP object" then
+//!   "object SEP place"; the query asks where the object's holder's
+//!   object ended up (resolve two hops: object -> agent -> place).
+//!
+//! Episodes end with `QUERY subject` and the answer is a single place
+//! token predicted at the final position.
+
+use crate::config::BabilongSpec;
+use crate::tensor::Rng;
+
+/// Which task to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    QA1,
+    QA2,
+}
+
+impl std::fmt::Display for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Task::QA1 => "QA1",
+            Task::QA2 => "QA2",
+        })
+    }
+}
+
+/// One generated episode.
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub tokens: Vec<u32>,
+    /// The correct answer (a place token).
+    pub answer: u32,
+    /// Position of the final (query) token — predict the answer there.
+    pub query_pos: usize,
+    pub task: Task,
+}
+
+/// Episode generator bound to a token-layout spec.
+pub struct Generator {
+    spec: BabilongSpec,
+    rng: Rng,
+}
+
+impl Generator {
+    pub fn new(spec: BabilongSpec, seed: u64) -> Self {
+        Self { spec, rng: Rng::new(seed) }
+    }
+
+    fn agent(&mut self) -> u32 {
+        self.spec.agent_base + self.rng.below(self.spec.n_agents as usize) as u32
+    }
+
+    fn place(&mut self) -> u32 {
+        self.spec.place_base + self.rng.below(self.spec.n_places as usize) as u32
+    }
+
+    fn object(&mut self) -> u32 {
+        self.spec.object_base + self.rng.below(self.spec.n_objects as usize) as u32
+    }
+
+    fn filler(&mut self) -> u32 {
+        self.spec.filler_base + self.rng.below(self.spec.n_filler as usize) as u32
+    }
+
+    /// Generate one episode of exactly `len` tokens (len >= 8).
+    pub fn episode(&mut self, task: Task, len: usize) -> Episode {
+        assert!(len >= 8, "episode too short");
+        let s = self.spec.clone();
+        let mut tokens = vec![0u32; len];
+        for t in tokens.iter_mut() {
+            *t = self.filler();
+        }
+        tokens[0] = s.bos;
+
+        // Reserve the final two positions for "QUERY subject"; the model
+        // predicts the answer at the last position.
+        let body_end = len - 2;
+
+        let (answer, query_subject) = match task {
+            Task::QA1 => {
+                let agent = self.agent();
+                // several distractor facts about OTHER agents
+                let n_facts = 3.min((body_end - 1) / 4);
+                for _ in 0..n_facts {
+                    let a = self.agent();
+                    let p = self.place();
+                    let pos = 1 + self.rng.below(body_end - 4);
+                    tokens[pos] = a;
+                    tokens[pos + 1] = s.sep;
+                    tokens[pos + 2] = p;
+                }
+                // the supporting fact, placed last-wins at a random spot;
+                // overwrite any distractor collisions deterministically
+                let place = self.place();
+                let pos = 1 + self.rng.below(body_end - 4);
+                tokens[pos] = agent;
+                tokens[pos + 1] = s.sep;
+                tokens[pos + 2] = place;
+                // ensure no LATER mention of this agent contradicts the fact
+                let mut i = pos + 3;
+                while i + 2 < body_end {
+                    if tokens[i] == agent {
+                        tokens[i] = self.filler();
+                    }
+                    i += 1;
+                }
+                (place, agent)
+            }
+            Task::QA2 => {
+                // agent SEP object ... object SEP place; query object.
+                let agent = self.agent();
+                let object = self.object();
+                let place = self.place();
+                let first = 1 + self.rng.below((body_end - 8) / 2);
+                let second = first + 3 + self.rng.below(body_end - first - 6);
+                tokens[first] = agent;
+                tokens[first + 1] = s.sep;
+                tokens[first + 2] = object;
+                tokens[second] = object;
+                tokens[second + 1] = s.sep;
+                tokens[second + 2] = place;
+                // scrub later collisions
+                let mut i = second + 3;
+                while i < body_end {
+                    if tokens[i] == object {
+                        tokens[i] = self.filler();
+                    }
+                    i += 1;
+                }
+                (place, object)
+            }
+        };
+
+        tokens[body_end] = s.query;
+        tokens[body_end + 1] = query_subject;
+        Episode { tokens, answer, query_pos: len - 1, task }
+    }
+
+    /// Generate a batch of episodes.
+    pub fn batch(&mut self, task: Task, len: usize, n: usize) -> Vec<Episode> {
+        (0..n).map(|_| self.episode(task, len)).collect()
+    }
+}
+
+/// Accuracy of predicted answers: `preds[i]` is the predicted token at
+/// the query position of `episodes[i]`.
+pub fn accuracy(episodes: &[Episode], preds: &[u32]) -> f64 {
+    assert_eq!(episodes.len(), preds.len());
+    if episodes.is_empty() {
+        return 0.0;
+    }
+    let hits = episodes.iter().zip(preds).filter(|(e, &p)| e.answer == p).count();
+    hits as f64 / episodes.len() as f64
+}
+
+#[cfg(test)]
+pub(crate) fn test_spec() -> BabilongSpec {
+    BabilongSpec {
+        pad: 0,
+        bos: 1,
+        query: 2,
+        sep: 3,
+        agent_base: 10,
+        n_agents: 8,
+        place_base: 24,
+        n_places: 16,
+        object_base: 44,
+        n_objects: 8,
+        filler_base: 56,
+        n_filler: 40,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qa1_episode_well_formed() {
+        let mut g = Generator::new(test_spec(), 1);
+        let e = g.episode(Task::QA1, 64);
+        assert_eq!(e.tokens.len(), 64);
+        assert_eq!(e.tokens[62], 2, "QUERY marker");
+        let subj = e.tokens[63];
+        assert!((10..18).contains(&subj), "query subject is an agent");
+        assert!((24..40).contains(&e.answer), "answer is a place");
+        // the supporting fact exists: agent SEP answer somewhere
+        let found = e.tokens.windows(3).any(|w| w[0] == subj && w[1] == 3 && w[2] == e.answer);
+        assert!(found, "supporting fact present");
+    }
+
+    #[test]
+    fn qa1_answer_is_last_fact_about_agent() {
+        let mut g = Generator::new(test_spec(), 2);
+        for _ in 0..50 {
+            let e = g.episode(Task::QA1, 96);
+            let subj = e.tokens[95];
+            let mut last_place = None;
+            for w in e.tokens[..94].windows(3) {
+                if w[0] == subj && w[1] == 3 {
+                    last_place = Some(w[2]);
+                }
+            }
+            assert_eq!(last_place, Some(e.answer));
+        }
+    }
+
+    #[test]
+    fn qa2_two_hop_consistent() {
+        let mut g = Generator::new(test_spec(), 3);
+        for _ in 0..50 {
+            let e = g.episode(Task::QA2, 96);
+            let obj = e.tokens[95];
+            assert!((44..52).contains(&obj), "query subject is an object");
+            let mut place = None;
+            for w in e.tokens[..94].windows(3) {
+                if w[0] == obj && w[1] == 3 && (24..40).contains(&w[2]) {
+                    place = Some(w[2]);
+                }
+            }
+            assert_eq!(place, Some(e.answer));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Generator::new(test_spec(), 7);
+        let mut b = Generator::new(test_spec(), 7);
+        assert_eq!(a.episode(Task::QA1, 64).tokens, b.episode(Task::QA1, 64).tokens);
+    }
+
+    #[test]
+    fn accuracy_counts_hits() {
+        let mut g = Generator::new(test_spec(), 9);
+        let eps = g.batch(Task::QA1, 64, 4);
+        let mut preds: Vec<u32> = eps.iter().map(|e| e.answer).collect();
+        assert_eq!(accuracy(&eps, &preds), 1.0);
+        preds[0] = 0;
+        assert_eq!(accuracy(&eps, &preds), 0.75);
+    }
+
+    #[test]
+    fn tokens_fit_toy_vocab() {
+        let mut g = Generator::new(test_spec(), 11);
+        for task in [Task::QA1, Task::QA2] {
+            let e = g.episode(task, 128);
+            assert!(e.tokens.iter().all(|&t| t < 96), "{task}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `harness = false` bench binaries under
+//! `rust/benches/`; each uses this module to time closures with warmup,
+//! report robust statistics, and print the paper-table rows.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl Sample {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3?} mean  {:>10.3?} median  {:>10.3?} min  ±{:>8.3?} ({} iters)",
+            self.name, self.mean, self.median, self.min, self.stddev, self.iters
+        )
+    }
+}
+
+/// Time `f`, choosing the iteration count so total time ≈ `budget`.
+/// Runs one untimed warmup call first (compilation caches, page faults).
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> Sample {
+    f(); // warmup
+    let probe = {
+        let t0 = Instant::now();
+        f();
+        t0.elapsed()
+    };
+    let iters = (budget.as_secs_f64() / probe.as_secs_f64().max(1e-9))
+        .clamp(3.0, 1000.0) as usize;
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, &mut times)
+}
+
+/// Time `f` exactly `iters` times (no warmup heuristics) — for expensive
+/// end-to-end cases where the caller controls the budget.
+pub fn bench_n(name: &str, iters: usize, mut f: impl FnMut()) -> Sample {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, &mut times)
+}
+
+fn summarize(name: &str, times: &mut [Duration]) -> Sample {
+    times.sort_unstable();
+    let n = times.len();
+    let total: Duration = times.iter().sum();
+    let mean = total / n as u32;
+    let median = times[n / 2];
+    let min = times[0];
+    let mean_s = mean.as_secs_f64();
+    let var = times
+        .iter()
+        .map(|t| (t.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    Sample {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median,
+        min,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Markdown-ish table printer shared by the paper-table benches.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format seconds the way the paper's tables do (3 significant digits).
+pub fn fmt_s(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 10.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+/// Format a speedup like the paper: "x2.72".
+pub fn fmt_x(x: f64) -> String {
+    format!("x{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench_n("noop", 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.median && s.median <= s.mean * 10);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_s(0.1234), "0.123");
+        assert_eq!(fmt_s(2.345), "2.35");
+        assert_eq!(fmt_s(23.45), "23.4");
+        assert_eq!(fmt_s(234.5), "234");
+        assert_eq!(fmt_x(2.716), "x2.72");
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,396 @@
+//! Configuration: the AOT manifest contract and runtime settings.
+//!
+//! `artifacts/manifest.json` is produced by `python -m compile.aot` and is
+//! the single source of truth for model dims, executable I/O shapes and
+//! the params.bin layout. Parsing uses the in-tree [`crate::json`] module
+//! (the offline toolchain has no serde).
+
+mod runtime_cfg;
+
+pub use runtime_cfg::{BackendKind, ExecMode, RuntimeConfig};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Mirror of python `ArmtConfig` (see `python/compile/configs.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Tokens per segment (paper: `segment_size`).
+    pub seg: usize,
+    /// Memory tokens appended to each segment.
+    pub mem: usize,
+    /// Associative key dim (paper: associative memory hidden size).
+    pub k_assoc: usize,
+    pub dpfp_nu: usize,
+    pub rope_theta: f32,
+    pub eps: f32,
+    pub attn_buckets: Vec<usize>,
+    pub head_dim: usize,
+    /// DPFP feature dim p = 2 * nu * k_assoc.
+    pub phi_dim: usize,
+    /// seg + mem.
+    pub seg_total: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            vocab: v.req("vocab")?.as_usize()?,
+            d_model: v.req("d_model")?.as_usize()?,
+            n_layers: v.req("n_layers")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            d_ff: v.req("d_ff")?.as_usize()?,
+            seg: v.req("seg")?.as_usize()?,
+            mem: v.req("mem")?.as_usize()?,
+            k_assoc: v.req("k_assoc")?.as_usize()?,
+            dpfp_nu: v.req("dpfp_nu")?.as_usize()?,
+            rope_theta: v.req("rope_theta")?.as_f32()?,
+            eps: v.req("eps")?.as_f32()?,
+            attn_buckets: v
+                .get("attn_buckets")
+                .map(Value::as_usize_vec)
+                .transpose()?
+                .unwrap_or_default(),
+            head_dim: v.req("head_dim")?.as_usize()?,
+            phi_dim: v.req("phi_dim")?.as_usize()?,
+            seg_total: v.req("seg_total")?.as_usize()?,
+        })
+    }
+
+    /// Sanity-check internal consistency (defends against a stale or
+    /// hand-edited manifest).
+    pub fn validate(&self) -> Result<()> {
+        let fail = |msg: String| Err(Error::Config(msg));
+        if self.d_model % self.n_heads != 0 {
+            return fail(format!("d_model {} % n_heads {}", self.d_model, self.n_heads));
+        }
+        if self.head_dim != self.d_model / self.n_heads {
+            return fail("head_dim mismatch".into());
+        }
+        if self.phi_dim != 2 * self.dpfp_nu * self.k_assoc {
+            return fail("phi_dim mismatch".into());
+        }
+        if self.seg_total != self.seg + self.mem {
+            return fail("seg_total mismatch".into());
+        }
+        if self.n_layers == 0 || self.seg == 0 || self.mem == 0 {
+            return fail("zero-sized dimension".into());
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (simulator memory model; includes both the
+    /// embedding and the output head).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let k = self.k_assoc;
+        let per_layer = 4 * d * d + 2 * d * f + f * d + 2 * d + 2 * d * k + d * d + d;
+        self.n_layers * per_layer + 2 * self.vocab * d + self.mem * d + d
+    }
+
+    /// Per-layer associative state floats: A [d, p] + z [p].
+    pub fn state_floats_per_layer(&self) -> usize {
+        self.d_model * self.phi_dim + self.phi_dim
+    }
+}
+
+/// One stacked parameter's location inside params.bin.
+#[derive(Clone, Debug)]
+pub struct ParamIndex {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+    pub size_elems: usize,
+}
+
+/// One input or output of an executable.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered HLO program.
+#[derive(Clone, Debug)]
+pub struct ExeEntry {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub hlo_bytes: usize,
+}
+
+/// One model's artifact bundle.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub dir: String,
+    pub impl_: String,
+    pub trained: bool,
+    pub config: ModelConfig,
+    pub params_bin: String,
+    pub params: Vec<ParamIndex>,
+    pub executables: HashMap<String, ExeEntry>,
+}
+
+impl ModelEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let params = v
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamIndex {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.as_usize_vec()?,
+                    offset_elems: p.req("offset_elems")?.as_usize()?,
+                    size_elems: p.req("size_elems")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = HashMap::new();
+        for (name, e) in v.req("executables")?.as_obj()? {
+            executables.insert(
+                name.clone(),
+                ExeEntry {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    inputs: e
+                        .req("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    hlo_bytes: e.get("hlo_bytes").map(Value::as_usize).transpose()?.unwrap_or(0),
+                },
+            );
+        }
+        Ok(Self {
+            dir: v.req("dir")?.as_str()?.to_string(),
+            impl_: v.req("impl")?.as_str()?.to_string(),
+            trained: v.get("trained").map(Value::as_bool).transpose()?.unwrap_or(false),
+            config: ModelConfig::from_json(v.req("config")?)?,
+            params_bin: v.req("params_bin")?.as_str()?.to_string(),
+            params,
+            executables,
+        })
+    }
+}
+
+/// Shared BABILong-style task token layout (DESIGN.md substitution #3).
+#[derive(Clone, Debug)]
+pub struct BabilongSpec {
+    pub pad: u32,
+    pub bos: u32,
+    pub query: u32,
+    pub sep: u32,
+    pub agent_base: u32,
+    pub n_agents: u32,
+    pub place_base: u32,
+    pub n_places: u32,
+    pub object_base: u32,
+    pub n_objects: u32,
+    pub filler_base: u32,
+    pub n_filler: u32,
+}
+
+impl BabilongSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let g = |k: &str| -> Result<u32> { v.req(k)?.as_u32() };
+        Ok(Self {
+            pad: g("pad")?,
+            bos: g("bos")?,
+            query: g("query")?,
+            sep: g("sep")?,
+            agent_base: g("agent_base")?,
+            n_agents: g("n_agents")?,
+            place_base: g("place_base")?,
+            n_places: g("n_places")?,
+            object_base: g("object_base")?,
+            n_objects: g("n_objects")?,
+            filler_base: g("filler_base")?,
+            n_filler: g("n_filler")?,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format_version: usize,
+    pub impl_: String,
+    pub models: HashMap<String, ModelEntry>,
+    pub paper_configs: HashMap<String, ModelConfig>,
+    pub babilong: BabilongSpec,
+    /// Directory the manifest was loaded from (for resolving artifact
+    /// paths); not part of the JSON.
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text)?;
+        let mut models = HashMap::new();
+        for (name, m) in v.req("models")?.as_obj()? {
+            models.insert(name.clone(), ModelEntry::from_json(m)?);
+        }
+        let mut paper_configs = HashMap::new();
+        for (name, c) in v.req("paper_configs")?.as_obj()? {
+            paper_configs.insert(name.clone(), ModelConfig::from_json(c)?);
+        }
+        let m = Manifest {
+            format_version: v.req("format_version")?.as_usize()?,
+            impl_: v.req("impl")?.as_str()?.to_string(),
+            models,
+            paper_configs,
+            babilong: BabilongSpec::from_json(v.req("babilong")?)?,
+            root: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+        };
+        for entry in m.models.values() {
+            entry.config.validate()?;
+        }
+        for cfg in m.paper_configs.values() {
+            cfg.validate()?;
+        }
+        Ok(m)
+    }
+
+    /// Look up an executable model bundle by name.
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Missing(format!("model '{name}' in manifest")))
+    }
+
+    /// Look up a paper config (simulator-only) OR an executable config.
+    pub fn any_config(&self, name: &str) -> Result<&ModelConfig> {
+        self.models
+            .get(name)
+            .map(|e| &e.config)
+            .or_else(|| self.paper_configs.get(name))
+            .ok_or_else(|| Error::Missing(format!("config '{name}'")))
+    }
+
+    /// Absolute path of an artifact file referenced by a model entry.
+    pub fn artifact_path(&self, entry: &ModelEntry, file: &str) -> PathBuf {
+        self.root.join(&entry.dir).join(file)
+    }
+
+    /// Absolute path of a model's params.bin.
+    pub fn params_path(&self, entry: &ModelEntry) -> PathBuf {
+        self.root.join(&entry.params_bin)
+    }
+}
+
+/// Default manifest location relative to the repo root.
+pub const DEFAULT_MANIFEST: &str = "artifacts/manifest.json";
+
+#[cfg(test)]
+pub(crate) fn test_model_config() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        vocab: 512,
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 128,
+        seg: 32,
+        mem: 8,
+        k_assoc: 16,
+        dpfp_nu: 3,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 16,
+        phi_dim: 96,
+        seg_total: 40,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_consistent() {
+        assert!(test_model_config().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_phi() {
+        let mut c = test_model_config();
+        c.phi_dim = 95;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_heads() {
+        let mut c = test_model_config();
+        c.n_heads = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_monotone_in_layers() {
+        let c = test_model_config();
+        let mut c2 = c.clone();
+        c2.n_layers = 8;
+        assert!(c2.param_count() > c.param_count());
+    }
+
+    #[test]
+    fn config_from_json() {
+        let src = r#"{
+            "name": "x", "vocab": 512, "d_model": 64, "n_layers": 4,
+            "n_heads": 4, "d_ff": 128, "seg": 32, "mem": 8, "k_assoc": 16,
+            "dpfp_nu": 3, "rope_theta": 10000.0, "eps": 1e-6,
+            "attn_buckets": [128], "head_dim": 16, "phi_dim": 96,
+            "seg_total": 40
+        }"#;
+        let v = Value::parse(src).unwrap();
+        let c = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(c.attn_buckets, vec![128]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.models.contains_key("tiny"));
+            let e = m.model("tiny").unwrap();
+            assert!(e.executables.contains_key("grouped_step"));
+            assert_eq!(m.paper_configs.len(), 4);
+            assert!(m.model("nope").is_err());
+        }
+    }
+}

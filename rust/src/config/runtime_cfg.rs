@@ -1,0 +1,210 @@
+//! Runtime (launcher) configuration: everything the CLI / server needs
+//! beyond the model manifest.
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// How the engine executes the (segment, layer) grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The paper's contribution: one grouped step per anti-diagonal.
+    Diagonal,
+    /// Baseline ARMT: layers in order, segments in order.
+    Sequential,
+    /// Vanilla full-attention LLaMA baseline (quadratic).
+    FullAttention,
+    /// Pick diagonal vs sequential per request from the cost model
+    /// (paper Table 9: "we can fall back to the original inference
+    /// algorithm at runtime").
+    Auto,
+}
+
+impl std::str::FromStr for ExecMode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "diagonal" | "diag" => Ok(ExecMode::Diagonal),
+            "sequential" | "seq" => Ok(ExecMode::Sequential),
+            "full" | "full_attention" => Ok(ExecMode::FullAttention),
+            "auto" => Ok(ExecMode::Auto),
+            other => Err(Error::Config(format!("unknown mode '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ExecMode::Diagonal => "diagonal",
+            ExecMode::Sequential => "sequential",
+            ExecMode::FullAttention => "full_attention",
+            ExecMode::Auto => "auto",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Which step backend executes grouped/single steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO executables on the PJRT CPU client (the real path).
+    Hlo,
+    /// Pure-rust reference model (bit-exact oracle, no artifacts needed).
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hlo" | "pjrt" => Ok(BackendKind::Hlo),
+            "native" => Ok(BackendKind::Native),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Hlo => "hlo",
+            BackendKind::Native => "native",
+        })
+    }
+}
+
+/// Launcher configuration (CLI flags / JSON file).
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    /// Path to artifacts/manifest.json.
+    pub manifest: String,
+    /// Model bundle to load ("tiny", "toy", ...).
+    pub model: String,
+    pub mode: ExecMode,
+    pub backend: BackendKind,
+    /// Server bind address.
+    pub addr: String,
+    /// Max tokens a single request may carry.
+    pub max_request_tokens: usize,
+    /// Bounded request queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Auto mode: minimum segments before diagonal pays off (calibrated
+    /// at startup or cost-model driven; see coordinator::fallback).
+    pub fallback_min_segments: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            manifest: super::DEFAULT_MANIFEST.to_string(),
+            model: "tiny".to_string(),
+            mode: ExecMode::Diagonal,
+            backend: BackendKind::Hlo,
+            addr: "127.0.0.1:7433".to_string(),
+            max_request_tokens: 1 << 20,
+            queue_depth: 64,
+            fallback_min_segments: 4,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Build from a parsed JSON object; absent fields keep defaults.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(x) = v.get("manifest") {
+            c.manifest = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("model") {
+            c.model = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("mode") {
+            c.mode = x.as_str()?.parse()?;
+        }
+        if let Some(x) = v.get("backend") {
+            c.backend = x.as_str()?.parse()?;
+        }
+        if let Some(x) = v.get("addr") {
+            c.addr = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("max_request_tokens") {
+            c.max_request_tokens = x.as_usize()?;
+        }
+        if let Some(x) = v.get("queue_depth") {
+            c.queue_depth = x.as_usize()?;
+        }
+        if let Some(x) = v.get("fallback_min_segments") {
+            c.fallback_min_segments = x.as_usize()?;
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    /// Serialize for diagnostics.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("manifest", Value::Str(self.manifest.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("mode", Value::Str(self.mode.to_string())),
+            ("backend", Value::Str(self.backend.to_string())),
+            ("addr", Value::Str(self.addr.clone())),
+            ("max_request_tokens", Value::Num(self.max_request_tokens as f64)),
+            ("queue_depth", Value::Num(self.queue_depth as f64)),
+            ("fallback_min_segments", Value::Num(self.fallback_min_segments as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [ExecMode::Diagonal, ExecMode::Sequential, ExecMode::FullAttention, ExecMode::Auto]
+        {
+            let back: ExecMode = m.to_string().parse().unwrap();
+            assert_eq!(back, m);
+        }
+        assert!("bogus".parse::<ExecMode>().is_err());
+    }
+
+    #[test]
+    fn default_is_sane() {
+        let c = RuntimeConfig::default();
+        assert_eq!(c.mode, ExecMode::Diagonal);
+        assert!(c.queue_depth > 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RuntimeConfig::default();
+        let v = c.to_json();
+        let back = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.mode, c.mode);
+        assert_eq!(back.backend, c.backend);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = Value::parse(r#"{"model": "toy", "mode": "seq"}"#).unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.model, "toy");
+        assert_eq!(c.mode, ExecMode::Sequential);
+        assert_eq!(c.queue_depth, 64);
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        let v = Value::parse(r#"{"mode": "sideways"}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! The inference engine: request in, logits/decode out.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{ExecMode, ModelConfig};
+use crate::coordinator::fallback::{Calibration, FallbackPolicy};
+use crate::error::{Error, Result};
+use crate::metrics::{Counter, Histogram};
+use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend};
+use crate::tensor::Tensor;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Optional per-request mode override.
+    pub mode: Option<ExecMode>,
+    /// Return full logits (false = only the greedy tail tokens).
+    pub want_logits: bool,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<u32>) -> Self {
+        Self { id, tokens, mode: None, want_logits: false }
+    }
+}
+
+/// What the engine returns.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Greedy (argmax) token per position of the FINAL segment.
+    pub greedy_tail: Vec<usize>,
+    /// Full per-segment logits if requested.
+    pub logits: Option<Vec<Tensor>>,
+    pub mode_used: ExecMode,
+    pub stats: RunStats,
+    pub latency: Duration,
+}
+
+/// Aggregate serving counters.
+#[derive(Default)]
+pub struct EngineStats {
+    pub requests: Counter,
+    pub rejected: Counter,
+    pub diagonal_runs: Counter,
+    pub sequential_runs: Counter,
+    pub full_attn_runs: Counter,
+    pub tokens: Counter,
+    pub latency: Histogram,
+}
+
+/// Engine over any [`StepBackend`].
+pub struct InferenceEngine<B: StepBackend> {
+    backend: B,
+    mode: ExecMode,
+    policy: FallbackPolicy,
+    max_request_tokens: usize,
+    pub stats: EngineStats,
+}
+
+impl<B: StepBackend> InferenceEngine<B> {
+    pub fn new(backend: B, mode: ExecMode) -> Self {
+        Self {
+            backend,
+            mode,
+            policy: FallbackPolicy::AlwaysDiagonal,
+            max_request_tokens: 1 << 20,
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: FallbackPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_max_tokens(mut self, max: usize) -> Self {
+        self.max_request_tokens = max;
+        self
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        self.backend.config()
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Measure per-step costs and install a calibrated fallback policy
+    /// (used by `mode = Auto`; see Table 9).
+    pub fn calibrate(&mut self, iters: usize) -> Result<Calibration> {
+        let cfg = self.backend.config().clone();
+        let l = cfg.n_layers;
+        let x = Tensor::zeros(&[l, cfg.seg_total, cfg.d_model]);
+        let a = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
+        let z = Tensor::zeros(&[l, cfg.phi_dim]);
+        let mask = vec![1.0; l];
+        // warmup + timed grouped steps
+        self.backend.grouped_step(&x, &a, &z, &mask)?;
+        let t0 = Instant::now();
+        for _ in 0..iters.max(1) {
+            self.backend.grouped_step(&x, &a, &z, &mask)?;
+        }
+        let grouped_step_s = t0.elapsed().as_secs_f64() / iters.max(1) as f64;
+
+        let x1 = x.index0(0);
+        let a1 = a.index0(0);
+        let z1 = z.index0(0);
+        self.backend.single_step(0, &x1, &a1, &z1)?;
+        let t0 = Instant::now();
+        for _ in 0..iters.max(1) {
+            self.backend.single_step(0, &x1, &a1, &z1)?;
+        }
+        let single_step_s = t0.elapsed().as_secs_f64() / iters.max(1) as f64;
+
+        let cal = Calibration { grouped_step_s, single_step_s, n_layers: l };
+        self.policy = FallbackPolicy::Calibrated(cal);
+        Ok(cal)
+    }
+
+    fn resolve_mode(&self, req: &Request, n_segments: usize) -> ExecMode {
+        let mode = req.mode.unwrap_or(self.mode);
+        match mode {
+            ExecMode::Auto => {
+                if self.policy.use_diagonal(n_segments) {
+                    ExecMode::Diagonal
+                } else {
+                    ExecMode::Sequential
+                }
+            }
+            m => m,
+        }
+    }
+
+    /// Execute one request synchronously.
+    pub fn process(&mut self, req: &Request) -> Result<Response> {
+        if req.tokens.is_empty() {
+            self.stats.rejected.inc();
+            return Err(Error::Request("empty token sequence".into()));
+        }
+        if req.tokens.len() > self.max_request_tokens {
+            self.stats.rejected.inc();
+            return Err(Error::Request(format!(
+                "request of {} tokens exceeds limit {}",
+                req.tokens.len(),
+                self.max_request_tokens
+            )));
+        }
+        let cfg = self.backend.config();
+        let n_segments = req.tokens.len().div_ceil(cfg.seg);
+        let mode = self.resolve_mode(req, n_segments);
+        let started = Instant::now();
+
+        let (logits, stats, mode_used) = match mode {
+            ExecMode::FullAttention => {
+                self.stats.full_attn_runs.inc();
+                let t0 = Instant::now();
+                let out = self.backend.full_attn(&req.tokens)?;
+                let stats = RunStats {
+                    mode_diagonal: false,
+                    segments: 1,
+                    launches: 1,
+                    cells: 0,
+                    padded_cells: 0,
+                    wall: t0.elapsed(),
+                    tokens: req.tokens.len(),
+                };
+                (vec![out], stats, ExecMode::FullAttention)
+            }
+            ExecMode::Diagonal => {
+                self.stats.diagonal_runs.inc();
+                let out = Executor::new(&mut self.backend, ScheduleMode::Diagonal)
+                    .run(&req.tokens)?;
+                (out.logits, out.stats, ExecMode::Diagonal)
+            }
+            ExecMode::Sequential => {
+                self.stats.sequential_runs.inc();
+                let out = Executor::new(&mut self.backend, ScheduleMode::Sequential)
+                    .run(&req.tokens)?;
+                (out.logits, out.stats, ExecMode::Sequential)
+            }
+            ExecMode::Auto => unreachable!("resolved above"),
+        };
+
+        let greedy_tail = logits.last().map(|t| t.argmax_rows()).unwrap_or_default();
+        let latency = started.elapsed();
+        self.stats.requests.inc();
+        self.stats.tokens.add(req.tokens.len() as u64);
+        self.stats.latency.observe(latency);
+        Ok(Response {
+            id: req.id,
+            greedy_tail,
+            logits: req.want_logits.then_some(logits),
+            mode_used,
+            stats,
+            latency,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NativeBackend, Params};
+
+    fn engine(mode: ExecMode) -> InferenceEngine<NativeBackend> {
+        let cfg = crate::model::tests::test_config();
+        let params = Params::random(&cfg, 9);
+        InferenceEngine::new(NativeBackend::new(cfg, params), mode)
+    }
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| (i * 13 + 1) % 64).collect()
+    }
+
+    #[test]
+    fn process_roundtrip_and_stats() {
+        let mut e = engine(ExecMode::Diagonal);
+        let resp = e.process(&Request::new(1, toks(24))).unwrap();
+        assert_eq!(resp.mode_used, ExecMode::Diagonal);
+        assert_eq!(resp.greedy_tail.len(), e.config().seg);
+        assert_eq!(e.stats.requests.get(), 1);
+        assert_eq!(e.stats.diagonal_runs.get(), 1);
+        assert!(resp.latency > Duration::ZERO);
+    }
+
+    #[test]
+    fn diagonal_equals_sequential_through_engine() {
+        let mut e1 = engine(ExecMode::Diagonal);
+        let mut e2 = engine(ExecMode::Sequential);
+        let mut r = Request::new(2, toks(8 * 4));
+        r.want_logits = true;
+        let a = e1.process(&r).unwrap();
+        let b = e2.process(&r).unwrap();
+        let (la, lb) = (a.logits.unwrap(), b.logits.unwrap());
+        assert_eq!(la, lb); // native backend: bit-exact
+    }
+
+    #[test]
+    fn auto_mode_respects_policy() {
+        let mut e = engine(ExecMode::Auto).with_policy(FallbackPolicy::MinSegments(3));
+        let short = e.process(&Request::new(3, toks(8))).unwrap();
+        assert_eq!(short.mode_used, ExecMode::Sequential);
+        let long = e.process(&Request::new(4, toks(8 * 5))).unwrap();
+        assert_eq!(long.mode_used, ExecMode::Diagonal);
+        assert_eq!(e.stats.sequential_runs.get(), 1);
+        assert_eq!(e.stats.diagonal_runs.get(), 1);
+    }
+
+    #[test]
+    fn rejects_empty_and_oversized() {
+        let mut e = engine(ExecMode::Diagonal).with_max_tokens(16);
+        assert!(e.process(&Request::new(5, vec![])).is_err());
+        assert!(e.process(&Request::new(6, toks(17))).is_err());
+        assert_eq!(e.stats.rejected.get(), 2);
+    }
+
+    #[test]
+    fn calibration_produces_policy() {
+        let mut e = engine(ExecMode::Auto);
+        let cal = e.calibrate(2).unwrap();
+        assert!(cal.grouped_step_s > 0.0);
+        assert!(cal.single_step_s > 0.0);
+        // native backend: grouped(L) ~= L * single, so diagonal should
+        // win for large S but the crossover is finite
+        assert!(cal.crossover_segments() > 0);
+    }
+
+    #[test]
+    fn full_attention_mode() {
+        let mut e = engine(ExecMode::FullAttention);
+        let resp = e.process(&Request::new(7, toks(12))).unwrap();
+        assert_eq!(resp.mode_used, ExecMode::FullAttention);
+        assert_eq!(e.stats.full_attn_runs.get(), 1);
+        assert_eq!(resp.greedy_tail.len(), 12); // per-token logits
+    }
+
+    #[test]
+    fn per_request_mode_override() {
+        let mut e = engine(ExecMode::Diagonal);
+        let mut r = Request::new(8, toks(16));
+        r.mode = Some(ExecMode::Sequential);
+        let resp = e.process(&r).unwrap();
+        assert_eq!(resp.mode_used, ExecMode::Sequential);
+    }
+}

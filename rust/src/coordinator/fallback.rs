@@ -1,0 +1,101 @@
+//! Runtime schedule selection (paper Table 9's fallback note).
+//!
+//! Diagonal batching is not free: fixed-width grouped steps waste ramp
+//! slots and the grouped program has higher per-launch cost, so for very
+//! short requests the sequential loop can win (the paper's own Table 9
+//! shows x0.52-x0.87 at 4096 tokens). The policy here decides per
+//! request, either from an explicit segment threshold or from a pair of
+//! measured per-step costs (calibration at startup).
+
+/// Decision inputs captured at calibration time.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Measured (or modeled) seconds per grouped step (full width L).
+    pub grouped_step_s: f64,
+    /// Measured seconds per single step.
+    pub single_step_s: f64,
+    pub n_layers: usize,
+}
+
+impl Calibration {
+    /// Predicted sequential time for `s` segments.
+    pub fn predict_sequential(&self, s: usize) -> f64 {
+        (s * self.n_layers) as f64 * self.single_step_s
+    }
+
+    /// Predicted diagonal time for `s` segments (fixed-width executor:
+    /// every one of the S+L-1 iterations is a full grouped step).
+    pub fn predict_diagonal(&self, s: usize) -> f64 {
+        (s + self.n_layers - 1) as f64 * self.grouped_step_s
+    }
+
+    /// Smallest segment count where diagonal is predicted to win.
+    pub fn crossover_segments(&self) -> usize {
+        for s in 1..=4096 {
+            if self.predict_diagonal(s) < self.predict_sequential(s) {
+                return s;
+            }
+        }
+        usize::MAX
+    }
+}
+
+/// The per-request mode policy.
+#[derive(Clone, Debug)]
+pub enum FallbackPolicy {
+    /// Always diagonal (paper's main configuration).
+    AlwaysDiagonal,
+    /// Diagonal iff the request has at least this many segments.
+    MinSegments(usize),
+    /// Threshold derived from measured step costs.
+    Calibrated(Calibration),
+}
+
+impl FallbackPolicy {
+    /// True if the request should run the diagonal schedule.
+    pub fn use_diagonal(&self, n_segments: usize) -> bool {
+        match self {
+            FallbackPolicy::AlwaysDiagonal => true,
+            FallbackPolicy::MinSegments(min) => n_segments >= *min,
+            FallbackPolicy::Calibrated(c) => {
+                c.predict_diagonal(n_segments) < c.predict_sequential(n_segments)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_segments_threshold() {
+        let p = FallbackPolicy::MinSegments(4);
+        assert!(!p.use_diagonal(3));
+        assert!(p.use_diagonal(4));
+    }
+
+    #[test]
+    fn calibrated_crossover() {
+        // grouped step costs 6x a single step with L = 16: diagonal wins
+        // once (s + 15) * 6 < s * 16  <=>  s > 9, i.e. from s = 10 on.
+        let c = Calibration { grouped_step_s: 6.0, single_step_s: 1.0, n_layers: 16 };
+        assert_eq!(c.crossover_segments(), 10);
+        let p = FallbackPolicy::Calibrated(c);
+        assert!(!p.use_diagonal(5));
+        assert!(p.use_diagonal(16));
+    }
+
+    #[test]
+    fn degenerate_calibration_never_diagonal() {
+        // grouped step costs more than L single steps: never profitable.
+        let c = Calibration { grouped_step_s: 20.0, single_step_s: 1.0, n_layers: 16 };
+        assert_eq!(c.crossover_segments(), usize::MAX);
+        assert!(!FallbackPolicy::Calibrated(c).use_diagonal(4096));
+    }
+
+    #[test]
+    fn always_diagonal() {
+        assert!(FallbackPolicy::AlwaysDiagonal.use_diagonal(1));
+    }
+}

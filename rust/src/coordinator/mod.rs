@@ -1,0 +1,18 @@
+//! Serving coordinator: the production wrapper around the executors.
+//!
+//! * [`engine`] — `InferenceEngine`: owns a backend, executes requests in
+//!   any [`crate::config::ExecMode`], produces responses with stats;
+//! * [`fallback`] — the Table 9 runtime policy ("in cases when diagonal
+//!   batching is slower, we can fall back to the original inference
+//!   algorithm at runtime"): calibration + per-request mode choice;
+//! * [`queue`] — bounded FIFO request queue with backpressure (the
+//!   paper's deployment point: one long-context request at a time
+//!   saturates the device, so the queue is depth-limited and fair).
+
+pub mod engine;
+pub mod fallback;
+pub mod queue;
+
+pub use engine::{EngineStats, InferenceEngine, Request, Response};
+pub use fallback::FallbackPolicy;
+pub use queue::RequestQueue;

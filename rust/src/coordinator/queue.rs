@@ -1,0 +1,133 @@
+//! Bounded FIFO request queue with backpressure.
+//!
+//! The paper's deployment note (§1 contributions) is that diagonal
+//! batching saturates the device with ONE long-context request, so the
+//! serving topology is simple: a depth-limited queue feeding a single
+//! executor loop. Producers get `QueueFull` instead of unbounded latency.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+/// Thread-safe bounded FIFO.
+pub struct RequestQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking push; `Err(Request("queue full"))` applies
+    /// backpressure to the caller.
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Error::Request("queue closed".into()));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(Error::Request("queue full".into()));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.push(3).is_err());
+        q.pop();
+        assert!(q.push(3).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.push(2).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(RequestQueue::new(8));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(x) = q2.pop() {
+                got.push(x);
+            }
+            got
+        });
+        for i in 0..20 {
+            while q.push(i).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,83 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror`) to keep the dependency closure small; the
+//! binaries wrap everything in `eyre` for reporting.
+
+use std::fmt;
+
+/// All failure modes of the library surface.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (artifact files, params.bin, sockets).
+    Io(std::io::Error),
+    /// Manifest / request JSON problems (in-tree parser, `crate::json`).
+    Json(String),
+    /// PJRT / XLA failures from the `xla` crate.
+    Xla(String),
+    /// Shape or dtype mismatch between caller and artifact contract.
+    Shape {
+        what: &'static str,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+    /// Unknown model / executable / parameter name.
+    Missing(String),
+    /// Configuration rejected (inconsistent dims, bad mode string, ...).
+    Config(String),
+    /// Scheduler invariant violated (a bug, surfaced loudly).
+    Schedule(String),
+    /// Request-level failure (empty input, over limit, queue closed).
+    Request(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::Xla(e) => write!(f, "xla/pjrt: {e}"),
+            Error::Shape { what, expected, got } => {
+                write!(f, "shape mismatch in {what}: expected {expected:?}, got {got:?}")
+            }
+            Error::Missing(name) => write!(f, "missing: {name}"),
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Schedule(msg) => write!(f, "schedule invariant violated: {msg}"),
+            Error::Request(msg) => write!(f, "request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::Shape { what: "x", expected: vec![1, 2], got: vec![2, 1] };
+        assert!(e.to_string().contains("shape mismatch"));
+        assert!(Error::Missing("foo".into()).to_string().contains("foo"));
+        assert!(Error::Schedule("bad".into()).to_string().contains("invariant"));
+    }
+
+    #[test]
+    fn from_io() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

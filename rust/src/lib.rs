@@ -1,0 +1,50 @@
+//! # diagonal-batching
+//!
+//! Production-grade reproduction of *"Diagonal Batching Unlocks Parallelism
+//! in Recurrent Memory Transformers for Long Contexts"* (Sivtsov et al.,
+//! 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time python)** — ARMT Pallas kernels + JAX model,
+//!   AOT-lowered to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — the paper's contribution: the diagonal-batching
+//!   scheduler ([`scheduler`]), plus every substrate it needs: a PJRT
+//!   runtime ([`runtime`]), a native reference model ([`model`]), a GPU
+//!   roofline simulator ([`simulator`]), a serving coordinator
+//!   ([`coordinator`]), a TCP server ([`server`]), a synthetic BABILong
+//!   task generator ([`babilong`]), metrics and configuration.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use diagonal_batching::config::Manifest;
+//! use diagonal_batching::model::{NativeBackend, Params};
+//! use diagonal_batching::scheduler::{Executor, ScheduleMode};
+//!
+//! let manifest = Manifest::load("artifacts/manifest.json").unwrap();
+//! let entry = manifest.model("tiny").unwrap();
+//! let params = Params::load(&manifest, "tiny").unwrap();
+//! let mut backend = NativeBackend::new(entry.config.clone(), params);
+//! let mut exec = Executor::new(&mut backend, ScheduleMode::Diagonal);
+//! let tokens: Vec<u32> = (0..256).map(|i| i % 100).collect();
+//! let out = exec.run(&tokens).unwrap();
+//! println!("{} segments, {} logits/segment", out.segments(), out.vocab());
+//! ```
+
+pub mod babilong;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod json;
+pub mod bench;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod tensor;
+
+pub use error::{Error, Result};

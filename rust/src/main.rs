@@ -1,0 +1,322 @@
+//! `diagonal-batching` — the L3 launcher.
+//!
+//! ```text
+//! diagonal-batching serve  [--model tiny] [--mode diagonal] [--addr HOST:PORT]
+//! diagonal-batching run    [--model tiny] [--mode diagonal|seq|full|auto]
+//!                          [--tokens N] [--backend hlo|native] [--compare true]
+//! diagonal-batching tables [--device a100|h100]     # regenerate paper tables
+//! diagonal-batching babilong [--task qa1|qa2] [--len N] [--episodes N]
+//! diagonal-batching info   [--model tiny]           # artifact inventory
+//! ```
+//!
+//! Hand-rolled flag parsing (offline toolchain has no clap); every
+//! subcommand accepts `--manifest PATH` (default artifacts/manifest.json).
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use diagonal_batching::babilong::{self, Task};
+use diagonal_batching::config::{BackendKind, ExecMode, Manifest, RuntimeConfig};
+use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::scheduler::StepBackend;
+use diagonal_batching::server::Server;
+use diagonal_batching::simulator::{tables, DeviceSpec};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` flags after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got '{}'", args[i]))?;
+        if let Some(v) = args.get(i + 1) {
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        } else {
+            return Err(format!("flag --{k} needs a value"));
+        }
+    }
+    Ok(flags)
+}
+
+fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    let mut cfg = RuntimeConfig::default();
+    if let Some(path) = flags.get("config") {
+        cfg = RuntimeConfig::load(path)?;
+    }
+    if let Some(m) = flags.get("manifest") {
+        cfg.manifest = m.clone();
+    }
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(m) = flags.get("mode") {
+        cfg.mode = m.parse()?;
+    }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(a) = flags.get("addr") {
+        cfg.addr = a.clone();
+    }
+
+    match cmd.as_str() {
+        "serve" => cmd_serve(&cfg),
+        "run" => cmd_run(&cfg, &flags),
+        "tables" => cmd_tables(&cfg, &flags),
+        "babilong" => cmd_babilong(&cfg, &flags),
+        "info" => cmd_info(&cfg),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try: help)").into()),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "diagonal-batching — Diagonal Batching for Recurrent Memory Transformers
+
+USAGE:
+  diagonal-batching <serve|run|tables|babilong|info> [--flags]
+
+COMMON FLAGS:
+  --manifest PATH   artifacts/manifest.json
+  --model NAME      tiny | toy
+  --mode MODE       diagonal | seq | full | auto
+  --backend KIND    hlo | native
+  --config PATH     RuntimeConfig JSON
+
+SUBCOMMANDS:
+  serve     --addr HOST:PORT                 start the TCP JSON-lines server
+  run       --tokens N --compare true        one forward pass (+drift check)
+  tables    --device a100|h100               regenerate the paper tables
+  babilong  --task qa1|qa2 --len N --episodes N
+  info                                       print artifact inventory"
+    );
+}
+
+fn boxed_backend(
+    cfg: &RuntimeConfig,
+    manifest: &Manifest,
+) -> Result<Box<dyn StepBackend + Send>, Box<dyn std::error::Error>> {
+    Ok(match cfg.backend {
+        BackendKind::Hlo => Box::new(HloBackend::load(manifest, &cfg.model)?),
+        BackendKind::Native => {
+            let entry = manifest.model(&cfg.model)?;
+            Box::new(NativeBackend::new(
+                entry.config.clone(),
+                Params::load(manifest, &cfg.model)?,
+            ))
+        }
+    })
+}
+
+fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load(&cfg.manifest)?;
+    println!("loading model '{}' (backend {})...", cfg.model, cfg.backend);
+    let backend = boxed_backend(cfg, &manifest)?;
+    let mut engine =
+        InferenceEngine::new(backend, cfg.mode).with_max_tokens(cfg.max_request_tokens);
+    if cfg.mode == ExecMode::Auto {
+        let cal = engine.calibrate(3)?;
+        println!(
+            "calibrated: grouped {:.3}ms single {:.3}ms crossover {} segments",
+            cal.grouped_step_s * 1e3,
+            cal.single_step_s * 1e3,
+            cal.crossover_segments()
+        );
+    }
+    let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
+    println!("serving on {} (mode {}) — Ctrl-C to stop", server.addr, cfg.mode);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_run(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load(&cfg.manifest)?;
+    let n_tokens: usize = flags.get("tokens").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let compare: bool = flags.get("compare").map(|s| s.parse()).transpose()?.unwrap_or(false);
+    let entry = manifest.model(&cfg.model)?;
+    let vocab = entry.config.vocab as u32;
+    let tokens: Vec<u32> = (0..n_tokens as u32).map(|i| (i * 31 + 7) % vocab).collect();
+
+    let backend = boxed_backend(cfg, &manifest)?;
+    let mut engine = InferenceEngine::new(backend, cfg.mode);
+    let mut req = Request::new(1, tokens.clone());
+    req.want_logits = true;
+    let resp = engine.process(&req)?;
+    println!(
+        "mode={} segments={} launches={} mean_group={:.2} wall={:?}",
+        resp.mode_used,
+        resp.stats.segments,
+        resp.stats.launches,
+        resp.stats.mean_group(),
+        resp.stats.wall
+    );
+    if compare {
+        // Diagonal vs sequential drift — the paper's Table 2 metric.
+        let mut rd = Request::new(2, tokens.clone());
+        rd.want_logits = true;
+        rd.mode = Some(ExecMode::Diagonal);
+        let mut rs = rd.clone();
+        rs.id = 3;
+        rs.mode = Some(ExecMode::Sequential);
+        let d = engine.process(&rd)?;
+        let s = engine.process(&rs)?;
+        let dl = d.logits.unwrap();
+        let sl = s.logits.unwrap();
+        let mut worst = 0.0f32;
+        for (a, b) in dl.iter().zip(&sl) {
+            worst = worst.max(a.rel_error(b));
+        }
+        println!(
+            "diagonal {:?} vs sequential {:?}; rel logits error {:.4}%",
+            d.stats.wall,
+            s.stats.wall,
+            worst * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tables(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load(&cfg.manifest)?;
+    let dev = match flags.get("device").map(String::as_str) {
+        Some("h100") => DeviceSpec::h100(),
+        _ => DeviceSpec::a100(),
+    };
+    println!("device model: {}", dev.name);
+    for (name, segs) in [
+        ("llama-160m", vec![(1024, 128), (4096, 128)]),
+        ("llama-3.2-1b", vec![(512, 128), (1024, 128), (2048, 128), (4096, 128)]),
+        ("llama-3.2-3b", vec![(1024, 128), (4096, 128)]),
+        ("llama-3.1-8b", vec![(1024, 128), (4096, 128)]),
+    ] {
+        let base = manifest.any_config(name)?;
+        println!("\n### {name}");
+        for (seg, mem) in segs {
+            println!("Configuration: ({seg}, {mem})");
+            let rows = tables::exec_time_rows(base, &dev, seg, mem, &tables::SEQ_LENS);
+            let cols: Vec<(&str, Box<dyn Fn(&tables::ExecCell) -> String>)> = vec![
+                ("seq len", Box::new(|r: &tables::ExecCell| r.seq_len.to_string())),
+                ("llama (s)", Box::new(|r| format!("{:.3}", r.llama_s))),
+                ("ARMT seq (s)", Box::new(|r| format!("{:.3}", r.armt_seq_s))),
+                ("ARMT diag (s)", Box::new(|r| format!("{:.3}", r.armt_diag_s))),
+                ("speedup vs ARMT", Box::new(|r| format!("x{:.2}", r.speedup_vs_armt()))),
+                ("speedup vs llama", Box::new(|r| format!("x{:.2}", r.speedup_vs_llama()))),
+            ];
+            for (label, f) in &cols {
+                print!("{label:>18}:");
+                for r in &rows {
+                    print!("{:>10}", f(r));
+                }
+                println!();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_babilong(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load(&cfg.manifest)?;
+    let task = match flags.get("task").map(String::as_str) {
+        Some("qa2") => Task::QA2,
+        _ => Task::QA1,
+    };
+    let len: usize = flags.get("len").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let episodes: usize = flags.get("episodes").map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let mut gen = babilong::Generator::new(manifest.babilong.clone(), 42);
+    let eps = gen.batch(task, len, episodes);
+
+    let entry = manifest.model(&cfg.model)?.clone();
+    let backend = boxed_backend(cfg, &manifest)?;
+    let mut engine = InferenceEngine::new(backend, cfg.mode);
+
+    let seg = engine.config().seg;
+    let mut preds = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (i, e) in eps.iter().enumerate() {
+        let mut req = Request::new(i as u64, e.tokens.clone());
+        req.want_logits = true;
+        let resp = engine.process(&req)?;
+        // the answer is predicted at the query position of the last segment
+        let pos_in_seg = e.query_pos % seg;
+        let logits = resp.logits.as_ref().unwrap();
+        let pred = logits.last().unwrap().argmax_rows()[pos_in_seg] as u32;
+        preds.push(pred);
+    }
+    let acc = babilong::accuracy(&eps, &preds);
+    println!(
+        "{task} len={len} episodes={episodes} mode={} acc={:.1}% total={:?} trained={}",
+        cfg.mode,
+        acc * 100.0,
+        t0.elapsed(),
+        entry.trained
+    );
+    if !entry.trained {
+        println!("note: weights are untrained (run `make toy`); accuracy is chance-level");
+    }
+    Ok(())
+}
+
+fn cmd_info(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let manifest = Manifest::load(&cfg.manifest)?;
+    println!("manifest: {} (impl {})", cfg.manifest, manifest.impl_);
+    let mut names: Vec<_> = manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let entry = &manifest.models[name];
+        let c = &entry.config;
+        println!(
+            "\nmodel '{name}' (trained={}): d={} L={} heads={} ff={} seg={} mem={} k={}",
+            entry.trained, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seg, c.mem, c.k_assoc
+        );
+        let mut exes: Vec<_> = entry.executables.iter().collect();
+        exes.sort_by_key(|(n, _)| (*n).clone());
+        for (exe, e) in exes {
+            println!(
+                "  {exe:<20} {:>8.1} kB  {} inputs",
+                e.hlo_bytes as f64 / 1e3,
+                e.inputs.len()
+            );
+        }
+    }
+    println!("\npaper configs (simulator-only): {:?}", {
+        let mut v: Vec<_> = manifest.paper_configs.keys().collect();
+        v.sort();
+        v
+    });
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Metrics: counters, gauges, histograms and a registry, shared by the
+//! coordinator and the server. No external deps; snapshotting is
+//! lock-based and cheap (the hot path only bumps atomics).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotone event counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (u64).
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-scaled latency histogram: buckets at 1us * 2^i, i in 0..32.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+        }
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..1) — a
+    /// coarse (2x) but allocation-free percentile.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        Duration::from_micros(1 << 31)
+    }
+}
+
+/// Named metric registry, snapshot-able to JSON.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Registry {
+    pub fn record(&self, name: &str, v: u64) {
+        let mut m = self.counters.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters.lock().unwrap().clone()
+    }
+
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::Obj(
+            self.snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, crate::json::Value::Num(v as f64)))
+                .collect(),
+        )
+    }
+}
+
+/// RAII timer that records into a histogram on drop.
+pub struct Stopwatch<'a> {
+    hist: &'a Histogram,
+    start: std::time::Instant,
+}
+
+impl<'a> Stopwatch<'a> {
+    pub fn start(hist: &'a Histogram) -> Self {
+        Self { hist, start: std::time::Instant::now() }
+    }
+}
+
+impl Drop for Stopwatch<'_> {
+    fn drop(&mut self) {
+        self.hist.observe(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.observe(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn stopwatch_records() {
+        let h = Histogram::new();
+        {
+            let _sw = Stopwatch::start(&h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn registry_snapshot() {
+        let r = Registry::default();
+        r.record("a", 2);
+        r.record("a", 3);
+        r.record("b", 1);
+        let s = r.snapshot();
+        assert_eq!(s["a"], 5);
+        assert_eq!(s["b"], 1);
+        assert!(r.to_json().to_json().contains("\"a\":5"));
+    }
+}

@@ -1,0 +1,317 @@
+//! The ARMT cell math (DESIGN.md "ARMT cell semantics"), mirroring the L2
+//! jax model op-for-op: associative read (eq. 6) -> RMSNorm -> causal MHA
+//! with RoPE -> residual -> RMSNorm -> SwiGLU -> residual -> delta-rule
+//! memory update (eqs. 3-5).
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::model::params::{LayerTensors, Params};
+use crate::tensor::{self, Tensor};
+
+/// Re-exported alias: a materialized single-layer parameter view.
+pub type LayerView<'a> = LayerTensors<'a>;
+
+/// Associative read with residual (eq. 6):
+/// `x_i += A phi(W_Q x_i) / (z^T phi(W_Q x_i) + eps)`.
+///
+/// x: [T, d], a: [d, p], z: [p], wq: [d, k]. With a = z = 0 this is an
+/// exact identity (segment 0 needs no gate).
+pub fn assoc_read(cfg: &ModelConfig, x: &Tensor, a: &Tensor, z: &Tensor, wq: &Tensor) -> Tensor {
+    let q = tensor::dpfp(&tensor::matmul(x, wq), cfg.dpfp_nu); // [T, p]
+    let num = tensor::matmul_bt(&q, a); // [T, d] = q @ a^T
+    let (t, d) = (x.shape()[0], x.shape()[1]);
+    let mut out = x.clone();
+    for i in 0..t {
+        let qrow = q.row(i);
+        let den: f32 =
+            qrow.iter().zip(z.data()).map(|(a, b)| a * b).sum::<f32>() + cfg.eps;
+        let orow = &mut out.data_mut()[i * d..(i + 1) * d];
+        let nrow = num.row(i);
+        for j in 0..d {
+            orow[j] += nrow[j] / den;
+        }
+    }
+    out
+}
+
+/// Delta-rule memory update (eqs. 3-5) over the memory-token outputs.
+/// y_mem: [m, d]; returns (a', z').
+pub fn assoc_update(
+    cfg: &ModelConfig,
+    y_mem: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+    ak: &Tensor,
+    av: &Tensor,
+    ab: &Tensor,
+) -> (Tensor, Tensor) {
+    let eps = cfg.eps;
+    let k = tensor::dpfp(&tensor::matmul(y_mem, ak), cfg.dpfp_nu); // [m, p]
+    let v = tensor::matmul(y_mem, av); // [m, d]
+    let m = y_mem.shape()[0];
+    let d = cfg.d_model;
+    let p = cfg.phi_dim;
+
+    let mut a2 = a.clone();
+    let mut z2 = z.clone();
+    // Accumulate per-token rank-1 deltas; the sum over i matches the
+    // kernel's single fused matmul because addition order over i is fixed.
+    let mut da = vec![0.0f32; d * p];
+    let mut dz = vec![0.0f32; p];
+    for i in 0..m {
+        let yrow = y_mem.row(i);
+        let krow = k.row(i);
+        let beta = tensor::sigmoid(
+            yrow.iter().zip(ab.data()).map(|(a, b)| a * b).sum::<f32>(),
+        );
+        let den: f32 = krow.iter().zip(z.data()).map(|(a, b)| a * b).sum();
+        // v_bar_i = A phi(k_i) / (den + eps)
+        let mut v_bar = vec![0.0f32; d];
+        for r in 0..d {
+            let arow = &a.data()[r * p..(r + 1) * p];
+            let mut acc = 0.0f32;
+            for c in 0..p {
+                acc += arow[c] * krow[c];
+            }
+            v_bar[r] = acc / (den + eps);
+        }
+        let norm2: f32 = krow.iter().map(|x| x * x).sum();
+        let gamma = 1.0 - den / (norm2 + eps);
+        let vrow = v.row(i);
+        for r in 0..d {
+            let coeff = beta * (vrow[r] - v_bar[r]);
+            let darow = &mut da[r * p..(r + 1) * p];
+            for c in 0..p {
+                darow[c] += coeff * krow[c];
+            }
+        }
+        for c in 0..p {
+            dz[c] += gamma * krow[c];
+        }
+    }
+    for (x, y) in a2.data_mut().iter_mut().zip(&da) {
+        *x += y;
+    }
+    for (x, y) in z2.data_mut().iter_mut().zip(&dz) {
+        *x += y;
+    }
+    (a2, z2)
+}
+
+/// Multi-head attention with RoPE and the ARMT mask (causal for segment
+/// tokens, full visibility for trailing memory tokens). x: [T, d].
+pub fn attention(
+    cfg: &ModelConfig,
+    x: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    seg: usize,
+) -> Tensor {
+    let (t, d) = (x.shape()[0], x.shape()[1]);
+    let h = cfg.n_heads;
+    let hd = d / h;
+    let q = tensor::matmul(x, wq);
+    let k = tensor::matmul(x, wk);
+    let v = tensor::matmul(x, wv);
+
+    let head = |m: &Tensor, hi: usize| -> Tensor {
+        let mut out = Tensor::zeros(&[t, hd]);
+        for i in 0..t {
+            out.data_mut()[i * hd..(i + 1) * hd]
+                .copy_from_slice(&m.row(i)[hi * hd..(hi + 1) * hd]);
+        }
+        out
+    };
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut merged = Tensor::zeros(&[t, d]);
+    for hi in 0..h {
+        let qh = tensor::rope_rows(&head(&q, hi), cfg.rope_theta);
+        let kh = tensor::rope_rows(&head(&k, hi), cfg.rope_theta);
+        let vh = head(&v, hi);
+        let mut scores = tensor::scale(&tensor::matmul_bt(&qh, &kh), scale);
+        for i in 0..t {
+            for j in 0..t {
+                let allowed = j <= i || i >= seg;
+                if !allowed {
+                    scores.data_mut()[i * t + j] = -1e30;
+                }
+            }
+        }
+        let probs = tensor::softmax_rows(&scores);
+        let oh = tensor::matmul(&probs, &vh); // [t, hd]
+        for i in 0..t {
+            merged.data_mut()[i * d + hi * hd..i * d + (hi + 1) * hd]
+                .copy_from_slice(oh.row(i));
+        }
+    }
+    tensor::matmul(&merged, wo)
+}
+
+/// SwiGLU MLP: (silu(x wg) * (x wu)) wd. x: [T, d].
+pub fn swiglu(x: &Tensor, wg: &Tensor, wu: &Tensor, wd: &Tensor) -> Tensor {
+    let gate = tensor::map(&tensor::matmul(x, wg), tensor::silu);
+    let up = tensor::matmul(x, wu);
+    tensor::matmul(&tensor::mul(&gate, &up), wd)
+}
+
+/// One full (segment, layer) cell: read -> transformer layer -> update.
+/// x: [T, d], a: [d, p], z: [p]. Returns (y, a', z').
+pub fn layer_step(
+    cfg: &ModelConfig,
+    lp: &LayerTensors<'_>,
+    x: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let xr = assoc_read(cfg, x, a, z, &lp.aq);
+    let attn = attention(
+        cfg,
+        &tensor::rmsnorm(&xr, &lp.n1, cfg.eps),
+        &lp.wq,
+        &lp.wk,
+        &lp.wv,
+        &lp.wo,
+        cfg.seg,
+    );
+    let h = tensor::add(&xr, &attn);
+    let mlp = swiglu(&tensor::rmsnorm(&h, &lp.n2, cfg.eps), &lp.wg, &lp.wu, &lp.wd);
+    let y = tensor::add(&h, &mlp);
+    let y_mem = y.slice0(cfg.seg, cfg.seg_total);
+    let (a2, z2) = assoc_update(cfg, &y_mem, a, z, &lp.ak, &lp.av, &lp.ab);
+    (y, a2, z2)
+}
+
+/// Vanilla full-attention forward over the whole context (the quadratic
+/// baseline; no memory, fully causal).
+pub fn full_attn_forward(cfg: &ModelConfig, params: &Params, tokens: &[u32]) -> Result<Tensor> {
+    let n = tokens.len();
+    let d = cfg.d_model;
+    let emb = params.global("emb")?;
+    let mut h = Tensor::zeros(&[n, d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        if t as usize >= cfg.vocab {
+            return Err(Error::Request(format!("token {t} >= vocab")));
+        }
+        h.data_mut()[i * d..(i + 1) * d].copy_from_slice(emb.row(t as usize));
+    }
+    for l in 0..cfg.n_layers {
+        let lp = params.layer(l);
+        // fully causal: every position is a "segment token" (seg = n)
+        let attn = attention(cfg, &tensor::rmsnorm(&h, &lp.n1, cfg.eps), &lp.wq, &lp.wk, &lp.wv, &lp.wo, n);
+        let h1 = tensor::add(&h, &attn);
+        let mlp = swiglu(&tensor::rmsnorm(&h1, &lp.n2, cfg.eps), &lp.wg, &lp.wu, &lp.wd);
+        h = tensor::add(&h1, &mlp);
+    }
+    let nf = params.global("nf")?;
+    let w_out = params.global("w_out")?;
+    Ok(tensor::matmul(&tensor::rmsnorm(&h, nf, cfg.eps), w_out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn cfg() -> ModelConfig {
+        crate::model::tests::test_config()
+    }
+
+    #[test]
+    fn assoc_read_zero_state_identity() {
+        let c = cfg();
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let a = Tensor::zeros(&[c.d_model, c.phi_dim]);
+        let z = Tensor::zeros(&[c.phi_dim]);
+        let wq = Tensor::randn(&[c.d_model, c.k_assoc], 0.3, &mut rng);
+        let out = assoc_read(&c, &x, &a, &z, &wq);
+        assert!(out.max_abs_diff(&x) < 1e-5);
+    }
+
+    #[test]
+    fn assoc_update_changes_state() {
+        let c = cfg();
+        let mut rng = Rng::new(2);
+        let y = Tensor::randn(&[c.mem, c.d_model], 0.5, &mut rng);
+        let a = Tensor::zeros(&[c.d_model, c.phi_dim]);
+        let z = Tensor::zeros(&[c.phi_dim]);
+        let ak = Tensor::randn(&[c.d_model, c.k_assoc], 0.3, &mut rng);
+        let av = Tensor::randn(&[c.d_model, c.d_model], 0.1, &mut rng);
+        let ab = Tensor::randn(&[c.d_model], 0.3, &mut rng);
+        let (a2, z2) = assoc_update(&c, &y, &a, &z, &ak, &av, &ab);
+        assert!(a2.norm() > 0.0);
+        assert!(z2.norm() > 0.0);
+    }
+
+    #[test]
+    fn write_then_read_recovers_beta_v() {
+        // Same invariant as python test_assoc_write_then_read_recovers_value.
+        let c = cfg();
+        let mut rng = Rng::new(3);
+        let y = Tensor::randn(&[1, c.d_model], 1.0, &mut rng);
+        let a = Tensor::zeros(&[c.d_model, c.phi_dim]);
+        let z = Tensor::zeros(&[c.phi_dim]);
+        let ak = Tensor::randn(&[c.d_model, c.k_assoc], 0.3, &mut rng);
+        let av = Tensor::randn(&[c.d_model, c.d_model], 0.1, &mut rng);
+        let ab = Tensor::randn(&[c.d_model], 0.3, &mut rng);
+        let (a2, z2) = assoc_update(&c, &y, &a, &z, &ak, &av, &ab);
+        let read = assoc_read(&c, &y, &a2, &z2, &ak);
+        let beta = tensor::sigmoid(
+            y.row(0).iter().zip(ab.data()).map(|(a, b)| a * b).sum::<f32>(),
+        );
+        let want = tensor::scale(&tensor::matmul(&y, &av), beta);
+        let got = tensor::sub(&read, &y);
+        let rel = got.rel_error(&want);
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn attention_causal_within_segment() {
+        let c = cfg();
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let ws: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[c.d_model, c.d_model], 0.2, &mut rng)).collect();
+        let base = attention(&c, &x, &ws[0], &ws[1], &ws[2], &ws[3], c.seg);
+        let mut x2 = x.clone();
+        x2.data_mut()[(c.seg - 1) * c.d_model] += 5.0; // perturb last seg token
+        let pert = attention(&c, &x2, &ws[0], &ws[1], &ws[2], &ws[3], c.seg);
+        let head = base.slice0(0, c.seg - 1);
+        let head2 = pert.slice0(0, c.seg - 1);
+        assert!(head.max_abs_diff(&head2) < 1e-5);
+        // memory tokens see everything, so they must change
+        let tail = base.slice0(c.seg, c.seg_total);
+        let tail2 = pert.slice0(c.seg, c.seg_total);
+        assert!(tail.max_abs_diff(&tail2) > 1e-4);
+    }
+
+    #[test]
+    fn layer_step_shapes_and_state_motion() {
+        let c = cfg();
+        let p = Params::random(&c, 5);
+        let lp = p.layer(0);
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let a = Tensor::zeros(&[c.d_model, c.phi_dim]);
+        let z = Tensor::zeros(&[c.phi_dim]);
+        let (y, a2, z2) = layer_step(&c, &lp, &x, &a, &z);
+        assert_eq!(y.shape(), &[c.seg_total, c.d_model]);
+        assert!(a2.norm() > 0.0, "memory must be written");
+        assert!(z2.norm() > 0.0);
+    }
+
+    #[test]
+    fn full_attn_is_causal() {
+        let c = cfg();
+        let p = Params::random(&c, 7);
+        let tokens: Vec<u32> = (0..16u32).map(|i| i % c.vocab as u32).collect();
+        let base = full_attn_forward(&c, &p, &tokens).unwrap();
+        let mut t2 = tokens.clone();
+        t2[15] = (t2[15] + 1) % c.vocab as u32;
+        let pert = full_attn_forward(&c, &p, &t2).unwrap();
+        assert!(base.slice0(0, 15).max_abs_diff(&pert.slice0(0, 15)) < 1e-5);
+    }
+}

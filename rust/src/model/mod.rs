@@ -1,0 +1,248 @@
+//! Native rust ARMT reference model.
+//!
+//! A bit-stable CPU implementation of exactly the semantics the L2 jax
+//! model lowers to HLO (DESIGN.md "ARMT cell semantics"). It serves three
+//! roles:
+//!
+//! 1. **Oracle** — integration tests compare HLO executables against it;
+//! 2. **Backend** — the scheduler can run entirely natively (no
+//!    artifacts), which is how the proptests establish that the diagonal
+//!    schedule is *bit-exact* vs the sequential one when the kernel math
+//!    is order-preserving;
+//! 3. **Trainer substrate** — `examples/train_steps.rs` drives the HLO
+//!    backward executable and needs native forward pieces for checks.
+
+mod cell;
+mod params;
+
+pub use cell::{assoc_read, assoc_update, attention, layer_step, swiglu, LayerView};
+pub use params::{params_order, Params, GLOBAL_ORDER, PARAM_ORDER};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::scheduler::StepBackend;
+use crate::tensor::{self, Tensor};
+
+/// Pure-rust [`StepBackend`].
+pub struct NativeBackend {
+    cfg: ModelConfig,
+    params: Params,
+    step_calls: u64,
+    cells_computed: u64,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: ModelConfig, params: Params) -> Self {
+        Self { cfg, params, step_calls: 0, cells_computed: 0 }
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// Cells actually computed (diagnostics: the diagonal executor wastes
+    /// ramp-up/-down slots; native skips masked slots instead).
+    pub fn cells_computed(&self) -> u64 {
+        self.cells_computed
+    }
+
+    /// Vanilla full-attention forward (the quadratic baseline), usable at
+    /// any length (native code has no AOT length buckets).
+    pub fn full_attn_forward(&self, tokens: &[u32]) -> Result<Tensor> {
+        cell::full_attn_forward(&self.cfg, &self.params, tokens)
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn grouped_step(
+        &mut self,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+        mask: &[f32],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let l_total = self.cfg.n_layers;
+        if x.shape()[0] != l_total || mask.len() != l_total {
+            return Err(Error::Shape {
+                what: "grouped_step group dim",
+                expected: vec![l_total],
+                got: vec![x.shape()[0], mask.len()],
+            });
+        }
+        self.step_calls += 1;
+        let mut y = x.clone();
+        let mut a2 = a.clone();
+        let mut z2 = z.clone();
+        // Ordered loop over slots == the grouped kernel's per-group
+        // independence, with masked slots skipped entirely (bit-freeze).
+        for l in 0..l_total {
+            if mask[l] == 0.0 {
+                continue;
+            }
+            self.cells_computed += 1;
+            let view = self.params.layer(l);
+            let (yl, al, zl) =
+                cell::layer_step(&self.cfg, &view, &x.index0(l), &a.index0(l), &z.index0(l));
+            y.set_index0(l, &yl);
+            a2.set_index0(l, &al);
+            z2.set_index0(l, &zl);
+        }
+        Ok((y, a2, z2))
+    }
+
+    fn single_step(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        if layer >= self.cfg.n_layers {
+            return Err(Error::Missing(format!("layer {layer}")));
+        }
+        self.step_calls += 1;
+        self.cells_computed += 1;
+        let view = self.params.layer(layer);
+        Ok(cell::layer_step(&self.cfg, &view, x, a, z))
+    }
+
+    fn embed(&mut self, tokens: &[u32]) -> Result<Tensor> {
+        if tokens.len() != self.cfg.seg {
+            return Err(Error::Shape {
+                what: "embed tokens",
+                expected: vec![self.cfg.seg],
+                got: vec![tokens.len()],
+            });
+        }
+        let emb = self.params.global("emb")?;
+        let mem = self.params.global("mem_emb")?;
+        let d = self.cfg.d_model;
+        let mut out = Tensor::zeros(&[self.cfg.seg_total, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.cfg.vocab {
+                return Err(Error::Request(format!("token {t} >= vocab {}", self.cfg.vocab)));
+            }
+            out.data_mut()[i * d..(i + 1) * d].copy_from_slice(emb.row(t));
+        }
+        for i in 0..self.cfg.mem {
+            let dst = (self.cfg.seg + i) * d;
+            out.data_mut()[dst..dst + d].copy_from_slice(mem.row(i));
+        }
+        Ok(out)
+    }
+
+    fn lm_head(&mut self, y: &Tensor) -> Result<Tensor> {
+        let nf = self.params.global("nf")?;
+        let w_out = self.params.global("w_out")?;
+        let h = tensor::rmsnorm(&y.slice0(0, self.cfg.seg), nf, self.cfg.eps);
+        Ok(tensor::matmul(&h, w_out))
+    }
+
+    fn full_attn(&mut self, tokens: &[u32]) -> Result<Tensor> {
+        self.full_attn_forward(tokens)
+    }
+
+    fn step_calls(&self) -> u64 {
+        self.step_calls
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    pub(crate) fn test_config() -> ModelConfig {
+        ModelConfig {
+            name: "unit".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 3,
+            n_heads: 2,
+            d_ff: 48,
+            seg: 8,
+            mem: 4,
+            k_assoc: 8,
+            dpfp_nu: 3,
+            rope_theta: 10000.0,
+            eps: 1e-6,
+            attn_buckets: vec![],
+            head_dim: 16,
+            phi_dim: 48,
+            seg_total: 12,
+        }
+    }
+
+    #[test]
+    fn backend_shapes() {
+        let cfg = test_config();
+        let params = Params::random(&cfg, 0);
+        let mut b = NativeBackend::new(cfg.clone(), params);
+        let tokens: Vec<u32> = (0..cfg.seg as u32).collect();
+        let x = b.embed(&tokens).unwrap();
+        assert_eq!(x.shape(), &[cfg.seg_total, cfg.d_model]);
+        let a = Tensor::zeros(&[cfg.d_model, cfg.phi_dim]);
+        let z = Tensor::zeros(&[cfg.phi_dim]);
+        let (y, a2, z2) = b.single_step(0, &x, &a, &z).unwrap();
+        assert_eq!(y.shape(), x.shape());
+        assert_eq!(a2.shape(), a.shape());
+        assert_eq!(z2.shape(), z.shape());
+        let logits = b.lm_head(&y).unwrap();
+        assert_eq!(logits.shape(), &[cfg.seg, cfg.vocab]);
+    }
+
+    #[test]
+    fn grouped_matches_single_steps_bitexact() {
+        let cfg = test_config();
+        let params = Params::random(&cfg, 1);
+        let mut b = NativeBackend::new(cfg.clone(), params);
+        let l = cfg.n_layers;
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[l, cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[l, cfg.phi_dim], 0.1, &mut rng);
+        let mask = vec![1.0; l];
+        let (y, a2, z2) = b.grouped_step(&x, &a, &z, &mask).unwrap();
+        for i in 0..l {
+            let (yi, ai, zi) =
+                b.single_step(i, &x.index0(i), &a.index0(i), &z.index0(i)).unwrap();
+            assert_eq!(y.index0(i), yi, "slot {i} y");
+            assert_eq!(a2.index0(i), ai, "slot {i} A");
+            assert_eq!(z2.index0(i), zi, "slot {i} z");
+        }
+    }
+
+    #[test]
+    fn masked_slot_frozen() {
+        let cfg = test_config();
+        let params = Params::random(&cfg, 2);
+        let mut b = NativeBackend::new(cfg.clone(), params);
+        let l = cfg.n_layers;
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[l, cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[l, cfg.phi_dim], 0.1, &mut rng);
+        let mut mask = vec![1.0; l];
+        mask[1] = 0.0;
+        let (y, a2, z2) = b.grouped_step(&x, &a, &z, &mask).unwrap();
+        assert_eq!(y.index0(1), x.index0(1));
+        assert_eq!(a2.index0(1), a.index0(1));
+        assert_eq!(z2.index0(1), z.index0(1));
+    }
+
+    #[test]
+    fn embed_rejects_bad_tokens() {
+        let cfg = test_config();
+        let params = Params::random(&cfg, 3);
+        let mut b = NativeBackend::new(cfg.clone(), params);
+        let mut tokens = vec![0u32; cfg.seg];
+        tokens[0] = cfg.vocab as u32; // out of range
+        assert!(b.embed(&tokens).is_err());
+        assert!(b.embed(&[0u32; 3]).is_err()); // wrong length
+    }
+}

@@ -1,0 +1,243 @@
+//! Parameter store: loads `params.bin` per the manifest index, or
+//! synthesizes random weights for tests (same shapes as python's
+//! `init_params`, different values — tests that need *equal* values load
+//! the real blob).
+
+use std::collections::HashMap;
+use std::io::Read;
+
+use crate::config::{Manifest, ModelConfig};
+use crate::error::{Error, Result};
+use crate::tensor::{Rng, Tensor};
+
+/// Stacked per-layer parameter names, in the artifact order (must match
+/// python `model.PARAM_ORDER`).
+pub const PARAM_ORDER: [&str; 13] = [
+    "wq", "wk", "wv", "wo", "wg", "wu", "wd", "n1", "n2", "aq", "ak", "av", "ab",
+];
+/// Global parameter names (python `model.GLOBAL_ORDER`).
+pub const GLOBAL_ORDER: [&str; 4] = ["emb", "mem_emb", "nf", "w_out"];
+
+/// The stacked parameter order as a const fn (for modules that want it
+/// without importing the array directly).
+pub const fn params_order() -> [&'static str; 13] {
+    PARAM_ORDER
+}
+
+/// All model weights, keyed by name; per-layer tensors are stacked [L, ...].
+#[derive(Clone)]
+pub struct Params {
+    tensors: HashMap<String, Tensor>,
+    n_layers: usize,
+}
+
+/// Borrowed single-layer view used by the cell math.
+pub struct LayerTensors<'a> {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub wg: Tensor,
+    pub wu: Tensor,
+    pub wd: Tensor,
+    pub n1: Tensor,
+    pub n2: Tensor,
+    pub aq: Tensor,
+    pub ak: Tensor,
+    pub av: Tensor,
+    pub ab: Tensor,
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl Params {
+    /// Load the weight blob for `model` from the manifest.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Self> {
+        let entry = manifest.model(model)?;
+        let path = manifest.params_path(entry);
+        let mut bytes = Vec::new();
+        std::fs::File::open(&path)?.read_to_end(&mut bytes)?;
+        let total: usize = entry.params.iter().map(|p| p.size_elems).sum();
+        if bytes.len() != 4 * total {
+            return Err(Error::Config(format!(
+                "params.bin {} bytes, manifest says {}",
+                bytes.len(),
+                4 * total
+            )));
+        }
+        let mut tensors = HashMap::new();
+        for p in &entry.params {
+            let start = 4 * p.offset_elems;
+            let end = start + 4 * p.size_elems;
+            let data: Vec<f32> = bytes[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(p.name.clone(), Tensor::new(&p.shape, data)?);
+        }
+        let s = Self { tensors, n_layers: entry.config.n_layers };
+        s.validate(&entry.config)?;
+        Ok(s)
+    }
+
+    /// Random weights with the artifact shapes (unit tests / proptests).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let (l, d, f, k) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.k_assoc);
+        let mut tensors = HashMap::new();
+        let shapes: Vec<(&str, Vec<usize>)> = vec![
+            ("wq", vec![l, d, d]),
+            ("wk", vec![l, d, d]),
+            ("wv", vec![l, d, d]),
+            ("wo", vec![l, d, d]),
+            ("wg", vec![l, d, f]),
+            ("wu", vec![l, d, f]),
+            ("wd", vec![l, f, d]),
+            ("n1", vec![l, d]),
+            ("n2", vec![l, d]),
+            ("aq", vec![l, d, k]),
+            ("ak", vec![l, d, k]),
+            ("av", vec![l, d, d]),
+            ("ab", vec![l, d]),
+            ("emb", vec![cfg.vocab, d]),
+            ("mem_emb", vec![cfg.mem, d]),
+            ("nf", vec![d]),
+            ("w_out", vec![d, cfg.vocab]),
+        ];
+        for (name, shape) in shapes {
+            let t = match name {
+                "n1" | "n2" | "nf" => Tensor::full(&shape, 1.0),
+                "emb" | "mem_emb" => Tensor::randn(&shape, 0.02, &mut rng),
+                "av" => {
+                    let fan_in = shape[shape.len() - 2] as f32;
+                    Tensor::randn(&shape, 0.1 / fan_in.sqrt(), &mut rng)
+                }
+                _ => {
+                    let fan_in = shape[shape.len() - 2] as f32;
+                    Tensor::randn(&shape, 1.0 / fan_in.sqrt(), &mut rng)
+                }
+            };
+            tensors.insert(name.to_string(), t);
+        }
+        Self { tensors, n_layers: l }
+    }
+
+    fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        for name in PARAM_ORDER {
+            let t = self.tensors.get(name).ok_or_else(|| Error::Missing(name.into()))?;
+            if t.shape()[0] != cfg.n_layers {
+                return Err(Error::Shape {
+                    what: "stacked param layer dim",
+                    expected: vec![cfg.n_layers],
+                    got: vec![t.shape()[0]],
+                });
+            }
+        }
+        for name in GLOBAL_ORDER {
+            if !self.tensors.contains_key(name) {
+                return Err(Error::Missing(name.into()));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Raw stacked tensor by name.
+    pub fn stacked(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| Error::Missing(format!("param '{name}'")))
+    }
+
+    /// Global (unstacked) tensor by name.
+    pub fn global(&self, name: &str) -> Result<&Tensor> {
+        self.stacked(name)
+    }
+
+    /// Materialized single-layer view (copies the rows; the native cell
+    /// is not the hot path, clarity wins).
+    pub fn layer(&self, l: usize) -> LayerTensors<'_> {
+        debug_assert!(l < self.n_layers);
+        let g = |name: &str| self.tensors[name].index0(l);
+        LayerTensors {
+            wq: g("wq"),
+            wk: g("wk"),
+            wv: g("wv"),
+            wo: g("wo"),
+            wg: g("wg"),
+            wu: g("wu"),
+            wd: g("wd"),
+            n1: g("n1"),
+            n2: g("n2"),
+            aq: g("aq"),
+            ak: g("ak"),
+            av: g("av"),
+            ab: g("ab"),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Overwrite one stacked/global tensor (trainer support).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        match self.tensors.get(name) {
+            Some(old) if old.shape() == t.shape() => {
+                self.tensors.insert(name.to_string(), t);
+                Ok(())
+            }
+            Some(old) => Err(Error::Shape {
+                what: "Params::set",
+                expected: old.shape().to_vec(),
+                got: t.shape().to_vec(),
+            }),
+            None => Err(Error::Missing(name.into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        crate::model::tests::test_config()
+    }
+
+    #[test]
+    fn random_has_all_names() {
+        let p = Params::random(&cfg(), 0);
+        for n in PARAM_ORDER {
+            assert!(p.stacked(n).is_ok(), "{n}");
+        }
+        for n in GLOBAL_ORDER {
+            assert!(p.global(n).is_ok(), "{n}");
+        }
+        assert!(p.stacked("nope").is_err());
+    }
+
+    #[test]
+    fn layer_view_shapes() {
+        let c = cfg();
+        let p = Params::random(&c, 1);
+        let v = p.layer(0);
+        assert_eq!(v.wq.shape(), &[c.d_model, c.d_model]);
+        assert_eq!(v.wg.shape(), &[c.d_model, c.d_ff]);
+        assert_eq!(v.wd.shape(), &[c.d_ff, c.d_model]);
+        assert_eq!(v.aq.shape(), &[c.d_model, c.k_assoc]);
+        assert_eq!(v.ab.shape(), &[c.d_model]);
+    }
+
+    #[test]
+    fn set_rejects_bad_shape() {
+        let c = cfg();
+        let mut p = Params::random(&c, 2);
+        assert!(p.set("nf", Tensor::zeros(&[c.d_model])).is_ok());
+        assert!(p.set("nf", Tensor::zeros(&[c.d_model + 1])).is_err());
+        assert!(p.set("missing", Tensor::zeros(&[1])).is_err());
+    }
+
+    #[test]
+    fn norm_gains_init_to_one() {
+        let p = Params::random(&cfg(), 3);
+        assert!(p.global("nf").unwrap().data().iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,137 @@
+//! Artifact store: one PJRT client + the compiled executables of a model
+//! bundle, with lazy compilation and caching.
+
+use std::collections::HashMap;
+
+use crate::config::{ExeEntry, Manifest, ModelEntry};
+use crate::error::{Error, Result};
+
+/// Owns the PJRT client and the compiled executables of one model.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    entry: ModelEntry,
+    root: std::path::PathBuf,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    /// Create a CPU PJRT client and bind it to a manifest model entry.
+    /// Nothing is compiled yet; executables compile on first use (or all
+    /// at once via [`compile_all`]).
+    pub fn open(manifest: &Manifest, model: &str) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            root: manifest.root.join(&entry.dir),
+            entry,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// The manifest metadata of one executable.
+    pub fn exe_entry(&self, name: &str) -> Result<&ExeEntry> {
+        self.entry
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::Missing(format!("executable '{name}'")))
+    }
+
+    /// Load + parse + compile one HLO program (cached).
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let file = self.exe_entry(name)?.file.clone();
+            let path = self.root.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Immutable lookup of an already-compiled executable (use after
+    /// [`Self::compile_all`] / [`Self::executable`] so the hot path never
+    /// needs `&mut self`).
+    pub fn get(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.compiled
+            .get(name)
+            .ok_or_else(|| Error::Missing(format!("executable '{name}' not compiled")))
+    }
+
+    /// Eagerly compile every executable in the bundle (startup cost paid
+    /// once, keeps the request path compile-free).
+    pub fn compile_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.entry.executables.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Names of available executables (sorted, for diagnostics).
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entry.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Largest full-attention bucket <= n, if any.
+    pub fn attn_bucket_for(&self, n: usize) -> Option<usize> {
+        self.entry
+            .config
+            .attn_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .or_else(|| self.entry.config.attn_buckets.iter().copied().max())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        std::path::Path::new(path).exists().then(|| Manifest::load(path).unwrap())
+    }
+
+    #[test]
+    fn open_and_compile_embed() {
+        let Some(m) = manifest() else { return };
+        let mut store = ArtifactStore::open(&m, "tiny").unwrap();
+        assert!(store.available().contains(&"grouped_step".to_string()));
+        store.executable("embed").unwrap();
+        // cached second call
+        store.executable("embed").unwrap();
+    }
+
+    #[test]
+    fn missing_exe_is_error() {
+        let Some(m) = manifest() else { return };
+        let mut store = ArtifactStore::open(&m, "tiny").unwrap();
+        assert!(store.executable("nope").is_err());
+    }
+
+    #[test]
+    fn attn_bucket_selection() {
+        let Some(m) = manifest() else { return };
+        let store = ArtifactStore::open(&m, "tiny").unwrap();
+        assert_eq!(store.attn_bucket_for(100), Some(128));
+        assert_eq!(store.attn_bucket_for(128), Some(128));
+        assert_eq!(store.attn_bucket_for(200), Some(256));
+        // beyond the largest bucket, fall back to the largest
+        assert_eq!(store.attn_bucket_for(4096), Some(512));
+    }
+}

@@ -1,0 +1,52 @@
+//! Tensor <-> xla::Literal conversions.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// f32 [`Tensor`] -> [`xla::Literal`] of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// f32 [`xla::Literal`] -> [`Tensor`] (shape read from the literal).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(&dims, data)
+}
+
+/// Token ids -> i32 literal of shape [n].
+pub fn tokens_to_literal(tokens: &[u32]) -> Result<xla::Literal> {
+    let v: Vec<i32> = tokens
+        .iter()
+        .map(|&t| {
+            i32::try_from(t).map_err(|_| Error::Request(format!("token {t} > i32::MAX")))
+        })
+        .collect::<Result<_>>()?;
+    Ok(xla::Literal::vec1(&v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[3, 4, 5], 1.0, &mut rng);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tokens_literal_shape() {
+        let lit = tokens_to_literal(&[1, 2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! contract (HLO *text*, tuple outputs, f32/i32 dtypes) is documented in
+//! DESIGN.md "Artifacts contract" and matches what `python/compile/aot.py`
+//! emits.
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf):
+//! * all parameter tensors are uploaded to device buffers ONCE at load
+//!   time and every step runs via `execute_b` (buffer args), so the hot
+//!   loop never re-uploads weights;
+//! * activations/state round-trip through the host between steps — the
+//!   structural cost of the current `xla` crate's tuple outputs; the
+//!   per-step overhead is measured by `benches/hotpath.rs`.
+
+mod artifacts;
+mod backend;
+mod convert;
+
+pub use artifacts::ArtifactStore;
+pub use backend::HloBackend;
+pub use convert::{literal_to_tensor, tensor_to_literal, tokens_to_literal};

@@ -1,0 +1,401 @@
+//! The streaming wavefront executor — Algorithm 1 of the paper.
+//!
+//! Executes an ARMT forward pass over a pluggable [`StepBackend`] in
+//! either schedule:
+//!
+//! * **Sequential** (baseline): `S x L` single-cell steps, exactly the
+//!   original ARMT loop;
+//! * **Diagonal**: `S + L - 1` full-width grouped steps. Slot `l` of the
+//!   grouped call is bound to layer `l`; each iteration a new segment
+//!   enters slot 0 ("prepend segments[i] to GInput"), finished segments
+//!   leave slot `L-1` ("GInput.POPLAST"), and between iterations slot
+//!   contents shift up one layer. An `active` mask freezes state updates
+//!   in padded ramp slots.
+//!
+//! The executor never materializes the whole schedule — memory is
+//! `O(L * T * d)` regardless of sequence length, the paper's "constant
+//! memory" property.
+
+use std::time::{Duration, Instant};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Anything that can execute ARMT cell steps: the PJRT HLO runtime, the
+/// native rust model, or the roofline simulator.
+pub trait StepBackend {
+    fn config(&self) -> &ModelConfig;
+
+    /// Full-width grouped step: `x [L, T, d]`, `a [L, d, p]`, `z [L, p]`,
+    /// `mask [L]` (1.0 = active). Slot `l` applies layer `l`'s weights.
+    /// Returns `(y, a', z')` of the same shapes. State rows with
+    /// `mask == 0` must come back bit-identical.
+    fn grouped_step(
+        &mut self,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+        mask: &[f32],
+    ) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// One (segment, layer) cell: `x [T, d]`, `a [d, p]`, `z [p]`.
+    fn single_step(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// Segment token ids (`seg` of them) -> `[T, d]` hiddens including
+    /// the memory-token embeddings.
+    fn embed(&mut self, tokens: &[u32]) -> Result<Tensor>;
+
+    /// Final-layer hiddens `[T, d]` -> logits `[seg, vocab]`.
+    fn lm_head(&mut self, y: &Tensor) -> Result<Tensor>;
+
+    /// Full-attention baseline over raw tokens (optional; HLO backends
+    /// only support their AOT length buckets).
+    fn full_attn(&mut self, _tokens: &[u32]) -> Result<Tensor> {
+        Err(Error::Config("backend has no full-attention baseline".into()))
+    }
+
+    /// Backend calls made so far (instrumentation).
+    fn step_calls(&self) -> u64;
+}
+
+impl<T: StepBackend + ?Sized> StepBackend for Box<T> {
+    fn config(&self) -> &ModelConfig {
+        (**self).config()
+    }
+
+    fn grouped_step(
+        &mut self,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+        mask: &[f32],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        (**self).grouped_step(x, a, z, mask)
+    }
+
+    fn single_step(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        (**self).single_step(layer, x, a, z)
+    }
+
+    fn embed(&mut self, tokens: &[u32]) -> Result<Tensor> {
+        (**self).embed(tokens)
+    }
+
+    fn lm_head(&mut self, y: &Tensor) -> Result<Tensor> {
+        (**self).lm_head(y)
+    }
+
+    fn full_attn(&mut self, tokens: &[u32]) -> Result<Tensor> {
+        (**self).full_attn(tokens)
+    }
+
+    fn step_calls(&self) -> u64 {
+        (**self).step_calls()
+    }
+}
+
+/// Which executor loop to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    Sequential,
+    Diagonal,
+}
+
+/// Timing + utilization counters for one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub mode_diagonal: bool,
+    pub segments: usize,
+    /// Backend step calls ("kernel launches"): S*L sequential,
+    /// S+L-1 diagonal — the paper's Fig. 3 quantity.
+    pub launches: u64,
+    /// Cells the schedule actually needed (S*L).
+    pub cells: u64,
+    /// Padded slot-steps executed by the fixed-width diagonal loop.
+    pub padded_cells: u64,
+    pub wall: Duration,
+    /// Tokens consumed including padding of the last segment.
+    pub tokens: usize,
+}
+
+impl RunStats {
+    /// Mean active cells per launch (utilization proxy).
+    pub fn mean_group(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.cells as f64 / self.launches as f64
+        }
+    }
+}
+
+/// Per-request output: one logits tensor `[seg, vocab]` per segment.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    pub logits: Vec<Tensor>,
+    pub stats: RunStats,
+}
+
+impl RunOutput {
+    pub fn segments(&self) -> usize {
+        self.logits.len()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.logits.first().map(|t| t.shape()[1]).unwrap_or(0)
+    }
+
+    /// All logits stacked `[S * seg, vocab]` (error analysis).
+    pub fn stacked(&self) -> Result<Tensor> {
+        let refs: Vec<&Tensor> = self.logits.iter().collect();
+        Tensor::concat0(&refs)
+    }
+
+    /// Greedy token per position of the final segment (decode helper).
+    pub fn last_segment_argmax(&self) -> Vec<usize> {
+        self.logits.last().map(|t| t.argmax_rows()).unwrap_or_default()
+    }
+}
+
+/// Streaming executor over a backend.
+pub struct Executor<'a, B: StepBackend> {
+    backend: &'a mut B,
+    mode: ScheduleMode,
+}
+
+impl<'a, B: StepBackend> Executor<'a, B> {
+    pub fn new(backend: &'a mut B, mode: ScheduleMode) -> Self {
+        Self { backend, mode }
+    }
+
+    pub fn mode(&self) -> ScheduleMode {
+        self.mode
+    }
+
+    /// Split tokens into `seg`-sized segments, padding the tail with the
+    /// pad token 0 (the convention shared with the python trainer).
+    pub fn segment(&self, tokens: &[u32]) -> Result<Vec<Vec<u32>>> {
+        if tokens.is_empty() {
+            return Err(Error::Request("empty token sequence".into()));
+        }
+        let seg = self.backend.config().seg;
+        let mut out = Vec::with_capacity(tokens.len().div_ceil(seg));
+        for chunk in tokens.chunks(seg) {
+            let mut v = chunk.to_vec();
+            v.resize(seg, 0);
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Run the full forward pass.
+    pub fn run(&mut self, tokens: &[u32]) -> Result<RunOutput> {
+        let segments = self.segment(tokens)?;
+        match self.mode {
+            ScheduleMode::Sequential => self.run_sequential(&segments),
+            ScheduleMode::Diagonal => self.run_diagonal(&segments),
+        }
+    }
+
+    fn run_sequential(&mut self, segments: &[Vec<u32>]) -> Result<RunOutput> {
+        let cfg = self.backend.config().clone();
+        let started = Instant::now();
+        let calls0 = self.backend.step_calls();
+        let l_total = cfg.n_layers;
+
+        // Per-layer recurrent state.
+        let mut a: Vec<Tensor> =
+            (0..l_total).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect();
+        let mut z: Vec<Tensor> = (0..l_total).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect();
+
+        let mut logits = Vec::with_capacity(segments.len());
+        for seg_tokens in segments {
+            let mut x = self.backend.embed(seg_tokens)?;
+            for l in 0..l_total {
+                let (y, a2, z2) = self.backend.single_step(l, &x, &a[l], &z[l])?;
+                x = y;
+                a[l] = a2;
+                z[l] = z2;
+            }
+            logits.push(self.backend.lm_head(&x)?);
+        }
+
+        let stats = RunStats {
+            mode_diagonal: false,
+            segments: segments.len(),
+            launches: self.backend.step_calls() - calls0,
+            cells: (segments.len() * l_total) as u64,
+            padded_cells: 0,
+            wall: started.elapsed(),
+            tokens: segments.len() * cfg.seg,
+        };
+        Ok(RunOutput { logits, stats })
+    }
+
+    fn run_diagonal(&mut self, segments: &[Vec<u32>]) -> Result<RunOutput> {
+        let cfg = self.backend.config().clone();
+        let started = Instant::now();
+        let calls0 = self.backend.step_calls();
+        let l_total = cfg.n_layers;
+        let s_total = segments.len();
+        let iterations = s_total + l_total - 1;
+
+        // Fixed-width wavefront state: slot l <-> layer l.
+        let mut x_slots = Tensor::zeros(&[l_total, cfg.seg_total, cfg.d_model]);
+        let mut a = Tensor::zeros(&[l_total, cfg.d_model, cfg.phi_dim]);
+        let mut z = Tensor::zeros(&[l_total, cfg.phi_dim]);
+        let mut active = vec![false; l_total];
+        let mut mask = vec![0.0f32; l_total];
+        let mut padded = 0u64;
+
+        let mut logits = vec![None; s_total];
+        for i in 0..iterations {
+            // A new segment enters the wavefront at layer 0.
+            if i < s_total {
+                x_slots.set_index0(0, &self.backend.embed(&segments[i])?);
+                active[0] = true;
+            } else {
+                active[0] = false;
+            }
+            for l in 0..l_total {
+                mask[l] = if active[l] { 1.0 } else { 0.0 };
+            }
+            padded += mask.iter().filter(|&&m| m == 0.0).count() as u64;
+
+            let (y, a2, z2) = self.backend.grouped_step(&x_slots, &a, &z, &mask)?;
+            a = a2;
+            z = z2;
+
+            // Segment i - (L-1) exits fully processed.
+            if active[l_total - 1] {
+                let s = i + 1 - l_total;
+                logits[s] = Some(self.backend.lm_head(&y.index0(l_total - 1))?);
+            }
+
+            // Shift the wavefront: next iteration, slot l holds what slot
+            // l-1 just produced (the segment advanced one layer).
+            for l in (1..l_total).rev() {
+                if active[l - 1] {
+                    x_slots.set_index0(l, &y.index0(l - 1));
+                }
+                active[l] = active[l - 1];
+            }
+        }
+
+        let logits: Vec<Tensor> = logits
+            .into_iter()
+            .map(|o| o.ok_or_else(|| Error::Schedule("segment never exited wavefront".into())))
+            .collect::<Result<_>>()?;
+
+        let stats = RunStats {
+            mode_diagonal: true,
+            segments: s_total,
+            launches: self.backend.step_calls() - calls0,
+            cells: (s_total * l_total) as u64,
+            padded_cells: padded,
+            wall: started.elapsed(),
+            tokens: s_total * cfg.seg,
+        };
+        Ok(RunOutput { logits, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NativeBackend, Params};
+
+    fn backend(seed: u64) -> NativeBackend {
+        let cfg = crate::model::tests::test_config();
+        let params = Params::random(&cfg, seed);
+        NativeBackend::new(cfg, params)
+    }
+
+    fn tokens(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| (i * 7 + 3) % 64).collect()
+    }
+
+    #[test]
+    fn diagonal_equals_sequential_bitexact_native() {
+        // The paper's exactness claim, at its strongest: with an
+        // order-preserving backend the two schedules are bit-identical.
+        let mut b1 = backend(42);
+        let toks = tokens(8 * 5); // 5 segments
+        let seq = Executor::new(&mut b1, ScheduleMode::Sequential).run(&toks).unwrap();
+        let mut b2 = backend(42);
+        let diag = Executor::new(&mut b2, ScheduleMode::Diagonal).run(&toks).unwrap();
+        assert_eq!(seq.segments(), diag.segments());
+        for (a, b) in seq.logits.iter().zip(&diag.logits) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn launch_counts_match_fig3() {
+        let mut b = backend(1);
+        let l = b.config().n_layers;
+        let toks = tokens(8 * 6);
+        let seq = Executor::new(&mut b, ScheduleMode::Sequential).run(&toks).unwrap();
+        assert_eq!(seq.stats.launches, (6 * l) as u64);
+
+        let mut b = backend(1);
+        let diag = Executor::new(&mut b, ScheduleMode::Diagonal).run(&toks).unwrap();
+        assert_eq!(diag.stats.launches, (6 + l - 1) as u64);
+        assert!(diag.stats.mean_group() > 1.0);
+    }
+
+    #[test]
+    fn tail_padding() {
+        let mut b = backend(2);
+        let toks = tokens(8 * 2 + 3); // ragged tail
+        let out = Executor::new(&mut b, ScheduleMode::Diagonal).run(&toks).unwrap();
+        assert_eq!(out.segments(), 3);
+        assert_eq!(out.stats.tokens, 24);
+    }
+
+    #[test]
+    fn empty_request_rejected() {
+        let mut b = backend(3);
+        assert!(Executor::new(&mut b, ScheduleMode::Diagonal).run(&[]).is_err());
+    }
+
+    #[test]
+    fn short_sequence_fewer_segments_than_layers() {
+        // S=2 < L=3 exercises ramp-only wavefronts.
+        let mut b1 = backend(4);
+        let toks = tokens(8 * 2);
+        let seq = Executor::new(&mut b1, ScheduleMode::Sequential).run(&toks).unwrap();
+        let mut b2 = backend(4);
+        let diag = Executor::new(&mut b2, ScheduleMode::Diagonal).run(&toks).unwrap();
+        for (a, b) in seq.logits.iter().zip(&diag.logits) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(diag.stats.launches, (2 + 3 - 1) as u64);
+    }
+
+    #[test]
+    fn memory_state_isolation_between_runs() {
+        // Two identical runs on the same backend must agree (state is
+        // per-run, owned by the executor, not the backend).
+        let mut b = backend(5);
+        let toks = tokens(8 * 3);
+        let o1 = Executor::new(&mut b, ScheduleMode::Diagonal).run(&toks).unwrap();
+        let o2 = Executor::new(&mut b, ScheduleMode::Diagonal).run(&toks).unwrap();
+        for (a, bb) in o1.logits.iter().zip(&o2.logits) {
+            assert_eq!(a, bb);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's contribution: scheduling the ARMT (segment, layer) grid.
+//!
+//! * [`dag`] — the dependency DAG of (segment, layer) cells and the
+//!   Lemma 3.1 machinery (minimum group count, earliest feasible group);
+//! * [`plan`] — explicit schedules (diagonal / sequential / mini-batch /
+//!   ideal-even-load) shared by the executors and the roofline simulator;
+//! * [`executor`] — the streaming wavefront executor (Algorithm 1) over a
+//!   pluggable [`StepBackend`].
+//!
+//! Slot convention: the grouped step is always executed at full width
+//! `G = n_layers`, with slot `l` permanently bound to layer `l` and an
+//! `active` mask for ramp-up/-down iterations. This keeps the HLO program
+//! static-shaped and lets parameters stay resident on the device; the
+//! masked slots cost `(L-1)·L/2` wasted cell-computations per request at
+//! each ramp, which is negligible for `S >> L` (see DESIGN.md).
+
+pub mod dag;
+pub mod executor;
+pub mod plan;
+
+pub use dag::Cell;
+pub use executor::{Executor, RunOutput, RunStats, ScheduleMode, StepBackend};
+pub use plan::{Schedule, ScheduleKind};

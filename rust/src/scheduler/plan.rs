@@ -1,0 +1,187 @@
+//! Explicit schedules over the (segment, layer) grid.
+//!
+//! The executor streams the diagonal schedule without materializing it;
+//! these explicit plans exist for (a) the roofline simulator, which costs
+//! arbitrary schedules, (b) the mini-batching comparison of Fig. 6, and
+//! (c) tests that check schedule properties directly.
+
+use super::dag::{self, Cell};
+use crate::error::Result;
+
+/// Which scheduling policy produced a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Paper Fig. 3a: `S x L` groups of one cell, segment-major.
+    Sequential,
+    /// Paper Fig. 3b / Algorithm 1: `S + L - 1` anti-diagonal groups.
+    Diagonal,
+    /// Mini-batching `b` *independent requests*: per layer-step, `b`
+    /// same-layer cells run together (the paper's batch-scaling
+    /// comparison, Fig. 6). Within one request this is NOT a valid
+    /// schedule of the grid — segments of one sequence cannot batch at
+    /// the same layer — so this kind models `b` parallel sequences.
+    MiniBatch { batch: usize },
+    /// Upper bound: every group magically full at `L` cells ("Ideal Even
+    /// Load" in Fig. 6) — `ceil(S*L / L) = S` groups of L.
+    IdealEvenLoad,
+}
+
+/// A materialized schedule: ordered groups of cells that execute as one
+/// kernel-launch each.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub n_segments: usize,
+    pub n_layers: usize,
+    pub groups: Vec<Vec<Cell>>,
+}
+
+impl Schedule {
+    /// Sequential baseline: segments outer, layers inner, one cell per
+    /// group (each cell is its own kernel launch — `S * L` launches).
+    pub fn sequential(n_segments: usize, n_layers: usize) -> Self {
+        let mut groups = Vec::with_capacity(n_segments * n_layers);
+        for s in 0..n_segments {
+            for l in 0..n_layers {
+                groups.push(vec![Cell::new(s, l)]);
+            }
+        }
+        Self { kind: ScheduleKind::Sequential, n_segments, n_layers, groups }
+    }
+
+    /// The diagonal schedule (Lemma 3.1-optimal).
+    pub fn diagonal(n_segments: usize, n_layers: usize) -> Self {
+        let groups = (0..dag::min_groups(n_segments, n_layers))
+            .map(|i| dag::diagonal_cells(i, n_segments, n_layers))
+            .collect();
+        Self { kind: ScheduleKind::Diagonal, n_segments, n_layers, groups }
+    }
+
+    /// `batch` independent sequences processed together, layer by layer,
+    /// segment by segment: groups of exactly `batch` same-(s,l) cells.
+    /// Cells carry the *segment* coordinate; the batch multiplicity is in
+    /// the kind (the simulator costs it as batched compute).
+    pub fn minibatch(n_segments: usize, n_layers: usize, batch: usize) -> Self {
+        let mut groups = Vec::with_capacity(n_segments * n_layers);
+        for s in 0..n_segments {
+            for l in 0..n_layers {
+                groups.push(vec![Cell::new(s, l); batch.max(1)]);
+            }
+        }
+        Self { kind: ScheduleKind::MiniBatch { batch }, n_segments, n_layers, groups }
+    }
+
+    /// Fig. 6 upper bound: S groups, each a full group of L cells.
+    pub fn ideal_even_load(n_segments: usize, n_layers: usize) -> Self {
+        let mut groups = Vec::with_capacity(n_segments);
+        let mut pending: Vec<Cell> = Vec::new();
+        for s in 0..n_segments {
+            for l in 0..n_layers {
+                pending.push(Cell::new(s, l));
+            }
+        }
+        for chunk in pending.chunks(n_layers.max(1)) {
+            groups.push(chunk.to_vec());
+        }
+        Self { kind: ScheduleKind::IdealEvenLoad, n_segments, n_layers, groups }
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.groups.iter().map(Vec::len).sum()
+    }
+
+    pub fn max_group(&self) -> usize {
+        self.groups.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Mean cells per group — the GPU-utilization proxy the paper's
+    /// speedup comes from.
+    pub fn mean_group(&self) -> f64 {
+        if self.groups.is_empty() {
+            0.0
+        } else {
+            self.cell_count() as f64 / self.group_count() as f64
+        }
+    }
+
+    /// Fraction of padded (wasted) slots when executed at fixed width
+    /// `n_layers` (the executor's static-shape policy).
+    pub fn pad_fraction(&self) -> f64 {
+        let total = self.group_count() * self.n_layers;
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - self.cell_count() as f64 / total as f64
+        }
+    }
+
+    /// Validity per the DAG (the mini-batch kind models independent
+    /// sequences and is exempt by construction).
+    pub fn validate(&self) -> Result<()> {
+        match self.kind {
+            ScheduleKind::MiniBatch { .. } | ScheduleKind::IdealEvenLoad => Ok(()),
+            _ => dag::validate_schedule(&self.groups, self.n_segments, self.n_layers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_is_optimal_and_valid() {
+        for (s, l) in [(1, 1), (3, 5), (8, 4), (33, 16)] {
+            let d = Schedule::diagonal(s, l);
+            d.validate().unwrap();
+            assert_eq!(d.group_count(), dag::min_groups(s, l));
+            assert_eq!(d.cell_count(), s * l);
+            dag::check_earliest_placement(&d.groups).unwrap();
+        }
+    }
+
+    #[test]
+    fn sequential_is_valid_but_not_optimal() {
+        let s = Schedule::sequential(8, 4);
+        s.validate().unwrap();
+        assert_eq!(s.group_count(), 32);
+        assert!(s.group_count() > dag::min_groups(8, 4));
+        assert_eq!(s.max_group(), 1);
+    }
+
+    #[test]
+    fn group_count_reduction_matches_paper() {
+        // paper fig 3: n_layers*n_segments -> n_layers+n_segments
+        let (s, l) = (128, 16);
+        assert_eq!(Schedule::sequential(s, l).group_count(), s * l);
+        assert_eq!(Schedule::diagonal(s, l).group_count(), s + l - 1);
+    }
+
+    #[test]
+    fn pad_fraction_shrinks_with_segments() {
+        let small = Schedule::diagonal(4, 16).pad_fraction();
+        let large = Schedule::diagonal(256, 16).pad_fraction();
+        assert!(large < small);
+        assert!(large < 0.06, "pad {large}");
+    }
+
+    #[test]
+    fn minibatch_and_ideal_shapes() {
+        let m = Schedule::minibatch(4, 3, 8);
+        assert_eq!(m.group_count(), 12);
+        assert!(m.groups.iter().all(|g| g.len() == 8));
+        let i = Schedule::ideal_even_load(4, 3);
+        assert_eq!(i.cell_count(), 12);
+        assert!(i.groups.iter().all(|g| g.len() == 3));
+    }
+
+    #[test]
+    fn mean_group_approaches_l() {
+        let d = Schedule::diagonal(512, 16);
+        assert!(d.mean_group() > 15.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! TCP JSON-lines inference server + client.
+//!
+//! Wire protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"id": 1, "tokens": [3, 17, ...], "mode": "diagonal"?}
+//! <- {"id": 1, "greedy_tail": [...], "mode": "diagonal",
+//!     "latency_ms": 12.3, "segments": 4, "launches": 7, "tokens": 128}
+//! -> {"cmd": "stats"}
+//! <- {"requests": 10, "diagonal_runs": 9, ...}
+//! -> {"cmd": "shutdown"}
+//! ```
+//!
+//! Topology per the paper's deployment note: connection threads parse and
+//! enqueue; ONE executor thread drains the bounded queue — a single
+//! long-context request saturates the device, so requests are processed
+//! serially and backpressure is explicit (`{"error": "queue full"}`).
+
+mod protocol;
+
+pub use protocol::{parse_request, render_response, WireRequest};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::config::ExecMode;
+use crate::coordinator::{InferenceEngine, Request, RequestQueue, Response};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::scheduler::StepBackend;
+
+type Job = (Request, mpsc::Sender<Result<Response>>);
+
+/// Handle to a running server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    engine_thread: Option<JoinHandle<()>>,
+    queue: Arc<RequestQueue<Job>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start serving `engine` on `addr` (use port 0 for an ephemeral
+    /// port; the bound address is in `server.addr`).
+    pub fn start<B: StepBackend + Send + 'static>(
+        mut engine: InferenceEngine<B>,
+        addr: &str,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let queue = Arc::new(RequestQueue::<Job>::new(queue_depth));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Executor thread: drains the queue serially.
+        let q2 = queue.clone();
+        let engine_thread = std::thread::spawn(move || {
+            while let Some((req, reply)) = q2.pop() {
+                let resp = engine.process(&req);
+                let _ = reply.send(resp);
+            }
+        });
+
+        // Acceptor: one lightweight thread per connection.
+        let q3 = queue.clone();
+        let sd = shutdown.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let next_id = Arc::new(AtomicU64::new(1));
+            for stream in listener.incoming() {
+                if sd.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let q = q3.clone();
+                let sd2 = sd.clone();
+                let ids = next_id.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &q, &sd2, &ids);
+                });
+            }
+        });
+
+        Ok(Self {
+            addr: local,
+            accept_thread: Some(accept_thread),
+            engine_thread: Some(engine_thread),
+            queue,
+            shutdown,
+        })
+    }
+
+    /// Request shutdown and join the worker threads. The acceptor is
+    /// unblocked by a self-connection.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        self.queue.close();
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: &RequestQueue<Job>,
+    shutdown: &AtomicBool,
+    ids: &AtomicU64,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_text = match Value::parse(&line) {
+            Err(e) => error_json(None, &Error::Json(e.to_string())),
+            Ok(v) => {
+                if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str().ok().map(String::from)) {
+                    match cmd.as_str() {
+                        "shutdown" => {
+                            shutdown.store(true, Ordering::SeqCst);
+                            queue.close();
+                            writeln!(writer, "{}", Value::obj(vec![("ok", Value::Bool(true))]).to_json())?;
+                            break;
+                        }
+                        "ping" => Value::obj(vec![("ok", Value::Bool(true))]).to_json(),
+                        other => error_json(None, &Error::Request(format!("unknown cmd '{other}'"))),
+                    }
+                } else {
+                    match parse_request(&v, || ids.fetch_add(1, Ordering::Relaxed)) {
+                        Err(e) => error_json(None, &e),
+                        Ok(req) => {
+                            let id = req.id;
+                            let (tx, rx) = mpsc::channel();
+                            match queue.push((req, tx)) {
+                                Err(e) => error_json(Some(id), &e),
+                                Ok(()) => match rx.recv() {
+                                    Ok(Ok(resp)) => render_response(&resp).to_json(),
+                                    Ok(Err(e)) => error_json(Some(id), &e),
+                                    Err(_) => error_json(
+                                        Some(id),
+                                        &Error::Request("engine stopped".into()),
+                                    ),
+                                },
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        writeln!(writer, "{reply_text}")?;
+    }
+    Ok(())
+}
+
+fn error_json(id: Option<u64>, e: &Error) -> String {
+    let mut fields = vec![("error", Value::Str(e.to_string()))];
+    if let Some(id) = id {
+        fields.push(("id", Value::Num(id as f64)));
+    }
+    Value::obj(fields).to_json()
+}
+
+/// Blocking line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request object, wait for the one-line reply.
+    pub fn roundtrip(&mut self, v: &Value) -> Result<Value> {
+        writeln!(self.writer, "{}", v.to_json())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(Error::Request("server closed connection".into()));
+        }
+        Value::parse(&line)
+    }
+
+    /// Run inference on a token sequence.
+    pub fn infer(&mut self, tokens: &[u32], mode: Option<ExecMode>) -> Result<Value> {
+        let mut fields = vec![("tokens", Value::arr_u32(tokens))];
+        if let Some(m) = mode {
+            fields.push(("mode", Value::Str(m.to_string())));
+        }
+        let resp = self.roundtrip(&Value::obj(fields))?;
+        if let Some(err) = resp.get("error") {
+            return Err(Error::Request(err.as_str().unwrap_or("?").to_string()));
+        }
+        Ok(resp)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let resp = self.roundtrip(&Value::obj(vec![("cmd", Value::Str("ping".into()))]))?;
+        Ok(resp.get("ok").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.roundtrip(&Value::obj(vec![("cmd", Value::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NativeBackend, Params};
+
+    fn test_engine() -> InferenceEngine<NativeBackend> {
+        let cfg = crate::model::tests::test_config();
+        let params = Params::random(&cfg, 21);
+        InferenceEngine::new(NativeBackend::new(cfg, params), ExecMode::Diagonal)
+    }
+
+    #[test]
+    fn roundtrip_over_tcp() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let addr = server.addr.to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        assert!(client.ping().unwrap());
+
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+        let resp = client.infer(&tokens, None).unwrap();
+        assert_eq!(resp.req("mode").unwrap().as_str().unwrap(), "diagonal");
+        assert_eq!(resp.req("tokens").unwrap().as_usize().unwrap(), 16);
+        assert_eq!(
+            resp.req("greedy_tail").unwrap().as_arr().unwrap().len(),
+            8 // test config seg
+        );
+
+        // mode override
+        let resp = client.infer(&tokens, Some(ExecMode::Sequential)).unwrap();
+        assert_eq!(resp.req("mode").unwrap().as_str().unwrap(), "sequential");
+
+        // malformed input -> error object, connection stays usable
+        let bad = client.roundtrip(&Value::obj(vec![("tokens", Value::Str("x".into()))])).unwrap();
+        assert!(bad.get("error").is_some());
+        assert!(client.ping().unwrap());
+
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 16).unwrap();
+        let addr = server.addr.to_string();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let tokens: Vec<u32> = (0..24).map(|i| (i + t) % 60).collect();
+                let resp = c.infer(&tokens, None).unwrap();
+                resp.req("segments").unwrap().as_usize().unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 3);
+        }
+        server.stop();
+    }
+}

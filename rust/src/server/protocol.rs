@@ -1,0 +1,92 @@
+//! Wire <-> coordinator type mapping.
+
+use crate::config::ExecMode;
+use crate::coordinator::{Request, Response};
+use crate::error::Result;
+use crate::json::Value;
+
+/// Parsed request line (before engine processing).
+#[derive(Clone, Debug)]
+pub struct WireRequest {
+    pub request: Request,
+}
+
+/// Parse a request object; `next_id` supplies an id when absent.
+pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Request> {
+    let tokens = v.req("tokens")?.as_u32_vec()?;
+    let id = match v.get("id") {
+        Some(x) => x.as_usize()? as u64,
+        None => next_id(),
+    };
+    let mode: Option<ExecMode> = match v.get("mode") {
+        Some(m) => Some(m.as_str()?.parse()?),
+        None => None,
+    };
+    let want_logits = match v.get("want_logits") {
+        Some(w) => w.as_bool()?,
+        None => false,
+    };
+    Ok(Request { id, tokens, mode, want_logits })
+}
+
+/// Render a successful response (logits are summarized, never shipped raw
+/// — the greedy tail plus norms is what serving clients consume).
+pub fn render_response(resp: &Response) -> Value {
+    let mut fields = vec![
+        ("id", Value::Num(resp.id as f64)),
+        (
+            "greedy_tail",
+            Value::Arr(resp.greedy_tail.iter().map(|&t| Value::Num(t as f64)).collect()),
+        ),
+        ("mode", Value::Str(resp.mode_used.to_string())),
+        ("latency_ms", Value::Num(resp.latency.as_secs_f64() * 1e3)),
+        ("segments", Value::Num(resp.stats.segments as f64)),
+        ("launches", Value::Num(resp.stats.launches as f64)),
+        ("tokens", Value::Num(resp.stats.tokens as f64)),
+        ("mean_group", Value::Num(resp.stats.mean_group())),
+    ];
+    if let Some(logits) = &resp.logits {
+        let norms: Vec<Value> =
+            logits.iter().map(|t| Value::Num(t.norm() as f64)).collect();
+        fields.push(("logits_norms", Value::Arr(norms)));
+    }
+    Value::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let v = Value::parse(r#"{"tokens": [1, 2, 3]}"#).unwrap();
+        let r = parse_request(&v, || 42).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(r.tokens, vec![1, 2, 3]);
+        assert!(r.mode.is_none());
+        assert!(!r.want_logits);
+    }
+
+    #[test]
+    fn parse_full() {
+        let v = Value::parse(r#"{"id": 7, "tokens": [5], "mode": "seq", "want_logits": true}"#)
+            .unwrap();
+        let r = parse_request(&v, || 0).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.mode, Some(ExecMode::Sequential));
+        assert!(r.want_logits);
+    }
+
+    #[test]
+    fn parse_rejects_bad_fields() {
+        for bad in [
+            r#"{"mode": "diag"}"#,                   // missing tokens
+            r#"{"tokens": "x"}"#,                    // wrong type
+            r#"{"tokens": [1], "mode": "warp"}"#,    // bad mode
+            r#"{"tokens": [-1]}"#,                   // negative token
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_request(&v, || 0).is_err(), "{bad}");
+        }
+    }
+}

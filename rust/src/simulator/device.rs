@@ -1,0 +1,140 @@
+//! Device models and the roofline time rule.
+//!
+//! `time(op) = launch + max(flops / (peak · eff), bytes / bandwidth)`
+//!
+//! The efficiency term `eff` models what the paper's Figs. 4-5 measure:
+//! GEMM throughput rises with parallel work (more tiles than SMs) and
+//! with inner dimension `k`, saturating at peak. We use a smooth
+//! work-occupancy curve rather than a sawtooth wave-quantization model —
+//! real kernels overlap waves enough that the envelope is what matters.
+
+use super::ops::OpCost;
+
+/// A modeled accelerator.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Per-kernel launch + sync latency, seconds.
+    pub launch_s: f64,
+    /// Number of SMs (parallel tile slots).
+    pub sms: f64,
+    /// Occupancy softness: eff = u / (u + alpha) with u = tiles/SMs.
+    pub wave_alpha: f64,
+    /// Small-k penalty scale: eff_k = k / (k + k0).
+    pub k0: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A100-SXM4-80GB (the paper's main testbed).
+    ///
+    /// `wave_alpha` is calibrated against the paper's own Table 1/9
+    /// numbers (seg-1024 speedup x1.81, seg-512 x2.72 at 131k): real
+    /// per-layer kernels at batch 1 run well below nominal occupancy
+    /// (launch gaps, tail waves, python dispatch in the baseline), which
+    /// the occupancy-softness term absorbs. See EXPERIMENTS.md
+    /// "Simulator calibration".
+    pub fn a100() -> Self {
+        Self {
+            name: "A100-80G",
+            peak_flops: 312e12,
+            mem_bw: 2.039e12,
+            launch_s: 6e-6,
+            sms: 108.0,
+            wave_alpha: 2.0,
+            k0: 96.0,
+        }
+    }
+
+    /// NVIDIA H100-SXM5.
+    pub fn h100() -> Self {
+        Self {
+            name: "H100-SXM",
+            peak_flops: 989e12,
+            mem_bw: 3.35e12,
+            launch_s: 6e-6,
+            sms: 132.0,
+            wave_alpha: 2.0,
+            k0: 128.0,
+        }
+    }
+
+    /// GEMM efficiency for a given tile count and inner dim.
+    pub fn gemm_eff(&self, tiles: f64, k: f64) -> f64 {
+        let u = tiles / self.sms;
+        let eff_occ = u / (u + self.wave_alpha);
+        let eff_k = k / (k + self.k0);
+        (eff_occ * eff_k).clamp(1e-4, 1.0)
+    }
+
+    /// Roofline time for one op.
+    pub fn time(&self, op: &OpCost) -> f64 {
+        let compute = if op.flops > 0.0 {
+            op.flops / (self.peak_flops * op.eff.clamp(1e-4, 1.0))
+        } else {
+            0.0
+        };
+        let mem = op.bytes / self.mem_bw;
+        self.launch_s * op.launches as f64 + compute.max(mem)
+    }
+
+    /// Total time for a sequence of ops.
+    pub fn time_all(&self, ops: &[OpCost]) -> f64 {
+        ops.iter().map(|o| self.time(o)).sum()
+    }
+
+    /// Achieved FLOP/s for an op under this model (Figs. 4-5 y-axis).
+    pub fn achieved_flops(&self, op: &OpCost) -> f64 {
+        let t = self.time(op);
+        if t > 0.0 {
+            op.flops / t
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::ops;
+
+    #[test]
+    fn eff_monotone_in_tiles_and_k() {
+        let d = DeviceSpec::a100();
+        assert!(d.gemm_eff(10.0, 2048.0) < d.gemm_eff(100.0, 2048.0));
+        assert!(d.gemm_eff(100.0, 2048.0) < d.gemm_eff(1000.0, 2048.0));
+        assert!(d.gemm_eff(100.0, 32.0) < d.gemm_eff(100.0, 2048.0));
+        assert!(d.gemm_eff(1e9, 1e9) <= 1.0);
+    }
+
+    #[test]
+    fn roofline_picks_max_of_compute_and_mem() {
+        let d = DeviceSpec::a100();
+        // Huge compute, tiny memory: compute-bound.
+        let c = OpCost { flops: 1e15, bytes: 1.0, eff: 1.0, launches: 1 };
+        assert!((d.time(&c) - (1e15 / d.peak_flops + d.launch_s)).abs() < 1e-6);
+        // Tiny compute, huge memory: bandwidth-bound.
+        let m = OpCost { flops: 1.0, bytes: 1e12, eff: 1.0, launches: 1 };
+        assert!((d.time(&m) - (1e12 / d.mem_bw + d.launch_s)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_ops() {
+        let d = DeviceSpec::a100();
+        let tiny = ops::gemm(&d, 8, 8, 8, 1);
+        assert!(d.time(&tiny) < 2.0 * d.launch_s);
+        assert!(d.time(&tiny) >= d.launch_s);
+    }
+
+    #[test]
+    fn batching_raises_achieved_flops() {
+        let d = DeviceSpec::a100();
+        let g1 = ops::grouped_gemm(&d, 1152, 2048, 2048, 1);
+        let g16 = ops::grouped_gemm(&d, 1152, 2048, 2048, 16);
+        assert!(d.achieved_flops(&g16) > d.achieved_flops(&g1));
+    }
+}

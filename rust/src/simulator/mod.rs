@@ -1,0 +1,27 @@
+//! GPU roofline cost-model simulator.
+//!
+//! DESIGN.md substitution #1: the paper's wallclock tables were measured
+//! on A100/H100 GPUs we don't have; this module models a device as
+//! (peak FLOPS, HBM bandwidth, kernel-launch latency, utilization curve)
+//! and costs the exact op sequences the rust scheduler would launch. The
+//! same `Schedule` objects drive both the real PJRT backend and this
+//! model, so who-wins / crossover structure is preserved by construction.
+//!
+//! * [`device`] — device specs (A100-80G, H100-SXM) and the time model;
+//! * [`ops`] — per-op cost builders (GEMM, grouped GEMM, flash attention,
+//!   elementwise, associative read/update);
+//! * [`workload`] — the op sequences of ARMT layer-steps, full-attention
+//!   layers, embeddings and heads for a given model config;
+//! * [`memory`] — the memory-footprint model (KV-cache vs ARMT state,
+//!   Fig. 1's headline memory saving);
+//! * [`tables`] — regenerates every paper table/figure as structured rows.
+
+pub mod device;
+pub mod memory;
+pub mod ops;
+pub mod tables;
+pub mod workload;
+
+pub use device::DeviceSpec;
+pub use ops::OpCost;
+pub use workload::Workload;

@@ -1,0 +1,182 @@
+//! Per-op cost builders.
+//!
+//! Every builder returns an [`OpCost`] = (flops, bytes moved, achieved
+//! efficiency, launches). `bytes` is HBM traffic assuming perfect reuse
+//! inside the kernel (flash-style tiling); dtype is bf16 (2 bytes) for
+//! activations/weights, matching the paper's fp16/bf16 inference setup.
+
+use super::device::DeviceSpec;
+
+/// Activation/weight element size (bf16).
+pub const DTYPE: f64 = 2.0;
+/// Output-tile edge the efficiency model assumes (MXU/tensor-core tile).
+pub const TILE: f64 = 128.0;
+
+/// One kernel's cost under the roofline model.
+#[derive(Clone, Copy, Debug)]
+pub struct OpCost {
+    pub flops: f64,
+    pub bytes: f64,
+    /// Compute efficiency in (0, 1]; filled by the builders from the
+    /// device's utilization curve.
+    pub eff: f64,
+    pub launches: usize,
+}
+
+impl OpCost {
+    pub fn zero() -> Self {
+        Self { flops: 0.0, bytes: 0.0, eff: 1.0, launches: 0 }
+    }
+
+    /// Merge two op costs executed as separate kernels.
+    pub fn plus(self, other: OpCost) -> OpCost {
+        // NOTE: eff folds into flops-time only at `DeviceSpec::time`;
+        // summing costs with different eff would lose information, so we
+        // keep ops separate in workloads and only add launch-free costs.
+        debug_assert!(other.flops == 0.0 || self.flops == 0.0 || other.eff == self.eff);
+        OpCost {
+            flops: self.flops + other.flops,
+            bytes: self.bytes + other.bytes,
+            eff: if self.flops >= other.flops { self.eff } else { other.eff },
+            launches: self.launches + other.launches,
+        }
+    }
+}
+
+fn tiles(m: f64, n: f64, batch: f64) -> f64 {
+    (m / TILE).ceil() * (n / TILE).ceil() * batch
+}
+
+/// Plain GEMM `[m,k] x [k,n]`, optionally batched with shared weights
+/// (batch multiplies the M dimension's tile count, weights read once).
+pub fn gemm(dev: &DeviceSpec, m: usize, n: usize, k: usize, batch: usize) -> OpCost {
+    let (mf, nf, kf, bf) = (m as f64, n as f64, k as f64, batch as f64);
+    OpCost {
+        flops: 2.0 * mf * nf * kf * bf,
+        bytes: DTYPE * (bf * mf * kf + kf * nf + bf * mf * nf),
+        eff: dev.gemm_eff(tiles(mf, nf, bf), kf),
+        launches: 1,
+    }
+}
+
+/// Grouped GEMM (CUTLASS GroupedGEMM analog): `group` independent
+/// `[m,k] x [k,n]` problems with *distinct* weights in one launch.
+pub fn grouped_gemm(dev: &DeviceSpec, m: usize, n: usize, k: usize, group: usize) -> OpCost {
+    let (mf, nf, kf, gf) = (m as f64, n as f64, k as f64, group as f64);
+    OpCost {
+        flops: 2.0 * mf * nf * kf * gf,
+        bytes: DTYPE * gf * (mf * kf + kf * nf + mf * nf),
+        eff: dev.gemm_eff(tiles(mf, nf, gf), kf),
+        launches: 1,
+    }
+}
+
+/// Flash attention over `batch` sequences of length `t` (causal within
+/// the first `seg` rows costs ~half the score flops; memory tokens are a
+/// small correction we fold in by using full t x t).
+pub fn flash_attention(
+    dev: &DeviceSpec,
+    batch: usize,
+    heads: usize,
+    t: usize,
+    head_dim: usize,
+    causal: bool,
+) -> OpCost {
+    let (bf, hf, tf, df) = (batch as f64, heads as f64, t as f64, head_dim as f64);
+    let frac = if causal { 0.5 } else { 1.0 };
+    // QK^T + PV, each 2*t*t*hd flops per head.
+    let flops = 2.0 * 2.0 * bf * hf * tf * tf * df * frac;
+    // IO-aware attention reads Q,K,V once and writes O once.
+    let bytes = DTYPE * 4.0 * bf * hf * tf * df;
+    // Tile parallelism: (t/128) q-blocks per (batch, head).
+    let eff = dev.gemm_eff((tf / TILE).ceil() * bf * hf, df.max(TILE / 2.0));
+    OpCost { flops, bytes, eff, launches: 1 }
+}
+
+/// Bandwidth-bound elementwise/norm op over `elems` elements (read+write).
+pub fn elementwise(elems: usize) -> OpCost {
+    OpCost { flops: 0.0, bytes: DTYPE * 2.0 * elems as f64, eff: 1.0, launches: 1 }
+}
+
+/// Associative read (eq. 6) for `group` cells: q-projection GEMM +
+/// DPFP expansion (elementwise) + the A-read GEMM.
+pub fn assoc_read(
+    dev: &DeviceSpec,
+    group: usize,
+    t: usize,
+    d: usize,
+    k_assoc: usize,
+    phi: usize,
+) -> OpCost {
+    let proj = grouped_gemm(dev, t, k_assoc, d, group);
+    let expand = elementwise(group * t * phi);
+    let read = grouped_gemm(dev, t, d, phi, group);
+    OpCost {
+        flops: proj.flops + read.flops,
+        bytes: proj.bytes + expand.bytes + read.bytes,
+        eff: read.eff, // dominated by the A-read
+        launches: 3,
+    }
+}
+
+/// Delta-rule update (eqs. 3-5) for `group` cells over `mem` tokens.
+pub fn assoc_update(
+    dev: &DeviceSpec,
+    group: usize,
+    mem: usize,
+    d: usize,
+    k_assoc: usize,
+    phi: usize,
+) -> OpCost {
+    let kproj = grouped_gemm(dev, mem, k_assoc, d, group);
+    let vproj = grouped_gemm(dev, mem, d, d, group);
+    let vbar = grouped_gemm(dev, mem, d, phi, group);
+    let outer = grouped_gemm(dev, d, phi, mem, group);
+    // A is read and written once per update: 2 * d * phi traffic.
+    let state = elementwise(group * d * phi);
+    OpCost {
+        flops: kproj.flops + vproj.flops + vbar.flops + outer.flops,
+        bytes: kproj.bytes + vproj.bytes + vbar.bytes + outer.bytes + state.bytes,
+        eff: outer.eff,
+        launches: 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_exact() {
+        let d = DeviceSpec::a100();
+        let o = gemm(&d, 10, 20, 30, 2);
+        assert_eq!(o.flops, 2.0 * 10.0 * 20.0 * 30.0 * 2.0);
+        assert_eq!(o.launches, 1);
+    }
+
+    #[test]
+    fn grouped_gemm_flops_scale_with_group() {
+        let d = DeviceSpec::a100();
+        let a = grouped_gemm(&d, 128, 256, 256, 1);
+        let b = grouped_gemm(&d, 128, 256, 256, 8);
+        assert!((b.flops / a.flops - 8.0).abs() < 1e-9);
+        assert!(b.eff > a.eff, "batching must raise modeled efficiency");
+    }
+
+    #[test]
+    fn causal_attention_half_flops() {
+        let d = DeviceSpec::a100();
+        let c = flash_attention(&d, 1, 8, 1024, 64, true);
+        let f = flash_attention(&d, 1, 8, 1024, 64, false);
+        assert!((f.flops / c.flops - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assoc_ops_have_positive_cost() {
+        let d = DeviceSpec::a100();
+        let r = assoc_read(&d, 4, 40, 64, 16, 96);
+        let u = assoc_update(&d, 4, 8, 64, 16, 96);
+        assert!(r.flops > 0.0 && r.bytes > 0.0 && r.launches == 3);
+        assert!(u.flops > 0.0 && u.bytes > 0.0 && u.launches == 4);
+    }
+}

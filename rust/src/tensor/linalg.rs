@@ -1,0 +1,170 @@
+//! Matmul family for the native backend.
+//!
+//! Plain triple loops with a k-blocked inner kernel — fast enough for the
+//! tiny CPU-validation configs, and *bit-stable*: the accumulation order
+//! is fixed so the native diagonal and sequential executors agree
+//! bit-for-bit (the property the scheduler proptests rely on).
+
+use super::Tensor;
+
+/// C[m,n] = A[m,k] @ B[k,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out).expect("matmul shape")
+}
+
+/// C[m,n] = A[k,m]^T @ B[k,n] (A stored transposed).
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_at inner dims");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out).expect("matmul_at shape")
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]^T (B stored transposed — attention scores).
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt inner dims");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            orow[j] = acc;
+        }
+    }
+    Tensor::new(&[m, n], out).expect("matmul_bt shape")
+}
+
+/// Grouped matmul: x[g,m,k] @ w[g,k,n] -> [g,m,n], executed as an ordered
+/// loop over groups. This mirrors the L1 grouped-GEMM kernel semantics:
+/// per-group results are *identical* to g independent [`matmul`] calls,
+/// which is what makes native diagonal == native sequential bit-exact.
+pub fn grouped_matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 3);
+    assert_eq!(w.rank(), 3);
+    let g = x.shape()[0];
+    assert_eq!(g, w.shape()[0], "group dims");
+    let parts: Vec<Tensor> = (0..g).map(|i| matmul(&x.index0(i), &w.index0(i))).collect();
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    Tensor::stack(&refs).expect("grouped stack")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.at2(i, p) * b.at2(p, j);
+                }
+                out.data_mut()[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_at_is_transposed_a() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 3], 1.0, &mut rng);
+        let got = matmul_at(&a, &b);
+        let want = matmul(&a.t(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_bt_is_transposed_b() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 6], 1.0, &mut rng);
+        let got = matmul_bt(&a, &b);
+        let want = matmul(&a, &b.t());
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn grouped_equals_independent() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[3, 4, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 5, 6], 1.0, &mut rng);
+        let g = grouped_matmul(&x, &w);
+        for i in 0..3 {
+            let want = matmul(&x.index0(i), &w.index0(i));
+            // bit-exact, not approximately equal
+            assert_eq!(g.index0(i), want);
+        }
+    }
+
+    #[test]
+    fn identity() {
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.data_mut()[i * 4 + i] = 1.0;
+        }
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        assert_eq!(matmul(&a, &eye), a);
+    }
+}

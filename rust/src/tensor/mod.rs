@@ -1,0 +1,297 @@
+//! Minimal dense f32 tensor library.
+//!
+//! This is the substrate for the native reference model ([`crate::model`]),
+//! the scheduler's group assembly, and test oracles. It is deliberately
+//! simple: row-major `Vec<f32>` + shape, with exactly the ops the ARMT
+//! cell needs. No broadcasting magic — every op states its contract.
+//!
+//! Split across submodules:
+//! * [`ops`] — elementwise / reduction / activation ops,
+//! * [`linalg`] — matmul family (incl. the grouped matmul used to mirror
+//!   the L1 grouped-GEMM kernel),
+//! * [`rng`] — a tiny deterministic PRNG (xoshiro256**) so tests and
+//!   workload generators never need the `rand` crate.
+
+mod linalg;
+mod ops;
+mod rng;
+
+pub use linalg::{grouped_matmul, matmul, matmul_at, matmul_bt};
+pub use ops::*;
+pub use rng::Rng;
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from parts; checks element count.
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape {
+                what: "Tensor::new",
+                expected: vec![n],
+                got: vec![data.len()],
+            });
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// All-zero tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Standard-normal-ish tensor from the deterministic PRNG.
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * scale).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape {
+                what: "reshape",
+                expected: shape.to_vec(),
+                got: self.shape.clone(),
+            });
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Scalar accessor for rank-2 tensors.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Leading-axis slice `[i]` of a rank-N tensor (N >= 1) as a view copy.
+    pub fn index0(&self, i: usize) -> Tensor {
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * sub..(i + 1) * sub].to_vec(),
+        }
+    }
+
+    /// Write `src` into leading-axis slot `i` (inverse of [`index0`]).
+    pub fn set_index0(&mut self, i: usize, src: &Tensor) {
+        let sub: usize = self.shape[1..].iter().product();
+        debug_assert_eq!(src.len(), sub, "set_index0 size");
+        self.data[i * sub..(i + 1) * sub].copy_from_slice(&src.data);
+    }
+
+    /// Rows `[a, b)` along axis 0, as a copy.
+    pub fn slice0(&self, a: usize, b: usize) -> Tensor {
+        let sub: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = b - a;
+        Tensor { shape, data: self.data[a * sub..b * sub].to_vec() }
+    }
+
+    /// Stack tensors of identical shape along a new leading axis.
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| Error::Config("stack of 0".into()))?;
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(first.shape());
+        let mut data = Vec::with_capacity(parts.len() * first.len());
+        for p in parts {
+            if p.shape() != first.shape() {
+                return Err(Error::Shape {
+                    what: "stack",
+                    expected: first.shape().to_vec(),
+                    got: p.shape().to_vec(),
+                });
+            }
+            data.extend_from_slice(p.data());
+        }
+        Tensor::new(&shape, data)
+    }
+
+    /// Concatenate along axis 0 (shapes must agree on trailing axes).
+    pub fn concat0(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| Error::Config("concat of 0".into()))?;
+        let mut rows = 0usize;
+        let mut data = Vec::new();
+        for p in parts {
+            if p.shape()[1..] != first.shape()[1..] {
+                return Err(Error::Shape {
+                    what: "concat0",
+                    expected: first.shape().to_vec(),
+                    got: p.shape().to_vec(),
+                });
+            }
+            rows += p.shape()[0];
+            data.extend_from_slice(p.data());
+        }
+        let mut shape = first.shape().to_vec();
+        shape[0] = rows;
+        Tensor::new(&shape, data)
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        debug_assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Relative Frobenius error ‖self − other‖ / ‖other‖ — the paper's
+    /// Table 2 metric.
+    pub fn rel_error(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num.sqrt() / den.sqrt().max(1e-30)) as f32
+    }
+
+    /// Max |a − b|.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-wise argmax for rank-2 tensors (greedy decode / top-1
+    /// agreement). NaN-safe: NaN entries lose every comparison, so a
+    /// numerically-diverged row deterministically yields index 0 instead
+    /// of panicking (long random-weight recurrences can overflow f32 —
+    /// see EXPERIMENTS.md Table 2 notes).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        debug_assert_eq!(self.rank(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > best_v {
+                        best = j;
+                        best_v = v;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn index_set_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 2, 2]);
+        let part = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        t.set_index0(1, &part);
+        assert_eq!(t.index0(1), part);
+        assert_eq!(t.index0(0), Tensor::zeros(&[2, 2]));
+    }
+
+    #[test]
+    fn stack_concat() {
+        let a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 2.0);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        let c = Tensor::concat0(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[4, 2]);
+        assert_eq!(c.at2(3, 1), 2.0);
+    }
+
+    #[test]
+    fn transpose() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = a.t();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn rel_error_zero_for_self() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        assert_eq!(a.rel_error(&a), 0.0);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let a = Tensor::new(&[2, 3], vec![0., 5., 1., 9., 2., 3.]).unwrap();
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Elementwise / reduction / transformer ops for the native backend.
+//!
+//! These mirror the L2 jnp semantics exactly (same formulas, f32) so that
+//! the native model can serve as an oracle against HLO executables.
+
+use super::Tensor;
+
+/// a + b (same shape).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Tensor::new(a.shape(), data).expect("add")
+}
+
+/// a - b (same shape).
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Tensor::new(a.shape(), data).expect("sub")
+}
+
+/// a * b elementwise (same shape).
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x * y).collect();
+    Tensor::new(a.shape(), data).expect("mul")
+}
+
+/// a * s (scalar).
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    let data = a.data().iter().map(|x| x * s).collect();
+    Tensor::new(a.shape(), data).expect("scale")
+}
+
+/// In-place a += b.
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    debug_assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += y;
+    }
+}
+
+/// Numerically matching jnp: sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// SiLU (a.k.a. swish): x * sigmoid(x).
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// Map a scalar fn over a tensor.
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    let data = a.data().iter().map(|&x| f(x)).collect();
+    Tensor::new(a.shape(), data).expect("map")
+}
+
+/// Row-wise softmax on a rank-2 tensor (numerically stabilized like XLA).
+pub fn softmax_rows(a: &Tensor) -> Tensor {
+    debug_assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = a.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= sum;
+        }
+    }
+    Tensor::new(&[m, n], out).expect("softmax")
+}
+
+/// RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * g.
+/// x: [T, d], g: [d].
+pub fn rmsnorm(x: &Tensor, g: &Tensor, eps: f32) -> Tensor {
+    debug_assert_eq!(x.rank(), 2);
+    let (t, d) = (x.shape()[0], x.shape()[1]);
+    debug_assert_eq!(g.len(), d);
+    let mut out = vec![0.0f32; t * d];
+    for i in 0..t {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * r * g.data()[j];
+        }
+    }
+    Tensor::new(&[t, d], out).expect("rmsnorm")
+}
+
+/// DPFP-nu feature map, matching `kernels/dpfp.py` exactly.
+/// x: [T, k] -> [T, 2*nu*k].
+pub fn dpfp(x: &Tensor, nu: usize) -> Tensor {
+    debug_assert_eq!(x.rank(), 2);
+    let (t, k) = (x.shape()[0], x.shape()[1]);
+    let w = 2 * k;
+    let p = nu * w;
+    let mut out = vec![0.0f32; t * p];
+    let mut xx = vec![0.0f32; w];
+    for i in 0..t {
+        let row = x.row(i);
+        for j in 0..k {
+            xx[j] = row[j].max(0.0);
+            xx[k + j] = (-row[j]).max(0.0);
+        }
+        for r in 1..=nu {
+            let base = i * p + (r - 1) * w;
+            for j in 0..w {
+                // jnp.roll(xx, -r): element j pairs with element (j + r) % w
+                out[base + j] = xx[j] * xx[(j + r) % w];
+            }
+        }
+    }
+    Tensor::new(&[t, p], out).expect("dpfp")
+}
+
+/// RoPE rotation matching `ref.ref_rope`: x [T, hd] rotated by position.
+pub fn rope_rows(x: &Tensor, theta: f32) -> Tensor {
+    debug_assert_eq!(x.rank(), 2);
+    let (t, hd) = (x.shape()[0], x.shape()[1]);
+    debug_assert_eq!(hd % 2, 0);
+    let half = hd / 2;
+    let mut out = vec![0.0f32; t * hd];
+    for pos in 0..t {
+        let row = x.row(pos);
+        for i in 0..half {
+            let freq = 1.0 / theta.powf((2 * i) as f32 / hd as f32);
+            let ang = pos as f32 * freq;
+            let (s, c) = ang.sin_cos();
+            let x1 = row[2 * i];
+            let x2 = row[2 * i + 1];
+            out[pos * hd + 2 * i] = x1 * c - x2 * s;
+            out[pos * hd + 2 * i + 1] = x1 * s + x2 * c;
+        }
+    }
+    Tensor::new(&[t, hd], out).expect("rope")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn add_sub_mul() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2], vec![3.0, 4.0]).unwrap();
+        assert_eq!(add(&a, &b).data(), &[4.0, 6.0]);
+        assert_eq!(sub(&b, &a).data(), &[2.0, 2.0]);
+        assert_eq!(mul(&a, &b).data(), &[3.0, 8.0]);
+        assert_eq!(scale(&a, 2.0).data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[4, 7], 3.0, &mut rng);
+        let s = softmax_rows(&a);
+        for i in 0..4 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let a = Tensor::new(&[1, 3], vec![1e30, -1e30, 0.0]).unwrap();
+        let s = softmax_rows(&a);
+        assert!((s.at2(0, 0) - 1.0).abs() < 1e-6);
+        assert!(s.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_unit_rms() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[3, 16], 2.0, &mut rng);
+        let g = Tensor::full(&[16], 1.0);
+        let y = rmsnorm(&x, &g, 1e-6);
+        for i in 0..3 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn dpfp_shape_and_nonneg() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let p = dpfp(&x, 3);
+        assert_eq!(p.shape(), &[5, 48]);
+        assert!(p.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn dpfp_zero_is_zero() {
+        let x = Tensor::zeros(&[2, 4]);
+        assert_eq!(dpfp(&x, 3), Tensor::zeros(&[2, 24]));
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[1, 8], 1.0, &mut rng);
+        let y = rope_rows(&x, 10000.0);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let y = rope_rows(&x, 10000.0);
+        for i in 0..6 {
+            let nx: f32 = x.row(i).iter().map(|v| v * v).sum();
+            let ny: f32 = y.row(i).iter().map(|v| v * v).sum();
+            assert!((nx - ny).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! End-to-end serving tests: TCP server + engine + scheduler + backend.
+
+use diagonal_batching::config::{ExecMode, Manifest, ModelConfig};
+use diagonal_batching::coordinator::InferenceEngine;
+use diagonal_batching::json::Value;
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::server::{Client, Server};
+use diagonal_batching::tensor::Rng;
+
+fn test_config() -> ModelConfig {
+    ModelConfig {
+        name: "e2e".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 48,
+        seg: 8,
+        mem: 2,
+        k_assoc: 4,
+        dpfp_nu: 3,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 16,
+        phi_dim: 24,
+        seg_total: 10,
+    }
+}
+
+fn native_engine(mode: ExecMode) -> InferenceEngine<NativeBackend> {
+    let cfg = test_config();
+    let params = Params::random(&cfg, 77);
+    InferenceEngine::new(NativeBackend::new(cfg, params), mode)
+}
+
+fn toks(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(64) as u32).collect()
+}
+
+#[test]
+fn serve_modes_and_stats_fields() {
+    let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 8).unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+
+    let resp = c.infer(&toks(40, 1), None).unwrap();
+    for field in ["id", "greedy_tail", "mode", "latency_ms", "segments", "launches", "mean_group"]
+    {
+        assert!(resp.get(field).is_some(), "missing {field}");
+    }
+    assert_eq!(resp.req("segments").unwrap().as_usize().unwrap(), 5);
+    // S + L - 1 = 6 launches
+    assert_eq!(resp.req("launches").unwrap().as_usize().unwrap(), 6);
+
+    let seq = c.infer(&toks(40, 1), Some(ExecMode::Sequential)).unwrap();
+    assert_eq!(seq.req("launches").unwrap().as_usize().unwrap(), 10);
+    // both schedules greedy-decode identically on the native backend
+    assert_eq!(
+        resp.req("greedy_tail").unwrap().as_u32_vec().unwrap(),
+        seq.req("greedy_tail").unwrap().as_u32_vec().unwrap()
+    );
+    server.stop();
+}
+
+#[test]
+fn serve_rejects_garbage_gracefully() {
+    let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 8).unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+    // unparseable line
+    let resp = c.roundtrip(&Value::Str("not an object".into())).unwrap();
+    assert!(resp.get("error").is_some());
+    // empty tokens
+    let resp = c
+        .roundtrip(&Value::obj(vec![("tokens", Value::Arr(vec![]))]))
+        .unwrap();
+    assert!(resp.get("error").is_some());
+    // still alive
+    assert!(c.ping().unwrap());
+    server.stop();
+}
+
+#[test]
+fn serve_many_requests_fifo_consistency() {
+    let server = Server::start(native_engine(ExecMode::Auto), "127.0.0.1:0", 32).unwrap();
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut ok = 0;
+            for i in 0..5 {
+                let resp = c.infer(&toks(16 + 8 * (t as usize % 3), t * 100 + i), None).unwrap();
+                assert!(resp.get("error").is_none());
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 30);
+    server.stop();
+}
+
+#[test]
+fn serve_hlo_backend_if_artifacts_present() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+    if !std::path::Path::new(path).exists() {
+        return;
+    }
+    let m = Manifest::load(path).unwrap();
+    let backend = HloBackend::load(&m, "micro").unwrap();
+    let engine = InferenceEngine::new(backend, ExecMode::Diagonal);
+    let server = Server::start(engine, "127.0.0.1:0", 4).unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+    let resp = c.infer(&toks(64, 3), None).unwrap();
+    assert_eq!(resp.req("mode").unwrap().as_str().unwrap(), "diagonal");
+    assert_eq!(resp.req("segments").unwrap().as_usize().unwrap(), 8);
+    server.stop();
+}
+
+#[test]
+fn shutdown_via_protocol() {
+    let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 4).unwrap();
+    let addr = server.addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    c.shutdown().unwrap();
+    // subsequent requests on a NEW connection should fail to be served
+    // (queue closed); allow either connect failure or error response.
+    if let Ok(mut c2) = Client::connect(&addr) {
+        match c2.infer(&toks(8, 4), None) {
+            Err(_) => {}
+            Ok(resp) => assert!(resp.get("error").is_some()),
+        }
+    }
+    server.stop();
+}

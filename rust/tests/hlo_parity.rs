@@ -1,0 +1,189 @@
+//! HLO-backend integration tests: the AOT artifacts vs the native rust
+//! oracle, and the paper's Table 2 error-accumulation experiment on the
+//! real PJRT execution path.
+//!
+//! All tests skip gracefully when `artifacts/manifest.json` is absent
+//! (run `make artifacts` first); CI-style runs get the full coverage.
+
+use diagonal_batching::config::{ExecMode, Manifest};
+use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::runtime::HloBackend;
+use diagonal_batching::scheduler::{Executor, ScheduleMode, StepBackend};
+use diagonal_batching::tensor::{Rng, Tensor};
+
+fn manifest() -> Option<Manifest> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+    std::path::Path::new(path).exists().then(|| Manifest::load(path).unwrap())
+}
+
+fn tokens(n: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(vocab) as u32).collect()
+}
+
+#[test]
+fn hlo_grouped_step_matches_native_oracle() {
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    let params = Params::load(&m, "tiny").unwrap();
+    let mut native = NativeBackend::new(cfg.clone(), params);
+
+    let mut rng = Rng::new(3);
+    let l = cfg.n_layers;
+    let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+    let a = Tensor::randn(&[l, cfg.d_model, cfg.phi_dim], 0.05, &mut rng);
+    let z = Tensor::randn(&[l, cfg.phi_dim], 0.05, &mut rng);
+    let mask = vec![1.0; l];
+
+    let (yh, ah, zh) = hlo.grouped_step(&x, &a, &z, &mask).unwrap();
+    let (yn, an, zn) = native.grouped_step(&x, &a, &z, &mask).unwrap();
+    assert!(yh.rel_error(&yn) < 2e-3, "y rel {}", yh.rel_error(&yn));
+    assert!(ah.rel_error(&an) < 2e-3, "A rel {}", ah.rel_error(&an));
+    assert!(zh.rel_error(&zn) < 2e-3, "z rel {}", zh.rel_error(&zn));
+}
+
+#[test]
+fn hlo_masked_slots_bit_frozen() {
+    // The artifact contract: state rows with mask 0 come back UNTOUCHED.
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    let mut rng = Rng::new(4);
+    let l = cfg.n_layers;
+    let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+    let a = Tensor::randn(&[l, cfg.d_model, cfg.phi_dim], 0.05, &mut rng);
+    let z = Tensor::randn(&[l, cfg.phi_dim], 0.05, &mut rng);
+    let mut mask = vec![1.0; l];
+    mask[1] = 0.0;
+    mask[l - 1] = 0.0;
+    let (_, ah, zh) = hlo.grouped_step(&x, &a, &z, &mask).unwrap();
+    for i in [1, l - 1] {
+        assert_eq!(ah.index0(i), a.index0(i), "A slot {i} must be frozen");
+        assert_eq!(zh.index0(i), z.index0(i), "z slot {i} must be frozen");
+    }
+    // active slots must move
+    assert!(ah.index0(0).rel_error(&a.index0(0)) > 1e-6);
+}
+
+#[test]
+fn hlo_embed_lm_head_match_native() {
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    let params = Params::load(&m, "tiny").unwrap();
+    let mut native = NativeBackend::new(cfg.clone(), params);
+
+    let toks = tokens(cfg.seg, cfg.vocab, 5);
+    let xh = hlo.embed(&toks).unwrap();
+    let xn = native.embed(&toks).unwrap();
+    assert!(xh.rel_error(&xn) < 1e-5, "embed rel {}", xh.rel_error(&xn));
+
+    let lh = hlo.lm_head(&xh).unwrap();
+    let ln = native.lm_head(&xn).unwrap();
+    assert_eq!(lh.shape(), &[cfg.seg, cfg.vocab]);
+    assert!(lh.rel_error(&ln) < 1e-3, "lm_head rel {}", lh.rel_error(&ln));
+}
+
+#[test]
+fn hlo_end_to_end_matches_native_oracle() {
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    let toks = tokens(cfg.seg * 3, cfg.vocab, 6);
+
+    let out_h = Executor::new(&mut hlo, ScheduleMode::Diagonal).run(&toks).unwrap();
+    let params = Params::load(&m, "tiny").unwrap();
+    let mut native = NativeBackend::new(cfg, params);
+    let out_n = Executor::new(&mut native, ScheduleMode::Diagonal).run(&toks).unwrap();
+
+    assert_eq!(out_h.segments(), out_n.segments());
+    let sh = out_h.stacked().unwrap();
+    let sn = out_n.stacked().unwrap();
+    let rel = sh.rel_error(&sn);
+    assert!(rel < 5e-3, "end-to-end rel {rel}");
+    // greedy decodes agree almost everywhere
+    let (ah, an) = (sh.argmax_rows(), sn.argmax_rows());
+    let agree = ah.iter().zip(&an).filter(|(x, y)| x == y).count() as f64 / ah.len() as f64;
+    assert!(agree > 0.99, "argmax agreement {agree}");
+}
+
+#[test]
+fn table2_error_accumulation_under_2_percent() {
+    // The paper's Table 2: relative Frobenius drift between the diagonal
+    // and sequential executions stays < 2% as segments accumulate.
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    for n_segments in [1usize, 2, 4, 8] {
+        let toks = tokens(cfg.seg * n_segments, cfg.vocab, 7 + n_segments as u64);
+        let d = Executor::new(&mut hlo, ScheduleMode::Diagonal).run(&toks).unwrap();
+        let s = Executor::new(&mut hlo, ScheduleMode::Sequential).run(&toks).unwrap();
+        let rel = d.stacked().unwrap().rel_error(&s.stacked().unwrap());
+        assert!(rel < 0.02, "S={n_segments}: rel {rel}");
+    }
+}
+
+#[test]
+fn full_attention_bucket_execution() {
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "tiny").unwrap();
+    let cfg = hlo.config().clone();
+    let toks = tokens(100, cfg.vocab, 8); // pads into the 128 bucket
+    let out = hlo.full_attn(&toks).unwrap();
+    assert_eq!(out.shape(), &[100, cfg.vocab]);
+
+    // against the native oracle
+    let params = Params::load(&m, "tiny").unwrap();
+    let native = NativeBackend::new(cfg, params);
+    let want = native.full_attn_forward(&toks).unwrap();
+    let rel = out.rel_error(&want);
+    assert!(rel < 2e-3, "full-attn rel {rel}");
+}
+
+#[test]
+fn grouped_step_bwd_runs_and_matches_shapes() {
+    // Training support (paper Appendix A): the backward executable
+    // produces gradients with the primal shapes.
+    let Some(m) = manifest() else { return };
+    let mut hlo = HloBackend::load(&m, "toy").unwrap();
+    let cfg = hlo.config().clone();
+    let mut rng = Rng::new(9);
+    let l = cfg.n_layers;
+    let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+    let a = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
+    let z = Tensor::zeros(&[l, cfg.phi_dim]);
+    let mask = vec![1.0; l];
+    let dy = Tensor::full(&[l, cfg.seg_total, cfg.d_model], 1.0);
+    let da = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
+    let dz = Tensor::zeros(&[l, cfg.phi_dim]);
+
+    let grads = hlo.grouped_step_bwd(&x, &a, &z, &mask, &dy, &da, &dz).unwrap();
+    assert_eq!(grads.len(), 3 + 13, "dx, dA, dz + 13 param grads");
+    assert_eq!(grads[0].shape(), x.shape());
+    assert_eq!(grads[1].shape(), a.shape());
+    assert_eq!(grads[2].shape(), z.shape());
+    // gradient w.r.t. x is nonzero
+    assert!(grads[0].norm() > 0.0);
+}
+
+#[test]
+fn engine_auto_mode_on_hlo_backend() {
+    let Some(m) = manifest() else { return };
+    let backend = HloBackend::load(&m, "micro").unwrap();
+    let mut engine = InferenceEngine::new(backend, ExecMode::Auto);
+    let cal = engine.calibrate(3).unwrap();
+    assert!(cal.grouped_step_s > 0.0 && cal.single_step_s > 0.0);
+    let vocab = engine.config().vocab;
+    let seg = engine.config().seg;
+    // well past the measured micro crossover (~50-70 segments on this
+    // testbed): the calibrated policy must pick diagonal
+    let long = tokens(seg * 160, vocab, 10);
+    let resp = engine.process(&Request::new(1, long)).unwrap();
+    assert_eq!(resp.mode_used, ExecMode::Diagonal);
+    // and far below it: sequential
+    let short = tokens(seg, vocab, 11);
+    let resp = engine.process(&Request::new(2, short)).unwrap();
+    assert_eq!(resp.mode_used, ExecMode::Sequential);
+}

@@ -1,0 +1,168 @@
+//! Property-based tests of the scheduler (hand-rolled generation — the
+//! offline toolchain has no proptest; cases are driven by the crate's
+//! deterministic PRNG, so failures reproduce exactly).
+//!
+//! Properties:
+//!  * P1 (Lemma 3.1): for all grids, the diagonal schedule is valid,
+//!    uses exactly S+L-1 groups, and places every cell at its earliest
+//!    feasible group.
+//!  * P2: the sequential schedule is always valid; its group count is
+//!    S*L.
+//!  * P3: corrupting any single cell's group assignment downward breaks
+//!    validity (the earliest-placement bound is tight).
+//!  * P4: for random model shapes, seeds and lengths, the diagonal
+//!    executor's logits are BIT-IDENTICAL to the sequential executor's
+//!    on the native backend.
+//!  * P5: run stats match the Fig. 3 launch arithmetic.
+
+use diagonal_batching::config::ModelConfig;
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::scheduler::dag::{
+    check_earliest_placement, check_minimality, min_groups, validate_schedule,
+};
+use diagonal_batching::scheduler::{Executor, Schedule, ScheduleMode};
+use diagonal_batching::tensor::Rng;
+
+#[test]
+fn p1_diagonal_is_optimal_everywhere() {
+    let mut rng = Rng::new(0xD1A6);
+    for _ in 0..200 {
+        let s = 1 + rng.below(40);
+        let l = 1 + rng.below(24);
+        let d = Schedule::diagonal(s, l);
+        validate_schedule(&d.groups, s, l).unwrap();
+        check_minimality(&d.groups, s, l).unwrap();
+        check_earliest_placement(&d.groups).unwrap();
+        assert_eq!(d.group_count(), min_groups(s, l), "S={s} L={l}");
+        assert_eq!(d.cell_count(), s * l);
+        assert!(d.max_group() <= l.min(s).max(1));
+    }
+}
+
+#[test]
+fn p2_sequential_always_valid() {
+    let mut rng = Rng::new(0x5E9);
+    for _ in 0..100 {
+        let s = 1 + rng.below(30);
+        let l = 1 + rng.below(16);
+        let sched = Schedule::sequential(s, l);
+        sched.validate().unwrap();
+        assert_eq!(sched.group_count(), s * l);
+    }
+}
+
+#[test]
+fn p3_earliest_placement_is_tight() {
+    // Moving any non-origin cell one group earlier must break validity.
+    let mut rng = Rng::new(0x71F);
+    for _ in 0..50 {
+        let s = 2 + rng.below(10);
+        let l = 2 + rng.below(6);
+        let d = Schedule::diagonal(s, l);
+        // pick a random cell not in group 0
+        let gi = 1 + rng.below(d.groups.len() - 1);
+        let ci = rng.below(d.groups[gi].len());
+        let mut groups = d.groups.clone();
+        let cell = groups[gi].remove(ci);
+        groups[gi - 1].push(cell);
+        assert!(
+            validate_schedule(&groups, s, l).is_err(),
+            "moving {cell:?} from group {gi} to {} should violate a dependency",
+            gi - 1
+        );
+    }
+}
+
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(3); // 1..=3
+    let head_dim = [4usize, 8][rng.below(2)];
+    let d_model = n_heads * head_dim;
+    let k_assoc = [4usize, 8][rng.below(2)];
+    let nu = 1 + rng.below(3);
+    let seg = 4 + rng.below(8);
+    let mem = 1 + rng.below(4);
+    let n_layers = 1 + rng.below(4);
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 32 + rng.below(64),
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff: d_model * 2,
+        seg,
+        mem,
+        k_assoc,
+        dpfp_nu: nu,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim,
+        phi_dim: 2 * nu * k_assoc,
+        seg_total: seg + mem,
+    }
+}
+
+#[test]
+fn p4_diagonal_bitexact_vs_sequential_over_random_models() {
+    let mut rng = Rng::new(0xB17);
+    for case in 0..25 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let n_segments = 1 + rng.below(7);
+        let n_tokens = n_segments * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+        let tokens: Vec<u32> =
+            (0..n_tokens).map(|_| rng.below(cfg.vocab) as u32).collect();
+
+        let mut b1 = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let seq = Executor::new(&mut b1, ScheduleMode::Sequential).run(&tokens).unwrap();
+        let mut b2 = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let diag = Executor::new(&mut b2, ScheduleMode::Diagonal).run(&tokens).unwrap();
+
+        assert_eq!(seq.segments(), diag.segments(), "case {case}");
+        for (s_i, (a, b)) in seq.logits.iter().zip(&diag.logits).enumerate() {
+            assert_eq!(a, b, "case {case} segment {s_i} cfg {cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn p5_launch_counts_follow_fig3() {
+    let mut rng = Rng::new(0xF16);
+    for _ in 0..20 {
+        let cfg = random_config(&mut rng);
+        let seed = rng.next_u64();
+        let s = 1 + rng.below(9);
+        let tokens: Vec<u32> = (0..s * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let l = cfg.n_layers;
+
+        let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let seq = Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap();
+        // sequential: S*L cell-step launches (embed/head are not steps)
+        assert_eq!(seq.stats.launches, (s * l) as u64);
+
+        let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let diag = Executor::new(&mut b, ScheduleMode::Diagonal).run(&tokens).unwrap();
+        assert_eq!(diag.stats.launches, (s + l - 1) as u64);
+        assert_eq!(diag.stats.cells, (s * l) as u64);
+        // padded cells = L*(S+L-1) - S*L = L(L-1) (both ramps) when S >= L
+        if s >= l {
+            assert_eq!(diag.stats.padded_cells, (l * (l - 1)) as u64);
+        }
+    }
+}
+
+#[test]
+fn p6_minibatch_and_ideal_cover_all_cells() {
+    let mut rng = Rng::new(0x3AD);
+    for _ in 0..50 {
+        let s = 1 + rng.below(20);
+        let l = 1 + rng.below(8);
+        let b = 1 + rng.below(8);
+        let m = Schedule::minibatch(s, l, b);
+        assert_eq!(m.cell_count(), s * l * b);
+        let i = Schedule::ideal_even_load(s, l);
+        assert_eq!(i.cell_count(), s * l);
+        assert!(i.max_group() <= l);
+    }
+}
