@@ -90,6 +90,13 @@ pub struct RuntimeConfig {
     pub max_request_tokens: usize,
     /// Bounded request queue depth (backpressure beyond this).
     pub queue_depth: usize,
+    /// Wavefront slot lanes in the serving engine's packed session.
+    /// 1 = cross-request stream packing only (always beneficial). >1
+    /// additionally batches lanes into one grouped launch on backends
+    /// that support it (native); the current AOT HLO artifacts are
+    /// single-lane and execute extra lanes serially, so keep this at 1
+    /// on the HLO backend until the artifacts grow a lane dimension.
+    pub lanes: usize,
     /// Auto mode: minimum segments before diagonal pays off (calibrated
     /// at startup or cost-model driven; see coordinator::fallback).
     pub fallback_min_segments: usize,
@@ -105,6 +112,7 @@ impl Default for RuntimeConfig {
             addr: "127.0.0.1:7433".to_string(),
             max_request_tokens: 1 << 20,
             queue_depth: 64,
+            lanes: 1,
             fallback_min_segments: 4,
         }
     }
@@ -135,6 +143,9 @@ impl RuntimeConfig {
         if let Some(x) = v.get("queue_depth") {
             c.queue_depth = x.as_usize()?;
         }
+        if let Some(x) = v.get("lanes") {
+            c.lanes = x.as_usize()?.max(1);
+        }
         if let Some(x) = v.get("fallback_min_segments") {
             c.fallback_min_segments = x.as_usize()?;
         }
@@ -157,6 +168,7 @@ impl RuntimeConfig {
             ("addr", Value::Str(self.addr.clone())),
             ("max_request_tokens", Value::Num(self.max_request_tokens as f64)),
             ("queue_depth", Value::Num(self.queue_depth as f64)),
+            ("lanes", Value::Num(self.lanes as f64)),
             ("fallback_min_segments", Value::Num(self.fallback_min_segments as f64)),
         ])
     }
@@ -200,6 +212,7 @@ mod tests {
         assert_eq!(c.model, "toy");
         assert_eq!(c.mode, ExecMode::Sequential);
         assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.lanes, 1);
     }
 
     #[test]

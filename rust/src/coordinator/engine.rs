@@ -1,12 +1,27 @@
 //! The inference engine: request in, logits/decode out.
+//!
+//! Two execution paths share one backend:
+//!
+//! * [`InferenceEngine::process`] — the single-shot path: one request,
+//!   one executor run (any [`ExecMode`]);
+//! * [`InferenceEngine::serve_queue`] — the serving path: a continuous
+//!   drain loop that packs every diagonal-mode request into one
+//!   persistent [`WavefrontSession`], admitting new requests from the
+//!   [`RequestQueue`] *between wavefront iterations* and completing them
+//!   out of submission order. Sequential / full-attention requests (rare
+//!   overrides) still run single-shot between iterations.
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{ExecMode, ModelConfig};
 use crate::coordinator::fallback::{Calibration, FallbackPolicy};
+use crate::coordinator::queue::RequestQueue;
 use crate::error::{Error, Result};
-use crate::metrics::{Counter, Histogram};
-use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend};
+use crate::json::Value;
+use crate::metrics::{Counter, Histogram, Ratio};
+use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession};
 use crate::tensor::Tensor;
 
 /// One inference request.
@@ -39,7 +54,8 @@ pub struct Response {
     pub latency: Duration,
 }
 
-/// Aggregate serving counters.
+/// Aggregate serving counters (shared: the engine thread writes, any
+/// connection thread may snapshot via [`InferenceEngine::stats_handle`]).
 #[derive(Default)]
 pub struct EngineStats {
     pub requests: Counter,
@@ -47,8 +63,75 @@ pub struct EngineStats {
     pub diagonal_runs: Counter,
     pub sequential_runs: Counter,
     pub full_attn_runs: Counter,
+    /// Requests served inside a packed wavefront session (subset of
+    /// `diagonal_runs`).
+    pub packed_requests: Counter,
     pub tokens: Counter,
     pub latency: Histogram,
+    /// Grouped/step launches across all runs and sessions.
+    pub launches: Counter,
+    /// Wavefront occupancy: active cells / slot-steps, across all runs
+    /// and sessions. The denominator-minus-numerator is the padded-cell
+    /// count the ISSUE's utilization work drives down.
+    pub occupancy: Ratio,
+}
+
+impl EngineStats {
+    /// Mean active cells per launch (the paper's utilization proxy,
+    /// aggregated over everything this engine executed).
+    pub fn mean_group(&self) -> f64 {
+        let launches = self.launches.get();
+        if launches == 0 {
+            0.0
+        } else {
+            self.occupancy.parts().0 as f64 / launches as f64
+        }
+    }
+
+    /// Padded slot-steps accumulated so far. (`Ratio` snapshots are
+    /// ordered so active <= slots; saturate anyway — a stats read must
+    /// never panic the serving path.)
+    pub fn padded_cells(&self) -> u64 {
+        let (active, slots) = self.occupancy.parts();
+        slots.saturating_sub(active)
+    }
+
+    /// Snapshot as a JSON object (the server's `{"cmd": "stats"}` body).
+    /// Derived fields are computed from ONE occupancy snapshot so they
+    /// stay mutually consistent under concurrent engine writes.
+    pub fn to_json(&self) -> Value {
+        let (active, slots) = self.occupancy.parts();
+        let launches = self.launches.get();
+        let mean_group =
+            if launches == 0 { 0.0 } else { active as f64 / launches as f64 };
+        let occupancy = if slots == 0 { 0.0 } else { active as f64 / slots as f64 };
+        Value::obj(vec![
+            ("requests", Value::Num(self.requests.get() as f64)),
+            ("rejected", Value::Num(self.rejected.get() as f64)),
+            ("diagonal_runs", Value::Num(self.diagonal_runs.get() as f64)),
+            ("sequential_runs", Value::Num(self.sequential_runs.get() as f64)),
+            ("full_attn_runs", Value::Num(self.full_attn_runs.get() as f64)),
+            ("packed_requests", Value::Num(self.packed_requests.get() as f64)),
+            ("tokens", Value::Num(self.tokens.get() as f64)),
+            ("launches", Value::Num(launches as f64)),
+            ("active_cells", Value::Num(active as f64)),
+            ("slot_steps", Value::Num(slots as f64)),
+            ("padded_cells", Value::Num(slots.saturating_sub(active) as f64)),
+            ("mean_group", Value::Num(mean_group)),
+            ("occupancy", Value::Num(occupancy)),
+            ("latency_ms_mean", Value::Num(self.latency.mean().as_secs_f64() * 1e3)),
+            ("latency_ms_p50", Value::Num(self.latency.quantile(0.5).as_secs_f64() * 1e3)),
+            ("latency_ms_p99", Value::Num(self.latency.quantile(0.99).as_secs_f64() * 1e3)),
+        ])
+    }
+}
+
+/// Ticket held for a request in the packed wavefront.
+struct PackedTicket<T> {
+    ticket: T,
+    wire_id: u64,
+    want_logits: bool,
+    pulled: Instant,
 }
 
 /// Engine over any [`StepBackend`].
@@ -57,7 +140,13 @@ pub struct InferenceEngine<B: StepBackend> {
     mode: ExecMode,
     policy: FallbackPolicy,
     max_request_tokens: usize,
-    pub stats: EngineStats,
+    /// Slot lanes per wavefront session (`serve_queue`); 1 = pure
+    /// stream packing, >1 additionally batches lanes per launch on
+    /// backends whose grouped program is lane-batched (native). The
+    /// current single-lane HLO artifacts execute extra lanes serially —
+    /// correct but not faster — so leave this at 1 there.
+    lanes: usize,
+    pub stats: Arc<EngineStats>,
 }
 
 impl<B: StepBackend> InferenceEngine<B> {
@@ -67,7 +156,8 @@ impl<B: StepBackend> InferenceEngine<B> {
             mode,
             policy: FallbackPolicy::AlwaysDiagonal,
             max_request_tokens: 1 << 20,
-            stats: EngineStats::default(),
+            lanes: 1,
+            stats: Arc::new(EngineStats::default()),
         }
     }
 
@@ -81,6 +171,11 @@ impl<B: StepBackend> InferenceEngine<B> {
         self
     }
 
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.max(1);
+        self
+    }
+
     pub fn config(&self) -> &ModelConfig {
         self.backend.config()
     }
@@ -91,6 +186,12 @@ impl<B: StepBackend> InferenceEngine<B> {
 
     pub fn backend_mut(&mut self) -> &mut B {
         &mut self.backend
+    }
+
+    /// Shared handle to the live counters (snapshot-safe from other
+    /// threads while the engine runs).
+    pub fn stats_handle(&self) -> Arc<EngineStats> {
+        self.stats.clone()
     }
 
     /// Measure per-step costs and install a calibrated fallback policy
@@ -139,8 +240,8 @@ impl<B: StepBackend> InferenceEngine<B> {
         }
     }
 
-    /// Execute one request synchronously.
-    pub fn process(&mut self, req: &Request) -> Result<Response> {
+    /// Reject obviously bad requests before they reach a scheduler.
+    fn validate(&self, req: &Request) -> Result<()> {
         if req.tokens.is_empty() {
             self.stats.rejected.inc();
             return Err(Error::Request("empty token sequence".into()));
@@ -153,6 +254,20 @@ impl<B: StepBackend> InferenceEngine<B> {
                 self.max_request_tokens
             )));
         }
+        Ok(())
+    }
+
+    /// Fold one finished run into the aggregate utilization counters.
+    fn record_run(&self, stats: &RunStats) {
+        self.stats.launches.add(stats.launches);
+        self.stats
+            .occupancy
+            .add(stats.slot_steps - stats.padded_cells, stats.slot_steps);
+    }
+
+    /// Execute one request synchronously (single-shot path).
+    pub fn process(&mut self, req: &Request) -> Result<Response> {
+        self.validate(req)?;
         let cfg = self.backend.config();
         let n_segments = req.tokens.len().div_ceil(cfg.seg);
         let mode = self.resolve_mode(req, n_segments);
@@ -168,6 +283,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                     segments: 1,
                     launches: 1,
                     cells: 0,
+                    slot_steps: 0,
                     padded_cells: 0,
                     wall: t0.elapsed(),
                     tokens: req.tokens.len(),
@@ -194,6 +310,7 @@ impl<B: StepBackend> InferenceEngine<B> {
         self.stats.requests.inc();
         self.stats.tokens.add(req.tokens.len() as u64);
         self.stats.latency.observe(latency);
+        self.record_run(&stats);
         Ok(Response {
             id: req.id,
             greedy_tail,
@@ -202,6 +319,168 @@ impl<B: StepBackend> InferenceEngine<B> {
             stats,
             latency,
         })
+    }
+
+    /// Continuous-batching drain loop (the serving path).
+    ///
+    /// Pulls `(Request, ticket)` jobs from `queue`, packs every
+    /// diagonal-mode request into one persistent [`WavefrontSession`]
+    /// (lanes from [`with_lanes`](Self::with_lanes)), and invokes
+    /// `complete` with each ticket as its response is ready — generally
+    /// OUT of submission order, since short requests overtake long ones.
+    /// Admission happens between wavefront iterations: the queue is
+    /// polled non-blockingly while requests are in flight and blockingly
+    /// when the wavefront is empty. Returns when the queue is closed and
+    /// everything in flight has completed.
+    pub fn serve_queue<T, F>(
+        &mut self,
+        queue: &RequestQueue<(Request, T)>,
+        mut complete: F,
+    ) -> Result<()>
+    where
+        F: FnMut(T, Result<Response>),
+    {
+        let mut session = WavefrontSession::new(self.backend.config().clone(), self.lanes);
+        let mut tickets: HashMap<u64, PackedTicket<T>> = HashMap::new();
+        // Session keys are engine-local: wire ids may collide across
+        // connections, in-flight keys must not.
+        let mut next_key: u64 = 0;
+        let mut last = session.stats();
+        loop {
+            // Admission. Block only when the wavefront is empty; keep
+            // the backlog shallow so queue backpressure stays honest.
+            if session.is_idle() {
+                match queue.pop() {
+                    None => break, // closed and drained
+                    Some(job) => {
+                        self.admit(job, &mut session, &mut tickets, &mut next_key, &mut complete);
+                    }
+                }
+            }
+            while session.backlog() < session.lanes() {
+                match queue.try_pop() {
+                    Some(job) => {
+                        let packed = self.admit(
+                            job,
+                            &mut session,
+                            &mut tickets,
+                            &mut next_key,
+                            &mut complete,
+                        );
+                        // A non-diagonal job was executed single-shot
+                        // inline; bound that to one per wavefront
+                        // iteration so in-flight packed requests are
+                        // never stalled behind an unbounded run of
+                        // sequential overrides.
+                        if !packed {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            }
+
+            // One wavefront iteration.
+            if let Err(e) = session.step(&mut self.backend) {
+                let msg = e.to_string();
+                for (_, t) in tickets.drain() {
+                    complete(
+                        t.ticket,
+                        Err(Error::Schedule(format!("wavefront aborted: {msg}"))),
+                    );
+                }
+                return Err(e);
+            }
+
+            // Aggregate utilization: session-level deltas (per-request
+            // windows overlap, so they cannot be summed). Recorded
+            // BEFORE the completion callbacks fire, so a client that
+            // queries stats right after its reply sees its own
+            // launches/occupancy included.
+            let now = session.stats();
+            self.stats.launches.add(now.launches - last.launches);
+            self.stats.occupancy.add(
+                now.cells - last.cells,
+                now.slot_steps - last.slot_steps,
+            );
+            last = now;
+
+            // Completions.
+            while let Some(out) = session.pop_completed() {
+                let t = tickets.remove(&out.id).expect("completed request has a ticket");
+                let greedy_tail = out.logits.last().map(|l| l.argmax_rows()).unwrap_or_default();
+                let latency = t.pulled.elapsed();
+                self.stats.requests.inc();
+                self.stats.diagonal_runs.inc();
+                self.stats.packed_requests.inc();
+                self.stats.tokens.add(out.stats.tokens as u64);
+                self.stats.latency.observe(latency);
+                complete(
+                    t.ticket,
+                    Ok(Response {
+                        id: t.wire_id,
+                        greedy_tail,
+                        logits: t.want_logits.then_some(out.logits),
+                        mode_used: ExecMode::Diagonal,
+                        stats: out.stats,
+                        latency,
+                    }),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Route one pulled job: pack it, run it single-shot, or reject it.
+    /// Returns true iff the job was packed into the wavefront (false =
+    /// completed inline: rejected, or executed single-shot).
+    fn admit<T, F>(
+        &mut self,
+        (req, ticket): (Request, T),
+        session: &mut WavefrontSession,
+        tickets: &mut HashMap<u64, PackedTicket<T>>,
+        next_key: &mut u64,
+        complete: &mut F,
+    ) -> bool
+    where
+        F: FnMut(T, Result<Response>),
+    {
+        if let Err(e) = self.validate(&req) {
+            complete(ticket, Err(e));
+            return false;
+        }
+        let n_segments = req.tokens.len().div_ceil(self.backend.config().seg);
+        match self.resolve_mode(&req, n_segments) {
+            ExecMode::Diagonal => {
+                let key = *next_key;
+                *next_key += 1;
+                match session.submit(key, &req.tokens) {
+                    Ok(()) => {
+                        tickets.insert(
+                            key,
+                            PackedTicket {
+                                ticket,
+                                wire_id: req.id,
+                                want_logits: req.want_logits,
+                                pulled: Instant::now(),
+                            },
+                        );
+                        true
+                    }
+                    Err(e) => {
+                        complete(ticket, Err(e));
+                        false
+                    }
+                }
+            }
+            // Sequential / full-attention overrides run single-shot
+            // between wavefront iterations (at most one per iteration —
+            // see the admission loop).
+            _ => {
+                complete(ticket, self.process(&req));
+                false
+            }
+        }
     }
 }
 
@@ -229,6 +508,8 @@ mod tests {
         assert_eq!(e.stats.requests.get(), 1);
         assert_eq!(e.stats.diagonal_runs.get(), 1);
         assert!(resp.latency > Duration::ZERO);
+        assert!(e.stats.mean_group() > 0.0);
+        assert!(e.stats.occupancy.value() > 0.0);
     }
 
     #[test]
@@ -289,5 +570,64 @@ mod tests {
         r.mode = Some(ExecMode::Sequential);
         let resp = e.process(&r).unwrap();
         assert_eq!(resp.mode_used, ExecMode::Sequential);
+    }
+
+    #[test]
+    fn serve_queue_packs_and_is_bitexact() {
+        // Push a burst of diagonal requests plus one sequential
+        // override, close the queue, drain: every response must
+        // bit-match the single-shot path, and the packed aggregate must
+        // beat the solo mean_group.
+        let queue: RequestQueue<(Request, u64)> = RequestQueue::new(16);
+        for i in 0..4u64 {
+            let mut r = Request::new(i, toks(8 * (2 + i as usize)));
+            r.want_logits = true;
+            queue.push((r, i)).unwrap();
+        }
+        let mut seq_override = Request::new(9, toks(16));
+        seq_override.mode = Some(ExecMode::Sequential);
+        seq_override.want_logits = true;
+        queue.push((seq_override, 9)).unwrap();
+        queue.push((Request::new(10, vec![]), 10)).unwrap(); // rejected
+        queue.close();
+
+        let mut e = engine(ExecMode::Diagonal).with_lanes(2);
+        let mut got: Vec<(u64, Result<Response>)> = Vec::new();
+        e.serve_queue(&queue, |ticket, resp| got.push((ticket, resp))).unwrap();
+        assert_eq!(got.len(), 6);
+
+        let mut reference = engine(ExecMode::Sequential);
+        for (ticket, resp) in got {
+            if ticket == 10 {
+                assert!(resp.is_err());
+                continue;
+            }
+            let resp = resp.unwrap();
+            assert_eq!(resp.id, ticket);
+            let mut r = Request::new(ticket, toks(if ticket == 9 { 16 } else { 8 * (2 + ticket as usize) }));
+            r.want_logits = true;
+            let want = reference.process(&r).unwrap();
+            assert_eq!(resp.logits.unwrap(), want.logits.unwrap(), "request {ticket}");
+        }
+        assert_eq!(e.stats.packed_requests.get(), 4);
+        assert_eq!(e.stats.sequential_runs.get(), 1);
+        assert_eq!(e.stats.rejected.get(), 1);
+        assert_eq!(e.stats.requests.get(), 5);
+        // Packing must beat the best solo diagonal mean_group of these
+        // requests (largest S here is 5 segments, L = 3).
+        let solo_best = (5.0 * 3.0) / (5.0 + 3.0 - 1.0);
+        assert!(
+            e.stats.mean_group() > solo_best,
+            "packed mean_group {} vs solo best {solo_best}",
+            e.stats.mean_group()
+        );
+    }
+
+    #[test]
+    fn serve_queue_exits_on_close_when_empty() {
+        let queue: RequestQueue<(Request, ())> = RequestQueue::new(4);
+        queue.close();
+        let mut e = engine(ExecMode::Diagonal);
+        e.serve_queue(&queue, |_, _| panic!("no jobs were queued")).unwrap();
     }
 }

@@ -1,13 +1,18 @@
-//! Serving coordinator: the production wrapper around the executors.
+//! Serving coordinator: the production wrapper around the schedulers.
 //!
-//! * [`engine`] — `InferenceEngine`: owns a backend, executes requests in
-//!   any [`crate::config::ExecMode`], produces responses with stats;
+//! * [`engine`] — `InferenceEngine`: owns a backend; `process` executes
+//!   one request in any [`crate::config::ExecMode`], `serve_queue` is
+//!   the continuous-batching drain loop that packs concurrent
+//!   diagonal-mode requests into one persistent
+//!   [`crate::scheduler::WavefrontSession`] and completes them out of
+//!   submission order;
 //! * [`fallback`] — the Table 9 runtime policy ("in cases when diagonal
 //!   batching is slower, we can fall back to the original inference
 //!   algorithm at runtime"): calibration + per-request mode choice;
-//! * [`queue`] — bounded FIFO request queue with backpressure (the
-//!   paper's deployment point: one long-context request at a time
-//!   saturates the device, so the queue is depth-limited and fair).
+//! * [`queue`] — bounded FIFO request queue with backpressure. Admission
+//!   into the wavefront happens between iterations (`try_pop`), so a
+//!   deep backlog applies queue-full backpressure instead of unbounded
+//!   latency.
 
 pub mod engine;
 pub mod fallback;

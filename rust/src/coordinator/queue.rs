@@ -47,6 +47,14 @@ impl<T> RequestQueue<T> {
         Ok(())
     }
 
+    /// Non-blocking pop; `None` when the queue is currently empty. Used
+    /// by the continuous-batching drain loop to admit work *between*
+    /// wavefront iterations without ever stalling the in-flight
+    /// requests.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
     /// Blocking pop; `None` once the queue is closed AND drained.
     pub fn pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -98,6 +106,17 @@ mod tests {
         assert!(q.push(3).is_err());
         q.pop();
         assert!(q.push(3).is_ok());
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = RequestQueue::new(4);
+        assert_eq!(q.try_pop(), None);
+        q.push(7).unwrap();
+        assert_eq!(q.try_pop(), Some(7));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert_eq!(q.try_pop(), None);
     }
 
     #[test]

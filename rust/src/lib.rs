@@ -18,20 +18,44 @@
 //!
 //! ## Quick start
 //!
+//! The serving primitive is the [`scheduler::WavefrontSession`]: a
+//! persistent diagonal wavefront whose `L x B` slot lanes carry
+//! `(request, segment)` cells from *multiple concurrent requests*, so
+//! one request's ramp-down overlaps the next one's ramp-up and the
+//! grouped launches stay full. Submit any number of requests (including
+//! mid-flight), step until idle, and collect completions — each
+//! request's logits are bit-identical to running it alone:
+//!
 //! ```no_run
 //! use diagonal_batching::config::Manifest;
 //! use diagonal_batching::model::{NativeBackend, Params};
-//! use diagonal_batching::scheduler::{Executor, ScheduleMode};
+//! use diagonal_batching::scheduler::WavefrontSession;
 //!
 //! let manifest = Manifest::load("artifacts/manifest.json").unwrap();
 //! let entry = manifest.model("tiny").unwrap();
 //! let params = Params::load(&manifest, "tiny").unwrap();
 //! let mut backend = NativeBackend::new(entry.config.clone(), params);
-//! let mut exec = Executor::new(&mut backend, ScheduleMode::Diagonal);
-//! let tokens: Vec<u32> = (0..256).map(|i| i % 100).collect();
-//! let out = exec.run(&tokens).unwrap();
-//! println!("{} segments, {} logits/segment", out.segments(), out.vocab());
+//!
+//! // Two concurrent requests packed into one single-lane wavefront.
+//! let mut session = WavefrontSession::new(entry.config.clone(), 1);
+//! let short: Vec<u32> = (0..256).map(|i| i % 100).collect();
+//! let long: Vec<u32> = (0..1024).map(|i| i % 100).collect();
+//! session.submit(1, &short).unwrap();
+//! session.submit(2, &long).unwrap();
+//! session.run_to_completion(&mut backend).unwrap();
+//! while let Some(done) = session.pop_completed() {
+//!     println!("request {}: {} segments", done.id, done.logits.len());
+//! }
+//! let stats = session.stats();
+//! println!("mean group {:.2}, occupancy {:.2}", stats.mean_group(), stats.occupancy());
 //! ```
+//!
+//! For a single request, [`scheduler::Executor`] with
+//! [`scheduler::ScheduleMode::Diagonal`] is the one-request special case
+//! of the same machinery (and `ScheduleMode::Sequential` is the
+//! baseline ARMT loop). For serving, `coordinator::InferenceEngine::serve_queue`
+//! drains a bounded request queue into one long-lived session
+//! continuously — that is what [`server`] runs.
 
 pub mod babilong;
 pub mod config;

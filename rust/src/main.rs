@@ -78,6 +78,9 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(a) = flags.get("addr") {
         cfg.addr = a.clone();
     }
+    if let Some(l) = flags.get("lanes") {
+        cfg.lanes = l.parse::<usize>()?.max(1);
+    }
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg),
@@ -108,7 +111,13 @@ COMMON FLAGS:
   --config PATH     RuntimeConfig JSON
 
 SUBCOMMANDS:
-  serve     --addr HOST:PORT                 start the TCP JSON-lines server
+  serve     --addr HOST:PORT --lanes N       start the TCP JSON-lines server.
+                                             N wavefront lanes batch N concurrent
+                                             requests per launch on the native
+                                             backend; the current single-lane HLO
+                                             artifacts execute lanes serially, so
+                                             keep N=1 there (stream packing still
+                                             fills ramp bubbles at N=1)
   run       --tokens N --compare true        one forward pass (+drift check)
   tables    --device a100|h100               regenerate the paper tables
   babilong  --task qa1|qa2 --len N --episodes N
@@ -136,8 +145,9 @@ fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
     let manifest = Manifest::load(&cfg.manifest)?;
     println!("loading model '{}' (backend {})...", cfg.model, cfg.backend);
     let backend = boxed_backend(cfg, &manifest)?;
-    let mut engine =
-        InferenceEngine::new(backend, cfg.mode).with_max_tokens(cfg.max_request_tokens);
+    let mut engine = InferenceEngine::new(backend, cfg.mode)
+        .with_max_tokens(cfg.max_request_tokens)
+        .with_lanes(cfg.lanes);
     if cfg.mode == ExecMode::Auto {
         let cal = engine.calibrate(3)?;
         println!(
@@ -148,7 +158,13 @@ fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
         );
     }
     let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
-    println!("serving on {} (mode {}) — Ctrl-C to stop", server.addr, cfg.mode);
+    println!(
+        "serving on {} (mode {}, {} wavefront lane{}) — Ctrl-C to stop",
+        server.addr,
+        cfg.mode,
+        cfg.lanes,
+        if cfg.lanes == 1 { "" } else { "s" }
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -39,6 +39,43 @@ impl Gauge {
     }
 }
 
+/// Two-counter ratio (numerator / denominator) for utilization-style
+/// metrics — e.g. wavefront occupancy = active cells / slot-steps. Both
+/// sides are relaxed atomics; the hot path only adds.
+#[derive(Default, Debug)]
+pub struct Ratio {
+    num: AtomicU64,
+    den: AtomicU64,
+}
+
+impl Ratio {
+    /// Requires `num <= den` per observation (an occupancy can't exceed
+    /// its slot count). Writes den before num (Release) while readers
+    /// load num before den (Acquire), so a concurrent snapshot can
+    /// never observe `num > den` — `den - num` stays subtraction-safe.
+    pub fn add(&self, num: u64, den: u64) {
+        debug_assert!(num <= den, "Ratio::add: {num} > {den}");
+        self.den.fetch_add(den, Ordering::Release);
+        self.num.fetch_add(num, Ordering::Release);
+    }
+
+    pub fn parts(&self) -> (u64, u64) {
+        let num = self.num.load(Ordering::Acquire);
+        let den = self.den.load(Ordering::Acquire);
+        (num, den)
+    }
+
+    /// num / den, or 0.0 before any observation.
+    pub fn value(&self) -> f64 {
+        let (n, d) = self.parts();
+        if d == 0 {
+            0.0
+        } else {
+            n as f64 / d as f64
+        }
+    }
+}
+
 /// Log-scaled latency histogram: buckets at 1us * 2^i, i in 0..32.
 #[derive(Debug)]
 pub struct Histogram {
@@ -159,6 +196,16 @@ mod tests {
         let g = Gauge::default();
         g.set(7);
         assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn ratio_accumulates() {
+        let r = Ratio::default();
+        assert_eq!(r.value(), 0.0);
+        r.add(3, 4);
+        r.add(1, 4);
+        assert_eq!(r.parts(), (4, 8));
+        assert!((r.value() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -65,31 +65,39 @@ impl StepBackend for NativeBackend {
         z: &Tensor,
         mask: &[f32],
     ) -> Result<(Tensor, Tensor, Tensor)> {
-        let l_total = self.cfg.n_layers;
-        if x.shape()[0] != l_total || mask.len() != l_total {
-            return Err(Error::Shape {
-                what: "grouped_step group dim",
-                expected: vec![l_total],
-                got: vec![x.shape()[0], mask.len()],
-            });
-        }
+        let (l_total, b_total) = crate::scheduler::grouped_dims(&self.cfg, x, a, z, mask)?;
+        let lanes = x.rank() == 4;
         self.step_calls += 1;
         let mut y = x.clone();
         let mut a2 = a.clone();
         let mut z2 = z.clone();
-        // Ordered loop over slots == the grouped kernel's per-group
-        // independence, with masked slots skipped entirely (bit-freeze).
+        // Ordered loop over (layer, lane) slots == the grouped kernel's
+        // per-cell independence, with masked slots skipped entirely
+        // (bit-freeze). Lane order never affects a cell's math, which is
+        // what makes packed == per-request execution bit-exact.
         for l in 0..l_total {
-            if mask[l] == 0.0 {
-                continue;
+            for lane in 0..b_total {
+                if mask[l * b_total + lane] == 0.0 {
+                    continue;
+                }
+                self.cells_computed += 1;
+                let view = self.params.layer(l);
+                let (xc, ac, zc) = if lanes {
+                    (x.index01(l, lane), a.index01(l, lane), z.index01(l, lane))
+                } else {
+                    (x.index0(l), a.index0(l), z.index0(l))
+                };
+                let (yl, al, zl) = cell::layer_step(&self.cfg, &view, &xc, &ac, &zc);
+                if lanes {
+                    y.set_index01(l, lane, &yl);
+                    a2.set_index01(l, lane, &al);
+                    z2.set_index01(l, lane, &zl);
+                } else {
+                    y.set_index0(l, &yl);
+                    a2.set_index0(l, &al);
+                    z2.set_index0(l, &zl);
+                }
             }
-            self.cells_computed += 1;
-            let view = self.params.layer(l);
-            let (yl, al, zl) =
-                cell::layer_step(&self.cfg, &view, &x.index0(l), &a.index0(l), &z.index0(l));
-            y.set_index0(l, &yl);
-            a2.set_index0(l, &al);
-            z2.set_index0(l, &zl);
         }
         Ok((y, a2, z2))
     }
@@ -214,6 +222,39 @@ pub(crate) mod tests {
             assert_eq!(y.index0(i), yi, "slot {i} y");
             assert_eq!(a2.index0(i), ai, "slot {i} A");
             assert_eq!(z2.index0(i), zi, "slot {i} z");
+        }
+    }
+
+    #[test]
+    fn lane_batched_grouped_matches_single_steps_bitexact() {
+        // Rank-4 [L, B, T, d] slots: every (layer, lane) cell must equal
+        // an independent single_step with that layer's weights.
+        let cfg = test_config();
+        let params = Params::random(&cfg, 8);
+        let mut b = NativeBackend::new(cfg.clone(), params);
+        let (l, lanes) = (cfg.n_layers, 2usize);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[l, lanes, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[l, lanes, cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[l, lanes, cfg.phi_dim], 0.1, &mut rng);
+        let mut mask = vec![1.0; l * lanes];
+        mask[lanes + 1] = 0.0; // freeze cell (layer 1, lane 1)
+        let (y, a2, z2) = b.grouped_step(&x, &a, &z, &mask).unwrap();
+        for li in 0..l {
+            for bi in 0..lanes {
+                if mask[li * lanes + bi] == 0.0 {
+                    assert_eq!(y.index01(li, bi), x.index01(li, bi));
+                    assert_eq!(a2.index01(li, bi), a.index01(li, bi));
+                    assert_eq!(z2.index01(li, bi), z.index01(li, bi));
+                    continue;
+                }
+                let (yi, ai, zi) = b
+                    .single_step(li, &x.index01(li, bi), &a.index01(li, bi), &z.index01(li, bi))
+                    .unwrap();
+                assert_eq!(y.index01(li, bi), yi, "cell ({li},{bi}) y");
+                assert_eq!(a2.index01(li, bi), ai, "cell ({li},{bi}) A");
+                assert_eq!(z2.index01(li, bi), zi, "cell ({li},{bi}) z");
+            }
         }
     }
 

@@ -220,39 +220,48 @@ impl StepBackend for HloBackend {
         z: &Tensor,
         mask: &[f32],
     ) -> Result<(Tensor, Tensor, Tensor)> {
-        let l = self.cfg.n_layers;
-        if x.shape()[0] != l || mask.len() != l {
-            return Err(Error::Shape {
-                what: "hlo grouped_step",
-                expected: vec![l],
-                got: vec![x.shape()[0], mask.len()],
-            });
+        let (l, b) = crate::scheduler::grouped_dims(&self.cfg, x, a, z, mask)?;
+        if b == 1 {
+            // Single lane: a rank-4 [L, 1, T, d] call is the same bytes
+            // as the AOT program's [L, T, d] — the upload relabels the
+            // dims without copying, and the rank-3 outputs are relabeled
+            // back to the caller's rank (reshape is metadata-only).
+            let (y, a2, z2) = self.grouped_step_single_lane(x, a, z, mask)?;
+            return Ok((
+                y.reshape(x.shape())?,
+                a2.reshape(a.shape())?,
+                z2.reshape(z.shape())?,
+            ));
         }
-        let all_active = mask.iter().all(|&m| m == 1.0);
-        let mask_t = if all_active {
-            self.ones_mask.clone()
-        } else {
-            Tensor::new(&[l, 1], mask.to_vec())?
-        };
-        let io = [self.upload(x)?, self.upload(a)?, self.upload(z)?, self.upload(&mask_t)?];
-        let mut args: Vec<&xla::PjRtBuffer> = io.iter().collect();
-        args.extend(self.grouped_params.iter());
-        let mut out = {
-            self.step_calls.set(self.step_calls.get() + 1);
-            let exe = self.store.get("grouped_step")?;
-            let result = exe.execute_b(&args)?;
-            let lit = result[0][0].to_literal_sync()?;
-            lit.to_tuple()?
-                .iter()
-                .map(literal_to_tensor)
-                .collect::<Result<Vec<Tensor>>>()?
-        };
-        if out.len() != 3 {
-            return Err(Error::Xla(format!("grouped_step returned {} outputs", out.len())));
+        // The AOT grouped_step program is compiled for one lane, so wider
+        // wavefronts execute lane-serially (B launches) and reassemble.
+        // Correctness is identical; regenerating the artifacts with a
+        // lane-batched program turns this into one launch again.
+        let mut y = x.clone();
+        let mut a2 = a.clone();
+        let mut z2 = z.clone();
+        for lane in 0..b {
+            let lane_mask: Vec<f32> = (0..l).map(|li| mask[li * b + lane]).collect();
+            if lane_mask.iter().all(|&m| m == 0.0) {
+                continue; // fully idle lane: nothing to launch
+            }
+            let gather = |t: &Tensor| -> Result<Tensor> {
+                let parts: Vec<Tensor> = (0..l).map(|li| t.index01(li, lane)).collect();
+                let refs: Vec<&Tensor> = parts.iter().collect();
+                Tensor::stack(&refs)
+            };
+            let (yl, al, zl) = self.grouped_step_single_lane(
+                &gather(x)?,
+                &gather(a)?,
+                &gather(z)?,
+                &lane_mask,
+            )?;
+            for li in 0..l {
+                y.set_index01(li, lane, &yl.index0(li));
+                a2.set_index01(li, lane, &al.index0(li));
+                z2.set_index01(li, lane, &zl.index0(li));
+            }
         }
-        let z2 = out.pop().unwrap();
-        let a2 = out.pop().unwrap();
-        let y = out.pop().unwrap();
         Ok((y, a2, z2))
     }
 
@@ -360,6 +369,65 @@ impl StepBackend for HloBackend {
 }
 
 impl HloBackend {
+    /// Upload a tensor under explicit dims (same element count) — lets
+    /// a rank-4 `[L, 1, T, d]` slot tensor feed the rank-3 AOT argument
+    /// without a host-side copy.
+    fn upload_as(&self, t: &Tensor, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        if t.len() != dims.iter().product::<usize>() {
+            return Err(Error::Shape {
+                what: "upload_as dims",
+                expected: dims.to_vec(),
+                got: t.shape().to_vec(),
+            });
+        }
+        Ok(self.store.client().buffer_from_host_buffer(t.data(), dims, None)?)
+    }
+
+    /// One launch of the AOT `grouped_step` program at its compiled
+    /// single-lane shapes: `x [L, T, d]`, `a [L, d, p]`, `z [L, p]`,
+    /// `mask [L]`. Inputs may carry a unit lane dim (`[L, 1, ...]`);
+    /// outputs are always canonical rank-3.
+    fn grouped_step_single_lane(
+        &mut self,
+        x: &Tensor,
+        a: &Tensor,
+        z: &Tensor,
+        mask: &[f32],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let l = self.cfg.n_layers;
+        let all_active = mask.iter().all(|&m| m == 1.0);
+        let mask_t = if all_active {
+            self.ones_mask.clone()
+        } else {
+            Tensor::new(&[l, 1], mask.to_vec())?
+        };
+        let io = [
+            self.upload_as(x, &[l, self.cfg.seg_total, self.cfg.d_model])?,
+            self.upload_as(a, &[l, self.cfg.d_model, self.cfg.phi_dim])?,
+            self.upload_as(z, &[l, self.cfg.phi_dim])?,
+            self.upload(&mask_t)?,
+        ];
+        let mut args: Vec<&xla::PjRtBuffer> = io.iter().collect();
+        args.extend(self.grouped_params.iter());
+        let mut out = {
+            self.step_calls.set(self.step_calls.get() + 1);
+            let exe = self.store.get("grouped_step")?;
+            let result = exe.execute_b(&args)?;
+            let lit = result[0][0].to_literal_sync()?;
+            lit.to_tuple()?
+                .iter()
+                .map(literal_to_tensor)
+                .collect::<Result<Vec<Tensor>>>()?
+        };
+        if out.len() != 3 {
+            return Err(Error::Xla(format!("grouped_step returned {} outputs", out.len())));
+        }
+        let z2 = out.pop().unwrap();
+        let a2 = out.pop().unwrap();
+        let y = out.pop().unwrap();
+        Ok((y, a2, z2))
+    }
+
     /// Shared execute/untuple path for the non-step executables
     /// (embed / lm_head / full_attn). Does NOT bump `step_calls`: that
     /// counter means *cell-step launches* so its arithmetic matches the

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
+use crate::scheduler::session::WavefrontSession;
 use crate::tensor::Tensor;
 
 /// Anything that can execute ARMT cell steps: the PJRT HLO runtime, the
@@ -27,10 +28,14 @@ use crate::tensor::Tensor;
 pub trait StepBackend {
     fn config(&self) -> &ModelConfig;
 
-    /// Full-width grouped step: `x [L, T, d]`, `a [L, d, p]`, `z [L, p]`,
-    /// `mask [L]` (1.0 = active). Slot `l` applies layer `l`'s weights.
-    /// Returns `(y, a', z')` of the same shapes. State rows with
-    /// `mask == 0` must come back bit-identical.
+    /// Full-width grouped step over `L x B` slots: `x [L, B, T, d]`,
+    /// `a [L, B, d, p]`, `z [L, B, p]`, `mask [L * B]` row-major
+    /// (1.0 = active). Slot row `l` applies layer `l`'s weights to each
+    /// of its `B` lanes independently; lanes may carry cells of
+    /// *different requests*. The legacy single-lane layout (`x [L, T, d]`,
+    /// `a [L, d, p]`, `z [L, p]`, `mask [L]`) is accepted as `B = 1` and
+    /// must behave identically. Returns `(y, a', z')` of the input
+    /// shapes. State slots with `mask == 0` must come back bit-identical.
     fn grouped_step(
         &mut self,
         x: &Tensor,
@@ -107,6 +112,71 @@ impl<T: StepBackend + ?Sized> StepBackend for Box<T> {
     }
 }
 
+/// Parse + validate the slot shapes of a [`StepBackend::grouped_step`]
+/// call; returns `(n_layers, lanes)`. Rank-3 `x` is the legacy
+/// single-lane layout (`B = 1`); rank-4 `x [L, B, T, d]` carries `B`
+/// slot lanes. Shared by every backend so the shape contract stays in
+/// one place.
+pub fn grouped_dims(
+    cfg: &ModelConfig,
+    x: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+    mask: &[f32],
+) -> Result<(usize, usize)> {
+    let shape_err = |what| Error::Shape {
+        what,
+        expected: vec![cfg.n_layers],
+        got: x.shape().to_vec(),
+    };
+    let (l, b) = match x.rank() {
+        3 => (x.shape()[0], 1),
+        4 => (x.shape()[0], x.shape()[1]),
+        _ => return Err(shape_err("grouped_step x rank")),
+    };
+    if l != cfg.n_layers || b == 0 {
+        return Err(shape_err("grouped_step slot dims"));
+    }
+    let state_ok = if x.rank() == 3 {
+        a.shape() == [l, cfg.d_model, cfg.phi_dim].as_slice()
+            && z.shape() == [l, cfg.phi_dim].as_slice()
+    } else {
+        a.shape() == [l, b, cfg.d_model, cfg.phi_dim].as_slice()
+            && z.shape() == [l, b, cfg.phi_dim].as_slice()
+    };
+    if !state_ok {
+        return Err(Error::Shape {
+            what: "grouped_step state dims",
+            expected: vec![l, b, cfg.d_model, cfg.phi_dim],
+            got: a.shape().to_vec(),
+        });
+    }
+    if mask.len() != l * b {
+        return Err(Error::Shape {
+            what: "grouped_step mask",
+            expected: vec![l * b],
+            got: vec![mask.len()],
+        });
+    }
+    Ok((l, b))
+}
+
+/// Split tokens into `seg`-sized segments, padding the tail with the pad
+/// token 0 (the convention shared with the python trainer).
+pub fn segment_tokens(cfg: &ModelConfig, tokens: &[u32]) -> Result<Vec<Vec<u32>>> {
+    if tokens.is_empty() {
+        return Err(Error::Request("empty token sequence".into()));
+    }
+    let seg = cfg.seg;
+    let mut out = Vec::with_capacity(tokens.len().div_ceil(seg));
+    for chunk in tokens.chunks(seg) {
+        let mut v = chunk.to_vec();
+        v.resize(seg, 0);
+        out.push(v);
+    }
+    Ok(out)
+}
+
 /// Which executor loop to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScheduleMode {
@@ -114,17 +184,26 @@ pub enum ScheduleMode {
     Diagonal,
 }
 
-/// Timing + utilization counters for one run.
+/// Timing + utilization counters for one run (or one packed-session
+/// window — see [`WavefrontSession::stats`]).
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     pub mode_diagonal: bool,
     pub segments: usize,
-    /// Backend step calls ("kernel launches"): S*L sequential,
-    /// S+L-1 diagonal — the paper's Fig. 3 quantity.
+    /// Wavefront iterations spanned: S*L sequential, S+L-1 diagonal —
+    /// the paper's Fig. 3 quantity. (For a solo run this equals the
+    /// backend step-call count; a packed request reports the iterations
+    /// it was in flight.)
     pub launches: u64,
-    /// Cells the schedule actually needed (S*L).
+    /// Cells the request's schedule actually needed (S*L).
     pub cells: u64,
-    /// Padded slot-steps executed by the fixed-width diagonal loop.
+    /// Slot-steps the launches spanned: `launches * L * B` for the
+    /// fixed-width wavefront, `== cells` for sequential, 0 when no
+    /// grouped slots ran (full attention).
+    pub slot_steps: u64,
+    /// Slot-steps that carried no active cell — of *any* request; in a
+    /// packed session other requests' cells fill this request's ramp
+    /// bubbles, which is exactly what shrinks this number.
     pub padded_cells: u64,
     pub wall: Duration,
     /// Tokens consumed including padding of the last segment.
@@ -138,6 +217,16 @@ impl RunStats {
             0.0
         } else {
             self.cells as f64 / self.launches as f64
+        }
+    }
+
+    /// Fraction of slot-steps that carried active work — the
+    /// per-iteration occupancy that cross-request packing raises.
+    pub fn occupancy(&self) -> f64 {
+        if self.slot_steps == 0 {
+            0.0
+        } else {
+            (self.slot_steps - self.padded_cells) as f64 / self.slot_steps as f64
         }
     }
 }
@@ -188,17 +277,7 @@ impl<'a, B: StepBackend> Executor<'a, B> {
     /// Split tokens into `seg`-sized segments, padding the tail with the
     /// pad token 0 (the convention shared with the python trainer).
     pub fn segment(&self, tokens: &[u32]) -> Result<Vec<Vec<u32>>> {
-        if tokens.is_empty() {
-            return Err(Error::Request("empty token sequence".into()));
-        }
-        let seg = self.backend.config().seg;
-        let mut out = Vec::with_capacity(tokens.len().div_ceil(seg));
-        for chunk in tokens.chunks(seg) {
-            let mut v = chunk.to_vec();
-            v.resize(seg, 0);
-            out.push(v);
-        }
-        Ok(out)
+        segment_tokens(self.backend.config(), tokens)
     }
 
     /// Run the full forward pass.
@@ -233,11 +312,13 @@ impl<'a, B: StepBackend> Executor<'a, B> {
             logits.push(self.backend.lm_head(&x)?);
         }
 
+        let cells = (segments.len() * l_total) as u64;
         let stats = RunStats {
             mode_diagonal: false,
             segments: segments.len(),
             launches: self.backend.step_calls() - calls0,
-            cells: (segments.len() * l_total) as u64,
+            cells,
+            slot_steps: cells,
             padded_cells: 0,
             wall: started.elapsed(),
             tokens: segments.len() * cfg.seg,
@@ -245,71 +326,20 @@ impl<'a, B: StepBackend> Executor<'a, B> {
         Ok(RunOutput { logits, stats })
     }
 
+    /// The diagonal wavefront is a one-request [`WavefrontSession`] with
+    /// a single slot lane — Algorithm 1 is the `N = 1, B = 1` special
+    /// case of the packed scheduler, bit-for-bit.
     fn run_diagonal(&mut self, segments: &[Vec<u32>]) -> Result<RunOutput> {
-        let cfg = self.backend.config().clone();
         let started = Instant::now();
-        let calls0 = self.backend.step_calls();
-        let l_total = cfg.n_layers;
-        let s_total = segments.len();
-        let iterations = s_total + l_total - 1;
-
-        // Fixed-width wavefront state: slot l <-> layer l.
-        let mut x_slots = Tensor::zeros(&[l_total, cfg.seg_total, cfg.d_model]);
-        let mut a = Tensor::zeros(&[l_total, cfg.d_model, cfg.phi_dim]);
-        let mut z = Tensor::zeros(&[l_total, cfg.phi_dim]);
-        let mut active = vec![false; l_total];
-        let mut mask = vec![0.0f32; l_total];
-        let mut padded = 0u64;
-
-        let mut logits = vec![None; s_total];
-        for i in 0..iterations {
-            // A new segment enters the wavefront at layer 0.
-            if i < s_total {
-                x_slots.set_index0(0, &self.backend.embed(&segments[i])?);
-                active[0] = true;
-            } else {
-                active[0] = false;
-            }
-            for l in 0..l_total {
-                mask[l] = if active[l] { 1.0 } else { 0.0 };
-            }
-            padded += mask.iter().filter(|&&m| m == 0.0).count() as u64;
-
-            let (y, a2, z2) = self.backend.grouped_step(&x_slots, &a, &z, &mask)?;
-            a = a2;
-            z = z2;
-
-            // Segment i - (L-1) exits fully processed.
-            if active[l_total - 1] {
-                let s = i + 1 - l_total;
-                logits[s] = Some(self.backend.lm_head(&y.index0(l_total - 1))?);
-            }
-
-            // Shift the wavefront: next iteration, slot l holds what slot
-            // l-1 just produced (the segment advanced one layer).
-            for l in (1..l_total).rev() {
-                if active[l - 1] {
-                    x_slots.set_index0(l, &y.index0(l - 1));
-                }
-                active[l] = active[l - 1];
-            }
-        }
-
-        let logits: Vec<Tensor> = logits
-            .into_iter()
-            .map(|o| o.ok_or_else(|| Error::Schedule("segment never exited wavefront".into())))
-            .collect::<Result<_>>()?;
-
-        let stats = RunStats {
-            mode_diagonal: true,
-            segments: s_total,
-            launches: self.backend.step_calls() - calls0,
-            cells: (s_total * l_total) as u64,
-            padded_cells: padded,
-            wall: started.elapsed(),
-            tokens: s_total * cfg.seg,
-        };
-        Ok(RunOutput { logits, stats })
+        let mut session = WavefrontSession::new(self.backend.config().clone(), 1);
+        session.submit_segments(0, segments.to_vec())?;
+        session.run_to_completion(self.backend)?;
+        let out = session
+            .pop_completed()
+            .ok_or_else(|| Error::Schedule("wavefront produced no output".into()))?;
+        let mut stats = out.stats;
+        stats.wall = started.elapsed();
+        Ok(RunOutput { logits: out.logits, stats })
     }
 }
 

@@ -3,21 +3,37 @@
 //! * [`dag`] — the dependency DAG of (segment, layer) cells and the
 //!   Lemma 3.1 machinery (minimum group count, earliest feasible group);
 //! * [`plan`] — explicit schedules (diagonal / sequential / mini-batch /
-//!   ideal-even-load) shared by the executors and the roofline simulator;
-//! * [`executor`] — the streaming wavefront executor (Algorithm 1) over a
-//!   pluggable [`StepBackend`].
+//!   ideal-even-load / cross-request packed) shared by the executors and
+//!   the roofline simulator;
+//! * [`executor`] — the single-shot executor (sequential baseline +
+//!   Algorithm 1) over a pluggable [`StepBackend`];
+//! * [`session`] — [`WavefrontSession`], the persistent multi-request
+//!   wavefront the serving engine drains continuously. The diagonal
+//!   executor is its one-request, one-lane special case.
 //!
-//! Slot convention: the grouped step is always executed at full width
-//! `G = n_layers`, with slot `l` permanently bound to layer `l` and an
-//! `active` mask for ramp-up/-down iterations. This keeps the HLO program
-//! static-shaped and lets parameters stay resident on the device; the
-//! masked slots cost `(L-1)·L/2` wasted cell-computations per request at
-//! each ramp, which is negligible for `S >> L` (see DESIGN.md).
+//! Slot-lane convention: the grouped step always executes at the full
+//! static width `L x B` — slot row `l` is permanently bound to layer
+//! `l`'s weights, and each row carries `B` independent *lanes*. A lane
+//! holds a stream of `(request, segment)` cells; the per-layer recurrent
+//! state `(A, z)` lives in the `(layer, lane)` slot and is keyed, at any
+//! instant, by the request streaming through that lane (reset to zeros
+//! when a new request's first segment arrives). Keeping the shape static
+//! lets the HLO programs stay AOT-compiled and parameters stay resident;
+//! masked slots cost wasted cell-computations, which is exactly what
+//! cross-request packing reclaims: one request's ramp-down bubbles are
+//! filled by the next request's ramp-up, and `B > 1` lanes batch
+//! concurrent requests into the same launch. `B = 1` with a single
+//! request reproduces Algorithm 1 (and its `(L-1)·L/2` per-ramp padding)
+//! bit-for-bit.
 
 pub mod dag;
 pub mod executor;
 pub mod plan;
+pub mod session;
 
 pub use dag::Cell;
-pub use executor::{Executor, RunOutput, RunStats, ScheduleMode, StepBackend};
+pub use executor::{
+    grouped_dims, segment_tokens, Executor, RunOutput, RunStats, ScheduleMode, StepBackend,
+};
 pub use plan::{Schedule, ScheduleKind};
+pub use session::{SessionOutput, WavefrontSession};

@@ -24,6 +24,13 @@ pub enum ScheduleKind {
     /// Upper bound: every group magically full at `L` cells ("Ideal Even
     /// Load" in Fig. 6) — `ceil(S*L / L) = S` groups of L.
     IdealEvenLoad,
+    /// Cross-request wavefront packing: `requests` independent sequences
+    /// stream through `lanes` slot lanes of one persistent diagonal
+    /// wavefront (the `WavefrontSession` execution model). Within one
+    /// request the diagonal dependency order holds; across requests the
+    /// ramps overlap, so the padded fraction falls below the solo
+    /// diagonal's.
+    Packed { lanes: usize, requests: usize },
 }
 
 /// A materialized schedule: ordered groups of cells that execute as one
@@ -86,6 +93,70 @@ impl Schedule {
         Self { kind: ScheduleKind::IdealEvenLoad, n_segments, n_layers, groups }
     }
 
+    /// The packed-session schedule: simulate the `WavefrontSession`
+    /// admission loop over `request_segments[i]`-segment requests and
+    /// `lanes` slot lanes, materializing one group per wavefront
+    /// iteration. Cell coordinates are per-request (duplicates across
+    /// requests are expected); only the group *sizes* feed the cost
+    /// model. `n_segments` records the total across requests.
+    pub fn packed(request_segments: &[usize], n_layers: usize, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let total: usize = request_segments.iter().sum();
+        let mut groups = Vec::new();
+        if n_layers == 0 || total == 0 {
+            return Self {
+                kind: ScheduleKind::Packed { lanes, requests: request_segments.len() },
+                n_segments: total,
+                n_layers,
+                groups,
+            };
+        }
+        // Per-lane pipeline of per-request segment cursors, mirroring
+        // session.rs: a lane injects its stream's next segment each
+        // iteration and picks up the next pending request immediately
+        // when the stream ends.
+        let mut pending: std::collections::VecDeque<usize> = (0..request_segments.len())
+            .filter(|&r| request_segments[r] > 0)
+            .collect();
+        let mut streams: Vec<Option<(usize, usize)>> = vec![None; lanes]; // (req, next_seg)
+        let mut slots: Vec<Vec<Option<Cell>>> = vec![vec![None; lanes]; n_layers];
+        loop {
+            // Injection at layer 0.
+            for lane in 0..lanes {
+                slots[0][lane] = loop {
+                    match streams[lane] {
+                        Some((req, seg)) if seg < request_segments[req] => {
+                            streams[lane] = Some((req, seg + 1));
+                            break Some(Cell::new(seg, 0));
+                        }
+                        Some(_) => streams[lane] = None,
+                        None => match pending.pop_front() {
+                            Some(req) => streams[lane] = Some((req, 0)),
+                            None => break None,
+                        },
+                    }
+                };
+            }
+            let group: Vec<Cell> = slots.iter().flatten().flatten().copied().collect();
+            if group.is_empty() {
+                break;
+            }
+            groups.push(group);
+            // Shift one layer up.
+            for l in (1..n_layers).rev() {
+                for lane in 0..lanes {
+                    slots[l][lane] = slots[l - 1][lane].map(|c| Cell::new(c.seg, l));
+                }
+            }
+        }
+        Self {
+            kind: ScheduleKind::Packed { lanes, requests: request_segments.len() },
+            n_segments: total,
+            n_layers,
+            groups,
+        }
+    }
+
     pub fn group_count(&self) -> usize {
         self.groups.len()
     }
@@ -108,10 +179,15 @@ impl Schedule {
         }
     }
 
-    /// Fraction of padded (wasted) slots when executed at fixed width
-    /// `n_layers` (the executor's static-shape policy).
+    /// Fraction of padded (wasted) slots when executed at the fixed
+    /// wavefront width (`n_layers`, times the lane count for packed
+    /// schedules — the executors' static-shape policy).
     pub fn pad_fraction(&self) -> f64 {
-        let total = self.group_count() * self.n_layers;
+        let width = match self.kind {
+            ScheduleKind::Packed { lanes, .. } => self.n_layers * lanes,
+            _ => self.n_layers,
+        };
+        let total = self.group_count() * width;
         if total == 0 {
             0.0
         } else {
@@ -119,11 +195,15 @@ impl Schedule {
         }
     }
 
-    /// Validity per the DAG (the mini-batch kind models independent
-    /// sequences and is exempt by construction).
+    /// Validity per the DAG. The mini-batch and packed kinds model
+    /// independent sequences (cell coordinates repeat across requests)
+    /// and are exempt by construction — packed per-request ordering is
+    /// instead covered by the scheduler proptests (P7 bit-exactness).
     pub fn validate(&self) -> Result<()> {
         match self.kind {
-            ScheduleKind::MiniBatch { .. } | ScheduleKind::IdealEvenLoad => Ok(()),
+            ScheduleKind::MiniBatch { .. }
+            | ScheduleKind::IdealEvenLoad
+            | ScheduleKind::Packed { .. } => Ok(()),
             _ => dag::validate_schedule(&self.groups, self.n_segments, self.n_layers),
         }
     }
@@ -183,5 +263,43 @@ mod tests {
     fn mean_group_approaches_l() {
         let d = Schedule::diagonal(512, 16);
         assert!(d.mean_group() > 15.0);
+    }
+
+    #[test]
+    fn packed_covers_all_cells_in_fewer_groups() {
+        let (l, reqs) = (4usize, [6usize, 3, 5, 2]);
+        let p = Schedule::packed(&reqs, l, 1);
+        p.validate().unwrap();
+        let total: usize = reqs.iter().sum();
+        assert_eq!(p.cell_count(), total * l);
+        // One lane: ramps overlap, so the whole batch needs
+        // sum(S) + L - 1 groups instead of sum(S + L - 1).
+        assert_eq!(p.group_count(), total + l - 1);
+        let serial: usize = reqs.iter().map(|s| s + l - 1).sum();
+        assert!(p.group_count() < serial);
+        // And the padded fraction drops below the worst solo request's.
+        let solo = Schedule::diagonal(2, l);
+        assert!(p.pad_fraction() < solo.pad_fraction());
+    }
+
+    #[test]
+    fn packed_lanes_shrink_iterations() {
+        let reqs = [4usize, 4, 4, 4];
+        let one = Schedule::packed(&reqs, 3, 1);
+        let two = Schedule::packed(&reqs, 3, 2);
+        assert_eq!(one.cell_count(), two.cell_count());
+        assert!(two.group_count() < one.group_count());
+        // 2 lanes x 2 requests each: 8 injections per lane -> 8 + L - 1.
+        assert_eq!(two.group_count(), 8 + 3 - 1);
+        assert!(two.max_group() <= 3 * 2);
+    }
+
+    #[test]
+    fn packed_degenerate_shapes() {
+        assert_eq!(Schedule::packed(&[], 4, 2).group_count(), 0);
+        assert_eq!(Schedule::packed(&[0, 0], 4, 2).group_count(), 0);
+        let single = Schedule::packed(&[5], 4, 3);
+        assert_eq!(single.group_count(), 5 + 4 - 1);
+        assert_eq!(single.cell_count(), 20);
     }
 }

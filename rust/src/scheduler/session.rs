@@ -1,0 +1,471 @@
+//! [`WavefrontSession`]: the persistent, multi-request diagonal
+//! wavefront — continuous batching for the ARMT (segment, layer) grid.
+//!
+//! Algorithm 1 runs one request's segments through `L` layer-bound slots
+//! and pays `(L-1)·L/2` masked slot-steps on each ramp. But the
+//! dependency structure (dag.rs) is *per request*: a slot at layer `l`
+//! can carry any request's segment, because cell `(r, s, l)` depends
+//! only on `(r, s-1, l)` and `(r, s, l-1)`. The session exploits this in
+//! two ways:
+//!
+//! * **stream packing** — when a request's last segment enters slot 0,
+//!   the next request's segment 0 follows on the very next iteration, so
+//!   one request's ramp-down overlaps the next one's ramp-up and the
+//!   pipeline never drains between requests;
+//! * **slot lanes** — each of the `L` layer slots is widened to `B`
+//!   lanes (`grouped_step` over `[L, B, T, d]`), so up to `B` requests
+//!   stream concurrently with a single launch per iteration.
+//!
+//! Exactness is preserved per request: segments still traverse layers in
+//! order against that request's own `(A, z)` memory, which lives in the
+//! `(layer, lane)` slot the request streams through. At a request
+//! boundary the first segment of the new request zeroes the slot state
+//! at each layer it reaches (a fresh request starts from empty memory),
+//! so a packed run is bit-identical to per-request execution on an
+//! order-preserving backend — the property `rust/tests/scheduler_props`
+//! checks (P7).
+//!
+//! The session is a plain state machine: it owns no backend. Each
+//! [`step`](WavefrontSession::step) borrows a [`StepBackend`] for one
+//! grouped launch, which keeps it usable from the single-shot
+//! [`Executor`](crate::scheduler::Executor) (which is now the
+//! one-request special case) and from the serving engine's drain loop
+//! ([`InferenceEngine::serve_queue`](crate::coordinator::InferenceEngine::serve_queue)),
+//! where new requests are admitted between iterations.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::scheduler::executor::{segment_tokens, RunStats, StepBackend};
+use crate::tensor::Tensor;
+
+/// One wavefront cell's occupant: (request, segment) at a (layer, lane).
+#[derive(Clone, Copy, Debug)]
+struct CellTag {
+    req: u64,
+    seg: usize,
+}
+
+/// Bookkeeping for a request between `submit` and completion.
+struct Inflight {
+    segments: Vec<Vec<u32>>,
+    /// Next segment index to inject at layer 0.
+    next_seg: usize,
+    /// Completed per-segment logits, in segment order.
+    logits: Vec<Tensor>,
+    submitted: Instant,
+    /// Iteration counter value when segment 0 was injected.
+    first_iter: Option<u64>,
+    /// Session counters snapshotted at first injection (for the
+    /// request's occupancy window).
+    active0: u64,
+    slot0: u64,
+}
+
+/// A completed request: per-segment logits plus its slice of the
+/// session's utilization accounting.
+#[derive(Clone, Debug)]
+pub struct SessionOutput {
+    pub id: u64,
+    /// One `[seg, vocab]` logits tensor per segment, in order.
+    pub logits: Vec<Tensor>,
+    pub stats: RunStats,
+}
+
+/// Persistent multi-request diagonal wavefront over `L x B` slots.
+pub struct WavefrontSession {
+    cfg: ModelConfig,
+    lanes: usize,
+    /// Hidden-state slots `[L, B, T, d]`; slot row `l` is bound to layer
+    /// `l`, lanes are independent streams.
+    x_slots: Tensor,
+    /// Associative memory `[L, B, d, p]`, keyed by whichever request is
+    /// streaming through the lane.
+    a: Tensor,
+    /// Normalizer state `[L, B, p]`.
+    z: Tensor,
+    /// Cell occupancy, row-major `[L * B]`; `None` = masked slot.
+    tags: Vec<Option<CellTag>>,
+    /// Per-lane request currently streaming segments into slot 0.
+    streams: Vec<Option<u64>>,
+    /// Admitted requests waiting for a free lane (FIFO).
+    pending: VecDeque<u64>,
+    inflight: HashMap<u64, Inflight>,
+    done: VecDeque<SessionOutput>,
+    iterations: u64,
+    active_cells: u64,
+    slot_steps: u64,
+    segments_done: usize,
+    tokens_done: usize,
+    started: Instant,
+}
+
+impl WavefrontSession {
+    /// A session over `lanes` slot lanes (`lanes = 1` reproduces the
+    /// single-request executor's launch shapes exactly).
+    pub fn new(cfg: ModelConfig, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let l = cfg.n_layers;
+        Self {
+            x_slots: Tensor::zeros(&[l, lanes, cfg.seg_total, cfg.d_model]),
+            a: Tensor::zeros(&[l, lanes, cfg.d_model, cfg.phi_dim]),
+            z: Tensor::zeros(&[l, lanes, cfg.phi_dim]),
+            tags: vec![None; l * lanes],
+            streams: vec![None; lanes],
+            pending: VecDeque::new(),
+            inflight: HashMap::new(),
+            done: VecDeque::new(),
+            iterations: 0,
+            active_cells: 0,
+            slot_steps: 0,
+            segments_done: 0,
+            tokens_done: 0,
+            started: Instant::now(),
+            cfg,
+            lanes,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Requests admitted but not yet streaming (no free lane yet).
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Requests admitted and not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// True when every admitted request has completed.
+    pub fn is_idle(&self) -> bool {
+        self.inflight.is_empty()
+    }
+
+    /// Admit a request; it starts streaming as soon as a lane frees up
+    /// (possibly this very iteration). `id` must be unique among
+    /// in-flight requests.
+    pub fn submit(&mut self, id: u64, tokens: &[u32]) -> Result<()> {
+        let segments = segment_tokens(&self.cfg, tokens)?;
+        self.submit_segments(id, segments)
+    }
+
+    /// [`submit`](Self::submit) for pre-segmented input.
+    pub fn submit_segments(&mut self, id: u64, segments: Vec<Vec<u32>>) -> Result<()> {
+        if segments.is_empty() {
+            return Err(Error::Request("empty token sequence".into()));
+        }
+        if segments.iter().any(|s| s.len() != self.cfg.seg) {
+            return Err(Error::Request(format!(
+                "every segment must hold exactly {} tokens",
+                self.cfg.seg
+            )));
+        }
+        if self.inflight.contains_key(&id) {
+            return Err(Error::Request(format!("request id {id} already in flight")));
+        }
+        self.inflight.insert(
+            id,
+            Inflight {
+                segments,
+                next_seg: 0,
+                logits: Vec::new(),
+                submitted: Instant::now(),
+                first_iter: None,
+                active0: 0,
+                slot0: 0,
+            },
+        );
+        self.pending.push_back(id);
+        Ok(())
+    }
+
+    /// Next completed request, in completion order (which is generally
+    /// NOT submission order once requests of different lengths pack).
+    pub fn pop_completed(&mut self) -> Option<SessionOutput> {
+        self.done.pop_front()
+    }
+
+    /// All completed requests accumulated so far.
+    pub fn drain_completed(&mut self) -> Vec<SessionOutput> {
+        self.done.drain(..).collect()
+    }
+
+    /// Session-aggregate utilization: `launches` = wavefront iterations,
+    /// `cells` = active cells across all requests, and the padded /
+    /// occupancy accounting over every slot-step since construction.
+    pub fn stats(&self) -> RunStats {
+        RunStats {
+            mode_diagonal: true,
+            segments: self.segments_done,
+            launches: self.iterations,
+            cells: self.active_cells,
+            slot_steps: self.slot_steps,
+            padded_cells: self.slot_steps - self.active_cells,
+            wall: self.started.elapsed(),
+            tokens: self.tokens_done,
+        }
+    }
+
+    /// Advance the wavefront one iteration: inject segments into free
+    /// slot-0 lanes, run one grouped step, emit finished segments at
+    /// layer L-1, shift. Returns `false` (without touching the backend)
+    /// when there is nothing in flight.
+    pub fn step<B: StepBackend + ?Sized>(&mut self, backend: &mut B) -> Result<bool> {
+        let l_total = self.cfg.n_layers;
+        let b_total = self.lanes;
+        if backend.config() != &self.cfg {
+            return Err(Error::Config(
+                "WavefrontSession config does not match the backend's".into(),
+            ));
+        }
+
+        // (1) Injection: each lane pulls the next segment of its stream,
+        // or starts the next pending request the moment its stream ends.
+        for lane in 0..b_total {
+            let tag = loop {
+                match self.streams[lane] {
+                    Some(req) => {
+                        let fl = self.inflight.get_mut(&req).expect("stream request in flight");
+                        if fl.next_seg < fl.segments.len() {
+                            let seg_idx = fl.next_seg;
+                            fl.next_seg += 1;
+                            if fl.first_iter.is_none() {
+                                fl.first_iter = Some(self.iterations);
+                                fl.active0 = self.active_cells;
+                                fl.slot0 = self.slot_steps;
+                            }
+                            let emb = backend.embed(&fl.segments[seg_idx])?;
+                            self.x_slots.set_index01(0, lane, &emb);
+                            break Some(CellTag { req, seg: seg_idx });
+                        }
+                        // Stream exhausted; free the lane and retry.
+                        self.streams[lane] = None;
+                    }
+                    None => match self.pending.pop_front() {
+                        Some(req) => self.streams[lane] = Some(req),
+                        None => break None,
+                    },
+                }
+            };
+            self.tags[lane] = tag;
+        }
+
+        // (2) Occupancy accounting; bail out if the wavefront is empty.
+        let active = self.tags.iter().flatten().count() as u64;
+        if active == 0 {
+            debug_assert!(self.inflight.is_empty(), "idle wavefront with requests in flight");
+            return Ok(false);
+        }
+        self.iterations += 1;
+        self.active_cells += active;
+        self.slot_steps += (l_total * b_total) as u64;
+
+        // (3) Request boundary: a first segment reaching layer `l` finds
+        // the previous request's final state in the lane — reset to the
+        // empty memory a fresh request starts from.
+        let mut mask = vec![0.0f32; l_total * b_total];
+        for l in 0..l_total {
+            for lane in 0..b_total {
+                if let Some(t) = self.tags[l * b_total + lane] {
+                    mask[l * b_total + lane] = 1.0;
+                    if t.seg == 0 {
+                        self.a.zero_index01(l, lane);
+                        self.z.zero_index01(l, lane);
+                    }
+                }
+            }
+        }
+
+        // (4) One grouped launch over all L x B slots.
+        let (y, a2, z2) = backend.grouped_step(&self.x_slots, &self.a, &self.z, &mask)?;
+        self.a = a2;
+        self.z = z2;
+
+        // (5) Segments exit fully processed at the last layer; a
+        // request completes when its final segment exits.
+        for lane in 0..b_total {
+            if let Some(t) = self.tags[(l_total - 1) * b_total + lane] {
+                let logits = backend.lm_head(&y.index01(l_total - 1, lane))?;
+                let finished = {
+                    let fl = self.inflight.get_mut(&t.req).expect("exiting request in flight");
+                    debug_assert_eq!(fl.logits.len(), t.seg, "segments exit in order");
+                    fl.logits.push(logits);
+                    fl.logits.len() == fl.segments.len()
+                };
+                if finished {
+                    let fl = self.inflight.remove(&t.req).expect("finished request");
+                    let s_total = fl.segments.len();
+                    let span = self.iterations - fl.first_iter.expect("completed => injected");
+                    let slot_span = self.slot_steps - fl.slot0;
+                    let active_span = self.active_cells - fl.active0;
+                    let stats = RunStats {
+                        mode_diagonal: true,
+                        segments: s_total,
+                        launches: span,
+                        cells: (s_total * l_total) as u64,
+                        slot_steps: slot_span,
+                        padded_cells: slot_span - active_span,
+                        wall: fl.submitted.elapsed(),
+                        tokens: s_total * self.cfg.seg,
+                    };
+                    self.segments_done += s_total;
+                    self.tokens_done += stats.tokens;
+                    self.done.push_back(SessionOutput { id: t.req, logits: fl.logits, stats });
+                }
+            }
+        }
+
+        // (6) Shift: next iteration, slot (l, lane) holds what (l-1,
+        // lane) just produced — each cell advanced one layer.
+        for l in (1..l_total).rev() {
+            for lane in 0..b_total {
+                if self.tags[(l - 1) * b_total + lane].is_some() {
+                    self.x_slots.set_index01(l, lane, &y.index01(l - 1, lane));
+                }
+                self.tags[l * b_total + lane] = self.tags[(l - 1) * b_total + lane];
+            }
+        }
+        Ok(true)
+    }
+
+    /// Step until every admitted request has completed.
+    pub fn run_to_completion<B: StepBackend + ?Sized>(&mut self, backend: &mut B) -> Result<()> {
+        while self.step(backend)? {}
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NativeBackend, Params};
+    use crate::scheduler::{Executor, ScheduleMode};
+
+    fn cfg() -> ModelConfig {
+        crate::model::tests::test_config() // L = 3, seg = 8
+    }
+
+    fn backend(seed: u64) -> NativeBackend {
+        let c = cfg();
+        let params = Params::random(&c, seed);
+        NativeBackend::new(c, params)
+    }
+
+    fn tokens(n: usize, salt: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| (i * 7 + salt) % 64).collect()
+    }
+
+    /// Reference: each request alone through the sequential executor on
+    /// a fresh backend with the same weights.
+    fn sequential_reference(seed: u64, toks: &[u32]) -> Vec<Tensor> {
+        let mut b = backend(seed);
+        Executor::new(&mut b, ScheduleMode::Sequential).run(toks).unwrap().logits
+    }
+
+    #[test]
+    fn two_requests_one_lane_fill_each_others_ramps() {
+        let mut b = backend(41);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let r1 = tokens(8 * 4, 3);
+        let r2 = tokens(8 * 4, 11);
+        session.submit(1, &r1).unwrap();
+        session.submit(2, &r2).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+
+        // Packed: 2S + L - 1 iterations instead of 2 * (S + L - 1).
+        let stats = session.stats();
+        assert_eq!(stats.launches, (2 * 4 + 3 - 1) as u64);
+        assert_eq!(stats.cells, (2 * 4 * 3) as u64);
+        let solo = (4 * 3) as f64 / (4 + 3 - 1) as f64;
+        assert!(stats.mean_group() > solo, "{} vs solo {solo}", stats.mean_group());
+
+        let mut outs = session.drain_completed();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].logits, sequential_reference(41, &r1));
+        assert_eq!(outs[1].logits, sequential_reference(41, &r2));
+    }
+
+    #[test]
+    fn multi_lane_bitexact_and_out_of_order_completion() {
+        let mut b = backend(42);
+        let mut session = WavefrontSession::new(cfg(), 2);
+        let long = tokens(8 * 6, 5);
+        let short = tokens(8 * 2, 9);
+        session.submit(10, &long).unwrap();
+        session.submit(11, &short).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+
+        // The short request finishes first despite later submission.
+        let first = session.pop_completed().unwrap();
+        assert_eq!(first.id, 11);
+        assert_eq!(first.logits, sequential_reference(42, &short));
+        let second = session.pop_completed().unwrap();
+        assert_eq!(second.id, 10);
+        assert_eq!(second.logits, sequential_reference(42, &long));
+        assert!(session.pop_completed().is_none());
+    }
+
+    #[test]
+    fn mid_flight_admission_is_exact() {
+        let mut b = backend(43);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let r1 = tokens(8 * 5, 2);
+        session.submit(1, &r1).unwrap();
+        for _ in 0..3 {
+            session.step(&mut b).unwrap();
+        }
+        let r2 = tokens(8 * 3 - 2, 6); // ragged tail
+        session.submit(2, &r2).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        let mut outs = session.drain_completed();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs[0].logits, sequential_reference(43, &r1));
+        assert_eq!(outs[1].logits, sequential_reference(43, &r2));
+    }
+
+    #[test]
+    fn per_request_stats_match_solo_shapes() {
+        // A lone request in a 1-lane session must report exactly the
+        // Fig. 3 arithmetic of the single-shot diagonal executor.
+        let mut b = backend(44);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        session.submit(7, &tokens(8 * 5, 1)).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        let out = session.pop_completed().unwrap();
+        let (s, l) = (5u64, 3u64);
+        assert_eq!(out.stats.launches, s + l - 1);
+        assert_eq!(out.stats.cells, s * l);
+        assert_eq!(out.stats.slot_steps, (s + l - 1) * l);
+        assert_eq!(out.stats.padded_cells, l * (l - 1));
+        assert_eq!(out.stats.segments, 5);
+        assert!(out.stats.occupancy() > 0.0 && out.stats.occupancy() < 1.0);
+    }
+
+    #[test]
+    fn rejects_empty_and_duplicate_ids() {
+        let mut session = WavefrontSession::new(cfg(), 2);
+        assert!(session.submit(1, &[]).is_err());
+        session.submit(1, &tokens(8, 0)).unwrap();
+        assert!(session.submit(1, &tokens(8, 0)).is_err());
+    }
+
+    #[test]
+    fn idle_step_is_a_no_op() {
+        let mut b = backend(45);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        assert!(!session.step(&mut b).unwrap());
+        assert!(session.is_idle());
+        session.submit(1, &tokens(8, 4)).unwrap();
+        assert!(session.step(&mut b).unwrap());
+        session.run_to_completion(&mut b).unwrap();
+        assert!(!session.step(&mut b).unwrap());
+        assert_eq!(session.drain_completed().len(), 1);
+    }
+}

@@ -5,16 +5,21 @@
 //! ```text
 //! -> {"id": 1, "tokens": [3, 17, ...], "mode": "diagonal"?}
 //! <- {"id": 1, "greedy_tail": [...], "mode": "diagonal",
-//!     "latency_ms": 12.3, "segments": 4, "launches": 7, "tokens": 128}
+//!     "latency_ms": 12.3, "segments": 4, "launches": 7, "tokens": 128,
+//!     "mean_group": 2.4, "padded_cells": 6, "occupancy": 0.83}
 //! -> {"cmd": "stats"}
-//! <- {"requests": 10, "diagonal_runs": 9, ...}
+//! <- {"requests": 10, "diagonal_runs": 9, "mean_group": 2.7,
+//!     "padded_cells": 12, "occupancy": 0.9, ...}
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
-//! Topology per the paper's deployment note: connection threads parse and
-//! enqueue; ONE executor thread drains the bounded queue — a single
-//! long-context request saturates the device, so requests are processed
-//! serially and backpressure is explicit (`{"error": "queue full"}`).
+//! Topology: connection threads parse and enqueue; ONE engine thread
+//! drains the bounded queue into a persistent packed wavefront
+//! ([`InferenceEngine::serve_queue`]) — concurrent requests share
+//! grouped launches and fill each other's ramp bubbles, and responses
+//! complete out of submission order (each connection blocks only on its
+//! own reply channel). Backpressure stays explicit
+//! (`{"error": "queue full"}`).
 
 mod protocol;
 
@@ -27,7 +32,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use crate::config::ExecMode;
-use crate::coordinator::{InferenceEngine, Request, RequestQueue, Response};
+use crate::coordinator::{EngineStats, InferenceEngine, Request, RequestQueue, Response};
 use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::scheduler::StepBackend;
@@ -41,6 +46,8 @@ pub struct Server {
     engine_thread: Option<JoinHandle<()>>,
     queue: Arc<RequestQueue<Job>>,
     shutdown: Arc<AtomicBool>,
+    /// Live engine counters (readable after `stop` too).
+    pub stats: Arc<EngineStats>,
 }
 
 impl Server {
@@ -55,19 +62,33 @@ impl Server {
         let local = listener.local_addr()?;
         let queue = Arc::new(RequestQueue::<Job>::new(queue_depth));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = engine.stats_handle();
 
-        // Executor thread: drains the queue serially.
+        // Engine thread: continuous-batching drain loop — every
+        // diagonal-mode request packs into one persistent wavefront;
+        // each job's reply channel receives its response whenever it
+        // completes (out of submission order).
         let q2 = queue.clone();
         let engine_thread = std::thread::spawn(move || {
-            while let Some((req, reply)) = q2.pop() {
-                let resp = engine.process(&req);
+            if let Err(e) = engine.serve_queue(&q2, |reply, resp| {
                 let _ = reply.send(resp);
+            }) {
+                eprintln!("engine loop aborted: {e}");
+                // Fail fast instead of stranding clients: close the
+                // queue (new pushes get "queue closed") and fail every
+                // job already enqueued so its connection thread's
+                // rx.recv() returns.
+                q2.close();
+                while let Some((_req, reply)) = q2.try_pop() {
+                    let _ = reply.send(Err(Error::Request(format!("engine stopped: {e}"))));
+                }
             }
         });
 
         // Acceptor: one lightweight thread per connection.
         let q3 = queue.clone();
         let sd = shutdown.clone();
+        let st = stats.clone();
         let accept_thread = std::thread::spawn(move || {
             let next_id = Arc::new(AtomicU64::new(1));
             for stream in listener.incoming() {
@@ -78,8 +99,9 @@ impl Server {
                 let q = q3.clone();
                 let sd2 = sd.clone();
                 let ids = next_id.clone();
+                let stats = st.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &q, &sd2, &ids);
+                    let _ = handle_conn(stream, &q, &sd2, &ids, &stats);
                 });
             }
         });
@@ -90,6 +112,7 @@ impl Server {
             engine_thread: Some(engine_thread),
             queue,
             shutdown,
+            stats,
         })
     }
 
@@ -113,6 +136,7 @@ fn handle_conn(
     queue: &RequestQueue<Job>,
     shutdown: &AtomicBool,
     ids: &AtomicU64,
+    stats: &EngineStats,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -133,6 +157,7 @@ fn handle_conn(
                             break;
                         }
                         "ping" => Value::obj(vec![("ok", Value::Bool(true))]).to_json(),
+                        "stats" => stats.to_json().to_json(),
                         other => error_json(None, &Error::Request(format!("unknown cmd '{other}'"))),
                     }
                 } else {
@@ -254,6 +279,38 @@ mod tests {
         assert!(bad.get("error").is_some());
         assert!(client.ping().unwrap());
 
+        server.stop();
+    }
+
+    #[test]
+    fn stats_cmd_reports_utilization() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let tokens: Vec<u32> = (0..32).map(|i| i % 60).collect();
+        client.infer(&tokens, None).unwrap();
+        client.infer(&tokens, Some(ExecMode::Sequential)).unwrap();
+
+        let stats = client
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        for field in [
+            "requests",
+            "diagonal_runs",
+            "sequential_runs",
+            "packed_requests",
+            "launches",
+            "mean_group",
+            "padded_cells",
+            "occupancy",
+            "latency_ms_p50",
+        ] {
+            assert!(stats.get(field).is_some(), "missing stats field {field}");
+        }
+        assert_eq!(stats.req("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(stats.req("packed_requests").unwrap().as_usize().unwrap(), 1);
+        assert!(stats.req("mean_group").unwrap().as_f64().unwrap() > 0.0);
+        let occ = stats.req("occupancy").unwrap().as_f64().unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
         server.stop();
     }
 

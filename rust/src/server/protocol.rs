@@ -44,6 +44,9 @@ pub fn render_response(resp: &Response) -> Value {
         ("launches", Value::Num(resp.stats.launches as f64)),
         ("tokens", Value::Num(resp.stats.tokens as f64)),
         ("mean_group", Value::Num(resp.stats.mean_group())),
+        ("cells", Value::Num(resp.stats.cells as f64)),
+        ("padded_cells", Value::Num(resp.stats.padded_cells as f64)),
+        ("occupancy", Value::Num(resp.stats.occupancy())),
     ];
     if let Some(logits) = &resp.logits {
         let norms: Vec<Value> =
@@ -75,6 +78,35 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.mode, Some(ExecMode::Sequential));
         assert!(r.want_logits);
+    }
+
+    #[test]
+    fn response_carries_utilization_stats() {
+        use crate::scheduler::RunStats;
+        use std::time::Duration;
+        let resp = Response {
+            id: 3,
+            greedy_tail: vec![1, 2],
+            logits: None,
+            mode_used: ExecMode::Diagonal,
+            stats: RunStats {
+                mode_diagonal: true,
+                segments: 4,
+                launches: 6,
+                cells: 12,
+                slot_steps: 18,
+                padded_cells: 6,
+                wall: Duration::from_millis(1),
+                tokens: 32,
+            },
+            latency: Duration::from_millis(2),
+        };
+        let v = render_response(&resp);
+        assert_eq!(v.req("cells").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(v.req("padded_cells").unwrap().as_usize().unwrap(), 6);
+        let occ = v.req("occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 12.0 / 18.0).abs() < 1e-9, "occupancy {occ}");
+        assert_eq!(v.req("mean_group").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -134,6 +134,20 @@ impl Workload {
         self.schedule_time(&Schedule::diagonal(s, self.cfg.n_layers))
     }
 
+    /// Packed-session forward time for concurrent requests of
+    /// `request_segments[i]` segments over `lanes` slot lanes (the
+    /// `WavefrontSession` serving model): cross-request ramp overlap
+    /// plus lane batching, costed group-by-group like every other
+    /// schedule.
+    pub fn armt_packed_time(&self, request_segments: &[usize], lanes: usize) -> f64 {
+        self.schedule_time(&Schedule::packed(request_segments, self.cfg.n_layers, lanes))
+    }
+
+    /// Serial per-request diagonal baseline for the same workload.
+    pub fn armt_serial_diagonal_time(&self, request_segments: &[usize]) -> f64 {
+        request_segments.iter().map(|&s| self.armt_diagonal_time(s)).sum()
+    }
+
     /// Segments needed for `n` tokens.
     pub fn segments_for(&self, n_tokens: usize) -> usize {
         n_tokens.div_ceil(self.cfg.seg)
@@ -197,6 +211,21 @@ mod tests {
             w.full_attn_forward_time(long)
                 > w.armt_diagonal_time(w.segments_for(long))
         );
+    }
+
+    #[test]
+    fn packed_requests_beat_serial_diagonal() {
+        // Concurrent short requests fill each other's ramp bubbles and
+        // raise per-launch group sizes, so the packed session must beat
+        // running the same requests' diagonal schedules back to back —
+        // the serving-path analog of the paper's batch-scaling figures.
+        let w = Workload::new(paper_1b(), DeviceSpec::a100());
+        let reqs = [8usize, 8, 8, 8, 8, 8, 8, 8];
+        let serial = w.armt_serial_diagonal_time(&reqs);
+        let packed1 = w.armt_packed_time(&reqs, 1);
+        let packed4 = w.armt_packed_time(&reqs, 4);
+        assert!(packed1 < serial, "packed {packed1} vs serial {serial}");
+        assert!(packed4 < packed1, "lanes must help: {packed4} vs {packed1}");
     }
 
     #[test]

@@ -131,6 +131,34 @@ impl Tensor {
         self.data[i * sub..(i + 1) * sub].copy_from_slice(&src.data);
     }
 
+    /// Sub-tensor at `[i, j]` of the two leading axes (rank >= 2), as a
+    /// copy — the (layer, lane) cell accessor of the batched wavefront.
+    pub fn index01(&self, i: usize, j: usize) -> Tensor {
+        debug_assert!(self.rank() >= 2);
+        let sub: usize = self.shape[2..].iter().product();
+        let off = (i * self.shape[1] + j) * sub;
+        Tensor { shape: self.shape[2..].to_vec(), data: self.data[off..off + sub].to_vec() }
+    }
+
+    /// Write `src` into `[i, j]` of the two leading axes (inverse of
+    /// [`index01`]).
+    pub fn set_index01(&mut self, i: usize, j: usize, src: &Tensor) {
+        debug_assert!(self.rank() >= 2);
+        let sub: usize = self.shape[2..].iter().product();
+        debug_assert_eq!(src.len(), sub, "set_index01 size");
+        let off = (i * self.shape[1] + j) * sub;
+        self.data[off..off + sub].copy_from_slice(&src.data);
+    }
+
+    /// Zero the sub-tensor at `[i, j]` of the two leading axes in place
+    /// (state reset at a request boundary in a reused wavefront lane).
+    pub fn zero_index01(&mut self, i: usize, j: usize) {
+        debug_assert!(self.rank() >= 2);
+        let sub: usize = self.shape[2..].iter().product();
+        let off = (i * self.shape[1] + j) * sub;
+        self.data[off..off + sub].fill(0.0);
+    }
+
     /// Rows `[a, b)` along axis 0, as a copy.
     pub fn slice0(&self, a: usize, b: usize) -> Tensor {
         let sub: usize = self.shape[1..].iter().product();
@@ -260,6 +288,25 @@ mod tests {
         t.set_index0(1, &part);
         assert_eq!(t.index0(1), part);
         assert_eq!(t.index0(0), Tensor::zeros(&[2, 2]));
+    }
+
+    #[test]
+    fn index01_matches_nested_index0() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(&[3, 2, 4, 5], 1.0, &mut rng);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(t.index01(i, j), t.index0(i).index0(j));
+            }
+        }
+        let mut t2 = t.clone();
+        let part = Tensor::full(&[4, 5], 9.0);
+        t2.set_index01(2, 1, &part);
+        assert_eq!(t2.index01(2, 1), part);
+        assert_eq!(t2.index01(2, 0), t.index01(2, 0));
+        t2.zero_index01(2, 1);
+        assert_eq!(t2.index01(2, 1), Tensor::zeros(&[4, 5]));
+        assert_eq!(t2.index01(0, 0), t.index01(0, 0));
     }
 
     #[test]

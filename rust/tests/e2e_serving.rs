@@ -46,13 +46,27 @@ fn serve_modes_and_stats_fields() {
     let mut c = Client::connect(&server.addr.to_string()).unwrap();
 
     let resp = c.infer(&toks(40, 1), None).unwrap();
-    for field in ["id", "greedy_tail", "mode", "latency_ms", "segments", "launches", "mean_group"]
-    {
+    for field in [
+        "id",
+        "greedy_tail",
+        "mode",
+        "latency_ms",
+        "segments",
+        "launches",
+        "mean_group",
+        "cells",
+        "padded_cells",
+        "occupancy",
+    ] {
         assert!(resp.get(field).is_some(), "missing {field}");
     }
     assert_eq!(resp.req("segments").unwrap().as_usize().unwrap(), 5);
     // S + L - 1 = 6 launches
     assert_eq!(resp.req("launches").unwrap().as_usize().unwrap(), 6);
+    // A lone request in the wavefront pays the full ramp padding:
+    // L * (S + L - 1) - S * L = L * (L - 1) = 2 cells at L = 2.
+    assert_eq!(resp.req("cells").unwrap().as_usize().unwrap(), 10);
+    assert_eq!(resp.req("padded_cells").unwrap().as_usize().unwrap(), 2);
 
     let seq = c.infer(&toks(40, 1), Some(ExecMode::Sequential)).unwrap();
     assert_eq!(seq.req("launches").unwrap().as_usize().unwrap(), 10);
@@ -61,6 +75,16 @@ fn serve_modes_and_stats_fields() {
         resp.req("greedy_tail").unwrap().as_u32_vec().unwrap(),
         seq.req("greedy_tail").unwrap().as_u32_vec().unwrap()
     );
+
+    // Aggregate stats over the wire (the sequential run's counters are
+    // recorded before its reply, so these are race-free to read now).
+    let stats = c
+        .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+        .unwrap();
+    assert!(stats.req("mean_group").unwrap().as_f64().unwrap() > 0.0);
+    assert!(stats.get("padded_cells").is_some());
+    assert!(stats.get("occupancy").is_some());
+    assert_eq!(stats.req("packed_requests").unwrap().as_usize().unwrap(), 1);
     server.stop();
 }
 

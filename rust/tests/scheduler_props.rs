@@ -14,13 +14,19 @@
 //!    executor's logits are BIT-IDENTICAL to the sequential executor's
 //!    on the native backend.
 //!  * P5: run stats match the Fig. 3 launch arithmetic.
+//!  * P7: N concurrent requests packed through a `WavefrontSession`
+//!    (random lane counts, ragged lengths, mid-flight admission) produce
+//!    logits BIT-IDENTICAL to N independent sequential runs — the
+//!    packing refactor's exactness contract.
+//!  * P8: packing N >= 2 requests never lowers the session's mean group
+//!    size below the best solo diagonal run of the same batch.
 
 use diagonal_batching::config::ModelConfig;
 use diagonal_batching::model::{NativeBackend, Params};
 use diagonal_batching::scheduler::dag::{
     check_earliest_placement, check_minimality, min_groups, validate_schedule,
 };
-use diagonal_batching::scheduler::{Executor, Schedule, ScheduleMode};
+use diagonal_batching::scheduler::{Executor, Schedule, ScheduleMode, WavefrontSession};
 use diagonal_batching::tensor::Rng;
 
 #[test]
@@ -149,6 +155,127 @@ fn p5_launch_counts_follow_fig3() {
         if s >= l {
             assert_eq!(diag.stats.padded_cells, (l * (l - 1)) as u64);
         }
+    }
+}
+
+#[test]
+fn p7_packed_session_bitexact_vs_independent_sequential() {
+    let mut rng = Rng::new(0x7AC);
+    for case in 0..12 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let lanes = 1 + rng.below(3);
+        let n_requests = 2 + rng.below(4);
+        let requests: Vec<Vec<u32>> = (0..n_requests)
+            .map(|_| {
+                let s = 1 + rng.below(6);
+                let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+                (0..n).map(|_| rng.below(cfg.vocab) as u32).collect()
+            })
+            .collect();
+
+        // Packed: one backend, one session; admit half up front and the
+        // rest mid-flight.
+        let mut backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let mut session = WavefrontSession::new(cfg.clone(), lanes);
+        let split = n_requests / 2;
+        for (i, toks) in requests.iter().take(split).enumerate() {
+            session.submit(i as u64, toks).unwrap();
+        }
+        for _ in 0..rng.below(4) {
+            session.step(&mut backend).unwrap();
+        }
+        for (i, toks) in requests.iter().enumerate().skip(split) {
+            session.submit(i as u64, toks).unwrap();
+        }
+        session.run_to_completion(&mut backend).unwrap();
+        let mut outs = session.drain_completed();
+        assert_eq!(outs.len(), n_requests, "case {case}");
+        outs.sort_by_key(|o| o.id);
+
+        // Reference: each request alone, sequential schedule, fresh
+        // backend with the same weights.
+        for (i, toks) in requests.iter().enumerate() {
+            let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+            let want = Executor::new(&mut b, ScheduleMode::Sequential).run(toks).unwrap();
+            assert_eq!(outs[i].logits.len(), want.segments(), "case {case} request {i}");
+            for (s_i, (a, b)) in outs[i].logits.iter().zip(&want.logits).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "case {case} request {i} segment {s_i} lanes {lanes} cfg {cfg:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p8_packing_never_lowers_mean_group() {
+    let mut rng = Rng::new(0xF111);
+    for _ in 0..12 {
+        let cfg = random_config(&mut rng);
+        let seed = rng.next_u64();
+        let lanes = 1 + rng.below(2);
+        let n_requests = 2 + rng.below(3);
+        let seg_counts: Vec<usize> = (0..n_requests).map(|_| 1 + rng.below(5)).collect();
+        let l = cfg.n_layers;
+
+        let mut backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let mut session = WavefrontSession::new(cfg.clone(), lanes);
+        for (i, &s) in seg_counts.iter().enumerate() {
+            let toks: Vec<u32> = (0..s * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+            session.submit(i as u64, &toks).unwrap();
+        }
+        session.run_to_completion(&mut backend).unwrap();
+        let packed = session.stats();
+        assert_eq!(packed.cells, (seg_counts.iter().sum::<usize>() * l) as u64);
+
+        let solo_best = seg_counts
+            .iter()
+            .map(|&s| (s * l) as f64 / (s + l - 1) as f64)
+            .fold(0.0, f64::max);
+        assert!(
+            packed.mean_group() >= solo_best - 1e-9,
+            "packed {} vs solo best {solo_best} (lanes {lanes}, segs {seg_counts:?}, L {l})",
+            packed.mean_group()
+        );
+    }
+}
+
+#[test]
+fn p9_packed_plan_mirrors_live_session() {
+    // `Schedule::packed` re-derives the session's lane-assignment /
+    // injection behavior for the simulator. This property pins the two
+    // implementations together: for random request mixes and lane
+    // counts, the plan's group count must equal the live session's
+    // iteration count and its cell count the session's active cells.
+    // If the session's admission policy ever changes, this fails
+    // loudly instead of letting the roofline model drift.
+    let mut rng = Rng::new(0x9143);
+    for case in 0..20 {
+        let cfg = random_config(&mut rng);
+        let seed = rng.next_u64();
+        let lanes = 1 + rng.below(4);
+        let n_requests = 1 + rng.below(5);
+        let seg_counts: Vec<usize> = (0..n_requests).map(|_| 1 + rng.below(6)).collect();
+
+        let mut backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let mut session = WavefrontSession::new(cfg.clone(), lanes);
+        for (i, &s) in seg_counts.iter().enumerate() {
+            let toks: Vec<u32> = (0..s * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+            session.submit(i as u64, &toks).unwrap();
+        }
+        session.run_to_completion(&mut backend).unwrap();
+        let live = session.stats();
+
+        let plan = Schedule::packed(&seg_counts, cfg.n_layers, lanes);
+        assert_eq!(
+            plan.group_count() as u64,
+            live.launches,
+            "case {case}: plan groups vs session iterations (lanes {lanes}, segs {seg_counts:?})"
+        );
+        assert_eq!(plan.cell_count() as u64, live.cells, "case {case}: cell totals");
     }
 }
 

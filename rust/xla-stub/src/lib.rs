@@ -1,0 +1,229 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The runtime layer (`diagonal_batching::runtime`) is written against the
+//! real `xla` crate's API: a PJRT client, compiled executables, device
+//! buffers and literals. That crate links against a system XLA/PJRT build
+//! that the offline toolchain does not ship, so this package provides the
+//! same surface with two behaviors:
+//!
+//! * **[`Literal`] is real**: host-side literal construction, reshape and
+//!   readback work exactly (they are plain byte buffers), so the
+//!   `runtime::convert` helpers and their tests run everywhere;
+//! * **execution is unavailable**: [`PjRtClient::cpu`] returns an error,
+//!   so every HLO-backed path reports "PJRT unavailable" instead of
+//!   executing. All artifact-dependent tests/benches already guard on
+//!   `artifacts/manifest.json` and skip cleanly.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the actual crate); no
+//! source in `diagonal_batching` changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's (stringly) error surface.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this offline build (xla-stub); \
+         use the native backend or link the real xla crate"
+    )))
+}
+
+/// Array shape of a (non-tuple) literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal: raw bytes + dims + element width. Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<u8>,
+    dims: Vec<i64>,
+    elem_bytes: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal over a copyable element type (f32/i32 in practice).
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        let elem_bytes = std::mem::size_of::<T>();
+        // SAFETY: T is Copy and we only reinterpret its bytes for storage;
+        // readback via `to_vec` checks the element width before the
+        // reverse cast.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Literal { data: bytes.to_vec(), dims: vec![data.len() as i64], elem_bytes }
+    }
+
+    /// Reinterpret with new dims of equal element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.element_count() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), elem_bytes: self.elem_bytes })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        if self.elem_bytes == 0 {
+            0
+        } else {
+            self.data.len() / self.elem_bytes
+        }
+    }
+
+    /// Read the literal back as a typed vector.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        let w = std::mem::size_of::<T>();
+        if w != self.elem_bytes {
+            return Err(Error(format!(
+                "to_vec element width {w} != literal width {}",
+                self.elem_bytes
+            )));
+        }
+        let n = self.element_count();
+        let mut out = Vec::with_capacity(n);
+        // SAFETY: width checked above; the buffer was produced from a
+        // slice of the same element width.
+        unsafe {
+            let src = self.data.as_ptr() as *const T;
+            for i in 0..n {
+                out.push(*src.add(i));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Tuple destructuring. Stub literals are always arrays (tuples only
+    /// come out of execution, which the stub cannot do).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (opaque; compilation is unavailable offline).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper (opaque).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle. Never constructible offline.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle. Never constructible offline.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client. `cpu()` fails fast in the stub, which is the single gate
+/// every HLO-backed code path funnels through.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn literal_width_checked() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(lit.to_vec::<f64>().is_err());
+    }
+
+    #[test]
+    fn execution_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let lit = Literal::vec1(&[0.0f32]);
+        assert!(lit.to_tuple().is_err());
+    }
+}
