@@ -1,41 +1,11 @@
-//! Fig. 1 headline: 1B ARMT with Diagonal Batching vs vanilla LLaMA-1B —
-//! latency and memory at 128k tokens (paper: 3.3x faster, 167.1x memory
-//! savings on A100, seg 1024).
+//! Fig. 1 headline: 1B ARMT with Diagonal Batching vs vanilla LLaMA-1B.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `fig1_headline`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite fig1_headline`.
 
-use diagonal_batching::bench::{fmt_s, fmt_x, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::{fig1_rows, SEQ_LENS};
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.2-1b").unwrap();
-    let dev = DeviceSpec::a100();
-    let rows = fig1_rows(base, &dev, &SEQ_LENS);
-
-    let mut t = Table::new(
-        "Fig. 1 — LLaMA-1B: full attention vs ARMT + Diagonal Batching (seg 1024)",
-        &["seq len", "llama (s)", "diag ARMT (s)", "speedup", "memory saving"],
-    );
-    for r in &rows {
-        t.row(vec![
-            r.seq_len.to_string(),
-            fmt_s(r.llama_s),
-            fmt_s(r.armt_diag_s),
-            fmt_x(r.speedup),
-            format!("{:.1}x", r.memory_saving),
-        ]);
-    }
-    t.print();
-
-    let last = rows.last().unwrap();
-    assert_eq!(last.seq_len, 131072);
-    assert!(last.speedup > 1.5, "128k speedup {}", last.speedup);
-    assert!(last.memory_saving > 50.0, "memory saving {}", last.memory_saving);
-    assert!(rows[0].speedup < 1.0, "short-context crossover must exist");
-    println!(
-        "\nheadline @128k: {} faster, {:.1}x memory (paper: x3.3, 167.1x — same regime)",
-        fmt_x(last.speedup),
-        last.memory_saving
-    );
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("fig1_headline")
 }

@@ -1,76 +1,11 @@
-//! Fig. 4: grouped GEMM throughput scales with group size like batched
-//! GEMM scales with batch size (the basis of the whole method, §4.1).
+//! Fig. 4: grouped GEMM throughput vs group size (+ measured CPU analog).
 //!
-//! Two parts:
-//!  1. the A100 roofline model's achieved TFLOP/s per group size for the
-//!     1B and 8B linear-layer shapes (paper shape: grouped ~ batched
-//!     from group 4, both saturating at device peak);
-//!  2. a measured CPU data point: the in-tree grouped matmul vs g
-//!     independent matmuls (on one core these tie — recorded to document
-//!     why CPU wallclock can't show the GPU effect; see EXPERIMENTS.md).
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `fig4_grouped_gemm`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite fig4_grouped_gemm`.
 
-use std::time::Duration;
+use std::process::ExitCode;
 
-use diagonal_batching::bench::{bench, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::fig4_grouped_gemm_rows;
-use diagonal_batching::simulator::DeviceSpec;
-use diagonal_batching::tensor::{grouped_matmul, matmul, Rng, Tensor};
-
-fn main() {
-    let _ = Manifest::load("artifacts/manifest.json"); // not required, kept uniform
-    let dev = DeviceSpec::a100();
-    let groups = [1usize, 2, 4, 8, 16, 32];
-
-    for (label, m, n, k) in [
-        ("LLaMA-1B linear: 1152 x 2048 x 2048", 1152usize, 2048usize, 2048usize),
-        ("LLaMA-8B linear: 1152 x 4096 x 4096", 1152, 4096, 4096),
-    ] {
-        let rows = fig4_grouped_gemm_rows(&dev, m, n, k, &groups);
-        let mut t = Table::new(
-            &format!("Fig. 4 — achieved TFLOP/s, {label} [simulated {}]", dev.name),
-            &["group", "grouped GEMM", "batched GEMM"],
-        );
-        for (g, grouped, batched) in &rows {
-            t.row(vec![g.to_string(), format!("{grouped:.1}"), format!("{batched:.1}")]);
-        }
-        t.print();
-        // monotone, and grouped tracks batched within 2x from group 4
-        for w in rows.windows(2) {
-            assert!(w[1].1 >= w[0].1 * 0.98);
-        }
-        for (g, grouped, batched) in &rows {
-            if *g >= 4 {
-                assert!(grouped / batched > 0.5, "group {g}");
-            }
-        }
-    }
-
-    // measured CPU analog (small shapes; 1 core => flat scaling expected)
-    let mut rng = Rng::new(1);
-    let mut t = Table::new(
-        "Fig. 4 (CPU analog) — in-tree grouped matmul, 64x64x64, wallclock per group member",
-        &["group", "grouped (us/member)", "independent (us/member)"],
-    );
-    for g in [1usize, 2, 4, 8] {
-        let x = Tensor::randn(&[g, 64, 64], 1.0, &mut rng);
-        let w = Tensor::randn(&[g, 64, 64], 1.0, &mut rng);
-        let sg = bench(&format!("grouped g={g}"), Duration::from_millis(120), || {
-            std::hint::black_box(grouped_matmul(&x, &w));
-        });
-        let xs: Vec<Tensor> = (0..g).map(|i| x.index0(i)).collect();
-        let ws: Vec<Tensor> = (0..g).map(|i| w.index0(i)).collect();
-        let si = bench(&format!("indep g={g}"), Duration::from_millis(120), || {
-            for i in 0..g {
-                std::hint::black_box(matmul(&xs[i], &ws[i]));
-            }
-        });
-        t.row(vec![
-            g.to_string(),
-            format!("{:.1}", sg.mean_s() * 1e6 / g as f64),
-            format!("{:.1}", si.mean_s() * 1e6 / g as f64),
-        ]);
-    }
-    t.print();
-    println!("\nshape checks passed");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("fig4_grouped_gemm")
 }

@@ -1,42 +1,11 @@
-//! Fig. 5: attention throughput rises with batch size — diagonal
-//! batching gets the same effect by treating the group as the batch
-//! (§4.2, "our method does not modify the attention layer at all").
+//! Fig. 5: attention throughput rises with batch size.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `fig5_attention`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite fig5_attention`.
 
-use diagonal_batching::bench::Table;
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::fig5_attention_rows;
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.2-1b").unwrap();
-    let dev = DeviceSpec::a100();
-    let batches = [1usize, 2, 4, 8, 16, 32];
-
-    for t_len in [640usize, 1152, 2176, 4224] {
-        let rows = fig5_attention_rows(&dev, base, t_len, &batches);
-        let mut t = Table::new(
-            &format!(
-                "Fig. 5 — attention relative FLOPS vs batch (T = {t_len}) [simulated {}]",
-                dev.name
-            ),
-            &["batch", "relative FLOPS"],
-        );
-        for (b, rel) in &rows {
-            t.row(vec![b.to_string(), format!("{rel:.2}x")]);
-        }
-        t.print();
-        assert!((rows[0].1 - 1.0).abs() < 1e-9);
-        for w in rows.windows(2) {
-            assert!(w[1].1 >= w[0].1 * 0.98, "monotone in batch");
-        }
-        // small segments leave more headroom: batch-16 gain shrinks with T
-    }
-    let small = fig5_attention_rows(&dev, base, 640, &batches)[4].1;
-    let large = fig5_attention_rows(&dev, base, 4224, &batches)[4].1;
-    assert!(
-        small >= large * 0.95,
-        "short segments should gain at least as much from batching ({small} vs {large})"
-    );
-    println!("\nshape checks passed");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("fig5_attention")
 }

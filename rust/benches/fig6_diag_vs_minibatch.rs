@@ -1,52 +1,11 @@
-//! Fig. 6: time per segment — diagonal batching vs mini-batching of b
-//! independent sequences vs the Ideal Even Load upper bound, per model.
+//! Fig. 6: time per segment — diagonal vs mini-batching vs ideal even load.
 //!
-//! Paper shape: diagonal batching (a SINGLE sequence) matches the
-//! per-sequence cost of mini-batching at moderate batch sizes, and the
-//! ideal even load lower-bounds everything.
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `fig6_diag_vs_minibatch`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite fig6_diag_vs_minibatch`.
 
-use diagonal_batching::bench::{fmt_s, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::fig6_rows;
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let dev = DeviceSpec::a100();
-    let batches = [1usize, 2, 4, 8, 16];
-
-    for model in ["llama-160m", "llama-3.2-1b", "llama-3.2-3b", "llama-3.1-8b"] {
-        let base = manifest.any_config(model).unwrap();
-        let rows = fig6_rows(base, &dev, 1024, 128, 32, &batches);
-        let mut t = Table::new(
-            &format!("Fig. 6 — time per segment, {model} (seg 1024, 32 segments)"),
-            &["batch", "minibatch (s/seq-seg)", "diagonal (s/seg)", "ideal (s/seg)"],
-        );
-        for r in &rows {
-            t.row(vec![
-                r.batch.to_string(),
-                fmt_s(r.minibatch_s),
-                fmt_s(r.diagonal_s),
-                fmt_s(r.ideal_s),
-            ]);
-        }
-        t.print();
-
-        let b1 = &rows[0];
-        assert!(
-            b1.diagonal_s < b1.minibatch_s,
-            "{model}: diagonal must beat unbatched sequential per-segment time"
-        );
-        assert!(b1.ideal_s <= b1.diagonal_s * 1.02, "{model}: ideal is the bound");
-        // minibatch per-sequence time improves with batch; once the batch
-        // exceeds L it can pass the L-wide "ideal even load" line (more
-        // parallel work than the diagonal can ever expose), so the bound
-        // only applies while batch <= n_layers.
-        let blast = rows.last().unwrap();
-        assert!(blast.minibatch_s < b1.minibatch_s);
-        if blast.batch <= base.n_layers {
-            assert!(blast.minibatch_s >= blast.ideal_s * 0.90);
-        }
-    }
-    println!("\nshape checks passed");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("fig6_diag_vs_minibatch")
 }

@@ -1,135 +1,11 @@
-//! Hot-path microbenchmarks on the REAL PJRT backend (the §Perf
-//! instrument): per-call cost of every executable, the end-to-end
-//! diagonal-vs-sequential wallclock on each CPU-runnable model, and the
-//! launch-amortization demonstration on the launch-bound micro model.
+//! Hot-path microbenchmarks on the REAL PJRT backend (the §Perf instrument).
 //!
-//! This is the bench the EXPERIMENTS.md §Perf before/after numbers come
-//! from. Expectations on this testbed:
-//!   * tiny (compute-bound on 1 CPU core): diagonal LOSES wallclock —
-//!     grouped steps serialize; the win is launch-count only;
-//!   * micro (launch-bound): diagonal WINS wallclock — the CPU analog of
-//!     the paper's GPU launch amortization.
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `hotpath`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite hotpath`.
 
-use std::time::Duration;
+use std::process::ExitCode;
 
-use diagonal_batching::bench::{bench, bench_n, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::runtime::HloBackend;
-use diagonal_batching::scheduler::{Executor, ScheduleMode, StepBackend};
-use diagonal_batching::tensor::{Rng, Tensor};
-
-fn per_step(manifest: &Manifest, model: &str) {
-    let mut b = HloBackend::load(manifest, model).unwrap();
-    let cfg = b.config().clone();
-    let l = cfg.n_layers;
-    let mut rng = Rng::new(7);
-    let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
-    let a = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
-    let z = Tensor::zeros(&[l, cfg.phi_dim]);
-    let mask = vec![1.0; l];
-    let x1 = x.index0(0);
-    let a1 = a.index0(0);
-    let z1 = z.index0(0);
-    let toks: Vec<u32> = (0..cfg.seg as u32).collect();
-
-    println!("\n-- {model}: per-call costs (L = {l}) --");
-    let g = bench(&format!("{model}/grouped_step"), Duration::from_millis(400), || {
-        std::hint::black_box(b.grouped_step(&x, &a, &z, &mask).unwrap());
-    });
-    println!("{g}");
-    let s = bench(&format!("{model}/single_step"), Duration::from_millis(400), || {
-        std::hint::black_box(b.single_step(0, &x1, &a1, &z1).unwrap());
-    });
-    println!("{s}");
-    let e = bench(&format!("{model}/embed"), Duration::from_millis(200), || {
-        std::hint::black_box(b.embed(&toks).unwrap());
-    });
-    println!("{e}");
-    let y = b.embed(&toks).unwrap();
-    let h = bench(&format!("{model}/lm_head"), Duration::from_millis(200), || {
-        std::hint::black_box(b.lm_head(&y).unwrap());
-    });
-    println!("{h}");
-    println!(
-        "grouped/single ratio: {:.2} (L = {l}; < L means grouping amortizes overhead)",
-        g.mean_s() / s.mean_s()
-    );
-    // §Perf counterfactual: what every step would pay without resident
-    // parameter buffers.
-    let up = b.param_upload_cost().unwrap();
-    println!(
-        "param re-upload counterfactual: {up:?}/step avoided ({:.0}% of a grouped step)",
-        100.0 * up.as_secs_f64() / g.mean_s()
-    );
-}
-
-fn end_to_end(manifest: &Manifest, model: &str, n_segments: usize, iters: usize) {
-    let mut b = HloBackend::load(manifest, model).unwrap();
-    let cfg = b.config().clone();
-    let mut rng = Rng::new(11);
-    let tokens: Vec<u32> =
-        (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
-
-    let d = bench_n(&format!("{model}/e2e diagonal S={n_segments}"), iters, || {
-        std::hint::black_box(
-            Executor::new(&mut b, ScheduleMode::Diagonal).run(&tokens).unwrap(),
-        );
-    });
-    let s = bench_n(&format!("{model}/e2e sequential S={n_segments}"), iters, || {
-        std::hint::black_box(
-            Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap(),
-        );
-    });
-    println!("{d}");
-    println!("{s}");
-    println!(
-        "diagonal speedup: x{:.2}  (launches {} vs {})",
-        s.mean_s() / d.mean_s(),
-        n_segments + cfg.n_layers - 1,
-        n_segments * cfg.n_layers,
-    );
-}
-
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-
-    for model in ["tiny", "tiny_ref", "toy", "micro"] {
-        per_step(&manifest, model);
-    }
-    println!("\n(tiny vs tiny_ref isolates interpret-mode Pallas overhead: same dims,");
-    println!(" jnp-lowered HLO instead of pallas interpret — the §Perf L2 A/B.)");
-
-    println!("\n-- end-to-end schedule comparison (PJRT CPU) --");
-    end_to_end(&manifest, "tiny", 16, 5);
-    end_to_end(&manifest, "micro", 64, 5);
-
-    // Launch-amortization table on the launch-bound model.
-    let mut b = HloBackend::load(&manifest, "micro").unwrap();
-    let cfg = b.config().clone();
-    let mut t = Table::new(
-        "micro model: diagonal vs sequential wallclock by segment count",
-        &["segments", "diag (ms)", "seq (ms)", "speedup"],
-    );
-    let mut rng = Rng::new(13);
-    for n_segments in [8usize, 16, 32, 64, 128] {
-        let tokens: Vec<u32> =
-            (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
-        let d = bench_n("d", 3, || {
-            std::hint::black_box(
-                Executor::new(&mut b, ScheduleMode::Diagonal).run(&tokens).unwrap(),
-            );
-        });
-        let s = bench_n("s", 3, || {
-            std::hint::black_box(
-                Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap(),
-            );
-        });
-        t.row(vec![
-            n_segments.to_string(),
-            format!("{:.1}", d.mean_s() * 1e3),
-            format!("{:.1}", s.mean_s() * 1e3),
-            format!("x{:.2}", s.mean_s() / d.mean_s()),
-        ]);
-    }
-    t.print();
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("hotpath")
 }

@@ -1,0 +1,12 @@
+//! `serve_queue` under concurrent synthetic load: latency percentiles
+//! (p50/p90/p99) and aggregate utilization from the serving engine.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `serve_latency`; this binary is the legacy `cargo bench` entry
+//! point and is equivalent to `diagonal-batching bench --suite serve_latency`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("serve_latency")
+}

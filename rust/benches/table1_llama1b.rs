@@ -1,50 +1,11 @@
-//! Table 1: LLaMA-3.2-1B ARMT execution time vs sequence length, four
-//! (segment_size, memory_tokens) configurations, A100 roofline model.
+//! Table 1: LLaMA-3.2-1B ARMT execution time vs sequence length.
 //!
-//! Paper shape to reproduce: diagonal speedup over sequential ARMT grows
-//! with sequence length, is largest for small segments (x2.7 at seg 512 /
-//! 131k) and smallest for big segments (x1.1 at seg 4096), with the
-//! short-sequence crossover where diagonal loses (x0.52 at 4096 tokens).
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `table1_llama1b`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite table1_llama1b`.
 
-use diagonal_batching::bench::{fmt_s, fmt_x, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::{exec_time_rows, SEQ_LENS};
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.2-1b").unwrap();
-    let dev = DeviceSpec::a100();
-
-    for (seg, mem) in [(512usize, 128usize), (1024, 128), (2048, 128), (4096, 128)] {
-        let rows = exec_time_rows(base, &dev, seg, mem, &SEQ_LENS);
-        let mut t = Table::new(
-            &format!("Table 1 — LLama-3.2-1B, configuration ({seg}, {mem}) [simulated {}]", dev.name),
-            &["method", "4096", "8192", "16384", "32768", "65536", "131072"],
-        );
-        t.row(std::iter::once("Llama-3.2-1B".into())
-            .chain(rows.iter().map(|r| fmt_s(r.llama_s))).collect());
-        t.row(std::iter::once("LLama-3.2-1B-ARMT".into())
-            .chain(rows.iter().map(|r| fmt_s(r.armt_seq_s))).collect());
-        t.row(std::iter::once("Diagonal Batching".into())
-            .chain(rows.iter().map(|r| fmt_s(r.armt_diag_s))).collect());
-        t.row(std::iter::once("speedup".into())
-            .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt()))).collect());
-        t.print();
-
-        // Shape assertions (who wins / where): the bench doubles as a
-        // regression test of the reproduction claims.
-        let last = rows.last().unwrap();
-        assert!(last.speedup_vs_armt() > 1.0, "diag must win at 131k (seg {seg})");
-        assert!(
-            rows[0].speedup_vs_armt() < last.speedup_vs_armt(),
-            "speedup must grow with length"
-        );
-    }
-    // paper: smaller segments benefit more
-    let s512 = exec_time_rows(base, &dev, 512, 128, &[131072])[0].speedup_vs_armt();
-    let s4096 = exec_time_rows(base, &dev, 4096, 128, &[131072])[0].speedup_vs_armt();
-    assert!(s512 > s4096);
-    println!("\nshape checks passed: speedup grows with length; seg 512 ({}) > seg 4096 ({})",
-        fmt_x(s512), fmt_x(s4096));
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("table1_llama1b")
 }

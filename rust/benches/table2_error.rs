@@ -1,56 +1,11 @@
-//! Table 2: error accumulation of Diagonal Batching vs the sequential
-//! ARMT execution — MEASURED on the real PJRT artifacts (not simulated).
+//! Table 2: diagonal-vs-sequential logits drift, MEASURED on PJRT artifacts.
 //!
-//! Paper: relative Frobenius drift of the logits stays < 2% out to 32
-//! segments. On the CPU PJRT backend XLA compiles the grouped and single
-//! programs to the same reduction orders, so the diag-vs-seq drift is
-//! ~0 — *tighter* than the paper's CUDA kernels. The native-oracle
-//! column shows the f32 cross-implementation drift for scale.
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `table2_error`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite table2_error`.
 
-use diagonal_batching::bench::Table;
-use diagonal_batching::config::Manifest;
-use diagonal_batching::model::{NativeBackend, Params};
-use diagonal_batching::runtime::HloBackend;
-use diagonal_batching::scheduler::{Executor, ScheduleMode, StepBackend};
-use diagonal_batching::tensor::Rng;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let mut hlo = HloBackend::load(&manifest, "tiny").unwrap();
-    let cfg = hlo.config().clone();
-    let params = Params::load(&manifest, "tiny").unwrap();
-    let mut native = NativeBackend::new(cfg.clone(), params);
-
-    let mut t = Table::new(
-        "Table 2 — relative logits error (%) vs number of segments (tiny model, PJRT CPU)",
-        &["segments", "diag vs seq (HLO)", "HLO vs native oracle", "argmax agreement %"],
-    );
-
-    let mut rng = Rng::new(2024);
-    for n_segments in [1usize, 2, 4, 8, 16, 32] {
-        let tokens: Vec<u32> =
-            (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
-        let d = Executor::new(&mut hlo, ScheduleMode::Diagonal).run(&tokens).unwrap();
-        let s = Executor::new(&mut hlo, ScheduleMode::Sequential).run(&tokens).unwrap();
-        let n = Executor::new(&mut native, ScheduleMode::Sequential).run(&tokens).unwrap();
-        let ds = d.stacked().unwrap();
-        let ss = s.stacked().unwrap();
-        let ns = n.stacked().unwrap();
-        let rel_hlo = ds.rel_error(&ss);
-        let rel_native = ds.rel_error(&ns);
-        let (ad, asq) = (ds.argmax_rows(), ss.argmax_rows());
-        let agree =
-            ad.iter().zip(&asq).filter(|(x, y)| x == y).count() as f64 / ad.len() as f64;
-        t.row(vec![
-            n_segments.to_string(),
-            format!("{:.5}", rel_hlo * 100.0),
-            format!("{:.5}", rel_native * 100.0),
-            format!("{:.2}", agree * 100.0),
-        ]);
-        assert!(rel_hlo < 0.02, "paper bound: < 2% at S={n_segments}");
-        assert!(agree > 0.99);
-    }
-    t.print();
-    println!("\nall rows under the paper's 2% bound (CPU-PJRT reduction orders are");
-    println!("deterministic, so drift is far below the paper's CUDA measurement).");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("table2_error")
 }

@@ -1,35 +1,11 @@
-//! Table 6: llama-3.1-8b ARMT execution time vs sequence length on the A100
-//! roofline model. Paper shape: diagonal wins at long contexts; gains
-//! shrink as the model (and its per-launch compute) grows.
+//! Table 6: llama-3.1-8b ARMT execution time vs sequence length.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `table6_llama8b`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite table6_llama8b`.
 
-use diagonal_batching::bench::{fmt_s, fmt_x, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::{exec_time_rows, SEQ_LENS};
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.1-8b").unwrap();
-    let dev = DeviceSpec::a100();
-    for seg in [1024usize, 4096] {
-        let rows = exec_time_rows(base, &dev, seg, 128, &SEQ_LENS);
-        let mut t = Table::new(
-            &format!("Table 6 — llama-3.1-8b, configuration ({seg}, 128) [simulated {}]", dev.name),
-            &["method", "4096", "8192", "16384", "32768", "65536", "131072"],
-        );
-        t.row(std::iter::once("llama-3.1-8b (full attn)".into())
-            .chain(rows.iter().map(|r| fmt_s(r.llama_s))).collect());
-        t.row(std::iter::once("ARMT sequential".into())
-            .chain(rows.iter().map(|r| fmt_s(r.armt_seq_s))).collect());
-        t.row(std::iter::once("Diagonal Batching".into())
-            .chain(rows.iter().map(|r| fmt_s(r.armt_diag_s))).collect());
-        t.row(std::iter::once("speedup".into())
-            .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt()))).collect());
-        t.print();
-        let last = rows.last().unwrap();
-        assert!(last.speedup_vs_armt() > 1.02,
-            "diag speedup at 131k (seg {seg}): {}", last.speedup_vs_armt());
-        assert!(rows[0].speedup_vs_armt() <= last.speedup_vs_armt() + 1e-9);
-    }
-    println!("\nshape checks passed");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("table6_llama8b")
 }

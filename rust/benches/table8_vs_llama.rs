@@ -1,38 +1,11 @@
-//! Table 8: Diagonal-Batching ARMT speedup over the vanilla
-//! full-attention LLaMA-3.2-1B across sequence lengths and segment
-//! configurations. Paper shape: ARMT loses or ties at short lengths
-//! (quadratic attention is still cheap) and wins increasingly at long
-//! lengths (linear vs quadratic), up to ~3.9x at 131k for seg 4096.
+//! Table 8: Diagonal-Batching ARMT speedup over full-attention LLaMA-1B.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `table8_vs_llama`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite table8_vs_llama`.
 
-use diagonal_batching::bench::{fmt_x, Table};
-use diagonal_batching::config::Manifest;
-use diagonal_batching::simulator::tables::{exec_time_rows, SEQ_LENS};
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.2-1b").unwrap();
-    let dev = DeviceSpec::a100();
-
-    let mut t = Table::new(
-        "Table 8 — Diagonal Batching speedup vs LLama-3.2-1B (full attention)",
-        &["configuration", "4096", "8192", "16384", "32768", "65536", "131072"],
-    );
-    let mut growth_ok = true;
-    let mut long_ctx_win = false;
-    for seg in [512usize, 1024, 2048, 4096] {
-        let rows = exec_time_rows(base, &dev, seg, 128, &SEQ_LENS);
-        t.row(
-            std::iter::once(format!("({seg}, 128)"))
-                .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_llama())))
-                .collect(),
-        );
-        let sp: Vec<f64> = rows.iter().map(|r| r.speedup_vs_llama()).collect();
-        growth_ok &= sp.windows(2).all(|w| w[1] >= w[0] * 0.98);
-        long_ctx_win |= sp.last().unwrap() > &1.5;
-    }
-    t.print();
-    assert!(growth_ok, "speedup vs llama must grow with length");
-    assert!(long_ctx_win, "ARMT must clearly beat full attention at 131k");
-    println!("\nshape checks passed: monotone growth, long-context win");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("table8_vs_llama")
 }

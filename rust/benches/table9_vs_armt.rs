@@ -1,65 +1,11 @@
-//! Table 9: Diagonal-Batching speedup over the sequential ARMT, plus the
-//! runtime-fallback demonstration the table's caption calls out ("in
-//! cases when diagonal batching is slower, we can fall back to the
-//! original inference algorithm at runtime").
+//! Table 9: speedup vs sequential ARMT + the runtime-fallback demonstration.
 //!
-//! Two parts:
-//!  1. the simulated A100 table (paper shape: x0.5-x0.8 at 4k where the
-//!     fallback triggers, up to x2.7 at 131k);
-//!  2. a MEASURED fallback check on the real PJRT CPU backend: the
-//!     engine's calibrated Auto policy picks sequential for short
-//!     requests and diagonal for long ones on the launch-bound micro
-//!     model.
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `table9_vs_armt`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite table9_vs_armt`.
 
-use diagonal_batching::bench::{fmt_x, Table};
-use diagonal_batching::config::{ExecMode, Manifest};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
-use diagonal_batching::runtime::HloBackend;
-use diagonal_batching::simulator::tables::{exec_time_rows, SEQ_LENS};
-use diagonal_batching::simulator::DeviceSpec;
+use std::process::ExitCode;
 
-fn main() {
-    let manifest = Manifest::load("artifacts/manifest.json").expect("make artifacts first");
-    let base = manifest.any_config("llama-3.2-1b").unwrap();
-    let dev = DeviceSpec::a100();
-
-    let mut t = Table::new(
-        "Table 9 — Diagonal Batching speedup vs sequential ARMT (LLama-3.2-1B)",
-        &["configuration", "4096", "8192", "16384", "32768", "65536", "131072"],
-    );
-    for seg in [512usize, 1024, 2048, 4096] {
-        let rows = exec_time_rows(base, &dev, seg, 128, &SEQ_LENS);
-        t.row(
-            std::iter::once(format!("({seg}, 128)"))
-                .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt())))
-                .collect(),
-        );
-    }
-    t.print();
-
-    // ---- measured fallback policy on the real backend --------------------
-    println!("\nfallback policy (measured, micro model on PJRT CPU):");
-    let backend = HloBackend::load(&manifest, "micro").unwrap();
-    let mut engine = InferenceEngine::new(backend, ExecMode::Auto);
-    let cal = engine.calibrate(5).unwrap();
-    println!(
-        "  calibrated: grouped {:.3} ms, single {:.3} ms, crossover {} segments",
-        cal.grouped_step_s * 1e3,
-        cal.single_step_s * 1e3,
-        cal.crossover_segments()
-    );
-    let seg = engine.config().seg;
-    let vocab = engine.config().vocab as u32;
-    for n_segments in [1usize, 2, 64] {
-        let tokens: Vec<u32> = (0..n_segments * seg).map(|i| i as u32 % vocab).collect();
-        let resp = engine.process(&Request::new(n_segments as u64, tokens)).unwrap();
-        println!(
-            "  {n_segments:>3} segments -> {} ({:?})",
-            resp.mode_used, resp.stats.wall
-        );
-        if n_segments >= 64 {
-            assert_eq!(resp.mode_used, ExecMode::Diagonal, "long request must go diagonal");
-        }
-    }
-    println!("\nshape checks passed");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("table9_vs_armt")
 }

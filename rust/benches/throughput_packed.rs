@@ -1,161 +1,11 @@
-//! Packed-wavefront serving throughput: 8 concurrent short requests
-//! through one `WavefrontSession` vs the same requests run serially,
-//! each as its own diagonal wavefront (the pre-packing serving path).
+//! Packed-wavefront serving throughput vs serial per-request diagonal.
 //!
-//! Runs entirely on the native backend — no artifacts needed — because
-//! the quantity under test is the *scheduler's* utilization: launches,
-//! mean group size and occupancy. On a GPU backend the mean-group gain
-//! converts to wallclock via the paper's Fig. 4/5 batching curves; on
-//! one CPU core wallclock is flat (same cell count either way), which
-//! the table makes visible rather than hiding.
-//!
-//! Self-checking: asserts the ISSUE's acceptance shape — the packed
-//! session's mean group strictly beats serial per-request diagonal for
-//! >= 2 concurrent requests, and padded cells per request shrink.
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `throughput_packed`; this binary is the legacy `cargo bench` entry point
+//! and is equivalent to `diagonal-batching bench --suite throughput_packed`.
 
-use std::time::Instant;
+use std::process::ExitCode;
 
-use diagonal_batching::bench::Table;
-use diagonal_batching::config::ModelConfig;
-use diagonal_batching::model::{NativeBackend, Params};
-use diagonal_batching::scheduler::{Executor, RunStats, ScheduleMode, WavefrontSession};
-use diagonal_batching::tensor::Rng;
-
-fn bench_config() -> ModelConfig {
-    ModelConfig {
-        name: "packed-bench".into(),
-        vocab: 64,
-        d_model: 32,
-        n_layers: 4,
-        n_heads: 2,
-        d_ff: 48,
-        seg: 8,
-        mem: 4,
-        k_assoc: 8,
-        dpfp_nu: 3,
-        rope_theta: 10000.0,
-        eps: 1e-6,
-        attn_buckets: vec![],
-        head_dim: 16,
-        phi_dim: 48,
-        seg_total: 12,
-    }
-}
-
-fn requests(cfg: &ModelConfig, n: usize, segments: usize) -> Vec<Vec<u32>> {
-    let mut rng = Rng::new(2024);
-    (0..n)
-        .map(|_| (0..segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect())
-        .collect()
-}
-
-struct Row {
-    label: String,
-    stats: RunStats,
-    wall_s: f64,
-    tokens: usize,
-}
-
-fn serial_diagonal(cfg: &ModelConfig, reqs: &[Vec<u32>]) -> Row {
-    let mut backend = NativeBackend::new(cfg.clone(), Params::random(cfg, 7));
-    let t0 = Instant::now();
-    let mut agg = RunStats { mode_diagonal: true, ..RunStats::default() };
-    for toks in reqs {
-        let out = Executor::new(&mut backend, ScheduleMode::Diagonal).run(toks).unwrap();
-        agg.segments += out.stats.segments;
-        agg.launches += out.stats.launches;
-        agg.cells += out.stats.cells;
-        agg.slot_steps += out.stats.slot_steps;
-        agg.padded_cells += out.stats.padded_cells;
-        agg.tokens += out.stats.tokens;
-    }
-    Row {
-        label: "serial per-request diagonal".into(),
-        wall_s: t0.elapsed().as_secs_f64(),
-        tokens: agg.tokens,
-        stats: agg,
-    }
-}
-
-fn packed(cfg: &ModelConfig, reqs: &[Vec<u32>], lanes: usize) -> Row {
-    let mut backend = NativeBackend::new(cfg.clone(), Params::random(cfg, 7));
-    let mut session = WavefrontSession::new(cfg.clone(), lanes);
-    let t0 = Instant::now();
-    for (i, toks) in reqs.iter().enumerate() {
-        session.submit(i as u64, toks).unwrap();
-    }
-    session.run_to_completion(&mut backend).unwrap();
-    assert_eq!(session.drain_completed().len(), reqs.len());
-    let stats = session.stats();
-    Row {
-        label: format!("packed session, {lanes} lane{}", if lanes == 1 { "" } else { "s" }),
-        wall_s: t0.elapsed().as_secs_f64(),
-        tokens: stats.tokens,
-        stats,
-    }
-}
-
-fn main() {
-    let cfg = bench_config();
-    let n_requests = 8;
-    let segments = 6;
-    let reqs = requests(&cfg, n_requests, segments);
-
-    let rows = vec![
-        serial_diagonal(&cfg, &reqs),
-        packed(&cfg, &reqs, 1),
-        packed(&cfg, &reqs, 2),
-        packed(&cfg, &reqs, 4),
-    ];
-
-    let mut t = Table::new(
-        &format!(
-            "{n_requests} concurrent requests x {segments} segments (L = {}): \
-             packed wavefront vs serial diagonal",
-            cfg.n_layers
-        ),
-        &[
-            "schedule",
-            "launches",
-            "mean group",
-            "padded cells",
-            "occupancy",
-            "padded/request",
-            "tokens/s",
-        ],
-    );
-    for r in &rows {
-        t.row(vec![
-            r.label.clone(),
-            r.stats.launches.to_string(),
-            format!("{:.2}", r.stats.mean_group()),
-            r.stats.padded_cells.to_string(),
-            format!("{:.3}", r.stats.occupancy()),
-            format!("{:.1}", r.stats.padded_cells as f64 / n_requests as f64),
-            format!("{:.0}", r.tokens as f64 / r.wall_s),
-        ]);
-    }
-    t.print();
-
-    // Acceptance shape: packing >= 2 concurrent requests beats serial
-    // per-request diagonal on mean group / padded cells per request.
-    let serial = &rows[0];
-    for packed_row in &rows[1..] {
-        assert!(
-            packed_row.stats.mean_group() > serial.stats.mean_group(),
-            "{}: mean group {:.3} must beat serial {:.3}",
-            packed_row.label,
-            packed_row.stats.mean_group(),
-            serial.stats.mean_group()
-        );
-        assert!(
-            packed_row.stats.padded_cells < serial.stats.padded_cells,
-            "{}: padded {} must be below serial {}",
-            packed_row.label,
-            packed_row.stats.padded_cells,
-            serial.stats.padded_cells
-        );
-        assert_eq!(packed_row.stats.cells, serial.stats.cells, "same work either way");
-    }
-    println!("\nOK: cross-request packing raised mean group and cut padded cells per request");
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("throughput_packed")
 }

@@ -1,8 +1,30 @@
-//! Tiny benchmarking harness (criterion is unavailable offline).
+//! The benchmark subsystem: timing harness, suite registry and
+//! machine-readable reports (criterion/serde are unavailable offline).
 //!
-//! `cargo bench` runs the `harness = false` bench binaries under
-//! `rust/benches/`; each uses this module to time closures with warmup,
-//! report robust statistics, and print the paper-table rows.
+//! Three layers:
+//!
+//! * **harness** (this file) — [`bench`]/[`bench_n`] time closures with
+//!   warmup and robust statistics ([`Sample`]); [`Table`] prints the
+//!   paper-table rows.
+//! * **[`registry`]** — every benchmark is a named, tagged
+//!   [`Suite`](registry::Suite) registered in [`suites::all`]. The
+//!   `harness = false` binaries under `rust/benches/` are thin wrappers
+//!   over [`registry::run_suite_main`]; the `diagonal-batching bench`
+//!   subcommand runs any glob of suites in-process.
+//! * **[`report`]** — the versioned `BENCH_*.json` schema
+//!   ([`report::BenchReport`]) with run metadata (git sha, device,
+//!   lanes) and the [`report::compare`] regression gate
+//!   (`bench --compare BENCH_baseline.json --max-regression 1.15`).
+//!
+//! See `BENCHMARKS.md` at the repository root for the suite ↔ paper
+//! figure/table mapping and the JSON schema reference.
+
+pub mod registry;
+pub mod report;
+pub mod suites;
+
+pub use registry::{glob_match, run_matching, run_suite_main, BenchSettings, Suite, SuiteCtx};
+pub use report::{compare, BenchReport, CompareOutcome, SuiteStatus};
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,319 @@
+//! Suite registry: every benchmark in the tree is a named, tagged
+//! [`Suite`] over a [`SuiteCtx`], runnable three ways with one body:
+//!
+//! * `cargo bench --bench <name>` — the legacy per-suite binaries call
+//!   [`run_suite_main`];
+//! * `diagonal-batching bench --suite '<glob>'` — the CLI calls
+//!   [`run_matching`] and gets a [`BenchReport`] back;
+//! * in-process from tests (`rust/tests/bench_suites.rs`).
+//!
+//! A suite prints its human tables exactly as the old hand-rolled
+//! `main()`s did, and *additionally* records [`SampleStats`] /
+//! [`Metric`]s into the machine-readable report. Invariant checks return
+//! `Err(Error::Bench(..))` instead of panicking, so one broken suite
+//! marks itself `failed` without killing the rest of the run.
+
+use std::time::Duration;
+
+use crate::bench::report::{
+    git_sha, BenchReport, Better, Metric, RunMeta, SampleStats, SuiteReport, SuiteStatus,
+    SCHEMA_VERSION,
+};
+use crate::bench::{Sample, Table};
+use crate::config::Manifest;
+use crate::error::Result;
+use crate::simulator::DeviceSpec;
+
+/// A registered benchmark suite.
+#[derive(Clone, Copy)]
+pub struct Suite {
+    /// Unique name; also the legacy bench-binary name.
+    pub name: &'static str,
+    /// Selection tags (`fig`, `table`, `perf`, `serve`) and substrate
+    /// tags (`simulated`, `native`, `hlo`, `measured`). `--suite` globs
+    /// match the name or any tag.
+    pub tags: &'static [&'static str],
+    /// One-line description (shown by `bench --list true`).
+    pub about: &'static str,
+    pub run: fn(&mut SuiteCtx) -> Result<()>,
+}
+
+/// Knobs shared by every suite in one run.
+#[derive(Clone, Debug)]
+pub struct BenchSettings {
+    /// Where to look for the AOT artifacts; HLO suites skip when this
+    /// does not load.
+    pub manifest_path: String,
+    /// Simulated device model: "a100" (default) or "h100".
+    pub device: String,
+    /// CI-sized iteration budgets (roughly 8x shorter measurements).
+    pub fast: bool,
+    /// Wavefront lanes for the serving suites.
+    pub lanes: usize,
+}
+
+impl Default for BenchSettings {
+    fn default() -> Self {
+        Self {
+            manifest_path: crate::config::DEFAULT_MANIFEST.to_string(),
+            device: "a100".to_string(),
+            fast: false,
+            lanes: 2,
+        }
+    }
+}
+
+impl BenchSettings {
+    pub fn device_spec(&self) -> DeviceSpec {
+        match self.device.as_str() {
+            "h100" => DeviceSpec::h100(),
+            _ => DeviceSpec::a100(),
+        }
+    }
+}
+
+/// Per-suite execution context: settings in, report rows out.
+pub struct SuiteCtx {
+    settings: BenchSettings,
+    manifest: Option<Manifest>,
+    report: SuiteReport,
+    skipped: Option<String>,
+}
+
+impl SuiteCtx {
+    fn new(suite: &Suite, settings: &BenchSettings, manifest: Option<Manifest>) -> Self {
+        Self {
+            settings: settings.clone(),
+            manifest,
+            report: SuiteReport::new(suite.name, suite.tags),
+            skipped: None,
+        }
+    }
+
+    pub fn settings(&self) -> &BenchSettings {
+        &self.settings
+    }
+
+    /// The loaded artifact manifest, when `manifest_path` parsed.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    pub fn device(&self) -> DeviceSpec {
+        self.settings.device_spec()
+    }
+
+    /// Measurement budget: `full_ms` normally, ~1/8 (floor 20ms) in fast
+    /// mode.
+    pub fn budget(&self, full_ms: u64) -> Duration {
+        Duration::from_millis(if self.settings.fast { (full_ms / 8).max(20) } else { full_ms })
+    }
+
+    /// Fixed iteration count: `full` normally, at most 2 in fast mode.
+    pub fn iters(&self, full: usize) -> usize {
+        if self.settings.fast {
+            full.clamp(1, 2)
+        } else {
+            full.max(1)
+        }
+    }
+
+    /// Declare the suite unrunnable here (missing artifacts, PJRT
+    /// unavailable). The suite should return `Ok(())` right after.
+    pub fn skip(&mut self, reason: impl Into<String>) {
+        let reason = reason.into();
+        println!("SKIP: {reason}");
+        self.skipped = Some(reason);
+    }
+
+    /// Print and record a free-form observation.
+    pub fn note(&mut self, msg: impl Into<String>) {
+        let msg = msg.into();
+        println!("{msg}");
+        self.report.notes.push(msg);
+    }
+
+    /// Print a human table (tables are presentation-only; record the
+    /// numbers behind them as metrics/samples).
+    pub fn table(&mut self, t: &Table) {
+        t.print();
+    }
+
+    /// Print and record one timing measurement.
+    pub fn sample(&mut self, s: &Sample) {
+        println!("{s}");
+        self.report.samples.push(SampleStats::from(s));
+    }
+
+    /// Record a deterministic lower-is-better quantity (modeled
+    /// seconds); gated by `--compare`.
+    pub fn metric_lower(&mut self, name: impl Into<String>, value: f64) {
+        self.push_metric(name.into(), value, Better::Lower);
+    }
+
+    /// Record a deterministic higher-is-better quantity (speedups);
+    /// gated by `--compare`.
+    pub fn metric_higher(&mut self, name: impl Into<String>, value: f64) {
+        self.push_metric(name.into(), value, Better::Higher);
+    }
+
+    /// Record an informational quantity (machine-dependent throughput);
+    /// never gated.
+    pub fn metric_info(&mut self, name: impl Into<String>, value: f64) {
+        self.push_metric(name.into(), value, Better::Info);
+    }
+
+    fn push_metric(&mut self, name: String, value: f64, better: Better) {
+        self.report.metrics.push(Metric { name, value, better });
+    }
+}
+
+/// Simple glob: `*` matches any run of characters; everything else is
+/// literal. Patterns may be comma-separated ("fig*,serve*").
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    pattern.split(',').map(str::trim).filter(|p| !p.is_empty()).any(|p| glob_one(p, name))
+}
+
+fn glob_one(pattern: &str, name: &str) -> bool {
+    fn inner(p: &[u8], n: &[u8]) -> bool {
+        match p.split_first() {
+            None => n.is_empty(),
+            Some((&b'*', rest)) => (0..=n.len()).any(|i| inner(rest, &n[i..])),
+            Some((c, rest)) => n.split_first().is_some_and(|(d, nr)| c == d && inner(rest, nr)),
+        }
+    }
+    inner(pattern.as_bytes(), name.as_bytes())
+}
+
+fn suite_matches(suite: &Suite, pattern: &str) -> bool {
+    glob_match(pattern, suite.name) || suite.tags.iter().any(|t| glob_match(pattern, t))
+}
+
+/// Run every registered suite whose name or tag matches `pattern`,
+/// collecting a versioned [`BenchReport`].
+pub fn run_matching(pattern: &str, settings: &BenchSettings) -> BenchReport {
+    let manifest = Manifest::load(&settings.manifest_path).ok();
+    let dev = settings.device_spec();
+    let mut suites = Vec::new();
+    for suite in crate::bench::suites::all() {
+        if !suite_matches(&suite, pattern) {
+            continue;
+        }
+        println!("\n==== suite {} ====", suite.name);
+        suites.push(run_one(&suite, settings, manifest.clone()));
+    }
+    // "+hlo" means HLO execution actually works here (a model loads on
+    // a live PJRT client) — not merely that the manifest lists
+    // executables, which is also true under the non-executing xla-stub.
+    let hlo_available = manifest
+        .as_ref()
+        .is_some_and(|m| m.models.keys().any(|name| crate::runtime::HloBackend::load(m, name).is_ok()));
+    BenchReport {
+        schema_version: SCHEMA_VERSION,
+        meta: RunMeta {
+            git_sha: git_sha(),
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            device: dev.name.to_string(),
+            peak_tflops: dev.peak_flops / 1e12,
+            mem_bw_gbs: dev.mem_bw / 1e9,
+            lanes: settings.lanes,
+            fast: settings.fast,
+            backend: if hlo_available {
+                "native+simulated+hlo".to_string()
+            } else {
+                "native+simulated".to_string()
+            },
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        },
+        suites,
+    }
+}
+
+fn run_one(suite: &Suite, settings: &BenchSettings, manifest: Option<Manifest>) -> SuiteReport {
+    let mut ctx = SuiteCtx::new(suite, settings, manifest);
+    let outcome = (suite.run)(&mut ctx);
+    let mut report = ctx.report;
+    match (outcome, ctx.skipped) {
+        (Err(e), _) => {
+            report.status = SuiteStatus::Failed;
+            report.detail = e.to_string();
+            println!("FAILED: {}", report.detail);
+        }
+        (Ok(()), Some(reason)) => {
+            report.status = SuiteStatus::Skipped;
+            report.detail = reason;
+        }
+        (Ok(()), None) => {
+            report.status = SuiteStatus::Ok;
+        }
+    }
+    report
+}
+
+/// Entry point for the legacy `cargo bench` binaries: run exactly one
+/// suite with full (non-fast) budgets, print its tables, exit nonzero
+/// if an invariant check failed. A skip (missing artifacts) exits zero,
+/// mirroring how the artifact-gated tests skip.
+pub fn run_suite_main(name: &str) -> std::process::ExitCode {
+    let settings = BenchSettings::default();
+    let Some(suite) = crate::bench::suites::all().into_iter().find(|s| s.name == name) else {
+        eprintln!("error: suite '{name}' is not registered");
+        return std::process::ExitCode::FAILURE;
+    };
+    let manifest = Manifest::load(&settings.manifest_path).ok();
+    let report = run_one(&suite, &settings, manifest);
+    match report.status {
+        SuiteStatus::Failed => std::process::ExitCode::FAILURE,
+        _ => std::process::ExitCode::SUCCESS,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_semantics() {
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("fig*", "fig1_headline"));
+        assert!(!glob_match("fig*", "table1_llama1b"));
+        assert!(glob_match("*llama*", "table1_llama1b"));
+        assert!(glob_match("serve", "serve"));
+        assert!(!glob_match("serve", "serve_latency"));
+        assert!(glob_match("fig*,table*", "table5_llama3b"));
+        assert!(glob_match(" fig* , serve* ", "serve_latency"));
+        assert!(!glob_match("", "x"));
+    }
+
+    #[test]
+    fn fast_mode_shrinks_budgets() {
+        let mut settings = BenchSettings::default();
+        let suite = crate::bench::suites::all()[0];
+        let ctx = SuiteCtx::new(&suite, &settings, None);
+        assert_eq!(ctx.budget(400), Duration::from_millis(400));
+        assert_eq!(ctx.iters(5), 5);
+        settings.fast = true;
+        let ctx = SuiteCtx::new(&suite, &settings, None);
+        assert_eq!(ctx.budget(400), Duration::from_millis(50));
+        assert_eq!(ctx.iters(5), 2);
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_tagged() {
+        let suites = crate::bench::suites::all();
+        let mut names: Vec<_> = suites.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate suite names");
+        for s in &suites {
+            assert!(!s.tags.is_empty(), "{} has no tags", s.name);
+            assert!(!s.about.is_empty(), "{} has no description", s.name);
+        }
+    }
+}

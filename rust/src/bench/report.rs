@@ -1,0 +1,666 @@
+//! Machine-readable benchmark reports (`BENCH_*.json`) and the
+//! baseline-comparison regression gate.
+//!
+//! A [`BenchReport`] is the versioned artifact `pallas-bench` writes:
+//! run metadata (git sha, device model, lanes, host) plus one
+//! [`SuiteReport`] per registered suite that matched the `--suite` glob.
+//! Timing [`SampleStats`] are always lower-is-better; [`Metric`]s carry
+//! an explicit [`Better`] direction so deterministic simulator outputs
+//! (modeled seconds, speedups) can gate regressions across machines
+//! while machine-dependent throughput numbers stay informational.
+//!
+//! Serialization uses the in-tree [`crate::json`] module (no serde in the
+//! offline toolchain); [`BenchReport::from_json`] round-trips everything
+//! [`BenchReport::to_json`] emits.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::bench::Sample;
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Bump when the report layout changes incompatibly. Consumers must
+/// reject versions they do not understand ([`BenchReport::from_json`]
+/// does).
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Which direction of change is an improvement for a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    /// Lower is better (modeled/measured seconds). Gated by `--compare`.
+    Lower,
+    /// Higher is better (speedups, occupancy). Gated by `--compare`.
+    Higher,
+    /// Informational only (machine-dependent throughput, counts);
+    /// never gates.
+    Info,
+}
+
+impl Better {
+    fn as_str(self) -> &'static str {
+        match self {
+            Better::Lower => "lower",
+            Better::Higher => "higher",
+            Better::Info => "info",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lower" => Ok(Better::Lower),
+            "higher" => Ok(Better::Higher),
+            "info" => Ok(Better::Info),
+            other => Err(Error::Bench(format!("unknown metric direction '{other}'"))),
+        }
+    }
+}
+
+/// One scalar result of a suite (deterministic simulator outputs or
+/// measured serving statistics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub better: Better,
+}
+
+/// One timing measurement, in seconds (the JSON mirror of
+/// [`Sample`](crate::bench::Sample)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl From<&Sample> for SampleStats {
+    fn from(s: &Sample) -> Self {
+        Self {
+            name: s.name.clone(),
+            iters: s.iters,
+            mean_s: s.mean.as_secs_f64(),
+            median_s: s.median.as_secs_f64(),
+            min_s: s.min.as_secs_f64(),
+            stddev_s: s.stddev.as_secs_f64(),
+        }
+    }
+}
+
+/// Outcome of one suite run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuiteStatus {
+    /// Ran to completion with every invariant check passing.
+    Ok,
+    /// Could not run here (e.g. HLO artifacts absent); `detail` says why.
+    Skipped,
+    /// An invariant check or the suite body failed; `detail` carries the
+    /// error.
+    Failed,
+}
+
+impl SuiteStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SuiteStatus::Ok => "ok",
+            SuiteStatus::Skipped => "skipped",
+            SuiteStatus::Failed => "failed",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ok" => Ok(SuiteStatus::Ok),
+            "skipped" => Ok(SuiteStatus::Skipped),
+            "failed" => Ok(SuiteStatus::Failed),
+            other => Err(Error::Bench(format!("unknown suite status '{other}'"))),
+        }
+    }
+}
+
+/// Everything one suite produced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteReport {
+    pub name: String,
+    pub tags: Vec<String>,
+    pub status: SuiteStatus,
+    /// Skip reason or failure message (empty when `status == Ok`).
+    pub detail: String,
+    pub samples: Vec<SampleStats>,
+    pub metrics: Vec<Metric>,
+    pub notes: Vec<String>,
+}
+
+impl SuiteReport {
+    pub fn new(name: &str, tags: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+            status: SuiteStatus::Ok,
+            detail: String::new(),
+            samples: Vec::new(),
+            metrics: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+}
+
+/// Run-level metadata: enough to interpret (and refuse to compare)
+/// numbers from a different commit, device model or host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunMeta {
+    pub git_sha: String,
+    pub crate_version: String,
+    /// Simulated device model (`DeviceSpec::name`) the roofline suites
+    /// used.
+    pub device: String,
+    pub peak_tflops: f64,
+    pub mem_bw_gbs: f64,
+    /// Wavefront lanes the serving suites ran with.
+    pub lanes: usize,
+    /// True when the CI-sized iteration budgets were used.
+    pub fast: bool,
+    /// Which step backends were available: always "native+simulated",
+    /// plus "+hlo" when the AOT artifacts loaded.
+    pub backend: String,
+    pub os: String,
+    pub arch: String,
+    /// Seconds since the unix epoch at report creation.
+    pub created_unix: u64,
+}
+
+/// The versioned `BENCH_*.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: usize,
+    pub meta: RunMeta,
+    pub suites: Vec<SuiteReport>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Value {
+        let meta = Value::obj(vec![
+            ("git_sha", Value::Str(self.meta.git_sha.clone())),
+            ("crate_version", Value::Str(self.meta.crate_version.clone())),
+            ("device", Value::Str(self.meta.device.clone())),
+            ("peak_tflops", Value::Num(self.meta.peak_tflops)),
+            ("mem_bw_gbs", Value::Num(self.meta.mem_bw_gbs)),
+            ("lanes", Value::Num(self.meta.lanes as f64)),
+            ("fast", Value::Bool(self.meta.fast)),
+            ("backend", Value::Str(self.meta.backend.clone())),
+            ("os", Value::Str(self.meta.os.clone())),
+            ("arch", Value::Str(self.meta.arch.clone())),
+            ("created_unix", Value::Num(self.meta.created_unix as f64)),
+        ]);
+        let suites = self
+            .suites
+            .iter()
+            .map(|s| {
+                Value::obj(vec![
+                    ("name", Value::Str(s.name.clone())),
+                    (
+                        "tags",
+                        Value::Arr(s.tags.iter().map(|t| Value::Str(t.clone())).collect()),
+                    ),
+                    ("status", Value::Str(s.status.as_str().to_string())),
+                    ("detail", Value::Str(s.detail.clone())),
+                    (
+                        "samples",
+                        Value::Arr(
+                            s.samples
+                                .iter()
+                                .map(|m| {
+                                    Value::obj(vec![
+                                        ("name", Value::Str(m.name.clone())),
+                                        ("iters", Value::Num(m.iters as f64)),
+                                        ("mean_s", Value::Num(m.mean_s)),
+                                        ("median_s", Value::Num(m.median_s)),
+                                        ("min_s", Value::Num(m.min_s)),
+                                        ("stddev_s", Value::Num(m.stddev_s)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "metrics",
+                        Value::Arr(
+                            s.metrics
+                                .iter()
+                                .map(|m| {
+                                    Value::obj(vec![
+                                        ("name", Value::Str(m.name.clone())),
+                                        ("value", Value::Num(m.value)),
+                                        ("better", Value::Str(m.better.as_str().to_string())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "notes",
+                        Value::Arr(s.notes.iter().map(|n| Value::Str(n.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema_version", Value::Num(self.schema_version as f64)),
+            ("meta", meta),
+            ("suites", Value::Arr(suites)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let schema_version = v.req("schema_version")?.as_usize()?;
+        if schema_version != SCHEMA_VERSION {
+            return Err(Error::Bench(format!(
+                "report schema version {schema_version} != supported {SCHEMA_VERSION}"
+            )));
+        }
+        let m = v.req("meta")?;
+        let meta = RunMeta {
+            git_sha: m.req("git_sha")?.as_str()?.to_string(),
+            crate_version: m.req("crate_version")?.as_str()?.to_string(),
+            device: m.req("device")?.as_str()?.to_string(),
+            peak_tflops: m.req("peak_tflops")?.as_f64()?,
+            mem_bw_gbs: m.req("mem_bw_gbs")?.as_f64()?,
+            lanes: m.req("lanes")?.as_usize()?,
+            fast: m.req("fast")?.as_bool()?,
+            backend: m.req("backend")?.as_str()?.to_string(),
+            os: m.req("os")?.as_str()?.to_string(),
+            arch: m.req("arch")?.as_str()?.to_string(),
+            created_unix: m.req("created_unix")?.as_usize()? as u64,
+        };
+        let mut suites = Vec::new();
+        for s in v.req("suites")?.as_arr()? {
+            let mut samples = Vec::new();
+            for m in s.req("samples")?.as_arr()? {
+                samples.push(SampleStats {
+                    name: m.req("name")?.as_str()?.to_string(),
+                    iters: m.req("iters")?.as_usize()?,
+                    mean_s: m.req("mean_s")?.as_f64()?,
+                    median_s: m.req("median_s")?.as_f64()?,
+                    min_s: m.req("min_s")?.as_f64()?,
+                    stddev_s: m.req("stddev_s")?.as_f64()?,
+                });
+            }
+            let mut metrics = Vec::new();
+            for m in s.req("metrics")?.as_arr()? {
+                metrics.push(Metric {
+                    name: m.req("name")?.as_str()?.to_string(),
+                    value: m.req("value")?.as_f64()?,
+                    better: Better::parse(m.req("better")?.as_str()?)?,
+                });
+            }
+            suites.push(SuiteReport {
+                name: s.req("name")?.as_str()?.to_string(),
+                tags: s
+                    .req("tags")?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| Ok(t.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                status: SuiteStatus::parse(s.req("status")?.as_str()?)?,
+                detail: s.req("detail")?.as_str()?.to_string(),
+                samples,
+                metrics,
+                notes: s
+                    .req("notes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|n| Ok(n.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(Self { schema_version, meta, suites })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    /// True when no suite failed (skips are fine: a host without HLO
+    /// artifacts must still get a green `pallas-bench` run).
+    pub fn all_passed(&self) -> bool {
+        self.suites.iter().all(|s| s.status != SuiteStatus::Failed)
+    }
+}
+
+/// One gated quantity that got worse than the allowed ratio.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub suite: String,
+    /// `sample:<name>` or `metric:<name>`.
+    pub what: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Worseness ratio, normalized so > 1.0 always means "worse"
+    /// (current/baseline for lower-is-better, inverted for
+    /// higher-is-better).
+    pub ratio: f64,
+}
+
+/// Result of gating `current` against `baseline`.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    /// Gated quantities present in both reports.
+    pub compared: usize,
+    /// Of those, how many got better or stayed equal.
+    pub improved_or_equal: usize,
+    pub regressions: Vec<Regression>,
+    /// Suites/quantities in the baseline with no counterpart in the
+    /// current report (warnings, not failures — a fast CI subset
+    /// legitimately runs fewer suites than a full local baseline).
+    pub missing_in_current: Vec<String>,
+    /// RunMeta differences between the reports: a device-model mismatch
+    /// makes every roofline number incomparable (see `incomparable`);
+    /// lanes/fast mismatches are warnings (they shift the serving
+    /// suites' gated utilization numbers).
+    pub meta_mismatches: Vec<String>,
+    /// True when the reports cannot be gated at all (different
+    /// simulated device model) — `passed()` then fails loudly instead
+    /// of passing vacuously.
+    pub incomparable: bool,
+}
+
+impl CompareOutcome {
+    pub fn passed(&self) -> bool {
+        !self.incomparable && self.regressions.is_empty()
+    }
+}
+
+/// Gate `current` against `baseline`: every timing sample and every
+/// directional metric present in both reports must not be worse than
+/// `max_ratio` times the baseline (e.g. 1.15 = 15% headroom).
+/// `Better::Info` metrics and non-`Ok` suites never gate. Reports from
+/// different simulated device models are refused (`incomparable`).
+pub fn compare(baseline: &BenchReport, current: &BenchReport, max_ratio: f64) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    if baseline.meta.device != current.meta.device {
+        out.meta_mismatches.push(format!(
+            "device: baseline '{}' vs current '{}' — roofline numbers are incomparable; \
+             refresh the baseline on the same --device",
+            baseline.meta.device, current.meta.device
+        ));
+        out.incomparable = true;
+        return out;
+    }
+    if baseline.meta.lanes != current.meta.lanes {
+        out.meta_mismatches.push(format!(
+            "lanes: baseline {} vs current {} (serving-suite utilization gates are skewed)",
+            baseline.meta.lanes, current.meta.lanes
+        ));
+    }
+    if baseline.meta.fast != current.meta.fast {
+        out.meta_mismatches.push(format!(
+            "fast: baseline {} vs current {} (request counts / budgets differ)",
+            baseline.meta.fast, current.meta.fast
+        ));
+    }
+    let cur: BTreeMap<&str, &SuiteReport> =
+        current.suites.iter().map(|s| (s.name.as_str(), s)).collect();
+    for base in &baseline.suites {
+        if base.status != SuiteStatus::Ok {
+            continue;
+        }
+        let Some(&now) = cur.get(base.name.as_str()) else {
+            out.missing_in_current.push(base.name.clone());
+            continue;
+        };
+        if now.status != SuiteStatus::Ok {
+            out.missing_in_current.push(format!("{} ({})", base.name, now.status.as_str()));
+            continue;
+        }
+        let now_samples: BTreeMap<&str, &SampleStats> =
+            now.samples.iter().map(|s| (s.name.as_str(), s)).collect();
+        for bs in &base.samples {
+            let Some(&ns) = now_samples.get(bs.name.as_str()) else {
+                out.missing_in_current.push(format!("{}/sample:{}", base.name, bs.name));
+                continue;
+            };
+            gate(&mut out, &base.name, &format!("sample:{}", bs.name), bs.mean_s, ns.mean_s, Better::Lower, max_ratio);
+        }
+        let now_metrics: BTreeMap<&str, &Metric> =
+            now.metrics.iter().map(|m| (m.name.as_str(), m)).collect();
+        for bm in &base.metrics {
+            if bm.better == Better::Info {
+                continue;
+            }
+            let Some(&nm) = now_metrics.get(bm.name.as_str()) else {
+                out.missing_in_current.push(format!("{}/metric:{}", base.name, bm.name));
+                continue;
+            };
+            gate(&mut out, &base.name, &format!("metric:{}", bm.name), bm.value, nm.value, bm.better, max_ratio);
+        }
+    }
+    out
+}
+
+fn gate(
+    out: &mut CompareOutcome,
+    suite: &str,
+    what: &str,
+    baseline: f64,
+    current: f64,
+    better: Better,
+    max_ratio: f64,
+) {
+    if !baseline.is_finite() || baseline <= 0.0 {
+        return; // a degenerate baseline sets no bar
+    }
+    let ratio = match better {
+        Better::Info => return,
+        Better::Lower if current.is_finite() && current >= 0.0 => current / baseline,
+        Better::Higher if current.is_finite() && current > 0.0 => baseline / current,
+        // NaN, a negative timing, or a higher-is-better metric collapsing
+        // to zero: the worst possible regression, not a silent pass.
+        _ => f64::INFINITY,
+    };
+    out.compared += 1;
+    if ratio <= 1.0 {
+        out.improved_or_equal += 1;
+    }
+    if ratio > max_ratio {
+        out.regressions.push(Regression {
+            suite: suite.to_string(),
+            what: what.to_string(),
+            baseline,
+            current,
+            ratio,
+        });
+    }
+}
+
+/// Best-effort current commit sha, read straight from `.git` (no git
+/// subprocess; works in the offline toolchain). Walks up from the
+/// current directory so it works from the workspace root and from
+/// `rust/` (where `cargo bench` runs). Returns "unknown" when no
+/// repository is found.
+pub fn git_sha() -> String {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..6 {
+        let git = dir.join(".git");
+        if git.is_dir() {
+            return read_git_head(&git).unwrap_or_else(|| "unknown".to_string());
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    "unknown".to_string()
+}
+
+fn read_git_head(git: &Path) -> Option<String> {
+    let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    if let Some(refname) = head.strip_prefix("ref: ") {
+        if let Ok(sha) = std::fs::read_to_string(git.join(refname)) {
+            return Some(sha.trim().to_string());
+        }
+        // Ref may only exist packed.
+        let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+        for line in packed.lines() {
+            let line = line.trim();
+            if let Some(sha) = line.strip_suffix(refname) {
+                return Some(sha.trim().to_string());
+            }
+        }
+        return None;
+    }
+    (head.len() == 40).then(|| head.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(mean_s: f64, speedup: f64) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            meta: RunMeta {
+                git_sha: "abc123".into(),
+                crate_version: "0.2.0".into(),
+                device: "A100-80G".into(),
+                peak_tflops: 312.0,
+                mem_bw_gbs: 2039.0,
+                lanes: 2,
+                fast: true,
+                backend: "native+simulated".into(),
+                os: "linux".into(),
+                arch: "x86_64".into(),
+                created_unix: 1_700_000_000,
+            },
+            suites: vec![SuiteReport {
+                name: "table1_llama1b".into(),
+                tags: vec!["table".into(), "simulated".into()],
+                status: SuiteStatus::Ok,
+                detail: String::new(),
+                samples: vec![SampleStats {
+                    name: "e2e".into(),
+                    iters: 5,
+                    mean_s,
+                    median_s: mean_s,
+                    min_s: mean_s * 0.9,
+                    stddev_s: 0.01,
+                }],
+                metrics: vec![
+                    Metric { name: "speedup@131072".into(), value: speedup, better: Better::Higher },
+                    Metric { name: "tokens_per_s".into(), value: 1e6, better: Better::Info },
+                ],
+                notes: vec!["n".into()],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = report(0.123, 2.7);
+        let text = r.to_json().to_json();
+        let back = BenchReport::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn rejects_unknown_schema_version() {
+        let v = r#"{"schema_version": 999, "meta": {}, "suites": []}"#;
+        let parsed = Value::parse(v).unwrap();
+        assert!(BenchReport::from_json(&parsed).is_err());
+    }
+
+    #[test]
+    fn regression_gate_fires_on_slowdown() {
+        // 50% slower sample than baseline: must fail a 15% gate.
+        let baseline = report(0.100, 2.7);
+        let slowed = report(0.150, 2.7);
+        let out = compare(&baseline, &slowed, 1.15);
+        assert!(!out.passed());
+        assert_eq!(out.regressions.len(), 1);
+        assert!(out.regressions[0].what.contains("sample:e2e"));
+        assert!((out.regressions[0].ratio - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_gate_fires_on_speedup_loss() {
+        // Higher-is-better metric dropping 2.7 -> 2.0 is a regression.
+        let baseline = report(0.100, 2.7);
+        let worse = report(0.100, 2.0);
+        let out = compare(&baseline, &worse, 1.15);
+        assert!(!out.passed());
+        assert!(out.regressions[0].what.contains("metric:speedup"));
+    }
+
+    #[test]
+    fn device_mismatch_refuses_to_gate() {
+        let baseline = report(0.100, 2.7);
+        let mut h100 = report(0.100, 2.7);
+        h100.meta.device = "H100-SXM".into();
+        let out = compare(&baseline, &h100, 1.15);
+        assert!(out.incomparable);
+        assert!(!out.passed(), "a device mismatch must fail loudly, not pass vacuously");
+        assert_eq!(out.compared, 0);
+        assert!(out.meta_mismatches[0].contains("device"));
+        // lanes/fast differences only warn.
+        let mut lanes = report(0.100, 2.7);
+        lanes.meta.lanes = 4;
+        lanes.meta.fast = false;
+        let out = compare(&baseline, &lanes, 1.15);
+        assert!(out.passed());
+        assert_eq!(out.meta_mismatches.len(), 2);
+    }
+
+    #[test]
+    fn collapsed_metric_is_a_regression_not_a_pass() {
+        // A higher-is-better metric falling to 0 (or NaN) is the worst
+        // regression there is — it must fail the gate, not skip it.
+        let baseline = report(0.100, 2.7);
+        let dead = report(0.100, 0.0);
+        let out = compare(&baseline, &dead, 1.15);
+        assert!(!out.passed());
+        assert!(out
+            .regressions
+            .iter()
+            .any(|r| r.what.contains("metric:speedup") && r.ratio.is_infinite()));
+
+        let nan = report(f64::NAN, 2.7);
+        let out = compare(&baseline, &nan, 1.15);
+        assert!(!out.passed(), "NaN sample must not pass silently");
+    }
+
+    #[test]
+    fn equal_and_improved_reports_pass() {
+        let baseline = report(0.100, 2.7);
+        assert!(compare(&baseline, &baseline, 1.15).passed());
+        let faster = report(0.080, 3.0);
+        let out = compare(&baseline, &faster, 1.15);
+        assert!(out.passed());
+        assert_eq!(out.improved_or_equal, out.compared);
+    }
+
+    #[test]
+    fn info_metrics_and_missing_suites_never_gate() {
+        let baseline = report(0.100, 2.7);
+        let mut other = report(0.100, 2.7);
+        other.suites[0].name = "renamed".into();
+        other.suites[0].metrics[1].value = 1.0; // Info metric 1e6 -> 1.0
+        let out = compare(&baseline, &other, 1.15);
+        assert!(out.passed());
+        assert_eq!(out.missing_in_current, vec!["table1_llama1b".to_string()]);
+    }
+
+    #[test]
+    fn git_sha_reads_this_repo() {
+        let sha = git_sha();
+        // In a checkout this is a 40-hex sha; elsewhere "unknown".
+        assert!(sha == "unknown" || sha.len() == 40, "{sha}");
+    }
+}

@@ -1,0 +1,989 @@
+//! The registered benchmark suites — every paper figure/table
+//! reproduction and serving benchmark in one place.
+//!
+//! Each suite body is the old hand-rolled bench-binary `main()`,
+//! reshaped over a [`SuiteCtx`]: human tables print exactly as before,
+//! deterministic quantities (modeled seconds, speedups) are recorded as
+//! gated metrics, wallclock measurements as samples, and the old
+//! `assert!`s became `check`s that fail the suite instead of aborting
+//! the whole run. Suites that need the AOT HLO artifacts skip cleanly
+//! when `artifacts/manifest.json` (or PJRT itself) is unavailable —
+//! the report still lists them, with status `skipped` and the reason.
+//!
+//! Simulated suites never skip: when the manifest is absent they fall
+//! back to the built-in paper configs
+//! ([`tables::paper_config`](crate::simulator::tables::paper_config)).
+
+use std::time::Instant;
+
+use crate::bench::registry::{Suite, SuiteCtx};
+use crate::bench::{bench, bench_n, fmt_s, fmt_x, Table};
+use crate::config::{ExecMode, ModelConfig};
+use crate::coordinator::{InferenceEngine, Request, RequestQueue};
+use crate::error::{Error, Result};
+use crate::model::{NativeBackend, Params};
+use crate::runtime::HloBackend;
+use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession};
+use crate::simulator::tables;
+use crate::tensor::{grouped_matmul, matmul, Rng, Tensor};
+
+/// Every registered suite, in paper order. The legacy bench binaries,
+/// `pallas-bench` and the tests all select from this one list.
+pub fn all() -> Vec<Suite> {
+    vec![
+        Suite {
+            name: "fig1_headline",
+            tags: &["fig", "simulated"],
+            about: "Fig. 1: 1B ARMT + diagonal batching vs vanilla LLaMA-1B at 128k",
+            run: fig1_headline,
+        },
+        Suite {
+            name: "fig4_grouped_gemm",
+            tags: &["fig", "simulated", "measured", "native"],
+            about: "Fig. 4: grouped-GEMM throughput vs group size (+CPU analog)",
+            run: fig4_grouped_gemm,
+        },
+        Suite {
+            name: "fig5_attention",
+            tags: &["fig", "simulated"],
+            about: "Fig. 5: attention throughput vs batch size",
+            run: fig5_attention,
+        },
+        Suite {
+            name: "fig6_diag_vs_minibatch",
+            tags: &["fig", "simulated"],
+            about: "Fig. 6: time/segment, diagonal vs mini-batch vs ideal even load",
+            run: fig6_diag_vs_minibatch,
+        },
+        Suite {
+            name: "hotpath",
+            tags: &["perf", "hlo", "measured"],
+            about: "PJRT hot-path microbenchmarks (per-call costs, e2e schedules)",
+            run: hotpath,
+        },
+        Suite {
+            name: "table1_llama1b",
+            tags: &["table", "simulated"],
+            about: "Table 1: LLaMA-3.2-1B exec time, four (seg, mem) configurations",
+            run: table1_llama1b,
+        },
+        Suite {
+            name: "table2_error",
+            tags: &["table", "hlo", "measured"],
+            about: "Table 2: diagonal-vs-sequential logits drift on PJRT",
+            run: table2_error,
+        },
+        Suite {
+            name: "table5_llama3b",
+            tags: &["table", "simulated"],
+            about: "Table 5: llama-3.2-3b exec time vs sequence length",
+            run: table5_llama3b,
+        },
+        Suite {
+            name: "table6_llama8b",
+            tags: &["table", "simulated"],
+            about: "Table 6: llama-3.1-8b exec time vs sequence length",
+            run: table6_llama8b,
+        },
+        Suite {
+            name: "table7_llama160m",
+            tags: &["table", "simulated"],
+            about: "Table 7: llama-160m exec time vs sequence length",
+            run: table7_llama160m,
+        },
+        Suite {
+            name: "table8_vs_llama",
+            tags: &["table", "simulated"],
+            about: "Table 8: diagonal ARMT speedup vs full-attention LLaMA-1B",
+            run: table8_vs_llama,
+        },
+        Suite {
+            name: "table9_vs_armt",
+            tags: &["table", "simulated", "hlo"],
+            about: "Table 9: speedup vs sequential ARMT + measured runtime fallback",
+            run: table9_vs_armt,
+        },
+        Suite {
+            name: "throughput_packed",
+            tags: &["serve", "native", "measured"],
+            about: "Packed wavefront vs serial diagonal, 8 concurrent requests",
+            run: throughput_packed,
+        },
+        Suite {
+            name: "serve_latency",
+            tags: &["serve", "native", "measured"],
+            about: "serve_queue under concurrent synthetic load: p50/p90/p99",
+            run: serve_latency,
+        },
+    ]
+}
+
+/// Expected-invariant check: the paper-shape assertions of the old
+/// bench binaries, as recoverable suite failures.
+fn check(cond: bool, msg: impl Into<String>) -> Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(Error::Bench(msg.into()))
+    }
+}
+
+/// Paper model config: from the manifest when present (source of
+/// truth), else the built-in copy — so simulated suites run with zero
+/// artifacts.
+fn paper_cfg(ctx: &SuiteCtx, name: &str) -> Result<ModelConfig> {
+    if let Some(m) = ctx.manifest() {
+        if let Ok(c) = m.any_config(name) {
+            return Ok(c.clone());
+        }
+    }
+    tables::paper_config(name).ok_or_else(|| Error::Missing(format!("paper config '{name}'")))
+}
+
+// ---------------------------------------------------------------------------
+// Figures
+// ---------------------------------------------------------------------------
+
+/// Fig. 1 headline: 1B ARMT with Diagonal Batching vs vanilla LLaMA-1B —
+/// latency and memory at 128k tokens (paper: 3.3x faster, 167.1x memory
+/// savings on A100, seg 1024).
+fn fig1_headline(ctx: &mut SuiteCtx) -> Result<()> {
+    let base = paper_cfg(ctx, "llama-3.2-1b")?;
+    let dev = ctx.device();
+    let rows = tables::fig1_rows(&base, &dev, &tables::SEQ_LENS);
+
+    let mut t = Table::new(
+        "Fig. 1 — LLaMA-1B: full attention vs ARMT + Diagonal Batching (seg 1024)",
+        &["seq len", "llama (s)", "diag ARMT (s)", "speedup", "memory saving"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.seq_len.to_string(),
+            fmt_s(r.llama_s),
+            fmt_s(r.armt_diag_s),
+            fmt_x(r.speedup),
+            format!("{:.1}x", r.memory_saving),
+        ]);
+    }
+    ctx.table(&t);
+
+    let last = rows.last().unwrap();
+    check(last.seq_len == 131072, "grid must end at 131072")?;
+    check(last.speedup > 1.5, format!("128k speedup {}", last.speedup))?;
+    check(last.memory_saving > 50.0, format!("memory saving {}", last.memory_saving))?;
+    check(rows[0].speedup < 1.0, "short-context crossover must exist")?;
+    ctx.metric_higher("speedup@131072", last.speedup);
+    ctx.metric_higher("memory_saving@131072", last.memory_saving);
+    ctx.metric_lower("armt_diag_s@131072", last.armt_diag_s);
+    ctx.metric_lower("llama_s@131072", last.llama_s);
+    ctx.note(format!(
+        "headline @128k: {} faster, {:.1}x memory (paper: x3.3, 167.1x — same regime)",
+        fmt_x(last.speedup),
+        last.memory_saving
+    ));
+    Ok(())
+}
+
+/// Fig. 4: grouped GEMM throughput scales with group size like batched
+/// GEMM scales with batch size (§4.1) — roofline curves plus a measured
+/// CPU data point documenting why one core cannot show the GPU effect.
+fn fig4_grouped_gemm(ctx: &mut SuiteCtx) -> Result<()> {
+    let dev = ctx.device();
+    let groups = [1usize, 2, 4, 8, 16, 32];
+
+    for (label, key, m, n, k) in [
+        ("LLaMA-1B linear: 1152 x 2048 x 2048", "1b", 1152usize, 2048usize, 2048usize),
+        ("LLaMA-8B linear: 1152 x 4096 x 4096", "8b", 1152, 4096, 4096),
+    ] {
+        let rows = tables::fig4_grouped_gemm_rows(&dev, m, n, k, &groups);
+        let mut t = Table::new(
+            &format!("Fig. 4 — achieved TFLOP/s, {label} [simulated {}]", dev.name),
+            &["group", "grouped GEMM", "batched GEMM"],
+        );
+        for (g, grouped, batched) in &rows {
+            t.row(vec![g.to_string(), format!("{grouped:.1}"), format!("{batched:.1}")]);
+        }
+        ctx.table(&t);
+        // monotone, and grouped tracks batched within 2x from group 4
+        for w in rows.windows(2) {
+            check(w[1].1 >= w[0].1 * 0.98, format!("{key}: non-monotone at group {}", w[1].0))?;
+        }
+        for (g, grouped, batched) in &rows {
+            if *g >= 4 {
+                check(grouped / batched > 0.5, format!("{key}: group {g} falls off batched"))?;
+            }
+        }
+        let (_, grouped32, batched32) = rows.last().unwrap();
+        ctx.metric_higher(format!("grouped_tflops@g32_{key}"), *grouped32);
+        ctx.metric_higher(format!("batched_tflops@g32_{key}"), *batched32);
+    }
+
+    // measured CPU analog (small shapes; 1 core => flat scaling expected)
+    let mut rng = Rng::new(1);
+    let budget = ctx.budget(120);
+    let mut t = Table::new(
+        "Fig. 4 (CPU analog) — in-tree grouped matmul, 64x64x64, wallclock per group member",
+        &["group", "grouped (us/member)", "independent (us/member)"],
+    );
+    for g in [1usize, 2, 4, 8] {
+        let x = Tensor::randn(&[g, 64, 64], 1.0, &mut rng);
+        let w = Tensor::randn(&[g, 64, 64], 1.0, &mut rng);
+        let sg = bench(&format!("grouped g={g}"), budget, || {
+            std::hint::black_box(grouped_matmul(&x, &w));
+        });
+        let xs: Vec<Tensor> = (0..g).map(|i| x.index0(i)).collect();
+        let ws: Vec<Tensor> = (0..g).map(|i| w.index0(i)).collect();
+        let si = bench(&format!("indep g={g}"), budget, || {
+            for i in 0..g {
+                std::hint::black_box(matmul(&xs[i], &ws[i]));
+            }
+        });
+        t.row(vec![
+            g.to_string(),
+            format!("{:.1}", sg.mean_s() * 1e6 / g as f64),
+            format!("{:.1}", si.mean_s() * 1e6 / g as f64),
+        ]);
+        // Info, not samples: this wallclock is machine-dependent and the
+        // documented baseline refresh includes fig* — it must never gate
+        // a CI runner against the refresh machine.
+        ctx.metric_info(format!("grouped_us_per_member@g{g}"), sg.mean_s() * 1e6 / g as f64);
+        ctx.metric_info(format!("indep_us_per_member@g{g}"), si.mean_s() * 1e6 / g as f64);
+    }
+    ctx.table(&t);
+    ctx.note("shape checks passed");
+    Ok(())
+}
+
+/// Fig. 5: attention throughput rises with batch size — diagonal
+/// batching gets the same effect by treating the group as the batch
+/// (§4.2, "our method does not modify the attention layer at all").
+fn fig5_attention(ctx: &mut SuiteCtx) -> Result<()> {
+    let base = paper_cfg(ctx, "llama-3.2-1b")?;
+    let dev = ctx.device();
+    let batches = [1usize, 2, 4, 8, 16, 32];
+
+    for t_len in [640usize, 1152, 2176, 4224] {
+        let rows = tables::fig5_attention_rows(&dev, &base, t_len, &batches);
+        let mut t = Table::new(
+            &format!(
+                "Fig. 5 — attention relative FLOPS vs batch (T = {t_len}) [simulated {}]",
+                dev.name
+            ),
+            &["batch", "relative FLOPS"],
+        );
+        for (b, rel) in &rows {
+            t.row(vec![b.to_string(), format!("{rel:.2}x")]);
+        }
+        ctx.table(&t);
+        check((rows[0].1 - 1.0).abs() < 1e-9, format!("T={t_len}: batch-1 baseline must be 1.0"))?;
+        for w in rows.windows(2) {
+            check(w[1].1 >= w[0].1 * 0.98, format!("T={t_len}: not monotone in batch"))?;
+        }
+    }
+    // small segments leave more headroom: batch-16 gain shrinks with T
+    let small = tables::fig5_attention_rows(&dev, &base, 640, &batches)[4].1;
+    let large = tables::fig5_attention_rows(&dev, &base, 4224, &batches)[4].1;
+    check(
+        small >= large * 0.95,
+        format!("short segments should gain at least as much from batching ({small} vs {large})"),
+    )?;
+    ctx.metric_higher("rel_flops@b16_t640", small);
+    ctx.metric_higher("rel_flops@b16_t4224", large);
+    ctx.note("shape checks passed");
+    Ok(())
+}
+
+/// Fig. 6: time per segment — diagonal batching vs mini-batching of b
+/// independent sequences vs the Ideal Even Load bound, per model.
+fn fig6_diag_vs_minibatch(ctx: &mut SuiteCtx) -> Result<()> {
+    let dev = ctx.device();
+    let batches = [1usize, 2, 4, 8, 16];
+
+    for model in tables::PAPER_MODELS {
+        let base = paper_cfg(ctx, model)?;
+        let rows = tables::fig6_rows(&base, &dev, 1024, 128, 32, &batches);
+        let mut t = Table::new(
+            &format!("Fig. 6 — time per segment, {model} (seg 1024, 32 segments)"),
+            &["batch", "minibatch (s/seq-seg)", "diagonal (s/seg)", "ideal (s/seg)"],
+        );
+        for r in &rows {
+            t.row(vec![
+                r.batch.to_string(),
+                fmt_s(r.minibatch_s),
+                fmt_s(r.diagonal_s),
+                fmt_s(r.ideal_s),
+            ]);
+        }
+        ctx.table(&t);
+
+        let b1 = &rows[0];
+        check(
+            b1.diagonal_s < b1.minibatch_s,
+            format!("{model}: diagonal must beat unbatched sequential per-segment time"),
+        )?;
+        check(b1.ideal_s <= b1.diagonal_s * 1.02, format!("{model}: ideal is the bound"))?;
+        // minibatch per-sequence time improves with batch; once the batch
+        // exceeds L it can pass the L-wide "ideal even load" line (more
+        // parallel work than the diagonal can ever expose), so the bound
+        // only applies while batch <= n_layers.
+        let blast = rows.last().unwrap();
+        check(blast.minibatch_s < b1.minibatch_s, format!("{model}: batching must help"))?;
+        if blast.batch <= base.n_layers {
+            check(blast.minibatch_s >= blast.ideal_s * 0.90, format!("{model}: bound broken"))?;
+        }
+        ctx.metric_lower(format!("diagonal_s_per_seg@{model}"), b1.diagonal_s);
+        ctx.metric_lower(format!("ideal_s_per_seg@{model}"), b1.ideal_s);
+    }
+    ctx.note("shape checks passed");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path microbenchmarks (real PJRT backend)
+// ---------------------------------------------------------------------------
+
+/// Hot-path microbenchmarks on the REAL PJRT backend: per-call cost of
+/// every executable, end-to-end diagonal-vs-sequential wallclock, and
+/// the launch-amortization demonstration on the launch-bound micro
+/// model. Expectations on a 1-core CPU testbed: tiny (compute-bound)
+/// loses wallclock under diagonal; micro (launch-bound) wins — the CPU
+/// analog of the paper's GPU launch amortization.
+fn hotpath(ctx: &mut SuiteCtx) -> Result<()> {
+    let Some(manifest) = ctx.manifest().cloned() else {
+        ctx.skip(format!(
+            "{} not found (run `make artifacts` to build the AOT bundle)",
+            ctx.settings().manifest_path
+        ));
+        return Ok(());
+    };
+
+    let mut loaded_any = false;
+    for model in ["tiny", "tiny_ref", "toy", "micro"] {
+        match HloBackend::load(&manifest, model) {
+            Ok(backend) => {
+                loaded_any = true;
+                hotpath_per_step(ctx, backend, model)?;
+            }
+            Err(e) => ctx.note(format!("{model}: unavailable ({e})")),
+        }
+    }
+    if !loaded_any {
+        ctx.skip("no HLO model loaded (PJRT unavailable — see xla-stub crate docs)");
+        return Ok(());
+    }
+    ctx.note("(tiny vs tiny_ref isolates interpret-mode Pallas overhead: same dims,");
+    ctx.note(" jnp-lowered HLO instead of pallas interpret — the §Perf L2 A/B.)");
+
+    ctx.note("-- end-to-end schedule comparison (PJRT CPU) --");
+    let e2e_iters = ctx.iters(5);
+    hotpath_end_to_end(ctx, &manifest, "tiny", 16, e2e_iters)?;
+    hotpath_end_to_end(ctx, &manifest, "micro", 64, e2e_iters)?;
+
+    // Launch-amortization table on the launch-bound model.
+    let Ok(mut b) = HloBackend::load(&manifest, "micro") else {
+        return Ok(());
+    };
+    let cfg = b.config().clone();
+    let mut t = Table::new(
+        "micro model: diagonal vs sequential wallclock by segment count",
+        &["segments", "diag (ms)", "seq (ms)", "speedup"],
+    );
+    let iters = ctx.iters(3);
+    let mut rng = Rng::new(13);
+    for n_segments in [8usize, 16, 32, 64, 128] {
+        let tokens: Vec<u32> =
+            (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let d = bench_n("d", iters, || {
+            std::hint::black_box(
+                Executor::new(&mut b, ScheduleMode::Diagonal).run(&tokens).unwrap(),
+            );
+        });
+        let s = bench_n("s", iters, || {
+            std::hint::black_box(
+                Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap(),
+            );
+        });
+        t.row(vec![
+            n_segments.to_string(),
+            format!("{:.1}", d.mean_s() * 1e3),
+            format!("{:.1}", s.mean_s() * 1e3),
+            format!("x{:.2}", s.mean_s() / d.mean_s()),
+        ]);
+        if n_segments == 64 {
+            ctx.metric_info("micro_speedup@s64", s.mean_s() / d.mean_s());
+        }
+    }
+    ctx.table(&t);
+    Ok(())
+}
+
+fn hotpath_per_step(ctx: &mut SuiteCtx, mut b: HloBackend, model: &str) -> Result<()> {
+    let cfg = b.config().clone();
+    let l = cfg.n_layers;
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+    let a = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
+    let z = Tensor::zeros(&[l, cfg.phi_dim]);
+    let mask = vec![1.0; l];
+    let x1 = x.index0(0);
+    let a1 = a.index0(0);
+    let z1 = z.index0(0);
+    let toks: Vec<u32> = (0..cfg.seg as u32).collect();
+
+    ctx.note(format!("-- {model}: per-call costs (L = {l}) --"));
+    let step_budget = ctx.budget(400);
+    let aux_budget = ctx.budget(200);
+    let g = bench(&format!("{model}/grouped_step"), step_budget, || {
+        std::hint::black_box(b.grouped_step(&x, &a, &z, &mask).unwrap());
+    });
+    ctx.sample(&g);
+    let s = bench(&format!("{model}/single_step"), step_budget, || {
+        std::hint::black_box(b.single_step(0, &x1, &a1, &z1).unwrap());
+    });
+    ctx.sample(&s);
+    let e = bench(&format!("{model}/embed"), aux_budget, || {
+        std::hint::black_box(b.embed(&toks).unwrap());
+    });
+    ctx.sample(&e);
+    let y = b.embed(&toks)?;
+    let h = bench(&format!("{model}/lm_head"), aux_budget, || {
+        std::hint::black_box(b.lm_head(&y).unwrap());
+    });
+    ctx.sample(&h);
+    ctx.metric_info(format!("grouped_over_single@{model}"), g.mean_s() / s.mean_s());
+    ctx.note(format!(
+        "grouped/single ratio: {:.2} (L = {l}; < L means grouping amortizes overhead)",
+        g.mean_s() / s.mean_s()
+    ));
+    // §Perf counterfactual: what every step would pay without resident
+    // parameter buffers.
+    let up = b.param_upload_cost()?;
+    ctx.note(format!(
+        "param re-upload counterfactual: {up:?}/step avoided ({:.0}% of a grouped step)",
+        100.0 * up.as_secs_f64() / g.mean_s()
+    ));
+    Ok(())
+}
+
+fn hotpath_end_to_end(
+    ctx: &mut SuiteCtx,
+    manifest: &crate::config::Manifest,
+    model: &str,
+    n_segments: usize,
+    iters: usize,
+) -> Result<()> {
+    let Ok(mut b) = HloBackend::load(manifest, model) else {
+        return Ok(());
+    };
+    let cfg = b.config().clone();
+    let mut rng = Rng::new(11);
+    let tokens: Vec<u32> =
+        (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+
+    let d = bench_n(&format!("{model}/e2e diagonal S={n_segments}"), iters, || {
+        std::hint::black_box(
+            Executor::new(&mut b, ScheduleMode::Diagonal).run(&tokens).unwrap(),
+        );
+    });
+    let s = bench_n(&format!("{model}/e2e sequential S={n_segments}"), iters, || {
+        std::hint::black_box(
+            Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap(),
+        );
+    });
+    ctx.sample(&d);
+    ctx.sample(&s);
+    ctx.note(format!(
+        "diagonal speedup: x{:.2}  (launches {} vs {})",
+        s.mean_s() / d.mean_s(),
+        n_segments + cfg.n_layers - 1,
+        n_segments * cfg.n_layers,
+    ));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table 1: LLaMA-3.2-1B ARMT execution time vs sequence length, four
+/// (segment_size, memory_tokens) configurations, roofline model.
+/// Paper shape: speedup grows with length, largest for small segments.
+fn table1_llama1b(ctx: &mut SuiteCtx) -> Result<()> {
+    let base = paper_cfg(ctx, "llama-3.2-1b")?;
+    let dev = ctx.device();
+
+    for (seg, mem) in [(512usize, 128usize), (1024, 128), (2048, 128), (4096, 128)] {
+        let rows = tables::exec_time_rows(&base, &dev, seg, mem, &tables::SEQ_LENS);
+        let mut t = Table::new(
+            &format!("Table 1 — LLama-3.2-1B, configuration ({seg}, {mem}) [simulated {}]", dev.name),
+            &["method", "4096", "8192", "16384", "32768", "65536", "131072"],
+        );
+        t.row(std::iter::once("Llama-3.2-1B".into())
+            .chain(rows.iter().map(|r| fmt_s(r.llama_s))).collect());
+        t.row(std::iter::once("LLama-3.2-1B-ARMT".into())
+            .chain(rows.iter().map(|r| fmt_s(r.armt_seq_s))).collect());
+        t.row(std::iter::once("Diagonal Batching".into())
+            .chain(rows.iter().map(|r| fmt_s(r.armt_diag_s))).collect());
+        t.row(std::iter::once("speedup".into())
+            .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt()))).collect());
+        ctx.table(&t);
+
+        let last = rows.last().unwrap();
+        check(last.speedup_vs_armt() > 1.0, format!("diag must win at 131k (seg {seg})"))?;
+        check(
+            rows[0].speedup_vs_armt() < last.speedup_vs_armt(),
+            "speedup must grow with length",
+        )?;
+        ctx.metric_higher(format!("speedup_vs_armt@seg{seg}@131072"), last.speedup_vs_armt());
+        ctx.metric_lower(format!("armt_diag_s@seg{seg}@131072"), last.armt_diag_s);
+    }
+    // paper: smaller segments benefit more
+    let s512 = tables::exec_time_rows(&base, &dev, 512, 128, &[131072])[0].speedup_vs_armt();
+    let s4096 = tables::exec_time_rows(&base, &dev, 4096, 128, &[131072])[0].speedup_vs_armt();
+    check(s512 > s4096, "seg 512 must out-speedup seg 4096")?;
+    ctx.note(format!(
+        "shape checks passed: speedup grows with length; seg 512 ({}) > seg 4096 ({})",
+        fmt_x(s512),
+        fmt_x(s4096)
+    ));
+    Ok(())
+}
+
+/// Table 2: error accumulation of Diagonal Batching vs sequential ARMT —
+/// MEASURED on the real PJRT artifacts (not simulated). Paper bound:
+/// relative logits drift < 2% out to 32 segments.
+fn table2_error(ctx: &mut SuiteCtx) -> Result<()> {
+    let Some(manifest) = ctx.manifest().cloned() else {
+        ctx.skip(format!(
+            "{} not found (run `make artifacts` to build the AOT bundle)",
+            ctx.settings().manifest_path
+        ));
+        return Ok(());
+    };
+    let mut hlo = match HloBackend::load(&manifest, "tiny") {
+        Ok(b) => b,
+        Err(e) => {
+            ctx.skip(format!("HLO backend unavailable: {e}"));
+            return Ok(());
+        }
+    };
+    let cfg = hlo.config().clone();
+    let params = match Params::load(&manifest, "tiny") {
+        Ok(p) => p,
+        Err(e) => {
+            ctx.skip(format!("params.bin unavailable: {e}"));
+            return Ok(());
+        }
+    };
+    let mut native = NativeBackend::new(cfg.clone(), params);
+
+    let mut t = Table::new(
+        "Table 2 — relative logits error (%) vs number of segments (tiny model, PJRT CPU)",
+        &["segments", "diag vs seq (HLO)", "HLO vs native oracle", "argmax agreement %"],
+    );
+
+    let seg_counts: &[usize] =
+        if ctx.settings().fast { &[1, 2, 4, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    let mut rng = Rng::new(2024);
+    let mut worst_rel = 0.0f64;
+    for &n_segments in seg_counts {
+        let tokens: Vec<u32> =
+            (0..n_segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let d = Executor::new(&mut hlo, ScheduleMode::Diagonal).run(&tokens)?;
+        let s = Executor::new(&mut hlo, ScheduleMode::Sequential).run(&tokens)?;
+        let n = Executor::new(&mut native, ScheduleMode::Sequential).run(&tokens)?;
+        let ds = d.stacked()?;
+        let ss = s.stacked()?;
+        let ns = n.stacked()?;
+        let rel_hlo = ds.rel_error(&ss) as f64;
+        let rel_native = ds.rel_error(&ns) as f64;
+        let (ad, asq) = (ds.argmax_rows(), ss.argmax_rows());
+        let agree =
+            ad.iter().zip(&asq).filter(|(x, y)| x == y).count() as f64 / ad.len() as f64;
+        t.row(vec![
+            n_segments.to_string(),
+            format!("{:.5}", rel_hlo * 100.0),
+            format!("{:.5}", rel_native * 100.0),
+            format!("{:.2}", agree * 100.0),
+        ]);
+        check(rel_hlo < 0.02, format!("paper bound: < 2% at S={n_segments}"))?;
+        check(agree > 0.99, format!("argmax agreement at S={n_segments}"))?;
+        worst_rel = worst_rel.max(rel_hlo);
+    }
+    ctx.table(&t);
+    ctx.metric_info("worst_rel_err_pct", worst_rel * 100.0);
+    ctx.note("all rows under the paper's 2% bound (CPU-PJRT reduction orders are");
+    ctx.note("deterministic, so drift is far below the paper's CUDA measurement).");
+    Ok(())
+}
+
+/// Shared body of Tables 5/6/7: one model's exec-time table at seg 1024
+/// and 4096, with the "diag wins at long contexts" shape checks.
+fn model_exec_table(
+    ctx: &mut SuiteCtx,
+    table_label: &str,
+    model: &str,
+    min_speedup_131k: f64,
+) -> Result<()> {
+    let base = paper_cfg(ctx, model)?;
+    let dev = ctx.device();
+    for seg in [1024usize, 4096] {
+        let rows = tables::exec_time_rows(&base, &dev, seg, 128, &tables::SEQ_LENS);
+        let mut t = Table::new(
+            &format!("{table_label} — {model}, configuration ({seg}, 128) [simulated {}]", dev.name),
+            &["method", "4096", "8192", "16384", "32768", "65536", "131072"],
+        );
+        t.row(std::iter::once(format!("{model} (full attn)"))
+            .chain(rows.iter().map(|r| fmt_s(r.llama_s))).collect());
+        t.row(std::iter::once("ARMT sequential".into())
+            .chain(rows.iter().map(|r| fmt_s(r.armt_seq_s))).collect());
+        t.row(std::iter::once("Diagonal Batching".into())
+            .chain(rows.iter().map(|r| fmt_s(r.armt_diag_s))).collect());
+        t.row(std::iter::once("speedup".into())
+            .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt()))).collect());
+        ctx.table(&t);
+        let last = rows.last().unwrap();
+        check(
+            last.speedup_vs_armt() > min_speedup_131k,
+            format!("diag speedup at 131k (seg {seg}): {}", last.speedup_vs_armt()),
+        )?;
+        check(
+            rows[0].speedup_vs_armt() <= last.speedup_vs_armt() + 1e-9,
+            format!("{model}: speedup must not shrink with length (seg {seg})"),
+        )?;
+        ctx.metric_higher(format!("speedup_vs_armt@seg{seg}@131072"), last.speedup_vs_armt());
+        ctx.metric_lower(format!("armt_diag_s@seg{seg}@131072"), last.armt_diag_s);
+    }
+    ctx.note("shape checks passed");
+    Ok(())
+}
+
+fn table5_llama3b(ctx: &mut SuiteCtx) -> Result<()> {
+    model_exec_table(ctx, "Table 5", "llama-3.2-3b", 1.05)
+}
+
+fn table6_llama8b(ctx: &mut SuiteCtx) -> Result<()> {
+    model_exec_table(ctx, "Table 6", "llama-3.1-8b", 1.02)
+}
+
+fn table7_llama160m(ctx: &mut SuiteCtx) -> Result<()> {
+    model_exec_table(ctx, "Table 7", "llama-160m", 1.3)
+}
+
+/// Table 8: Diagonal-Batching ARMT speedup over vanilla full-attention
+/// LLaMA-3.2-1B. Paper shape: loses/ties at short lengths, wins
+/// increasingly at long lengths.
+fn table8_vs_llama(ctx: &mut SuiteCtx) -> Result<()> {
+    let base = paper_cfg(ctx, "llama-3.2-1b")?;
+    let dev = ctx.device();
+
+    let mut t = Table::new(
+        "Table 8 — Diagonal Batching speedup vs LLama-3.2-1B (full attention)",
+        &["configuration", "4096", "8192", "16384", "32768", "65536", "131072"],
+    );
+    let mut growth_ok = true;
+    let mut long_ctx_win = false;
+    for seg in [512usize, 1024, 2048, 4096] {
+        let rows = tables::exec_time_rows(&base, &dev, seg, 128, &tables::SEQ_LENS);
+        t.row(
+            std::iter::once(format!("({seg}, 128)"))
+                .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_llama())))
+                .collect(),
+        );
+        let sp: Vec<f64> = rows.iter().map(|r| r.speedup_vs_llama()).collect();
+        growth_ok &= sp.windows(2).all(|w| w[1] >= w[0] * 0.98);
+        long_ctx_win |= *sp.last().unwrap() > 1.5;
+        ctx.metric_higher(format!("speedup_vs_llama@seg{seg}@131072"), *sp.last().unwrap());
+    }
+    ctx.table(&t);
+    check(growth_ok, "speedup vs llama must grow with length")?;
+    check(long_ctx_win, "ARMT must clearly beat full attention at 131k")?;
+    ctx.note("shape checks passed: monotone growth, long-context win");
+    Ok(())
+}
+
+/// Table 9: Diagonal-Batching speedup over sequential ARMT, plus the
+/// caption's runtime-fallback demonstration, measured on the PJRT CPU
+/// backend when artifacts are available.
+fn table9_vs_armt(ctx: &mut SuiteCtx) -> Result<()> {
+    let base = paper_cfg(ctx, "llama-3.2-1b")?;
+    let dev = ctx.device();
+
+    let mut t = Table::new(
+        "Table 9 — Diagonal Batching speedup vs sequential ARMT (LLama-3.2-1B)",
+        &["configuration", "4096", "8192", "16384", "32768", "65536", "131072"],
+    );
+    for seg in [512usize, 1024, 2048, 4096] {
+        let rows = tables::exec_time_rows(&base, &dev, seg, 128, &tables::SEQ_LENS);
+        t.row(
+            std::iter::once(format!("({seg}, 128)"))
+                .chain(rows.iter().map(|r| fmt_x(r.speedup_vs_armt())))
+                .collect(),
+        );
+        ctx.metric_higher(
+            format!("speedup_vs_armt@seg{seg}@131072"),
+            rows.last().unwrap().speedup_vs_armt(),
+        );
+    }
+    ctx.table(&t);
+
+    // ---- measured fallback policy on the real backend --------------------
+    let measured = ctx.manifest().cloned().and_then(|m| HloBackend::load(&m, "micro").ok());
+    let Some(backend) = measured else {
+        ctx.note("fallback policy check skipped: micro HLO artifacts unavailable");
+        return Ok(());
+    };
+    ctx.note("fallback policy (measured, micro model on PJRT CPU):");
+    let mut engine = InferenceEngine::new(backend, ExecMode::Auto);
+    let cal = engine.calibrate(ctx.iters(5))?;
+    ctx.note(format!(
+        "  calibrated: grouped {:.3} ms, single {:.3} ms, crossover {} segments",
+        cal.grouped_step_s * 1e3,
+        cal.single_step_s * 1e3,
+        cal.crossover_segments()
+    ));
+    let seg = engine.config().seg;
+    let vocab = engine.config().vocab as u32;
+    for n_segments in [1usize, 2, 64] {
+        let tokens: Vec<u32> = (0..n_segments * seg).map(|i| i as u32 % vocab).collect();
+        let resp = engine.process(&Request::new(n_segments as u64, tokens))?;
+        ctx.note(format!(
+            "  {n_segments:>3} segments -> {} ({:?})",
+            resp.mode_used, resp.stats.wall
+        ));
+        if n_segments >= 64 {
+            check(resp.mode_used == ExecMode::Diagonal, "long request must go diagonal")?;
+        }
+    }
+    ctx.note("shape checks passed");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Serving
+// ---------------------------------------------------------------------------
+
+/// Tiny native-backend model for the serving suites (no artifacts
+/// needed — the quantity under test is the scheduler's utilization and
+/// the engine's latency distribution, not model quality).
+fn serving_config() -> ModelConfig {
+    ModelConfig {
+        name: "serve-bench".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 4,
+        n_heads: 2,
+        d_ff: 48,
+        seg: 8,
+        mem: 4,
+        k_assoc: 8,
+        dpfp_nu: 3,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 16,
+        phi_dim: 48,
+        seg_total: 12,
+    }
+}
+
+struct PackedRow {
+    label: String,
+    stats: RunStats,
+    wall_s: f64,
+    tokens: usize,
+}
+
+/// Packed-wavefront serving throughput: 8 concurrent short requests
+/// through one `WavefrontSession` vs the same requests run serially,
+/// each as its own diagonal wavefront. Native backend only; the
+/// quantity under test is the *scheduler's* utilization (launches, mean
+/// group, occupancy) — on one CPU core wallclock is flat either way,
+/// which the table makes visible rather than hiding.
+fn throughput_packed(ctx: &mut SuiteCtx) -> Result<()> {
+    let cfg = serving_config();
+    let n_requests = 8;
+    let segments = 6;
+    let mut rng = Rng::new(2024);
+    let reqs: Vec<Vec<u32>> = (0..n_requests)
+        .map(|_| (0..segments * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+
+    let serial = {
+        let mut backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, 7));
+        let t0 = Instant::now();
+        let mut agg = RunStats { mode_diagonal: true, ..RunStats::default() };
+        for toks in &reqs {
+            let out = Executor::new(&mut backend, ScheduleMode::Diagonal).run(toks)?;
+            agg.segments += out.stats.segments;
+            agg.launches += out.stats.launches;
+            agg.cells += out.stats.cells;
+            agg.slot_steps += out.stats.slot_steps;
+            agg.padded_cells += out.stats.padded_cells;
+            agg.tokens += out.stats.tokens;
+        }
+        PackedRow {
+            label: "serial per-request diagonal".into(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            tokens: agg.tokens,
+            stats: agg,
+        }
+    };
+
+    let packed = |lanes: usize| -> Result<PackedRow> {
+        let mut backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, 7));
+        let mut session = WavefrontSession::new(cfg.clone(), lanes);
+        let t0 = Instant::now();
+        for (i, toks) in reqs.iter().enumerate() {
+            session.submit(i as u64, toks)?;
+        }
+        session.run_to_completion(&mut backend)?;
+        check(session.drain_completed().len() == reqs.len(), "all requests must complete")?;
+        let stats = session.stats();
+        Ok(PackedRow {
+            label: format!("packed session, {lanes} lane{}", if lanes == 1 { "" } else { "s" }),
+            wall_s: t0.elapsed().as_secs_f64(),
+            tokens: stats.tokens,
+            stats,
+        })
+    };
+
+    let mut rows = vec![serial];
+    for lanes in [1usize, 2, 4] {
+        rows.push(packed(lanes)?);
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "{n_requests} concurrent requests x {segments} segments (L = {}): \
+             packed wavefront vs serial diagonal",
+            cfg.n_layers
+        ),
+        &[
+            "schedule",
+            "launches",
+            "mean group",
+            "padded cells",
+            "occupancy",
+            "padded/request",
+            "tokens/s",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            r.stats.launches.to_string(),
+            format!("{:.2}", r.stats.mean_group()),
+            r.stats.padded_cells.to_string(),
+            format!("{:.3}", r.stats.occupancy()),
+            format!("{:.1}", r.stats.padded_cells as f64 / n_requests as f64),
+            format!("{:.0}", r.tokens as f64 / r.wall_s),
+        ]);
+    }
+    ctx.table(&t);
+
+    // Acceptance shape: packing >= 2 concurrent requests beats serial
+    // per-request diagonal on mean group / padded cells per request.
+    let serial = &rows[0];
+    for packed_row in &rows[1..] {
+        check(
+            packed_row.stats.mean_group() > serial.stats.mean_group(),
+            format!(
+                "{}: mean group {:.3} must beat serial {:.3}",
+                packed_row.label,
+                packed_row.stats.mean_group(),
+                serial.stats.mean_group()
+            ),
+        )?;
+        check(
+            packed_row.stats.padded_cells < serial.stats.padded_cells,
+            format!(
+                "{}: padded {} must be below serial {}",
+                packed_row.label, packed_row.stats.padded_cells, serial.stats.padded_cells
+            ),
+        )?;
+        check(packed_row.stats.cells == serial.stats.cells, "same work either way")?;
+    }
+    let best = rows.last().unwrap();
+    ctx.metric_higher("mean_group@lanes4", best.stats.mean_group());
+    ctx.metric_higher("occupancy@lanes4", best.stats.occupancy());
+    ctx.metric_info("tokens_per_s@lanes4", best.tokens as f64 / best.wall_s);
+    ctx.note("OK: cross-request packing raised mean group and cut padded cells per request");
+    Ok(())
+}
+
+/// `serve_queue` under concurrent synthetic load: drives the
+/// continuous-batching drain loop with N mixed-length requests on the
+/// native backend and reports the engine's latency percentiles
+/// (p50/p90/p99 — the same numbers the server exports via
+/// `{"cmd": "stats"}`) plus the aggregate utilization counters.
+fn serve_latency(ctx: &mut SuiteCtx) -> Result<()> {
+    let cfg = serving_config();
+    let lanes = ctx.settings().lanes.max(1);
+    let n_requests: u64 = if ctx.settings().fast { 16 } else { 48 };
+
+    let queue: RequestQueue<(Request, u64)> = RequestQueue::new(n_requests as usize);
+    let mut total_tokens = 0usize;
+    for i in 0..n_requests {
+        // Mixed lengths, 1..=6 segments, so short requests overtake long
+        // ones and ramps overlap.
+        let segs = 1 + (i as usize % 6);
+        let tokens: Vec<u32> =
+            (0..(segs * cfg.seg) as u32).map(|t| (t * 7 + i as u32) % cfg.vocab as u32).collect();
+        total_tokens += tokens.len();
+        queue.push((Request::new(i, tokens), i))?;
+    }
+    queue.close();
+
+    let backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, 29));
+    let mut engine =
+        InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(lanes);
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let t0 = Instant::now();
+    engine.serve_queue(&queue, |_ticket, resp| match resp {
+        Ok(_) => completed += 1,
+        Err(_) => failed += 1,
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    check(failed == 0, format!("{failed} requests failed"))?;
+    check(completed == n_requests, format!("completed {completed}/{n_requests}"))?;
+
+    let stats = &engine.stats;
+    let p50 = stats.latency.quantile(0.5);
+    let p90 = stats.latency.quantile(0.9);
+    let p99 = stats.latency.quantile(0.99);
+    check(p50 <= p90 && p90 <= p99, "latency percentiles must be monotone")?;
+    check(stats.packed_requests.get() == n_requests, "every request must pack")?;
+
+    let mut t = Table::new(
+        &format!("serve_queue, {n_requests} concurrent requests, {lanes} lane(s)"),
+        &["quantity", "value"],
+    );
+    t.row(vec!["requests".into(), stats.requests.get().to_string()]);
+    t.row(vec!["launches".into(), stats.launches.get().to_string()]);
+    t.row(vec!["mean group".into(), format!("{:.2}", stats.mean_group())]);
+    t.row(vec!["occupancy".into(), format!("{:.3}", stats.occupancy.value())]);
+    t.row(vec!["padded cells".into(), stats.padded_cells().to_string()]);
+    t.row(vec!["latency p50".into(), format!("{:.3?}", p50)]);
+    t.row(vec!["latency p90".into(), format!("{:.3?}", p90)]);
+    t.row(vec!["latency p99".into(), format!("{:.3?}", p99)]);
+    t.row(vec!["tokens/s".into(), format!("{:.0}", total_tokens as f64 / wall_s)]);
+    ctx.table(&t);
+
+    ctx.metric_higher("mean_group", stats.mean_group());
+    ctx.metric_higher("occupancy", stats.occupancy.value());
+    ctx.metric_info("latency_ms_p50", p50.as_secs_f64() * 1e3);
+    ctx.metric_info("latency_ms_p90", p90.as_secs_f64() * 1e3);
+    ctx.metric_info("latency_ms_p99", p99.as_secs_f64() * 1e3);
+    ctx.metric_info("latency_ms_mean", stats.latency.mean().as_secs_f64() * 1e3);
+    ctx.metric_info("tokens_per_s", total_tokens as f64 / wall_s);
+    ctx.note(format!(
+        "OK: {completed} requests served through one packed wavefront \
+         (mean group {:.2}, occupancy {:.3})",
+        stats.mean_group(),
+        stats.occupancy.value()
+    ));
+    Ok(())
+}

@@ -121,6 +121,7 @@ impl EngineStats {
             ("occupancy", Value::Num(occupancy)),
             ("latency_ms_mean", Value::Num(self.latency.mean().as_secs_f64() * 1e3)),
             ("latency_ms_p50", Value::Num(self.latency.quantile(0.5).as_secs_f64() * 1e3)),
+            ("latency_ms_p90", Value::Num(self.latency.quantile(0.9).as_secs_f64() * 1e3)),
             ("latency_ms_p99", Value::Num(self.latency.quantile(0.99).as_secs_f64() * 1e3)),
         ])
     }
@@ -332,6 +333,37 @@ impl<B: StepBackend> InferenceEngine<B> {
     /// polled non-blockingly while requests are in flight and blockingly
     /// when the wavefront is empty. Returns when the queue is closed and
     /// everything in flight has completed.
+    ///
+    /// # Examples
+    ///
+    /// Drain a burst of requests through one packed wavefront (the
+    /// ticket type `T` is whatever the caller needs to route replies —
+    /// the TCP server uses an `mpsc::Sender`, this example an index):
+    ///
+    /// ```no_run
+    /// use diagonal_batching::config::{ExecMode, Manifest};
+    /// use diagonal_batching::coordinator::{InferenceEngine, Request, RequestQueue};
+    /// use diagonal_batching::model::{NativeBackend, Params};
+    ///
+    /// let manifest = Manifest::load("artifacts/manifest.json").unwrap();
+    /// let entry = manifest.model("tiny").unwrap();
+    /// let backend =
+    ///     NativeBackend::new(entry.config.clone(), Params::load(&manifest, "tiny").unwrap());
+    /// let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
+    ///
+    /// let queue: RequestQueue<(Request, usize)> = RequestQueue::new(8);
+    /// for i in 0..4u64 {
+    ///     let tokens: Vec<u32> = (0..128).map(|t| t % 100).collect();
+    ///     queue.push((Request::new(i, tokens), i as usize)).unwrap();
+    /// }
+    /// queue.close(); // a live server keeps pushing instead
+    /// engine.serve_queue(&queue, |ticket, resp| {
+    ///     println!("request #{ticket}: {:?}", resp.map(|r| r.stats.launches));
+    /// }).unwrap();
+    /// // p50/p90/p99 of everything served, as `{"cmd": "stats"}` reports:
+    /// let stats = engine.stats_handle();
+    /// println!("p99 {:?}", stats.latency.quantile(0.99));
+    /// ```
     pub fn serve_queue<T, F>(
         &mut self,
         queue: &RequestQueue<(Request, T)>,

@@ -28,6 +28,10 @@ pub enum Error {
     Schedule(String),
     /// Request-level failure (empty input, over limit, queue closed).
     Request(String),
+    /// Benchmark harness failure: a suite's expected-invariant check did
+    /// not hold (the paper-shape assertions), or a report/baseline could
+    /// not be read or compared.
+    Bench(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -45,6 +49,7 @@ impl fmt::Display for Error {
             Error::Config(msg) => write!(f, "config: {msg}"),
             Error::Schedule(msg) => write!(f, "schedule invariant violated: {msg}"),
             Error::Request(msg) => write!(f, "request: {msg}"),
+            Error::Bench(msg) => write!(f, "bench: {msg}"),
         }
     }
 }

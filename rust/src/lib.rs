@@ -56,6 +56,29 @@
 //! baseline ARMT loop). For serving, `coordinator::InferenceEngine::serve_queue`
 //! drains a bounded request queue into one long-lived session
 //! continuously — that is what [`server`] runs.
+//!
+//! ## Serving
+//!
+//! `diagonal-batching serve --addr HOST:PORT --lanes N` starts the TCP
+//! JSON-lines server. `--lanes N` sets the wavefront's slot-lane width
+//! `B`: up to `N` concurrent requests batch into every grouped launch
+//! on the native backend (keep `N = 1` on the current single-lane HLO
+//! artifacts; stream packing still fills ramp bubbles there). Clients
+//! send one JSON object per line; besides inference requests the
+//! protocol has `{"cmd": "ping"}`, `{"cmd": "shutdown"}` and
+//! `{"cmd": "stats"}`, which returns the live [`coordinator::EngineStats`]
+//! snapshot — request/launch counters, `mean_group`, `occupancy`,
+//! `padded_cells` and `latency_ms_{mean,p50,p90,p99}` (see [`server`]
+//! for the exact shapes).
+//!
+//! ## Benchmarks
+//!
+//! Every paper figure/table reproduction is a registered suite in
+//! [`bench::suites`]; `diagonal-batching bench --suite 'fig*' --json
+//! BENCH_diag.json` runs a glob of suites and writes the versioned
+//! machine-readable report, and `--compare BENCH_baseline.json
+//! --max-regression 1.15` turns it into a regression gate. See
+//! `BENCHMARKS.md` and `ARCHITECTURE.md` at the repository root.
 
 pub mod babilong;
 pub mod config;

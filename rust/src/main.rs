@@ -4,6 +4,8 @@
 //! diagonal-batching serve  [--model tiny] [--mode diagonal] [--addr HOST:PORT]
 //! diagonal-batching run    [--model tiny] [--mode diagonal|seq|full|auto]
 //!                          [--tokens N] [--backend hlo|native] [--compare true]
+//! diagonal-batching bench  [--suite GLOB] [--json PATH] [--compare BASELINE]
+//!                          [--max-regression 1.15] [--fast true] [--list true]
 //! diagonal-batching tables [--device a100|h100]     # regenerate paper tables
 //! diagonal-batching babilong [--task qa1|qa2] [--len N] [--episodes N]
 //! diagonal-batching info   [--model tiny]           # artifact inventory
@@ -85,6 +87,7 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg),
         "run" => cmd_run(&cfg, &flags),
+        "bench" => cmd_bench(&cfg, &flags),
         "tables" => cmd_tables(&cfg, &flags),
         "babilong" => cmd_babilong(&cfg, &flags),
         "info" => cmd_info(&cfg),
@@ -101,7 +104,7 @@ fn print_usage() {
         "diagonal-batching — Diagonal Batching for Recurrent Memory Transformers
 
 USAGE:
-  diagonal-batching <serve|run|tables|babilong|info> [--flags]
+  diagonal-batching <serve|run|bench|tables|babilong|info> [--flags]
 
 COMMON FLAGS:
   --manifest PATH   artifacts/manifest.json
@@ -119,6 +122,13 @@ SUBCOMMANDS:
                                              keep N=1 there (stream packing still
                                              fills ramp bubbles at N=1)
   run       --tokens N --compare true        one forward pass (+drift check)
+  bench     --suite GLOB --json PATH         the pallas-bench harness: run the
+            --compare BASELINE               registered suites matching GLOB
+            --max-regression 1.15            (name or tag; e.g. 'fig*', 'serve',
+            --fast true --device a100|h100   'fig*,table*'), write the versioned
+            --list true                      BENCH_*.json report, and optionally
+                                             gate against a baseline report
+                                             (nonzero exit on regressions)
   tables    --device a100|h100               regenerate the paper tables
   babilong  --task qa1|qa2 --len N --episodes N
   info                                       print artifact inventory"
@@ -216,6 +226,105 @@ fn cmd_run(
             s.stats.wall,
             worst * 100.0
         );
+    }
+    Ok(())
+}
+
+/// The `pallas-bench` harness: run registered suites in-process, emit
+/// the machine-readable `BENCH_*.json` report alongside the human
+/// tables, and optionally gate against a baseline report.
+fn cmd_bench(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use diagonal_batching::bench::{self, BenchSettings, SuiteStatus};
+
+    if flags.get("list").map(|s| s.parse()).transpose()?.unwrap_or(false) {
+        println!("{:<24} {:<40} tags", "suite", "description");
+        for s in diagonal_batching::bench::suites::all() {
+            println!("{:<24} {:<40} {}", s.name, s.about, s.tags.join(","));
+        }
+        return Ok(());
+    }
+
+    let pattern = flags.get("suite").cloned().unwrap_or_else(|| "*".to_string());
+    let settings = BenchSettings {
+        manifest_path: cfg.manifest.clone(),
+        device: flags.get("device").cloned().unwrap_or_else(|| "a100".to_string()),
+        fast: flags.get("fast").map(|s| s.parse()).transpose()?.unwrap_or(false),
+        // The serving suites need >= 2 lanes to show packing; honor an
+        // explicit --lanes, default to 2 otherwise.
+        lanes: if flags.contains_key("lanes") { cfg.lanes } else { 2 },
+    };
+    let report = bench::run_matching(&pattern, &settings);
+    if report.suites.is_empty() {
+        return Err(format!("no registered suite matches '{pattern}' (try --list true)").into());
+    }
+
+    println!("\n==== summary ({}, sha {}) ====", report.meta.device, report.meta.git_sha);
+    for s in &report.suites {
+        let extra = match s.status {
+            SuiteStatus::Ok => format!("{} samples, {} metrics", s.samples.len(), s.metrics.len()),
+            _ => s.detail.clone(),
+        };
+        println!("{:<24} {:<8} {extra}", s.name, s.status.as_str());
+    }
+
+    if let Some(path) = flags.get("json") {
+        report.save(path)?;
+        println!("\nwrote {path}");
+    }
+
+    if let Some(baseline_path) = flags.get("compare") {
+        let max_ratio: f64 =
+            flags.get("max-regression").map(|s| s.parse()).transpose()?.unwrap_or(1.15);
+        let baseline = diagonal_batching::bench::BenchReport::load(baseline_path)?;
+        let outcome = bench::compare(&baseline, &report, max_ratio);
+        println!(
+            "\ncompare vs {baseline_path} (max ratio {max_ratio}): \
+             {} gated quantities, {} improved-or-equal, {} regressions",
+            outcome.compared,
+            outcome.improved_or_equal,
+            outcome.regressions.len()
+        );
+        for m in &outcome.meta_mismatches {
+            println!("  warning: run metadata mismatch — {m}");
+        }
+        for m in &outcome.missing_in_current {
+            println!("  warning: baseline entry not in this run: {m}");
+        }
+        for r in &outcome.regressions {
+            println!(
+                "  REGRESSION {}/{}: {:.6} -> {:.6} ({:.1}% worse)",
+                r.suite,
+                r.what,
+                r.baseline,
+                r.current,
+                (r.ratio - 1.0) * 100.0
+            );
+        }
+        if !outcome.passed() {
+            let why = if outcome.incomparable {
+                format!("baseline incomparable: {}", outcome.meta_mismatches.join("; "))
+            } else {
+                format!(
+                    "{} benchmark regression(s) beyond x{max_ratio}",
+                    outcome.regressions.len()
+                )
+            };
+            return Err(why.into());
+        }
+        println!("regression gate passed");
+    }
+
+    let failed: Vec<&str> = report
+        .suites
+        .iter()
+        .filter(|s| s.status == SuiteStatus::Failed)
+        .map(|s| s.name.as_str())
+        .collect();
+    if !failed.is_empty() {
+        return Err(format!("suite invariant failures: {}", failed.join(", ")).into());
     }
     Ok(())
 }

@@ -77,6 +77,26 @@ impl Ratio {
 }
 
 /// Log-scaled latency histogram: buckets at 1us * 2^i, i in 0..32.
+///
+/// This is what backs the serving latency percentiles — the engine
+/// observes per-request latency into
+/// [`EngineStats::latency`](crate::coordinator::EngineStats), and the
+/// server's `{"cmd": "stats"}` reply exports
+/// `latency_ms_{mean,p50,p90,p99}` from it.
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use diagonal_batching::metrics::Histogram;
+///
+/// let h = Histogram::new();
+/// h.observe(Duration::from_micros(250));
+/// // Quantiles report the upper edge of the containing power-of-two
+/// // bucket: coarse (within 2x), but allocation- and lock-free.
+/// assert!(h.quantile(0.5) >= Duration::from_micros(250));
+/// assert!(h.quantile(0.99) >= h.quantile(0.5));
+/// ```
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,

@@ -75,6 +75,36 @@ pub struct SessionOutput {
 }
 
 /// Persistent multi-request diagonal wavefront over `L x B` slots.
+///
+/// # Examples
+///
+/// Pack two requests into a single-lane wavefront: the second request's
+/// ramp-up fills the first one's ramp-down bubbles, and each request's
+/// logits stay bit-identical to running it alone:
+///
+/// ```no_run
+/// use diagonal_batching::config::Manifest;
+/// use diagonal_batching::model::{NativeBackend, Params};
+/// use diagonal_batching::scheduler::WavefrontSession;
+///
+/// let manifest = Manifest::load("artifacts/manifest.json").unwrap();
+/// let entry = manifest.model("tiny").unwrap();
+/// let mut backend =
+///     NativeBackend::new(entry.config.clone(), Params::load(&manifest, "tiny").unwrap());
+///
+/// let mut session = WavefrontSession::new(entry.config.clone(), 1);
+/// session.submit(1, &[3, 1, 4, 1, 5, 9, 2, 6]).unwrap();
+/// session.submit(2, &(0..1024).map(|i| i % 100).collect::<Vec<u32>>()).unwrap();
+/// // Step manually (a server admits new requests between steps)...
+/// while session.step(&mut backend).unwrap() {
+///     if let Some(done) = session.pop_completed() {
+///         println!("request {} finished: {} segments", done.id, done.logits.len());
+///     }
+/// }
+/// // ...or drain in one call: session.run_to_completion(&mut backend).
+/// let stats = session.stats();
+/// println!("mean group {:.2}, occupancy {:.2}", stats.mean_group(), stats.occupancy());
+/// ```
 pub struct WavefrontSession {
     cfg: ModelConfig,
     lanes: usize,

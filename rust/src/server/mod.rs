@@ -3,13 +3,19 @@
 //! Wire protocol (one JSON object per line):
 //!
 //! ```text
-//! -> {"id": 1, "tokens": [3, 17, ...], "mode": "diagonal"?}
+//! -> {"id": 1, "tokens": [3, 17, ...], "mode": "diagonal"?, "want_logits": true?}
 //! <- {"id": 1, "greedy_tail": [...], "mode": "diagonal",
 //!     "latency_ms": 12.3, "segments": 4, "launches": 7, "tokens": 128,
-//!     "mean_group": 2.4, "padded_cells": 6, "occupancy": 0.83}
+//!     "mean_group": 2.4, "cells": 12, "padded_cells": 6, "occupancy": 0.83}
 //! -> {"cmd": "stats"}
-//! <- {"requests": 10, "diagonal_runs": 9, "mean_group": 2.7,
-//!     "padded_cells": 12, "occupancy": 0.9, ...}
+//! <- {"requests": 10, "rejected": 0, "diagonal_runs": 9, "sequential_runs": 1,
+//!     "full_attn_runs": 0, "packed_requests": 9, "tokens": 1280,
+//!     "launches": 63, "active_cells": 151, "slot_steps": 189,
+//!     "padded_cells": 38, "mean_group": 2.4, "occupancy": 0.8,
+//!     "latency_ms_mean": 10.5, "latency_ms_p50": 8.2,
+//!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8}
+//! -> {"cmd": "ping"}
+//! <- {"ok": true}
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
@@ -303,6 +309,8 @@ mod tests {
             "padded_cells",
             "occupancy",
             "latency_ms_p50",
+            "latency_ms_p90",
+            "latency_ms_p99",
         ] {
             assert!(stats.get(field).is_some(), "missing stats field {field}");
         }

@@ -12,6 +12,51 @@ use crate::scheduler::Schedule;
 /// The paper's sequence-length grid (Tables 1, 5-9).
 pub const SEQ_LENS: [usize; 6] = [4096, 8192, 16384, 32768, 65536, 131072];
 
+/// The four evaluated model configurations, in the paper's size order.
+pub const PAPER_MODELS: [&str; 4] =
+    ["llama-160m", "llama-3.2-1b", "llama-3.2-3b", "llama-3.1-8b"];
+
+/// Built-in copy of the paper's four model configurations (Table 1 /
+/// Appendix A dims at the default (1024, 128) segmentation).
+///
+/// `artifacts/manifest.json` carries the same configs under
+/// `paper_configs` and stays the source of truth when present; this
+/// constructor lets the simulator-only suites (every `fig*`/`table*`
+/// roofline table) run with zero artifacts — e.g. in CI, where
+/// `pallas-bench` needs deterministic numbers but no PJRT build.
+pub fn paper_config(name: &str) -> Option<ModelConfig> {
+    // (d_model, n_layers, n_heads, d_ff, vocab)
+    let (d, l, h, f, v) = match name {
+        "llama-160m" => (768, 12, 12, 3072, 32000),
+        "llama-3.2-1b" => (2048, 16, 32, 8192, 128256),
+        "llama-3.2-3b" => (3072, 28, 24, 8192, 128256),
+        "llama-3.1-8b" => (4096, 32, 32, 14336, 128256),
+        _ => return None,
+    };
+    let k_assoc = 64;
+    let dpfp_nu = 3;
+    let cfg = ModelConfig {
+        name: name.to_string(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff: f,
+        seg: 1024,
+        mem: 128,
+        k_assoc,
+        dpfp_nu,
+        rope_theta: 500000.0,
+        eps: 1e-5,
+        attn_buckets: vec![],
+        head_dim: d / h,
+        phi_dim: 2 * dpfp_nu * k_assoc,
+        seg_total: 1024 + 128,
+    };
+    debug_assert!(cfg.validate().is_ok());
+    Some(cfg)
+}
+
 /// A model config re-segmented to a (segment_size, memory_tokens) pair —
 /// the tables' "Configuration: (seg, mem)" rows.
 pub fn with_segmentation(base: &ModelConfig, seg: usize, mem: usize) -> ModelConfig {
@@ -184,34 +229,23 @@ pub fn fig1_rows(base: &ModelConfig, dev: &DeviceSpec, seq_lens: &[usize]) -> Ve
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::test_model_config;
 
     fn paper_cfg(name: &str) -> ModelConfig {
-        let mut c = test_model_config();
         match name {
-            "1b" => {
-                c.d_model = 2048;
-                c.n_layers = 16;
-                c.n_heads = 32;
-                c.d_ff = 8192;
-                c.vocab = 128256;
-            }
-            "160m" => {
-                c.d_model = 768;
-                c.n_layers = 12;
-                c.n_heads = 12;
-                c.d_ff = 3072;
-                c.vocab = 32000;
-            }
+            "1b" => paper_config("llama-3.2-1b").unwrap(),
+            "160m" => paper_config("llama-160m").unwrap(),
             _ => unreachable!(),
         }
-        c.head_dim = c.d_model / c.n_heads;
-        c.k_assoc = 64;
-        c.phi_dim = 384;
-        c.seg = 1024;
-        c.mem = 128;
-        c.seg_total = 1152;
-        c
+    }
+
+    #[test]
+    fn builtin_paper_configs_are_consistent() {
+        for name in PAPER_MODELS {
+            let c = paper_config(name).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c.name, name);
+        }
+        assert!(paper_config("llama-70b").is_none());
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Integration tests for the pallas-bench harness: the suite registry
+//! runs real suites end to end, the resulting `BENCH_*.json` report
+//! round-trips through `src/json.rs`, and the baseline comparison gates
+//! regressions.
+//!
+//! Everything here runs artifact-free: simulated suites fall back to
+//! the built-in paper configs, serving suites use the native backend,
+//! and HLO suites report `skipped` (which must still appear in the
+//! report — the schema covers every selected suite).
+
+use diagonal_batching::bench::{
+    compare, glob_match, run_matching, BenchReport, BenchSettings, SuiteStatus,
+};
+use diagonal_batching::json::Value;
+
+/// Fast settings pointed at a manifest path that never exists, so the
+/// run is fully deterministic regardless of local artifacts.
+fn artifact_free_settings() -> BenchSettings {
+    BenchSettings {
+        manifest_path: "artifacts/definitely-not-here.json".to_string(),
+        fast: true,
+        ..BenchSettings::default()
+    }
+}
+
+#[test]
+fn fig_suites_run_artifact_free_and_roundtrip() {
+    let report = run_matching("fig*", &artifact_free_settings());
+
+    // Every fig suite is simulated (fig4 additionally measures the CPU
+    // analog) — all must run and pass with zero artifacts.
+    let names: Vec<&str> = report.suites.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        ["fig1_headline", "fig4_grouped_gemm", "fig5_attention", "fig6_diag_vs_minibatch"]
+    );
+    for s in &report.suites {
+        assert_eq!(s.status, SuiteStatus::Ok, "{}: {}", s.name, s.detail);
+        assert!(!s.metrics.is_empty(), "{} recorded no metrics", s.name);
+    }
+    assert!(report.all_passed());
+
+    // Run metadata is populated.
+    assert!(!report.meta.git_sha.is_empty());
+    assert_eq!(report.meta.device, "A100-80G");
+    assert!(report.meta.fast);
+    assert!(report.meta.peak_tflops > 0.0);
+
+    // serialize -> parse -> deserialize is lossless (src/json.rs).
+    let text = report.to_json().to_json();
+    let back = BenchReport::from_json(&Value::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn hlo_suites_skip_cleanly_but_stay_in_the_report() {
+    let report = run_matching("table2_error", &artifact_free_settings());
+    assert_eq!(report.suites.len(), 1);
+    let s = &report.suites[0];
+    assert_eq!(s.status, SuiteStatus::Skipped);
+    assert!(s.detail.contains("not found"), "skip reason: {}", s.detail);
+    // A skip is not a failure: the run stays green.
+    assert!(report.all_passed());
+}
+
+#[test]
+fn serve_suites_measure_the_native_engine() {
+    let report = run_matching("serve", &artifact_free_settings());
+    let names: Vec<&str> = report.suites.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["throughput_packed", "serve_latency"]);
+    for s in &report.suites {
+        assert_eq!(s.status, SuiteStatus::Ok, "{}: {}", s.name, s.detail);
+    }
+    let serve = &report.suites[1];
+    for metric in ["latency_ms_p50", "latency_ms_p90", "latency_ms_p99", "mean_group"] {
+        assert!(
+            serve.metrics.iter().any(|m| m.name == metric),
+            "serve_latency missing metric {metric}"
+        );
+    }
+    // Packing >= 2 lanes must beat the solo-diagonal mean group bound
+    // (L = 4, S = 6 per request => S*L/(S+L-1) ~ 2.67).
+    let mg = serve.metrics.iter().find(|m| m.name == "mean_group").unwrap();
+    assert!(mg.value > 2.67, "mean_group {}", mg.value);
+}
+
+#[test]
+fn tag_and_glob_selection() {
+    // Selecting by tag: every suite tagged `table`.
+    let report = run_matching("table", &artifact_free_settings());
+    assert!(report.suites.iter().all(|s| s.tags.iter().any(|t| t == "table")));
+    assert_eq!(report.suites.len(), 7);
+    // Nothing matches a bogus pattern.
+    assert!(run_matching("no_such_suite_*", &artifact_free_settings()).suites.is_empty());
+    // The CLI's comma-separated form.
+    assert!(glob_match("fig*,table*", "table9_vs_armt"));
+}
+
+#[test]
+fn regression_gate_verdict_end_to_end() {
+    // Run one deterministic suite twice: identical reports must pass the
+    // gate; a slowed-down mutant must fail it.
+    let settings = artifact_free_settings();
+    let baseline = run_matching("fig1_headline", &settings);
+    let current = run_matching("fig1_headline", &settings);
+    let ok = compare(&baseline, &current, 1.15);
+    assert!(ok.passed(), "identical runs must pass: {:?}", ok.regressions);
+    assert!(ok.compared > 0, "gate must actually compare something");
+
+    let mut slowed = current.clone();
+    for m in &mut slowed.suites[0].metrics {
+        use diagonal_batching::bench::report::Better;
+        match m.better {
+            Better::Lower => m.value *= 1.5,  // modeled seconds got worse
+            Better::Higher => m.value /= 1.5, // speedups got worse
+            Better::Info => {}
+        }
+    }
+    let bad = compare(&baseline, &slowed, 1.15);
+    assert!(!bad.passed());
+    assert!(bad.regressions.len() >= 2, "both directions must gate");
+}
+
+#[test]
+fn report_survives_disk_roundtrip() {
+    let report = run_matching("fig5_attention", &artifact_free_settings());
+    let path = std::env::temp_dir().join(format!("BENCH_test_{}.json", std::process::id()));
+    report.save(&path).unwrap();
+    let back = BenchReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, report);
+}
