@@ -1,0 +1,14 @@
+//! Parallel wavefront-step throughput: one long request through a
+//! 12-layer model on worker pools of 1/2/4/8 threads, with a
+//! byte-identity check across thread counts.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `parallel_scaling`; this binary is the legacy `cargo bench`
+//! entry point and is equivalent to
+//! `diagonal-batching bench --suite parallel_scaling`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("parallel_scaling")
+}

@@ -97,6 +97,13 @@ pub struct RuntimeConfig {
     /// single-lane and execute extra lanes serially, so keep this at 1
     /// on the HLO backend until the artifacts grow a lane dimension.
     pub lanes: usize,
+    /// Worker threads for the native backend's parallel cell pool
+    /// (`--threads N`). `0` = auto: the `PALLAS_THREADS` env var when
+    /// set, else the host's available parallelism. `1` forces the
+    /// inline sequential code path (the bit-exact reference oracle —
+    /// pooled execution is bit-identical to it, just faster). The HLO
+    /// backend ignores this (PJRT owns its own threading).
+    pub threads: usize,
     /// Auto mode: minimum segments before diagonal pays off (calibrated
     /// at startup or cost-model driven; see coordinator::fallback).
     pub fallback_min_segments: usize,
@@ -113,6 +120,7 @@ impl Default for RuntimeConfig {
             max_request_tokens: 1 << 20,
             queue_depth: 64,
             lanes: 1,
+            threads: 0,
             fallback_min_segments: 4,
         }
     }
@@ -146,6 +154,9 @@ impl RuntimeConfig {
         if let Some(x) = v.get("lanes") {
             c.lanes = x.as_usize()?.max(1);
         }
+        if let Some(x) = v.get("threads") {
+            c.threads = x.as_usize()?;
+        }
         if let Some(x) = v.get("fallback_min_segments") {
             c.fallback_min_segments = x.as_usize()?;
         }
@@ -156,6 +167,18 @@ impl RuntimeConfig {
     pub fn load(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Value::parse(&text)?)
+    }
+
+    /// Resolve [`threads`](Self::threads) to a concrete worker count:
+    /// an explicit setting wins, else
+    /// [`model::default_threads`](crate::model::default_threads)
+    /// (the `PALLAS_THREADS` env var, else available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::model::default_threads()
+        }
     }
 
     /// Serialize for diagnostics.
@@ -169,6 +192,7 @@ impl RuntimeConfig {
             ("max_request_tokens", Value::Num(self.max_request_tokens as f64)),
             ("queue_depth", Value::Num(self.queue_depth as f64)),
             ("lanes", Value::Num(self.lanes as f64)),
+            ("threads", Value::Num(self.threads as f64)),
             ("fallback_min_segments", Value::Num(self.fallback_min_segments as f64)),
         ])
     }
@@ -213,6 +237,18 @@ mod tests {
         assert_eq!(c.mode, ExecMode::Sequential);
         assert_eq!(c.queue_depth, 64);
         assert_eq!(c.lanes, 1);
+        assert_eq!(c.threads, 0); // auto
+    }
+
+    #[test]
+    fn threads_resolve() {
+        let explicit = RuntimeConfig { threads: 3, ..RuntimeConfig::default() };
+        assert_eq!(explicit.resolved_threads(), 3);
+        // Auto (threads = 0) resolves to SOMETHING runnable whatever
+        // the host/env.
+        assert!(RuntimeConfig::default().resolved_threads() >= 1);
+        let v = Value::parse(r#"{"threads": 7}"#).unwrap();
+        assert_eq!(RuntimeConfig::from_json(&v).unwrap().threads, 7);
     }
 
     #[test]

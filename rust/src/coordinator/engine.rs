@@ -20,7 +20,7 @@ use crate::coordinator::fallback::{Calibration, FallbackPolicy};
 use crate::coordinator::queue::RequestQueue;
 use crate::error::{Error, Result};
 use crate::json::Value;
-use crate::metrics::{Counter, Histogram, Ratio};
+use crate::metrics::{Counter, Gauge, Histogram, Ratio};
 use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession};
 use crate::tensor::Tensor;
 
@@ -74,6 +74,18 @@ pub struct EngineStats {
     /// and sessions. The denominator-minus-numerator is the padded-cell
     /// count the ISSUE's utilization work drives down.
     pub occupancy: Ratio,
+    /// Backend worker threads executing cells (1 = inline execution;
+    /// set by `serve_queue` from the backend's pool).
+    pub workers: Gauge,
+    /// Cells the serving loop executed on pool workers (subset of
+    /// `active_cells`: single-cell wavefront tips run inline).
+    pub pool_cells: Counter,
+    /// Worker utilization while serving: summed worker busy-time over
+    /// `threads x` serving wall-time, both in microseconds. The
+    /// parallel-execution analog of `occupancy` — occupancy says how
+    /// full the wavefront's *slots* are, this says how busy the
+    /// *threads* executing them are.
+    pub worker_busy: Ratio,
 }
 
 impl EngineStats {
@@ -119,6 +131,10 @@ impl EngineStats {
             ("padded_cells", Value::Num(slots.saturating_sub(active) as f64)),
             ("mean_group", Value::Num(mean_group)),
             ("occupancy", Value::Num(occupancy)),
+            ("workers", Value::Num(self.workers.get() as f64)),
+            ("pool_cells", Value::Num(self.pool_cells.get() as f64)),
+            ("pool_busy_ms", Value::Num(self.worker_busy.parts().0 as f64 / 1e3)),
+            ("worker_utilization", Value::Num(self.worker_busy.value())),
             ("latency_ms_mean", Value::Num(self.latency.mean().as_secs_f64() * 1e3)),
             ("latency_ms_p50", Value::Num(self.latency.quantile(0.5).as_secs_f64() * 1e3)),
             ("latency_ms_p90", Value::Num(self.latency.quantile(0.9).as_secs_f64() * 1e3)),
@@ -378,6 +394,9 @@ impl<B: StepBackend> InferenceEngine<B> {
         // connections, in-flight keys must not.
         let mut next_key: u64 = 0;
         let mut last = session.stats();
+        let mut last_ws = self.backend.worker_stats();
+        let mut last_wall = Instant::now();
+        self.stats.workers.set(last_ws.threads as u64);
         loop {
             // Admission. Block only when the wavefront is empty; keep
             // the backlog shallow so queue backpressure stays honest.
@@ -436,6 +455,19 @@ impl<B: StepBackend> InferenceEngine<B> {
                 now.slot_steps - last.slot_steps,
             );
             last = now;
+
+            // Worker utilization: pool busy-time delta over the worker
+            // capacity of this iteration's wall-time. Busy time is
+            // measured inside the workers, so clamp to capacity — a
+            // stats read must never trip the Ratio invariant.
+            let ws = self.backend.worker_stats();
+            let wall_us = last_wall.elapsed().as_micros() as u64;
+            last_wall = Instant::now();
+            let capacity_us = (ws.threads.max(1) as u64).saturating_mul(wall_us);
+            let busy_us = ws.busy_us.saturating_sub(last_ws.busy_us).min(capacity_us);
+            self.stats.pool_cells.add(ws.pool_cells.saturating_sub(last_ws.pool_cells));
+            self.stats.worker_busy.add(busy_us, capacity_us);
+            last_ws = ws;
 
             // Completions.
             while let Some(out) = session.pop_completed() {
@@ -653,6 +685,44 @@ mod tests {
             "packed mean_group {} vs solo best {solo_best}",
             e.stats.mean_group()
         );
+    }
+
+    #[test]
+    fn serve_queue_pooled_backend_bitexact_and_counts_workers() {
+        // Same weights as `engine()` (seed 9) but a 3-thread cell pool:
+        // responses must bit-match the single-threaded sequential path,
+        // and the worker-utilization counters must be live and sane.
+        let cfg = crate::model::tests::test_config();
+        let backend =
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, 9)).with_threads(3);
+        let mut e = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
+
+        let queue: RequestQueue<(Request, u64)> = RequestQueue::new(8);
+        for i in 0..3u64 {
+            let mut r = Request::new(i, toks(8 * (2 + i as usize)));
+            r.want_logits = true;
+            queue.push((r, i)).unwrap();
+        }
+        queue.close();
+        let mut got: Vec<(u64, Result<Response>)> = Vec::new();
+        e.serve_queue(&queue, |ticket, resp| got.push((ticket, resp))).unwrap();
+
+        let mut reference = engine(ExecMode::Sequential);
+        for (ticket, resp) in got {
+            let resp = resp.unwrap();
+            let mut r = Request::new(ticket, toks(8 * (2 + ticket as usize)));
+            r.want_logits = true;
+            let want = reference.process(&r).unwrap();
+            assert_eq!(resp.logits.unwrap(), want.logits.unwrap(), "request {ticket}");
+        }
+
+        assert_eq!(e.stats.workers.get(), 3);
+        assert!(e.stats.pool_cells.get() > 0, "pool must have executed cells");
+        let (busy, cap) = e.stats.worker_busy.parts();
+        assert!(busy <= cap, "busy {busy} > capacity {cap}");
+        let js = e.stats.to_json().to_json();
+        assert!(js.contains("\"workers\":3"), "{js}");
+        assert!(js.contains("worker_utilization"), "{js}");
     }
 
     #[test]

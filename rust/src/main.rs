@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! diagonal-batching serve  [--model tiny] [--mode diagonal] [--addr HOST:PORT]
+//!                          [--lanes N] [--threads N]
 //! diagonal-batching run    [--model tiny] [--mode diagonal|seq|full|auto]
 //!                          [--tokens N] [--backend hlo|native] [--compare true]
 //! diagonal-batching bench  [--suite GLOB] [--json PATH] [--compare BASELINE]
@@ -83,6 +84,9 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(l) = flags.get("lanes") {
         cfg.lanes = l.parse::<usize>()?.max(1);
     }
+    if let Some(t) = flags.get("threads") {
+        cfg.threads = t.parse::<usize>()?;
+    }
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg),
@@ -114,13 +118,19 @@ COMMON FLAGS:
   --config PATH     RuntimeConfig JSON
 
 SUBCOMMANDS:
-  serve     --addr HOST:PORT --lanes N       start the TCP JSON-lines server.
-                                             N wavefront lanes batch N concurrent
+  serve     --addr HOST:PORT                 start the TCP JSON-lines server
+            --lanes N                        N wavefront lanes batch N concurrent
                                              requests per launch on the native
                                              backend; the current single-lane HLO
                                              artifacts execute lanes serially, so
                                              keep N=1 there (stream packing still
                                              fills ramp bubbles at N=1)
+            --threads N                      run each grouped step's cells on an
+                                             N-wide worker pool (native backend;
+                                             0 = auto from PALLAS_THREADS / CPU
+                                             count, 1 = the sequential reference
+                                             path — bit-identical results either
+                                             way)
   run       --tokens N --compare true        one forward pass (+drift check)
   bench     --suite GLOB --json PATH         the pallas-bench harness: run the
             --compare BASELINE               registered suites matching GLOB
@@ -140,13 +150,17 @@ fn boxed_backend(
     manifest: &Manifest,
 ) -> Result<Box<dyn StepBackend + Send>, Box<dyn std::error::Error>> {
     Ok(match cfg.backend {
+        // PJRT owns its own threading; --threads applies to native only.
         BackendKind::Hlo => Box::new(HloBackend::load(manifest, &cfg.model)?),
         BackendKind::Native => {
             let entry = manifest.model(&cfg.model)?;
-            Box::new(NativeBackend::new(
-                entry.config.clone(),
-                Params::load(manifest, &cfg.model)?,
-            ))
+            Box::new(
+                NativeBackend::new(
+                    entry.config.clone(),
+                    Params::load(manifest, &cfg.model)?,
+                )
+                .with_threads(cfg.resolved_threads()),
+            )
         }
     })
 }
@@ -167,13 +181,19 @@ fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
             cal.crossover_segments()
         );
     }
+    let threads = match cfg.backend {
+        BackendKind::Native => cfg.resolved_threads(),
+        BackendKind::Hlo => 1,
+    };
     let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
     println!(
-        "serving on {} (mode {}, {} wavefront lane{}) — Ctrl-C to stop",
+        "serving on {} (mode {}, {} wavefront lane{}, {} worker thread{}) — Ctrl-C to stop",
         server.addr,
         cfg.mode,
         cfg.lanes,
-        if cfg.lanes == 1 { "" } else { "s" }
+        if cfg.lanes == 1 { "" } else { "s" },
+        threads,
+        if threads == 1 { "" } else { "s" }
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -184,6 +184,30 @@ pub fn layer_step(
     (y, a2, z2)
 }
 
+/// One wavefront cell as a self-contained work unit: materialize layer
+/// `l`'s weights from `params` and run [`layer_step`] — the function a
+/// [`ParallelCellPool`](crate::model::ParallelCellPool) worker executes.
+///
+/// This is the compute/mutation split that makes cells parallelizable:
+/// everything here is a pure function of `(params, layer, x, a, z)` —
+/// no backend counters, no shared slot tensors — so any thread may run
+/// any cell. All shared-state mutation (writing `y/a'/z'` back into the
+/// wavefront's slot tensors, bumping `cells_computed`) stays on the
+/// caller's thread, keyed by slot index. Bit-identical to the inline
+/// sequential loop by construction: same code path, same accumulation
+/// order, disjoint outputs.
+pub fn cell_task(
+    cfg: &ModelConfig,
+    params: &Params,
+    layer: usize,
+    x: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let view = params.layer(layer);
+    layer_step(cfg, &view, x, a, z)
+}
+
 /// Vanilla full-attention forward over the whole context (the quadratic
 /// baseline; no memory, fully causal).
 pub fn full_attn_forward(cfg: &ModelConfig, params: &Params, tokens: &[u32]) -> Result<Tensor> {
@@ -286,6 +310,29 @@ mod tests {
         let tail = base.slice0(c.seg, c.seg_total);
         let tail2 = pert.slice0(c.seg, c.seg_total);
         assert!(tail.max_abs_diff(&tail2) > 1e-4);
+    }
+
+    #[test]
+    fn cell_task_is_layer_step_and_send() {
+        // The worker unit must be dispatchable across threads...
+        fn assert_send<T: Send>(_: &T) {}
+        let c = cfg();
+        let p = Params::random(&c, 8);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[c.d_model, c.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[c.phi_dim], 0.1, &mut rng);
+        assert_send(&c);
+        assert_send(&p);
+        assert_send(&x);
+        // ...and bit-identical to the in-place layer_step it wraps.
+        for l in 0..c.n_layers {
+            let (y1, a1, z1) = cell_task(&c, &p, l, &x, &a, &z);
+            let (y2, a2, z2) = layer_step(&c, &p.layer(l), &x, &a, &z);
+            assert_eq!(y1, y2);
+            assert_eq!(a1, a2);
+            assert_eq!(z1, z2);
+        }
     }
 
     #[test]

@@ -14,26 +14,66 @@
 
 mod cell;
 mod params;
+mod pool;
 
-pub use cell::{assoc_read, assoc_update, attention, layer_step, swiglu, LayerView};
+pub use cell::{assoc_read, assoc_update, attention, cell_task, layer_step, swiglu, LayerView};
 pub use params::{params_order, Params, GLOBAL_ORDER, PARAM_ORDER};
+pub use pool::{default_threads, CellJob, CellResult, ParallelCellPool, PoolStats};
+
+use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
-use crate::scheduler::StepBackend;
+use crate::scheduler::{StepBackend, WorkerStats};
 use crate::tensor::{self, Tensor};
 
 /// Pure-rust [`StepBackend`].
+///
+/// Single-threaded by default (the bit-exact reference oracle). With
+/// [`with_threads`](Self::with_threads)` > 1`, each `grouped_step` fans
+/// its active `(layer, lane)` cells out across a persistent
+/// [`ParallelCellPool`] and joins before returning — bit-identical
+/// results (each cell's math is order-preserving on exactly one thread,
+/// and cells write disjoint slots), but wavefront steps now actually
+/// run `min(threads, active cells)` wide.
 pub struct NativeBackend {
     cfg: ModelConfig,
-    params: Params,
+    params: Arc<Params>,
+    pool: Option<ParallelCellPool>,
     step_calls: u64,
     cells_computed: u64,
 }
 
 impl NativeBackend {
+    /// Single-threaded backend (identical to the pre-pool code path).
     pub fn new(cfg: ModelConfig, params: Params) -> Self {
-        Self { cfg, params, step_calls: 0, cells_computed: 0 }
+        Self { cfg, params: Arc::new(params), pool: None, step_calls: 0, cells_computed: 0 }
+    }
+
+    /// Execute grouped steps on a `threads`-wide worker pool
+    /// (`threads <= 1` keeps the inline sequential loop — today's code
+    /// path, no pool, no channels). See
+    /// [`default_threads`] for the CLI's auto setting.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = if threads > 1 {
+            Some(ParallelCellPool::new(self.cfg.clone(), Arc::clone(&self.params), threads))
+        } else {
+            None
+        };
+        self
+    }
+
+    /// Worker threads executing cells (1 = inline).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// Determinism-test hook: randomized per-cell worker sleep (no-op
+    /// without a pool). See [`ParallelCellPool::set_test_jitter`].
+    pub fn set_test_jitter(&self, max_us: u64) {
+        if let Some(p) = &self.pool {
+            p.set_test_jitter(max_us);
+        }
     }
 
     pub fn params(&self) -> &Params {
@@ -71,32 +111,69 @@ impl StepBackend for NativeBackend {
         let mut y = x.clone();
         let mut a2 = a.clone();
         let mut z2 = z.clone();
-        // Ordered loop over (layer, lane) slots == the grouped kernel's
-        // per-cell independence, with masked slots skipped entirely
-        // (bit-freeze). Lane order never affects a cell's math, which is
-        // what makes packed == per-request execution bit-exact.
-        for l in 0..l_total {
-            for lane in 0..b_total {
-                if mask[l * b_total + lane] == 0.0 {
-                    continue;
+        // Active (layer, lane) cells in slot order; masked slots are
+        // skipped entirely (bit-freeze). Each cell is independent — the
+        // grouped kernel's contract — so they may run inline or fanned
+        // out across the pool, and lane order never affects a cell's
+        // math, which is what makes packed == per-request execution
+        // bit-exact.
+        let active: Vec<(usize, usize)> = (0..l_total)
+            .flat_map(|l| (0..b_total).map(move |lane| (l, lane)))
+            .filter(|&(l, lane)| mask[l * b_total + lane] != 0.0)
+            .collect();
+        self.cells_computed += active.len() as u64;
+
+        let fetch = |l: usize, lane: usize| {
+            if lanes {
+                (x.index01(l, lane), a.index01(l, lane), z.index01(l, lane))
+            } else {
+                (x.index0(l), a.index0(l), z.index0(l))
+            }
+        };
+
+        if let Some(pool) = &self.pool {
+            // Fan-out/join: one job per active cell, joined before the
+            // caller's memory hand-off. A single-cell wavefront (ramp
+            // tip) runs inline — the channel hop buys nothing.
+            if active.len() > 1 {
+                let jobs = active
+                    .iter()
+                    .map(|&(l, lane)| {
+                        let (xc, ac, zc) = fetch(l, lane);
+                        CellJob { slot: l * b_total + lane, layer: l, x: xc, a: ac, z: zc }
+                    })
+                    .collect();
+                // Determinism rule: write-back is keyed by slot index,
+                // never by completion order.
+                for r in pool.execute(jobs)? {
+                    let (l, lane) = (r.slot / b_total, r.slot % b_total);
+                    if lanes {
+                        y.set_index01(l, lane, &r.y);
+                        a2.set_index01(l, lane, &r.a2);
+                        z2.set_index01(l, lane, &r.z2);
+                    } else {
+                        y.set_index0(l, &r.y);
+                        a2.set_index0(l, &r.a2);
+                        z2.set_index0(l, &r.z2);
+                    }
                 }
-                self.cells_computed += 1;
-                let view = self.params.layer(l);
-                let (xc, ac, zc) = if lanes {
-                    (x.index01(l, lane), a.index01(l, lane), z.index01(l, lane))
-                } else {
-                    (x.index0(l), a.index0(l), z.index0(l))
-                };
-                let (yl, al, zl) = cell::layer_step(&self.cfg, &view, &xc, &ac, &zc);
-                if lanes {
-                    y.set_index01(l, lane, &yl);
-                    a2.set_index01(l, lane, &al);
-                    z2.set_index01(l, lane, &zl);
-                } else {
-                    y.set_index0(l, &yl);
-                    a2.set_index0(l, &al);
-                    z2.set_index0(l, &zl);
-                }
+                return Ok((y, a2, z2));
+            }
+        }
+
+        // Inline path (`--threads 1`, or <= 1 active cell): the same
+        // per-cell task, executed in slot order on this thread.
+        for &(l, lane) in &active {
+            let (xc, ac, zc) = fetch(l, lane);
+            let (yl, al, zl) = cell::cell_task(&self.cfg, &self.params, l, &xc, &ac, &zc);
+            if lanes {
+                y.set_index01(l, lane, &yl);
+                a2.set_index01(l, lane, &al);
+                z2.set_index01(l, lane, &zl);
+            } else {
+                y.set_index0(l, &yl);
+                a2.set_index0(l, &al);
+                z2.set_index0(l, &zl);
             }
         }
         Ok((y, a2, z2))
@@ -157,6 +234,17 @@ impl StepBackend for NativeBackend {
 
     fn step_calls(&self) -> u64 {
         self.step_calls
+    }
+
+    fn worker_stats(&self) -> WorkerStats {
+        match &self.pool {
+            Some(p) => WorkerStats {
+                threads: p.threads(),
+                pool_cells: p.stats().cells.get(),
+                busy_us: p.stats().busy_us(),
+            },
+            None => WorkerStats::default(),
+        }
     }
 }
 
@@ -274,6 +362,61 @@ pub(crate) mod tests {
         assert_eq!(y.index0(1), x.index0(1));
         assert_eq!(a2.index0(1), a.index0(1));
         assert_eq!(z2.index0(1), z.index0(1));
+    }
+
+    #[test]
+    fn pooled_grouped_step_bitexact_vs_inline() {
+        // The tentpole contract at its smallest: the pool changes the
+        // wall-clock, never the bytes — including frozen masked slots.
+        let cfg = test_config();
+        let (l, lanes) = (cfg.n_layers, 3usize);
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&[l, lanes, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[l, lanes, cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[l, lanes, cfg.phi_dim], 0.1, &mut rng);
+        let mut mask = vec![1.0; l * lanes];
+        mask[1] = 0.0;
+        mask[lanes + 2] = 0.0;
+
+        let mut inline = NativeBackend::new(cfg.clone(), Params::random(&cfg, 22));
+        let (y1, a1, z1) = inline.grouped_step(&x, &a, &z, &mask).unwrap();
+        for threads in [2usize, 5] {
+            let mut pooled =
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, 22)).with_threads(threads);
+            assert_eq!(pooled.threads(), threads);
+            let (y2, a2, z2) = pooled.grouped_step(&x, &a, &z, &mask).unwrap();
+            assert_eq!(y1, y2, "{threads} threads: y");
+            assert_eq!(a1, a2, "{threads} threads: A");
+            assert_eq!(z1, z2, "{threads} threads: z");
+            assert_eq!(pooled.cells_computed(), inline.cells_computed());
+        }
+    }
+
+    #[test]
+    fn with_threads_one_is_inline() {
+        let cfg = test_config();
+        let b = NativeBackend::new(cfg.clone(), Params::random(&cfg, 23)).with_threads(1);
+        assert_eq!(b.threads(), 1);
+        assert_eq!(b.worker_stats(), WorkerStats::default());
+    }
+
+    #[test]
+    fn pooled_worker_stats_count_cells() {
+        let cfg = test_config();
+        let l = cfg.n_layers;
+        let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, 24)).with_threads(2);
+        let mut rng = Rng::new(25);
+        let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::zeros(&[l, cfg.d_model, cfg.phi_dim]);
+        let z = Tensor::zeros(&[l, cfg.phi_dim]);
+        let mask = vec![1.0; l];
+        b.grouped_step(&x, &a, &z, &mask).unwrap();
+        let ws = b.worker_stats();
+        assert_eq!(ws.threads, 2);
+        assert_eq!(ws.pool_cells, l as u64);
+        // single_step stays inline — pool counters must not move.
+        b.single_step(0, &x.index0(0), &a.index0(0), &z.index0(0)).unwrap();
+        assert_eq!(b.worker_stats().pool_cells, l as u64);
     }
 
     #[test]

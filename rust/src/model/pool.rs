@@ -1,0 +1,336 @@
+//! [`ParallelCellPool`] — the native backend's persistent worker-thread
+//! pool, turning the diagonal wavefront from a scheduling *simulation*
+//! into an actually-parallel runtime.
+//!
+//! The paper's core observation (arXiv 2506.05229) is that every cell of
+//! a diagonal wavefront is independent: cell `(r, s, l)` depends only on
+//! `(r, s-1, l)` and `(r, s, l-1)`, both of which completed in earlier
+//! wavefront iterations, so the `L x B` grid of one `grouped_step` can
+//! run concurrently. The pool makes that true on the native backend:
+//!
+//! * **fan-out** — each active `(layer, lane)` cell becomes one
+//!   [`CellJob`] on a shared queue; `threads` persistent workers pull
+//!   jobs and execute [`cell_task`](crate::model::cell_task) against a
+//!   shared `Arc<Params>` snapshot (no copies, no locks on the weights);
+//! * **join** — [`execute`](ParallelCellPool::execute) blocks until
+//!   every job of the step has returned, *before* the session's memory
+//!   hand-off (the shift that feeds cell outputs to the next diagonal);
+//! * **determinism** — each cell writes a disjoint `(layer, lane)` slot
+//!   and its math runs on exactly one thread with a fixed accumulation
+//!   order, so results are written back by slot index and the step is
+//!   **bit-identical** to the sequential loop regardless of which worker
+//!   finishes first. `rust/tests/parallel_parity.rs` and proptest P10
+//!   enforce this byte-for-byte.
+//!
+//! The pool uses only `std` threads + channels (the offline toolchain
+//! has no rayon/crossbeam). Workers live as long as the owning
+//! [`NativeBackend`](crate::model::NativeBackend) and shut down when the
+//! job channel closes on drop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Counter;
+use crate::model::{cell, Params};
+use crate::tensor::Tensor;
+
+/// One wavefront cell, packaged for a worker: the slot index it must be
+/// written back to, the layer whose weights apply, and owned copies of
+/// the cell's `x [T, d]`, `a [d, p]`, `z [p]` inputs.
+pub struct CellJob {
+    /// Row-major `(layer, lane)` slot index (`layer * lanes + lane`).
+    pub slot: usize,
+    pub layer: usize,
+    pub x: Tensor,
+    pub a: Tensor,
+    pub z: Tensor,
+}
+
+/// A completed cell: `(y, a', z')` tagged with the slot it came from.
+pub struct CellResult {
+    pub slot: usize,
+    pub y: Tensor,
+    pub a2: Tensor,
+    pub z2: Tensor,
+}
+
+/// Aggregate worker counters (shared: workers write, anyone snapshots).
+#[derive(Default)]
+pub struct PoolStats {
+    /// Cells executed on pool workers.
+    pub cells: Counter,
+    /// Summed per-cell compute time across all workers, in nanoseconds
+    /// (accumulated at ns so sub-microsecond cells still register;
+    /// divide by `threads x wall` for utilization).
+    pub busy_ns: Counter,
+}
+
+impl PoolStats {
+    /// Accumulated busy time in whole microseconds (truncated once, at
+    /// read time, over the ns total).
+    pub fn busy_us(&self) -> u64 {
+        self.busy_ns.get() / 1_000
+    }
+}
+
+/// Default worker count: the `PALLAS_THREADS` env var when set to a
+/// positive integer (the CI single-thread parity pass forces
+/// `PALLAS_THREADS=1`), else the host's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Join-side deadlock tripwire: far beyond any cell this repo's CPU
+/// configs can take, small enough that a lost worker fails the step
+/// with a diagnostic instead of hanging the serving loop forever.
+const JOIN_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Persistent worker-thread pool executing wavefront cells.
+///
+/// Constructed by
+/// [`NativeBackend::with_threads`](crate::model::NativeBackend::with_threads);
+/// `threads = 1` callers skip the pool entirely (the inline loop *is*
+/// the single-threaded path — there is no channel hop to pay).
+pub struct ParallelCellPool {
+    job_tx: Option<Sender<CellJob>>,
+    results: Receiver<CellResult>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    stats: Arc<PoolStats>,
+    /// Test-only scheduling-jitter hook: when nonzero, each worker
+    /// sleeps a pseudorandom `0..jitter_us` microseconds before every
+    /// cell, scrambling completion order. Proptest P10 uses this to
+    /// prove results are invariant to worker scheduling.
+    jitter_us: Arc<AtomicU64>,
+}
+
+impl ParallelCellPool {
+    /// Spawn `threads` workers sharing `params` (one `Arc` clone per
+    /// worker — the weights are never copied).
+    pub fn new(cfg: ModelConfig, params: Arc<Params>, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (job_tx, job_rx) = channel::<CellJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, results) = channel::<CellResult>();
+        let stats = Arc::new(PoolStats::default());
+        let jitter_us = Arc::new(AtomicU64::new(0));
+        let cfg = Arc::new(cfg);
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let cfg = Arc::clone(&cfg);
+            let params = Arc::clone(&params);
+            let stats = Arc::clone(&stats);
+            let jitter = Arc::clone(&jitter_us);
+            let handle = std::thread::Builder::new()
+                .name(format!("pallas-cell-{w}"))
+                .spawn(move || worker_loop(w, &job_rx, &res_tx, &cfg, &params, &stats, &jitter))
+                .expect("spawn cell worker");
+            workers.push(handle);
+        }
+        Self { job_tx: Some(job_tx), results, workers, threads, stats, jitter_us }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Enable (`max_us > 0`) or disable the per-cell scheduling jitter.
+    /// Determinism-test hook only — never set in production paths.
+    pub fn set_test_jitter(&self, max_us: u64) {
+        self.jitter_us.store(max_us, Ordering::Relaxed);
+    }
+
+    /// Fan one wavefront step's cells out and join: blocks until every
+    /// job has produced its [`CellResult`]. Results arrive in completion
+    /// order; callers MUST write them back by `slot`, never by arrival
+    /// position — that is the determinism rule that keeps the pooled
+    /// step bit-identical to the sequential loop.
+    pub fn execute(&self, jobs: Vec<CellJob>) -> Result<Vec<CellResult>> {
+        // Defensive: a previous step that timed out may have left
+        // straggler results behind; they must not be attributed to this
+        // step's slots.
+        while self.results.try_recv().is_ok() {}
+        let n = jobs.len();
+        let tx = self.job_tx.as_ref().expect("pool is alive until dropped");
+        for job in jobs {
+            tx.send(job)
+                .map_err(|_| Error::Schedule("cell pool: every worker exited".into()))?;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.results.recv_timeout(JOIN_TIMEOUT) {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    // Distinguish "a worker died mid-job" (its result
+                    // will never arrive) from a genuinely stuck cell,
+                    // so the error names the real failure instead of a
+                    // generic stall.
+                    let dead = self.workers.iter().filter(|h| h.is_finished()).count();
+                    return Err(Error::Schedule(format!(
+                        "cell pool stalled after {}s waiting for {} of {n} cells \
+                         ({dead} of {} workers dead): {e}",
+                        JOIN_TIMEOUT.as_secs(),
+                        n - out.len(),
+                        self.threads,
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for ParallelCellPool {
+    fn drop(&mut self) {
+        // Closing the job channel ends every worker's recv loop.
+        drop(self.job_tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    index: usize,
+    jobs: &Mutex<Receiver<CellJob>>,
+    results: &Sender<CellResult>,
+    cfg: &ModelConfig,
+    params: &Params,
+    stats: &PoolStats,
+    jitter_us: &AtomicU64,
+) {
+    // Per-worker xorshift state for the test-jitter hook (seeded by
+    // worker index so sleeps differ across workers).
+    let mut rng =
+        0x9E37_79B9_7F4A_7C15u64 ^ ((index as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    loop {
+        // Hold the queue lock only for the dequeue; compute runs
+        // unlocked and fully parallel.
+        let msg = match jobs.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break, // a sibling worker panicked mid-recv
+        };
+        let Ok(job) = msg else { break };
+        let max = jitter_us.load(Ordering::Relaxed);
+        if max > 0 {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            std::thread::sleep(Duration::from_micros(rng % max));
+        }
+        let t0 = Instant::now();
+        let (y, a2, z2) = cell::cell_task(cfg, params, job.layer, &job.x, &job.a, &job.z);
+        stats.busy_ns.add(t0.elapsed().as_nanos() as u64);
+        stats.cells.inc();
+        if results.send(CellResult { slot: job.slot, y, a2, z2 }).is_err() {
+            break; // pool dropped mid-flight
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn cfg() -> ModelConfig {
+        crate::model::tests::test_config()
+    }
+
+    fn jobs_for(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<CellJob> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| CellJob {
+                slot: i,
+                layer: i % cfg.n_layers,
+                x: Tensor::randn(&[cfg.seg_total, cfg.d_model], 0.5, &mut rng),
+                a: Tensor::randn(&[cfg.d_model, cfg.phi_dim], 0.1, &mut rng),
+                z: Tensor::randn(&[cfg.phi_dim], 0.1, &mut rng),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_inline_cell_task_bitexact() {
+        let c = cfg();
+        let params = Arc::new(Params::random(&c, 3));
+        let pool = ParallelCellPool::new(c.clone(), Arc::clone(&params), 4);
+        let jobs = jobs_for(&c, 9, 7);
+        let want: Vec<(Tensor, Tensor, Tensor)> = jobs
+            .iter()
+            .map(|j| cell::cell_task(&c, &params, j.layer, &j.x, &j.a, &j.z))
+            .collect();
+        let mut got = pool.execute(jobs).unwrap();
+        got.sort_by_key(|r| r.slot);
+        assert_eq!(got.len(), want.len());
+        for (r, (y, a2, z2)) in got.iter().zip(&want) {
+            assert_eq!(&r.y, y, "slot {}", r.slot);
+            assert_eq!(&r.a2, a2, "slot {}", r.slot);
+            assert_eq!(&r.z2, z2, "slot {}", r.slot);
+        }
+        assert_eq!(pool.stats().cells.get(), 9);
+    }
+
+    #[test]
+    fn jitter_scrambles_schedule_not_results() {
+        let c = cfg();
+        let params = Arc::new(Params::random(&c, 4));
+        let quiet = ParallelCellPool::new(c.clone(), Arc::clone(&params), 3);
+        let noisy = ParallelCellPool::new(c.clone(), Arc::clone(&params), 3);
+        noisy.set_test_jitter(300);
+        let mut a = quiet.execute(jobs_for(&c, 12, 9)).unwrap();
+        let mut b = noisy.execute(jobs_for(&c, 12, 9)).unwrap();
+        a.sort_by_key(|r| r.slot);
+        b.sort_by_key(|r| r.slot);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.y, y.y);
+            assert_eq!(x.a2, y.a2);
+            assert_eq!(x.z2, y.z2);
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_steps_and_counts_busy_time() {
+        let c = cfg();
+        let params = Arc::new(Params::random(&c, 5));
+        let pool = ParallelCellPool::new(c.clone(), params, 2);
+        for step in 0..5 {
+            let out = pool.execute(jobs_for(&c, 4, step)).unwrap();
+            assert_eq!(out.len(), 4);
+        }
+        assert_eq!(pool.stats().cells.get(), 20);
+        // Busy time accumulates at ns granularity, so even release-mode
+        // sub-microsecond cells must register.
+        assert!(pool.stats().busy_ns.get() > 0);
+    }
+
+    #[test]
+    fn empty_execute_is_a_no_op() {
+        let c = cfg();
+        let pool = ParallelCellPool::new(c.clone(), Arc::new(Params::random(&c, 6)), 2);
+        assert!(pool.execute(Vec::new()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

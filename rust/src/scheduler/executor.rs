@@ -23,6 +23,28 @@ use crate::error::{Error, Result};
 use crate::scheduler::session::WavefrontSession;
 use crate::tensor::Tensor;
 
+/// Snapshot of a backend's execution-parallelism counters: how many
+/// worker threads execute wavefront cells, and how much work the pool
+/// has absorbed. Counters are cumulative (monotone) so callers can take
+/// deltas across wavefront iterations — that is how
+/// [`EngineStats`](crate::coordinator::EngineStats) derives its
+/// worker-utilization ratio.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Worker threads executing cells (1 = inline sequential execution).
+    pub threads: usize,
+    /// Cells dispatched to pool workers so far.
+    pub pool_cells: u64,
+    /// Summed busy time across all workers, microseconds.
+    pub busy_us: u64,
+}
+
+impl Default for WorkerStats {
+    fn default() -> Self {
+        Self { threads: 1, pool_cells: 0, busy_us: 0 }
+    }
+}
+
 /// Anything that can execute ARMT cell steps: the PJRT HLO runtime, the
 /// native rust model, or the roofline simulator.
 pub trait StepBackend {
@@ -68,6 +90,14 @@ pub trait StepBackend {
 
     /// Backend calls made so far (instrumentation).
     fn step_calls(&self) -> u64;
+
+    /// Cumulative worker-pool counters. Backends without a pool (the
+    /// HLO runtime, the sequential oracle) report the single-threaded
+    /// default; [`NativeBackend::with_threads`](crate::model::NativeBackend::with_threads)
+    /// overrides with live pool numbers.
+    fn worker_stats(&self) -> WorkerStats {
+        WorkerStats::default()
+    }
 }
 
 impl<T: StepBackend + ?Sized> StepBackend for Box<T> {
@@ -109,6 +139,10 @@ impl<T: StepBackend + ?Sized> StepBackend for Box<T> {
 
     fn step_calls(&self) -> u64 {
         (**self).step_calls()
+    }
+
+    fn worker_stats(&self) -> WorkerStats {
+        (**self).worker_stats()
     }
 }
 

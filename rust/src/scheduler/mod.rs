@@ -34,6 +34,7 @@ pub mod session;
 pub use dag::Cell;
 pub use executor::{
     grouped_dims, segment_tokens, Executor, RunOutput, RunStats, ScheduleMode, StepBackend,
+    WorkerStats,
 };
 pub use plan::{Schedule, ScheduleKind};
 pub use session::{SessionOutput, WavefrontSession};

@@ -32,6 +32,17 @@
 //! one-request special case) and from the serving engine's drain loop
 //! ([`InferenceEngine::serve_queue`](crate::coordinator::InferenceEngine::serve_queue)),
 //! where new requests are admitted between iterations.
+//!
+//! **Parallel execution.** Because every `(layer, lane)` cell of one
+//! grouped launch is independent, the backend may execute them
+//! concurrently — the native backend's
+//! [`ParallelCellPool`](crate::model::ParallelCellPool) fans the grid
+//! out across worker threads and joins inside `grouped_step`, i.e.
+//! strictly before step (5)/(6) below hand each cell's `(y, A', z')`
+//! to the next diagonal. The session itself needs no synchronization:
+//! by the time `grouped_step` returns, the whole wavefront has landed,
+//! and results are written by slot index so a pooled step is
+//! bit-identical to a sequential one (`rust/tests/parallel_parity.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;

@@ -12,6 +12,8 @@
 //!     "full_attn_runs": 0, "packed_requests": 9, "tokens": 1280,
 //!     "launches": 63, "active_cells": 151, "slot_steps": 189,
 //!     "padded_cells": 38, "mean_group": 2.4, "occupancy": 0.8,
+//!     "workers": 4, "pool_cells": 148, "pool_busy_ms": 310.2,
+//!     "worker_utilization": 0.71,
 //!     "latency_ms_mean": 10.5, "latency_ms_p50": 8.2,
 //!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8}
 //! -> {"cmd": "ping"}

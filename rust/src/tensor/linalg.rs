@@ -1,34 +1,64 @@
 //! Matmul family for the native backend.
 //!
-//! Plain triple loops with a k-blocked inner kernel — fast enough for the
-//! tiny CPU-validation configs, and *bit-stable*: the accumulation order
-//! is fixed so the native diagonal and sequential executors agree
-//! bit-for-bit (the property the scheduler proptests rely on).
+//! Plain triple loops over a shared row-blocked kernel ([`matmul_row`])
+//! — fast enough for the tiny CPU-validation configs, and *bit-stable*:
+//! every output row's accumulation order is fixed in one place, so the
+//! native diagonal and sequential executors agree bit-for-bit whether a
+//! cell runs inline or on a pool worker (the property the scheduler
+//! proptests and `parallel_parity` tests rely on). [`matmul_rows`]
+//! exposes the row blocks directly: today's cell pool parallelizes
+//! whole cells (which all funnel through this kernel), and row
+//! partitioning is the proven-bit-exact building block for splitting a
+//! single large cell across workers later.
 
 use super::Tensor;
 
+/// One output row of `A @ B`: `orow[j] += arow[p] * B[p, j]`. The
+/// row-blocked kernel every matmul entry point shares — a row's
+/// accumulation order is fixed here and nowhere else, so any partition
+/// of rows across workers reproduces the full product bit-for-bit.
+#[inline]
+fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+    for (p, &av) in arow.iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &bd[p * n..(p + 1) * n];
+        for j in 0..n {
+            orow[j] += av * brow[j];
+        }
+    }
+}
+
 /// C[m,n] = A[m,k] @ B[k,n].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_rows(a, b, 0, a.shape()[0])
+}
+
+/// Rows `[r0, r1)` of `A[m,k] @ B[k,n]` as a `[r1 - r0, n]` tensor —
+/// the independently-executable row block. Because each output row
+/// touches only its own slice of `A` and accumulates in [`matmul_row`]'s
+/// fixed order, workers computing disjoint row blocks produce exactly
+/// the bytes of the corresponding [`matmul`] rows; stitching blocks
+/// back together (in any order, by row index) is bit-identical to one
+/// full-product call. [`matmul`] is the `[0, m)` block; no production
+/// caller partitions yet — this is the bit-exactness-proven primitive
+/// for intra-cell parallelism when single cells grow large enough to
+/// need it.
+pub fn matmul_rows(a: &Tensor, b: &Tensor, r0: usize, r1: usize) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-    let mut out = vec![0.0f32; m * n];
+    assert!(r0 <= r1 && r1 <= m, "row block [{r0}, {r1}) out of 0..{m}");
+    let rows = r1 - r0;
+    let mut out = vec![0.0f32; rows * n];
     let ad = a.data();
     let bd = b.data();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &bd[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
+    for i in 0..rows {
+        let arow = &ad[(r0 + i) * k..(r0 + i + 1) * k];
+        matmul_row(arow, bd, n, &mut out[i * n..(i + 1) * n]);
     }
-    Tensor::new(&[m, n], out).expect("matmul shape")
+    Tensor::new(&[rows, n], out).expect("matmul_rows shape")
 }
 
 /// C[m,n] = A[k,m]^T @ B[k,n] (A stored transposed).
@@ -155,6 +185,25 @@ mod tests {
             // bit-exact, not approximately equal
             assert_eq!(g.index0(i), want);
         }
+    }
+
+    #[test]
+    fn row_blocks_stitch_bitexact() {
+        // The worker-pool contract: any row partition, reassembled by
+        // row index, is byte-identical to the one-shot product.
+        let mut rng = Rng::new(6);
+        let a = Tensor::randn(&[9, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let full = matmul(&a, &b);
+        for blocks in [vec![(0, 9)], vec![(0, 4), (4, 9)], vec![(0, 3), (3, 6), (6, 9)]] {
+            let parts: Vec<Tensor> =
+                blocks.iter().map(|&(r0, r1)| matmul_rows(&a, &b, r0, r1)).collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let stitched = Tensor::concat0(&refs).unwrap();
+            assert_eq!(stitched, full); // bit-exact, not approx
+        }
+        // Empty block is a valid (degenerate) partition member.
+        assert_eq!(matmul_rows(&a, &b, 4, 4).shape(), &[0, 5]);
     }
 
     #[test]

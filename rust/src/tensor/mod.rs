@@ -16,7 +16,7 @@ mod linalg;
 mod ops;
 mod rng;
 
-pub use linalg::{grouped_matmul, matmul, matmul_at, matmul_bt};
+pub use linalg::{grouped_matmul, matmul, matmul_at, matmul_bt, matmul_rows};
 pub use ops::*;
 pub use rng::Rng;
 

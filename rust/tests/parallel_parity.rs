@@ -1,0 +1,216 @@
+//! Bit-exactness of the parallel cell pool: the pooled native backend
+//! must produce byte-identical results to the sequential reference
+//! oracle — outputs, memory states, and run stats — across layer
+//! counts, lane counts, and thread counts, including ragged tails where
+//! lanes finish out of step.
+//!
+//! "Byte-identical" is enforced literally: tensors are compared by
+//! `f32::to_bits`, not by approximate equality, so a reordered
+//! reduction, an FMA-contracted accumulation, or a NaN/-0.0 divergence
+//! on any thread count fails loudly. This is the paper's exactness
+//! claim (arXiv 2207.06881: the recurrence must stay exact) carried
+//! into the actually-parallel runtime.
+
+use diagonal_batching::config::ModelConfig;
+use diagonal_batching::model::{default_threads, NativeBackend, Params};
+use diagonal_batching::scheduler::{
+    Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession,
+};
+use diagonal_batching::tensor::{Rng, Tensor};
+
+const LAYER_COUNTS: [usize; 3] = [1, 4, 12];
+const LANE_COUNTS: [usize; 3] = [1, 3, 8];
+const THREAD_COUNTS: [usize; 3] = [1, 2, 7];
+
+/// Tiny model so the full {L} x {lanes} x {threads} grid stays fast in
+/// debug builds; the math path is the same as any size.
+fn cfg(n_layers: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("parity-l{n_layers}"),
+        vocab: 32,
+        d_model: 16,
+        n_layers,
+        n_heads: 2,
+        d_ff: 24,
+        seg: 4,
+        mem: 2,
+        k_assoc: 4,
+        dpfp_nu: 2,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 8,
+        phi_dim: 16,
+        seg_total: 6,
+    }
+}
+
+/// Strict byte equality — `to_bits`, not `==` (which would already
+/// accept -0.0 == 0.0) and certainly not approx-eq.
+fn assert_bits_eq(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+    }
+}
+
+/// The deterministic fields of [`RunStats`] (everything but wall time,
+/// which is legitimately different across backends).
+fn assert_stats_eq(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(a.mode_diagonal, b.mode_diagonal, "{ctx}: mode");
+    assert_eq!(a.segments, b.segments, "{ctx}: segments");
+    assert_eq!(a.launches, b.launches, "{ctx}: launches");
+    assert_eq!(a.cells, b.cells, "{ctx}: cells");
+    assert_eq!(a.slot_steps, b.slot_steps, "{ctx}: slot_steps");
+    assert_eq!(a.padded_cells, b.padded_cells, "{ctx}: padded_cells");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+}
+
+/// Thread counts under test: the fixed {1, 2, 7} grid plus the
+/// environment default, so the CI `PALLAS_THREADS=1` pass and the
+/// default pass exercise different de-facto configurations.
+fn thread_grid() -> Vec<usize> {
+    let mut t = THREAD_COUNTS.to_vec();
+    let d = default_threads();
+    if !t.contains(&d) {
+        t.push(d);
+    }
+    t
+}
+
+/// One grouped step over every (L, lanes, threads) combination: y, A',
+/// z' must match the sequential oracle byte-for-byte, including frozen
+/// masked slots.
+#[test]
+fn grouped_step_parity_grid() {
+    for &l in &LAYER_COUNTS {
+        for &lanes in &LANE_COUNTS {
+            let c = cfg(l);
+            let mut rng = Rng::new(0xA11 + (l * 31 + lanes) as u64);
+            let x = Tensor::randn(&[l, lanes, c.seg_total, c.d_model], 0.5, &mut rng);
+            let a = Tensor::randn(&[l, lanes, c.d_model, c.phi_dim], 0.1, &mut rng);
+            let z = Tensor::randn(&[l, lanes, c.phi_dim], 0.1, &mut rng);
+            // Ragged occupancy: mask out a deterministic scatter of
+            // slots (never all of them).
+            let mut mask = vec![1.0f32; l * lanes];
+            for (i, m) in mask.iter_mut().enumerate() {
+                if i % 5 == 3 && i + 1 < l * lanes {
+                    *m = 0.0;
+                }
+            }
+
+            let mut oracle = NativeBackend::new(c.clone(), Params::random(&c, 77));
+            let (y1, a1, z1) = oracle.grouped_step(&x, &a, &z, &mask).unwrap();
+
+            for &threads in &thread_grid() {
+                let ctx = format!("L={l} lanes={lanes} threads={threads}");
+                let mut pooled =
+                    NativeBackend::new(c.clone(), Params::random(&c, 77)).with_threads(threads);
+                let (y2, a2, z2) = pooled.grouped_step(&x, &a, &z, &mask).unwrap();
+                assert_bits_eq(&y1, &y2, &format!("{ctx}: y"));
+                assert_bits_eq(&a1, &a2, &format!("{ctx}: memory A"));
+                assert_bits_eq(&z1, &z2, &format!("{ctx}: memory z"));
+            }
+        }
+    }
+}
+
+/// Full packed sessions over the grid, with ragged tails so lanes
+/// finish out of step: logits and per-request RunStats must be
+/// identical to the single-threaded session, and the logits must also
+/// match each request run alone through the sequential executor.
+#[test]
+fn session_parity_grid_with_ragged_tails() {
+    for &l in &LAYER_COUNTS {
+        for &lanes in &LANE_COUNTS {
+            let c = cfg(l);
+            // lanes + 2 requests so at least one waits in the backlog;
+            // lengths vary and most have a ragged (padded) tail.
+            let requests: Vec<Vec<u32>> = (0..lanes + 2)
+                .map(|i| {
+                    let segs = 1 + i % 4;
+                    let ragged = i % 3; // 0..=2 tokens short of full
+                    let n = (segs * c.seg).saturating_sub(ragged).max(1);
+                    (0..n as u32).map(|t| (t * 7 + i as u32) % c.vocab as u32).collect()
+                })
+                .collect();
+
+            let run_session = |threads: usize| {
+                let mut backend =
+                    NativeBackend::new(c.clone(), Params::random(&c, 123)).with_threads(threads);
+                let mut session = WavefrontSession::new(c.clone(), lanes);
+                for (i, toks) in requests.iter().enumerate() {
+                    session.submit(i as u64, toks).unwrap();
+                }
+                session.run_to_completion(&mut backend).unwrap();
+                let mut outs = session.drain_completed();
+                outs.sort_by_key(|o| o.id);
+                outs
+            };
+
+            let reference = run_session(1);
+            assert_eq!(reference.len(), requests.len());
+
+            for &threads in &thread_grid() {
+                if threads == 1 {
+                    continue;
+                }
+                let ctx = format!("L={l} lanes={lanes} threads={threads}");
+                let outs = run_session(threads);
+                assert_eq!(outs.len(), reference.len(), "{ctx}: completion count");
+                for (got, want) in outs.iter().zip(&reference) {
+                    assert_eq!(got.id, want.id, "{ctx}: completion id");
+                    assert_eq!(got.logits.len(), want.logits.len(), "{ctx}: segments");
+                    for (s, (ga, wa)) in got.logits.iter().zip(&want.logits).enumerate() {
+                        assert_bits_eq(ga, wa, &format!("{ctx}: req {} seg {s}", got.id));
+                    }
+                    assert_stats_eq(&got.stats, &want.stats, &format!("{ctx}: req {}", got.id));
+                }
+            }
+
+            // The single-threaded session itself must match the solo
+            // sequential executor (ties this suite to proptest P7).
+            for (i, toks) in requests.iter().enumerate() {
+                let mut b = NativeBackend::new(c.clone(), Params::random(&c, 123));
+                let want = Executor::new(&mut b, ScheduleMode::Sequential).run(toks).unwrap();
+                for (s, (ga, wa)) in
+                    reference[i].logits.iter().zip(&want.logits).enumerate()
+                {
+                    assert_bits_eq(
+                        ga,
+                        wa,
+                        &format!("L={l} lanes={lanes}: req {i} seg {s} vs sequential"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The diagonal executor (the single-request special case) is
+/// thread-count-invariant too, including S < L ramp-only wavefronts.
+#[test]
+fn executor_diagonal_parity_across_threads() {
+    for &l in &LAYER_COUNTS {
+        let c = cfg(l);
+        for n_segments in [1usize, 2, 5] {
+            let toks: Vec<u32> =
+                (0..n_segments * c.seg - 1).map(|t| (t * 3 + 1) as u32 % c.vocab as u32).collect();
+            let mut b1 = NativeBackend::new(c.clone(), Params::random(&c, 5));
+            let seq = Executor::new(&mut b1, ScheduleMode::Sequential).run(&toks).unwrap();
+            for &threads in &thread_grid() {
+                let mut b2 =
+                    NativeBackend::new(c.clone(), Params::random(&c, 5)).with_threads(threads);
+                let diag = Executor::new(&mut b2, ScheduleMode::Diagonal).run(&toks).unwrap();
+                assert_eq!(seq.segments(), diag.segments());
+                for (s, (a, b)) in seq.logits.iter().zip(&diag.logits).enumerate() {
+                    assert_bits_eq(
+                        a,
+                        b,
+                        &format!("L={l} S={n_segments} threads={threads} seg {s}"),
+                    );
+                }
+            }
+        }
+    }
+}

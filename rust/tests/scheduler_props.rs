@@ -20,6 +20,10 @@
 //!    packing refactor's exactness contract.
 //!  * P8: packing N >= 2 requests never lowers the session's mean group
 //!    size below the best solo diagonal run of the same batch.
+//!  * P10: for random workloads, packed-session results are invariant
+//!    to the worker-pool thread count AND to worker scheduling jitter
+//!    (randomized per-cell sleeps injected via the pool's test hook) —
+//!    logits bit-identical, deterministic stats fields identical.
 
 use diagonal_batching::config::ModelConfig;
 use diagonal_batching::model::{NativeBackend, Params};
@@ -276,6 +280,63 @@ fn p9_packed_plan_mirrors_live_session() {
             "case {case}: plan groups vs session iterations (lanes {lanes}, segs {seg_counts:?})"
         );
         assert_eq!(plan.cell_count() as u64, live.cells, "case {case}: cell totals");
+    }
+}
+
+#[test]
+fn p10_results_invariant_to_thread_count_and_scheduling_jitter() {
+    let mut rng = Rng::new(0x10AD);
+    for case in 0..6 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let lanes = 1 + rng.below(3);
+        let n_requests = 2 + rng.below(3);
+        let requests: Vec<Vec<u32>> = (0..n_requests)
+            .map(|_| {
+                let s = 1 + rng.below(4);
+                let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+                (0..n).map(|_| rng.below(cfg.vocab) as u32).collect()
+            })
+            .collect();
+
+        let run = |threads: usize, jitter_us: u64| {
+            let mut backend =
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)).with_threads(threads);
+            // Scheduling jitter: workers sleep a random 0..jitter_us
+            // before each cell, scrambling completion order. Results
+            // must not notice.
+            backend.set_test_jitter(jitter_us);
+            let mut session = WavefrontSession::new(cfg.clone(), lanes);
+            for (i, toks) in requests.iter().enumerate() {
+                session.submit(i as u64, toks).unwrap();
+            }
+            session.run_to_completion(&mut backend).unwrap();
+            let mut outs = session.drain_completed();
+            outs.sort_by_key(|o| o.id);
+            outs
+        };
+
+        let reference = run(1, 0);
+        for (threads, jitter_us) in [(2usize, 0u64), (2, 150), (5, 150)] {
+            let outs = run(threads, jitter_us);
+            assert_eq!(outs.len(), reference.len(), "case {case}");
+            for (got, want) in outs.iter().zip(&reference) {
+                assert_eq!(got.id, want.id, "case {case}");
+                // Bit-identical logits, not approx-eq: a jittered
+                // worker schedule must not change a single byte.
+                assert_eq!(
+                    got.logits, want.logits,
+                    "case {case} req {} threads {threads} jitter {jitter_us}us cfg {cfg:?}",
+                    got.id
+                );
+                assert_eq!(got.stats.launches, want.stats.launches, "case {case}");
+                assert_eq!(got.stats.cells, want.stats.cells, "case {case}");
+                assert_eq!(got.stats.slot_steps, want.stats.slot_steps, "case {case}");
+                assert_eq!(got.stats.padded_cells, want.stats.padded_cells, "case {case}");
+                assert_eq!(got.stats.tokens, want.stats.tokens, "case {case}");
+            }
+        }
     }
 }
 

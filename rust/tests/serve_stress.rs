@@ -1,0 +1,196 @@
+//! Concurrency stress test for `serve_queue` on the pooled backend:
+//! multiple producer threads hammer the bounded queue with mixed-length
+//! requests while another thread polls the shared `EngineStats`
+//! snapshot, and the engine drains everything through one packed
+//! wavefront executing on a worker-thread cell pool.
+//!
+//! Asserted invariants:
+//! * **liveness** — the whole run finishes under a watchdog; a deadlock
+//!   anywhere (queue, pool channels, stats locks) aborts the test with
+//!   a distinct exit code instead of hanging CI;
+//! * **exactly-once completion** — every submitted request completes
+//!   exactly once, none lost, none duplicated, none failed;
+//! * **counter consistency** — concurrent stats snapshots never observe
+//!   `active > slot_steps` or `busy > capacity`, and the final counters
+//!   sum up: requests == packed == submitted, token totals match, pool
+//!   cells never exceed active cells.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use diagonal_batching::config::{ExecMode, ModelConfig};
+use diagonal_batching::coordinator::{InferenceEngine, Request, RequestQueue};
+use diagonal_batching::model::{NativeBackend, Params};
+
+const PRODUCERS: usize = 4;
+const PER_PRODUCER: usize = 12;
+const QUEUE_DEPTH: usize = 16; // << total, so producers hit backpressure
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "stress".into(),
+        vocab: 32,
+        d_model: 16,
+        n_layers: 4,
+        n_heads: 2,
+        d_ff: 24,
+        seg: 4,
+        mem: 2,
+        k_assoc: 4,
+        dpfp_nu: 2,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 8,
+        phi_dim: 16,
+        seg_total: 6,
+    }
+}
+
+/// Segment count for request `id` (mixed lengths, 1..=4).
+fn segments_for(id: u64) -> usize {
+    1 + (id as usize % 4)
+}
+
+fn tokens_for(id: u64, seg: usize) -> Vec<u32> {
+    let segs = segments_for(id);
+    let ragged = id as usize % 3; // many requests end mid-segment
+    let n = (segs * seg).saturating_sub(ragged).max(1);
+    (0..n as u32).map(|t| (t * 13 + id as u32) % 32).collect()
+}
+
+#[test]
+fn serve_queue_pooled_concurrent_stress() {
+    let c = cfg();
+    let total = (PRODUCERS * PER_PRODUCER) as u64;
+    let mut engine = InferenceEngine::new(
+        NativeBackend::new(c.clone(), Params::random(&c, 17)).with_threads(3),
+        ExecMode::Diagonal,
+    )
+    .with_lanes(2);
+    let stats = engine.stats_handle();
+    let queue: Arc<RequestQueue<(Request, u64)>> = Arc::new(RequestQueue::new(QUEUE_DEPTH));
+
+    // Watchdog: a deadlock must fail the test run, not hang it. The
+    // budget is generous (debug builds, loaded CI machines); a healthy
+    // run takes well under a second.
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for _ in 0..1200 {
+                std::thread::sleep(Duration::from_millis(100));
+                if done.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            eprintln!("serve_stress: watchdog fired — serve_queue deadlocked");
+            std::process::exit(101);
+        });
+    }
+
+    // Producers: disjoint id ranges, retry on backpressure.
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let queue = Arc::clone(&queue);
+            let seg = c.seg;
+            std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    let id = (p * PER_PRODUCER + i) as u64;
+                    let req = Request::new(id, tokens_for(id, seg));
+                    let mut job = (req, id);
+                    loop {
+                        match queue.push(job) {
+                            Ok(()) => break,
+                            Err(_) => {
+                                // Queue full: victims of our own load
+                                // test. Back off briefly and retry.
+                                std::thread::sleep(Duration::from_micros(200));
+                                job = (Request::new(id, tokens_for(id, seg)), id);
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Closer: once every producer has drained its range, close the
+    // queue so serve_queue exits after the in-flight tail completes.
+    {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || {
+            for h in producers {
+                h.join().expect("producer panicked");
+            }
+            queue.close();
+        });
+    }
+
+    // Stats poller: concurrent snapshots must always be internally
+    // consistent, and the JSON export must never panic mid-serve.
+    let poller = {
+        let stats = Arc::clone(&stats);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut snapshots = 0u64;
+            while !done.load(Ordering::SeqCst) {
+                let (active, slots) = stats.occupancy.parts();
+                assert!(active <= slots, "occupancy snapshot tore: {active} > {slots}");
+                let (busy, cap) = stats.worker_busy.parts();
+                assert!(busy <= cap, "worker_busy snapshot tore: {busy} > {cap}");
+                let js = stats.to_json().to_json();
+                assert!(js.contains("\"occupancy\""), "stats JSON lost a field: {js}");
+                snapshots += 1;
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            snapshots
+        })
+    };
+
+    // Drain on this thread; completions land in the closure.
+    let mut completed: Vec<u64> = Vec::new();
+    engine
+        .serve_queue(&queue, |ticket, resp| {
+            let resp = resp.expect("no request may fail under load");
+            assert_eq!(resp.id, ticket, "response routed to the wrong ticket");
+            assert!(!resp.greedy_tail.is_empty(), "request {ticket} produced no output");
+            completed.push(ticket);
+        })
+        .unwrap();
+    done.store(true, Ordering::SeqCst);
+    let snapshots = poller.join().expect("stats poller panicked");
+    assert!(snapshots > 0, "poller never ran while serving");
+
+    // Exactly-once: all ids, no losses, no duplicates.
+    completed.sort_unstable();
+    assert_eq!(completed.len() as u64, total, "lost or duplicated completions");
+    for (i, id) in completed.iter().enumerate() {
+        assert_eq!(*id, i as u64, "completion set has a hole or a duplicate");
+    }
+
+    // Final counters sum consistently.
+    assert_eq!(stats.requests.get(), total);
+    assert_eq!(stats.packed_requests.get(), total);
+    assert_eq!(stats.rejected.get(), 0);
+    let expect_tokens: u64 =
+        (0..total).map(|id| (segments_for(id) * c.seg) as u64).sum();
+    assert_eq!(stats.tokens.get(), expect_tokens, "token accounting drifted");
+
+    let (active, slots) = stats.occupancy.parts();
+    assert!(active > 0 && active <= slots);
+    // Each request needs exactly S*L cells; the session computed all of
+    // them and nothing else.
+    let expect_cells: u64 =
+        (0..total).map(|id| (segments_for(id) * c.n_layers) as u64).sum();
+    assert_eq!(active, expect_cells, "active-cell accounting drifted");
+
+    // Pool accounting: 3 workers were live; pooled cells are a subset
+    // of active cells (single-cell wavefront tips run inline).
+    assert_eq!(stats.workers.get(), 3);
+    assert!(stats.pool_cells.get() > 0, "pool never executed a cell");
+    assert!(stats.pool_cells.get() <= active, "pool executed phantom cells");
+    let (busy, cap) = stats.worker_busy.parts();
+    assert!(busy <= cap);
+}
