@@ -17,7 +17,7 @@ use std::time::Instant;
 use diagonal_batching::babilong::{accuracy, Generator, Task};
 use diagonal_batching::bench::Table;
 use diagonal_batching::config::{ExecMode, Manifest};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
 use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::StepBackend;
 
@@ -31,7 +31,7 @@ fn eval<B: StepBackend>(
     let mut launches = 0;
     let t0 = Instant::now();
     for (i, e) in episodes.iter().enumerate() {
-        let mut req = Request::new(i as u64, e.tokens.clone());
+        let mut req = GenerateRequest::new(i as u64, e.tokens.clone());
         req.want_logits = true;
         req.mode = Some(mode);
         let resp = engine.process(&req).unwrap();

@@ -8,7 +8,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use diagonal_batching::config::{ExecMode, Manifest};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
 use diagonal_batching::runtime::HloBackend;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -33,7 +33,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         cfg.mem
     );
 
-    let mut diag_req = Request::new(1, tokens.clone());
+    let mut diag_req = GenerateRequest::new(1, tokens.clone());
     diag_req.want_logits = true;
     diag_req.mode = Some(ExecMode::Diagonal);
     let mut seq_req = diag_req.clone();

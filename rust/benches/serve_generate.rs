@@ -1,0 +1,13 @@
+//! Multi-client generation burst through `serve_queue`: packed
+//! in-wavefront decode vs the best solo diagonal run, with bit-exact
+//! continuations as a hard gate.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `serve_generate`; this binary is the legacy `cargo bench` entry
+//! point and is equivalent to `diagonal-batching bench --suite serve_generate`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("serve_generate")
+}

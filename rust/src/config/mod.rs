@@ -103,6 +103,31 @@ impl ModelConfig {
     pub fn state_floats_per_layer(&self) -> usize {
         self.d_model * self.phi_dim + self.phi_dim
     }
+
+    /// A small built-in config for artifact-free runs (demos, the CI
+    /// serving smoke test): pair it with randomly initialized native
+    /// params (`serve --synthetic SEED`). Untrained — outputs are
+    /// gibberish but every scheduling/serving property holds.
+    pub fn synthetic() -> Self {
+        Self {
+            name: "synthetic".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 3,
+            n_heads: 2,
+            d_ff: 48,
+            seg: 8,
+            mem: 4,
+            k_assoc: 8,
+            dpfp_nu: 3,
+            rope_theta: 10000.0,
+            eps: 1e-6,
+            attn_buckets: vec![],
+            head_dim: 16,
+            phi_dim: 48,
+            seg_total: 12,
+        }
+    }
 }
 
 /// One stacked parameter's location inside params.bin.
@@ -342,6 +367,7 @@ mod tests {
     #[test]
     fn validate_accepts_consistent() {
         assert!(test_model_config().validate().is_ok());
+        assert!(ModelConfig::synthetic().validate().is_ok());
     }
 
     #[test]

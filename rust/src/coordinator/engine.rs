@@ -1,53 +1,180 @@
-//! The inference engine: request in, logits/decode out.
+//! The inference engine: streaming generation lifecycle over any
+//! [`StepBackend`].
+//!
+//! The request/response surface is a *stream*: a [`GenerateRequest`]
+//! (prompt + `max_new_tokens` + [`SamplingParams`] + optional deadline)
+//! produces a sequence of [`Event`]s — [`Event::SegmentDone`] as each
+//! prompt/decode segment exits the model, [`Event::Token`] for every
+//! generated token, and a terminal [`Event::Done`] (aggregate
+//! [`Response`]) or [`Event::Error`]. A [`RequestHandle`] cloned off
+//! the request cancels it from any thread, mid-prefill or mid-decode.
 //!
 //! Two execution paths share one backend:
 //!
-//! * [`InferenceEngine::process`] — the single-shot path: one request,
-//!   one executor run (any [`ExecMode`]);
+//! * [`InferenceEngine::generate`] / [`InferenceEngine::process`] — the
+//!   single-shot path: one request, any [`ExecMode`]; `process` is the
+//!   collect-all-events special case (it returns only the terminal
+//!   [`Response`]), which keeps it the oracle for the bit-exactness
+//!   tests;
 //! * [`InferenceEngine::serve_queue`] — the serving path: a continuous
 //!   drain loop that packs every diagonal-mode request into one
 //!   persistent [`WavefrontSession`], admitting new requests from the
-//!   [`RequestQueue`] *between wavefront iterations* and completing them
-//!   out of submission order. Sequential / full-attention requests (rare
-//!   overrides) still run single-shot between iterations.
+//!   [`RequestQueue`] *between wavefront iterations*. Decode happens
+//!   **inside the live wavefront**: when a request's prefill segments
+//!   drain, its sampled continuation is appended to the same lane
+//!   ([`WavefrontSession::append_segment`]), so generation from many
+//!   concurrent users keeps sharing grouped launches instead of
+//!   serializing — and each request's continuation stays bit-identical
+//!   to a solo run (decode is just more segments of the same exact
+//!   recurrence).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{ExecMode, ModelConfig};
 use crate::coordinator::fallback::{Calibration, FallbackPolicy};
 use crate::coordinator::queue::RequestQueue;
+use crate::coordinator::sampling::{Sampler, SamplingParams};
 use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::metrics::{Counter, Gauge, Histogram, Ratio};
-use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession};
+use crate::scheduler::{
+    segment_tokens, RunStats, StepBackend, WavefrontSession,
+};
 use crate::tensor::Tensor;
 
-/// One inference request.
+/// One generation request: prompt tokens plus the decode budget and
+/// sampling configuration. `max_new_tokens = 0` is a pure prefill
+/// (scoring) request — the old one-shot RPC is that special case.
 #[derive(Clone, Debug)]
-pub struct Request {
+pub struct GenerateRequest {
     pub id: u64,
-    pub tokens: Vec<u32>,
+    /// Prompt tokens (segmented and padded internally).
+    pub prompt: Vec<u32>,
+    /// Decode budget: how many new tokens to generate after the prompt.
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Wall-clock budget measured from admission; an expired request is
+    /// evicted from the wavefront with [`Event::Error`].
+    pub deadline: Option<Duration>,
     /// Optional per-request mode override.
     pub mode: Option<ExecMode>,
-    /// Return full logits (false = only the greedy tail tokens).
+    /// Return full logits in the terminal [`Response`] (false = only
+    /// the greedy tail / generated tokens).
     pub want_logits: bool,
+    /// Shared with every [`RequestHandle`] cloned off this request.
+    cancel: Arc<AtomicBool>,
 }
 
-impl Request {
-    pub fn new(id: u64, tokens: Vec<u32>) -> Self {
-        Self { id, tokens, mode: None, want_logits: false }
+impl GenerateRequest {
+    pub fn new(id: u64, prompt: Vec<u32>) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens: 0,
+            sampling: SamplingParams::default(),
+            deadline: None,
+            mode: None,
+            want_logits: false,
+            cancel: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Builder: set the decode budget.
+    pub fn generate(mut self, max_new_tokens: usize) -> Self {
+        self.max_new_tokens = max_new_tokens;
+        self
+    }
+
+    /// Builder: set the sampling configuration.
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Builder: set the wall-clock deadline (measured from admission).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Builder: override the execution mode.
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// A handle that can cancel this request from any thread. Clones of
+    /// the request share the flag.
+    pub fn handle(&self) -> RequestHandle {
+        RequestHandle { id: self.id, cancel: Arc::clone(&self.cancel) }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
     }
 }
 
-/// What the engine returns.
+/// Per-request cancellation handle ([`GenerateRequest::handle`]). The
+/// engine polls the flag between wavefront iterations; an in-flight
+/// request is evicted from its lane (memory freed, other requests
+/// untouched) and terminates its event stream with [`Event::Error`].
+#[derive(Clone, Debug)]
+pub struct RequestHandle {
+    id: u64,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+}
+
+/// One element of a request's event stream.
+#[derive(Debug)]
+pub enum Event {
+    /// Segment `index` (prompt or decode) exited the last layer;
+    /// `greedy` is its per-position argmax — streamed partial results.
+    SegmentDone { index: usize, greedy: Vec<u32> },
+    /// One generated token; `pos` counts new tokens from 0.
+    Token { pos: usize, token: u32 },
+    /// Terminal: the request finished; the aggregate [`Response`].
+    Done { stats: Box<Response> },
+    /// Terminal: the request failed, was cancelled, or missed its
+    /// deadline.
+    Error { error: Error },
+}
+
+impl Event {
+    /// Terminal events end a request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done { .. } | Event::Error { .. })
+    }
+}
+
+/// Terminal aggregate of one request ([`Event::Done`]; also what
+/// [`InferenceEngine::process`] returns).
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// Greedy (argmax) token per position of the FINAL segment.
+    /// Greedy (argmax) token per position of the final segment.
     pub greedy_tail: Vec<usize>,
-    /// Full per-segment logits if requested.
+    /// Tokens produced by the decode phase, in order
+    /// (`max_new_tokens` of them on success).
+    pub generated: Vec<u32>,
+    /// Full per-segment logits if requested (prompt + fed decode
+    /// segments).
     pub logits: Option<Vec<Tensor>>,
     pub mode_used: ExecMode,
     pub stats: RunStats,
@@ -60,15 +187,24 @@ pub struct Response {
 pub struct EngineStats {
     pub requests: Counter,
     pub rejected: Counter,
+    /// Requests evicted by `cancel()` / client disconnect / deadline.
+    pub cancelled: Counter,
     pub diagonal_runs: Counter,
     pub sequential_runs: Counter,
     pub full_attn_runs: Counter,
     /// Requests served inside a packed wavefront session (subset of
     /// `diagonal_runs`).
     pub packed_requests: Counter,
+    /// Prompt tokens consumed, as submitted (unpadded; identical
+    /// accounting on the single-shot and serving paths). Decode output
+    /// counts separately in `generated_tokens`.
     pub tokens: Counter,
+    /// Tokens produced by the decode phase.
+    pub generated_tokens: Counter,
     pub latency: Histogram,
-    /// Grouped/step launches across all runs and sessions.
+    /// Grouped/step launches across all runs and sessions. Wavefront
+    /// schedules only — full-attention runs execute no grouped slots
+    /// and stay out of the occupancy accounting entirely.
     pub launches: Counter,
     /// Wavefront occupancy: active cells / slot-steps, across all runs
     /// and sessions. The denominator-minus-numerator is the padded-cell
@@ -120,11 +256,13 @@ impl EngineStats {
         Value::obj(vec![
             ("requests", Value::Num(self.requests.get() as f64)),
             ("rejected", Value::Num(self.rejected.get() as f64)),
+            ("cancelled", Value::Num(self.cancelled.get() as f64)),
             ("diagonal_runs", Value::Num(self.diagonal_runs.get() as f64)),
             ("sequential_runs", Value::Num(self.sequential_runs.get() as f64)),
             ("full_attn_runs", Value::Num(self.full_attn_runs.get() as f64)),
             ("packed_requests", Value::Num(self.packed_requests.get() as f64)),
             ("tokens", Value::Num(self.tokens.get() as f64)),
+            ("generated_tokens", Value::Num(self.generated_tokens.get() as f64)),
             ("launches", Value::Num(launches as f64)),
             ("active_cells", Value::Num(active as f64)),
             ("slot_steps", Value::Num(slots as f64)),
@@ -143,12 +281,107 @@ impl EngineStats {
     }
 }
 
-/// Ticket held for a request in the packed wavefront.
-struct PackedTicket<T> {
+/// What the decode driver wants done with the stream after one exit.
+enum ExitAction {
+    /// Not the frontier segment — nothing to feed yet.
+    Wait,
+    /// Feed this segment back into the live wavefront
+    /// ([`WavefrontSession::append_segment`]).
+    Feed(Vec<u32>),
+    /// Budget exhausted — close the stream
+    /// ([`WavefrontSession::finish_stream`]).
+    Finish,
+}
+
+/// Per-request decode state machine, shared by the single-shot and the
+/// packed serving paths: turns segment exits into `SegmentDone`/`Token`
+/// events and decides when to feed the sampled continuation back into
+/// the stream. The scheme is segment-recurrent: the argmax/sample of
+/// segment `i`'s logits IS the predicted segment `i + 1`, so one exit
+/// yields up to `seg` new tokens and (budget permitting) one appended
+/// segment — exactly the recurrence the sequential oracle runs.
+struct GenDriver {
+    sampler: Sampler,
+    /// New tokens still to emit.
+    budget_left: usize,
+    /// New tokens emitted so far (the `pos` counter).
+    emitted: usize,
+    /// Segments fed to the stream so far (prompt + appended).
+    fed: usize,
+    generated: Vec<u32>,
+    /// Argmax of the most recently exited segment.
+    last_greedy: Vec<usize>,
+}
+
+impl GenDriver {
+    fn new(req: &GenerateRequest, prompt_segments: usize) -> Self {
+        Self {
+            sampler: Sampler::new(req.sampling),
+            budget_left: req.max_new_tokens,
+            emitted: 0,
+            fed: prompt_segments,
+            generated: Vec::new(),
+            last_greedy: Vec::new(),
+        }
+    }
+
+    fn on_exit<F: FnMut(Event)>(
+        &mut self,
+        index: usize,
+        logits: &Tensor,
+        emit: &mut F,
+    ) -> ExitAction {
+        let greedy = logits.argmax_rows();
+        emit(Event::SegmentDone {
+            index,
+            greedy: greedy.iter().map(|&t| t as u32).collect(),
+        });
+        self.last_greedy = greedy;
+        if index + 1 != self.fed {
+            return ExitAction::Wait; // an earlier segment, not the frontier
+        }
+        if self.budget_left == 0 {
+            // Pure prefill: the stream was closed at submission, so this
+            // final exit already completed the request inside the
+            // session — nothing to feed, nothing to close.
+            return ExitAction::Wait;
+        }
+        // Greedy decode reuses the argmax just computed for the
+        // SegmentDone event instead of re-scanning [seg, vocab].
+        let next: Vec<u32> = if self.sampler.is_greedy() {
+            self.last_greedy.iter().map(|&t| t as u32).collect()
+        } else {
+            self.sampler.next_segment(logits)
+        };
+        let take = self.budget_left.min(next.len());
+        for (i, &t) in next[..take].iter().enumerate() {
+            emit(Event::Token { pos: self.emitted + i, token: t });
+        }
+        self.generated.extend_from_slice(&next[..take]);
+        self.emitted += take;
+        self.budget_left -= take;
+        if self.budget_left > 0 {
+            // The full predicted segment goes back in; its own exit
+            // will produce the next one.
+            self.fed += 1;
+            ExitAction::Feed(next)
+        } else {
+            ExitAction::Finish
+        }
+    }
+}
+
+/// Ticket held for a request packed into the serving wavefront.
+struct ServeTicket<T> {
     ticket: T,
     wire_id: u64,
+    /// Raw (unpadded) prompt length, for the `tokens` counter.
+    prompt_tokens: usize,
     want_logits: bool,
     pulled: Instant,
+    deadline: Option<Instant>,
+    handle: RequestHandle,
+    driver: GenDriver,
 }
 
 /// Engine over any [`StepBackend`].
@@ -243,7 +476,7 @@ impl<B: StepBackend> InferenceEngine<B> {
         Ok(cal)
     }
 
-    fn resolve_mode(&self, req: &Request, n_segments: usize) -> ExecMode {
+    fn resolve_mode(&self, req: &GenerateRequest, n_segments: usize) -> ExecMode {
         let mode = req.mode.unwrap_or(self.mode);
         match mode {
             ExecMode::Auto => {
@@ -258,43 +491,90 @@ impl<B: StepBackend> InferenceEngine<B> {
     }
 
     /// Reject obviously bad requests before they reach a scheduler.
-    fn validate(&self, req: &Request) -> Result<()> {
-        if req.tokens.is_empty() {
+    fn validate(&self, req: &GenerateRequest) -> Result<()> {
+        if req.prompt.is_empty() {
             self.stats.rejected.inc();
             return Err(Error::Request("empty token sequence".into()));
         }
-        if req.tokens.len() > self.max_request_tokens {
+        if req.prompt.len() + req.max_new_tokens > self.max_request_tokens {
             self.stats.rejected.inc();
             return Err(Error::Request(format!(
-                "request of {} tokens exceeds limit {}",
-                req.tokens.len(),
+                "request of {} prompt + {} new tokens exceeds limit {}",
+                req.prompt.len(),
+                req.max_new_tokens,
                 self.max_request_tokens
             )));
+        }
+        if let Err(e) = req.sampling.validate() {
+            self.stats.rejected.inc();
+            return Err(e);
         }
         Ok(())
     }
 
     /// Fold one finished run into the aggregate utilization counters.
+    /// Full-attention runs execute no wavefront slots (`slot_steps = 0`)
+    /// and are skipped — recording them would dilute `mean_group` with
+    /// launches that carry no cells.
     fn record_run(&self, stats: &RunStats) {
+        if stats.slot_steps == 0 {
+            return;
+        }
         self.stats.launches.add(stats.launches);
         self.stats
             .occupancy
             .add(stats.slot_steps - stats.padded_cells, stats.slot_steps);
     }
 
-    /// Execute one request synchronously (single-shot path).
-    pub fn process(&mut self, req: &Request) -> Result<Response> {
+    /// Execute one request synchronously, discarding intermediate
+    /// events — the collect-all-events special case of
+    /// [`generate`](Self::generate), and the oracle the bit-exactness
+    /// tests run both schedules through.
+    pub fn process(&mut self, req: &GenerateRequest) -> Result<Response> {
+        self.run_request(req, &mut |_| {})
+    }
+
+    /// Execute one request, streaming its [`Event`]s to `emit` as they
+    /// happen. Always ends with a terminal event (`Done` on success —
+    /// also the `Ok` return — or `Error`, mirrored in the `Err`).
+    pub fn generate<F: FnMut(Event)>(&mut self, req: &GenerateRequest, mut emit: F) -> Result<()> {
+        match self.run_request(req, &mut emit) {
+            Ok(resp) => {
+                emit(Event::Done { stats: Box::new(resp) });
+                Ok(())
+            }
+            Err(e) => {
+                emit(Event::Error { error: e.duplicate() });
+                Err(e)
+            }
+        }
+    }
+
+    /// Single-shot dispatch: validates, resolves the mode, runs the
+    /// request to completion on this thread, updates the counters.
+    fn run_request<F: FnMut(Event)>(
+        &mut self,
+        req: &GenerateRequest,
+        emit: &mut F,
+    ) -> Result<Response> {
         self.validate(req)?;
-        let cfg = self.backend.config();
-        let n_segments = req.tokens.len().div_ceil(cfg.seg);
+        let n_segments = req.prompt.len().div_ceil(self.backend.config().seg);
         let mode = self.resolve_mode(req, n_segments);
         let started = Instant::now();
 
-        let (logits, stats, mode_used) = match mode {
+        let resp = match mode {
             ExecMode::FullAttention => {
+                if req.max_new_tokens > 0 {
+                    self.stats.rejected.inc();
+                    return Err(Error::Config(
+                        "full-attention mode does not support generation \
+                         (decode is segment-recurrent; use diagonal or sequential)"
+                            .into(),
+                    ));
+                }
                 self.stats.full_attn_runs.inc();
                 let t0 = Instant::now();
-                let out = self.backend.full_attn(&req.tokens)?;
+                let out = self.backend.full_attn(&req.prompt)?;
                 let stats = RunStats {
                     mode_diagonal: false,
                     segments: 1,
@@ -303,62 +583,208 @@ impl<B: StepBackend> InferenceEngine<B> {
                     slot_steps: 0,
                     padded_cells: 0,
                     wall: t0.elapsed(),
-                    tokens: req.tokens.len(),
+                    tokens: req.prompt.len(),
                 };
-                (vec![out], stats, ExecMode::FullAttention)
+                let greedy_tail = out.argmax_rows();
+                Response {
+                    id: req.id,
+                    greedy_tail,
+                    generated: Vec::new(),
+                    logits: req.want_logits.then(|| vec![out]),
+                    mode_used: ExecMode::FullAttention,
+                    stats,
+                    latency: started.elapsed(),
+                }
             }
             ExecMode::Diagonal => {
                 self.stats.diagonal_runs.inc();
-                let out = Executor::new(&mut self.backend, ScheduleMode::Diagonal)
-                    .run(&req.tokens)?;
-                (out.logits, out.stats, ExecMode::Diagonal)
+                self.run_diagonal_streaming(req, emit, started)?
             }
             ExecMode::Sequential => {
                 self.stats.sequential_runs.inc();
-                let out = Executor::new(&mut self.backend, ScheduleMode::Sequential)
-                    .run(&req.tokens)?;
-                (out.logits, out.stats, ExecMode::Sequential)
+                self.run_sequential_streaming(req, emit, started)?
             }
             ExecMode::Auto => unreachable!("resolved above"),
         };
 
-        let greedy_tail = logits.last().map(|t| t.argmax_rows()).unwrap_or_default();
-        let latency = started.elapsed();
         self.stats.requests.inc();
-        self.stats.tokens.add(req.tokens.len() as u64);
-        self.stats.latency.observe(latency);
-        self.record_run(&stats);
+        self.stats.tokens.add(req.prompt.len() as u64);
+        self.stats.generated_tokens.add(resp.generated.len() as u64);
+        self.stats.latency.observe(resp.latency);
+        self.record_run(&resp.stats);
+        Ok(resp)
+    }
+
+    /// Diagonal prefill + in-wavefront decode as a one-request, 1-lane
+    /// session — the same machinery `serve_queue` packs many requests
+    /// into.
+    fn run_diagonal_streaming<F: FnMut(Event)>(
+        &mut self,
+        req: &GenerateRequest,
+        emit: &mut F,
+        started: Instant,
+    ) -> Result<Response> {
+        let cfg = self.backend.config().clone();
+        let segments = segment_tokens(&cfg, &req.prompt)?;
+        let prompt_segments = segments.len();
+        let mut session = WavefrontSession::new(cfg, 1);
+        session.submit_stream(0, segments, req.want_logits)?;
+        if req.max_new_tokens == 0 {
+            session.finish_stream(0)?;
+        }
+        let mut driver = GenDriver::new(req, prompt_segments);
+        let deadline = req.deadline.map(|d| started + d);
+        loop {
+            if req.is_cancelled() {
+                session.cancel(0);
+                self.stats.cancelled.inc();
+                return Err(Error::Request("cancelled".into()));
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                session.cancel(0);
+                self.stats.cancelled.inc();
+                return Err(Error::Request("deadline exceeded".into()));
+            }
+            let progressed = session.step(&mut self.backend)?;
+            while let Some(exit) = session.pop_exited() {
+                match driver.on_exit(exit.index, &exit.logits, emit) {
+                    ExitAction::Wait => {}
+                    ExitAction::Feed(seg) => session.append_segment(0, seg)?,
+                    ExitAction::Finish => session.finish_stream(0)?,
+                }
+            }
+            if let Some(out) = session.pop_completed() {
+                let mut stats = out.stats;
+                stats.wall = started.elapsed();
+                return Ok(Response {
+                    id: req.id,
+                    greedy_tail: driver.last_greedy,
+                    generated: driver.generated,
+                    logits: req.want_logits.then_some(out.logits),
+                    mode_used: ExecMode::Diagonal,
+                    stats,
+                    latency: started.elapsed(),
+                });
+            }
+            if !progressed {
+                return Err(Error::Schedule(
+                    "wavefront idled before the request completed".into(),
+                ));
+            }
+        }
+    }
+
+    /// Sequential prefill + decode: the baseline ARMT loop extended
+    /// segment-by-segment — the second, independent implementation of
+    /// the exact same recurrence (and the generation oracle).
+    fn run_sequential_streaming<F: FnMut(Event)>(
+        &mut self,
+        req: &GenerateRequest,
+        emit: &mut F,
+        started: Instant,
+    ) -> Result<Response> {
+        let cfg = self.backend.config().clone();
+        let l_total = cfg.n_layers;
+        let calls0 = self.backend.step_calls();
+        let mut segments = segment_tokens(&cfg, &req.prompt)?;
+        let mut driver = GenDriver::new(req, segments.len());
+        let deadline = req.deadline.map(|d| started + d);
+
+        // Per-layer recurrent state.
+        let mut a: Vec<Tensor> =
+            (0..l_total).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect();
+        let mut z: Vec<Tensor> = (0..l_total).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect();
+
+        let mut logits_acc = Vec::new();
+        let mut idx = 0;
+        while idx < segments.len() {
+            if req.is_cancelled() {
+                self.stats.cancelled.inc();
+                return Err(Error::Request("cancelled".into()));
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                self.stats.cancelled.inc();
+                return Err(Error::Request("deadline exceeded".into()));
+            }
+            let mut x = self.backend.embed(&segments[idx])?;
+            for l in 0..l_total {
+                let (y, a2, z2) = self.backend.single_step(l, &x, &a[l], &z[l])?;
+                x = y;
+                a[l] = a2;
+                z[l] = z2;
+            }
+            let logits = self.backend.lm_head(&x)?;
+            match driver.on_exit(idx, &logits, emit) {
+                ExitAction::Wait | ExitAction::Finish => {}
+                ExitAction::Feed(seg) => segments.push(seg),
+            }
+            if req.want_logits {
+                logits_acc.push(logits);
+            }
+            idx += 1;
+        }
+
+        let s_total = segments.len();
+        let cells = (s_total * l_total) as u64;
+        let stats = RunStats {
+            mode_diagonal: false,
+            segments: s_total,
+            launches: self.backend.step_calls() - calls0,
+            cells,
+            slot_steps: cells,
+            padded_cells: 0,
+            wall: started.elapsed(),
+            tokens: s_total * cfg.seg,
+        };
         Ok(Response {
             id: req.id,
-            greedy_tail,
-            logits: req.want_logits.then_some(logits),
-            mode_used,
+            greedy_tail: driver.last_greedy,
+            generated: driver.generated,
+            logits: req.want_logits.then_some(logits_acc),
+            mode_used: ExecMode::Sequential,
             stats,
-            latency,
+            latency: started.elapsed(),
         })
     }
 
     /// Continuous-batching drain loop (the serving path).
     ///
-    /// Pulls `(Request, ticket)` jobs from `queue`, packs every
+    /// Pulls `(GenerateRequest, ticket)` jobs from `queue`, packs every
     /// diagonal-mode request into one persistent [`WavefrontSession`]
-    /// (lanes from [`with_lanes`](Self::with_lanes)), and invokes
-    /// `complete` with each ticket as its response is ready — generally
-    /// OUT of submission order, since short requests overtake long ones.
+    /// (lanes from [`with_lanes`](Self::with_lanes)), and streams each
+    /// request's [`Event`]s through `emit` with its ticket — generally
+    /// interleaved across requests and OUT of submission order, since
+    /// short requests overtake long ones. Decode happens inside the
+    /// live wavefront: a request whose prefill drained gets its sampled
+    /// continuation appended to its lane, so concurrent generations
+    /// keep sharing grouped launches. Cancellation handles and
+    /// deadlines are polled between iterations; evicted requests
+    /// terminate with [`Event::Error`] and free their lane immediately.
     /// Admission happens between wavefront iterations: the queue is
     /// polled non-blockingly while requests are in flight and blockingly
     /// when the wavefront is empty. Returns when the queue is closed and
     /// everything in flight has completed.
     ///
+    /// Generation requests always pack into the wavefront (decode is
+    /// diagonal-native; `Auto` routes them there regardless of prompt
+    /// length). An *explicit* sequential/full-attention override with a
+    /// decode budget is refused with [`Event::Error`] — running it
+    /// inline would monopolize the engine thread for the whole decode,
+    /// stalling every packed request. Prefill-only overrides still run
+    /// inline between iterations, bounded by their prompt.
+    ///
     /// # Examples
     ///
-    /// Drain a burst of requests through one packed wavefront (the
-    /// ticket type `T` is whatever the caller needs to route replies —
-    /// the TCP server uses an `mpsc::Sender`, this example an index):
+    /// Drain a burst of generation requests through one packed wavefront
+    /// (the ticket type `T` is whatever the caller needs to route
+    /// replies — the TCP server uses an `mpsc::Sender<Event>`, this
+    /// example an index):
     ///
     /// ```no_run
     /// use diagonal_batching::config::{ExecMode, Manifest};
-    /// use diagonal_batching::coordinator::{InferenceEngine, Request, RequestQueue};
+    /// use diagonal_batching::coordinator::{
+    ///     Event, GenerateRequest, InferenceEngine, RequestQueue,
+    /// };
     /// use diagonal_batching::model::{NativeBackend, Params};
     ///
     /// let manifest = Manifest::load("artifacts/manifest.json").unwrap();
@@ -367,14 +793,17 @@ impl<B: StepBackend> InferenceEngine<B> {
     ///     NativeBackend::new(entry.config.clone(), Params::load(&manifest, "tiny").unwrap());
     /// let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
     ///
-    /// let queue: RequestQueue<(Request, usize)> = RequestQueue::new(8);
+    /// let queue: RequestQueue<(GenerateRequest, usize)> = RequestQueue::new(8);
     /// for i in 0..4u64 {
-    ///     let tokens: Vec<u32> = (0..128).map(|t| t % 100).collect();
-    ///     queue.push((Request::new(i, tokens), i as usize)).unwrap();
+    ///     let prompt: Vec<u32> = (0..128).map(|t| t % 100).collect();
+    ///     queue.push((GenerateRequest::new(i, prompt).generate(64), i as usize)).unwrap();
     /// }
     /// queue.close(); // a live server keeps pushing instead
-    /// engine.serve_queue(&queue, |ticket, resp| {
-    ///     println!("request #{ticket}: {:?}", resp.map(|r| r.stats.launches));
+    /// engine.serve_queue(&queue, |ticket, event| match event {
+    ///     Event::Token { pos, token } => println!("request #{ticket}: token[{pos}] = {token}"),
+    ///     Event::Done { stats } => println!("request #{ticket} done: {:?}", stats.latency),
+    ///     Event::Error { error } => eprintln!("request #{ticket} failed: {error}"),
+    ///     _ => {}
     /// }).unwrap();
     /// // p50/p90/p99 of everything served, as `{"cmd": "stats"}` reports:
     /// let stats = engine.stats_handle();
@@ -382,14 +811,14 @@ impl<B: StepBackend> InferenceEngine<B> {
     /// ```
     pub fn serve_queue<T, F>(
         &mut self,
-        queue: &RequestQueue<(Request, T)>,
-        mut complete: F,
+        queue: &RequestQueue<(GenerateRequest, T)>,
+        mut emit: F,
     ) -> Result<()>
     where
-        F: FnMut(T, Result<Response>),
+        F: FnMut(&T, Event),
     {
         let mut session = WavefrontSession::new(self.backend.config().clone(), self.lanes);
-        let mut tickets: HashMap<u64, PackedTicket<T>> = HashMap::new();
+        let mut tickets: HashMap<u64, ServeTicket<T>> = HashMap::new();
         // Session keys are engine-local: wire ids may collide across
         // connections, in-flight keys must not.
         let mut next_key: u64 = 0;
@@ -404,7 +833,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                 match queue.pop() {
                     None => break, // closed and drained
                     Some(job) => {
-                        self.admit(job, &mut session, &mut tickets, &mut next_key, &mut complete);
+                        self.admit(job, &mut session, &mut tickets, &mut next_key, &mut emit);
                     }
                 }
             }
@@ -416,7 +845,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                             &mut session,
                             &mut tickets,
                             &mut next_key,
-                            &mut complete,
+                            &mut emit,
                         );
                         // A non-diagonal job was executed single-shot
                         // inline; bound that to one per wavefront
@@ -431,13 +860,34 @@ impl<B: StepBackend> InferenceEngine<B> {
                 }
             }
 
+            // Cancellations and deadlines, polled between iterations so
+            // an evicted request frees its lane before the next launch.
+            let now = Instant::now();
+            let expired: Vec<u64> = tickets
+                .iter()
+                .filter(|(_, t)| {
+                    t.handle.is_cancelled() || t.deadline.is_some_and(|d| now >= d)
+                })
+                .map(|(k, _)| *k)
+                .collect();
+            for key in expired {
+                let t = tickets.remove(&key).expect("collected above");
+                session.cancel(key);
+                self.stats.cancelled.inc();
+                let why =
+                    if t.handle.is_cancelled() { "cancelled" } else { "deadline exceeded" };
+                emit(&t.ticket, Event::Error { error: Error::Request(why.into()) });
+            }
+
             // One wavefront iteration.
             if let Err(e) = session.step(&mut self.backend) {
                 let msg = e.to_string();
                 for (_, t) in tickets.drain() {
-                    complete(
-                        t.ticket,
-                        Err(Error::Schedule(format!("wavefront aborted: {msg}"))),
+                    emit(
+                        &t.ticket,
+                        Event::Error {
+                            error: Error::Schedule(format!("wavefront aborted: {msg}")),
+                        },
                     );
                 }
                 return Err(e);
@@ -445,7 +895,7 @@ impl<B: StepBackend> InferenceEngine<B> {
 
             // Aggregate utilization: session-level deltas (per-request
             // windows overlap, so they cannot be summed). Recorded
-            // BEFORE the completion callbacks fire, so a client that
+            // BEFORE the completion events fire, so a client that
             // queries stats right after its reply sees its own
             // launches/occupancy included.
             let now = session.stats();
@@ -469,27 +919,47 @@ impl<B: StepBackend> InferenceEngine<B> {
             self.stats.worker_busy.add(busy_us, capacity_us);
             last_ws = ws;
 
+            // Segment exits: stream partial results and run the decode
+            // hand-off — sample the frontier's continuation and feed it
+            // back into the same live wavefront.
+            while let Some(exit) = session.pop_exited() {
+                let Some(t) = tickets.get_mut(&exit.id) else { continue };
+                let (driver, ticket) = (&mut t.driver, &t.ticket);
+                let action = driver.on_exit(exit.index, &exit.logits, &mut |ev| emit(ticket, ev));
+                let hand_off = match action {
+                    ExitAction::Wait => Ok(()),
+                    ExitAction::Feed(seg) => session.append_segment(exit.id, seg),
+                    ExitAction::Finish => session.finish_stream(exit.id),
+                };
+                if let Err(e) = hand_off {
+                    // Scheduler invariant violation — fail this request
+                    // loudly, keep serving the others.
+                    session.cancel(exit.id);
+                    let t = tickets.remove(&exit.id).expect("present above");
+                    emit(&t.ticket, Event::Error { error: e });
+                }
+            }
+
             // Completions.
             while let Some(out) = session.pop_completed() {
                 let t = tickets.remove(&out.id).expect("completed request has a ticket");
-                let greedy_tail = out.logits.last().map(|l| l.argmax_rows()).unwrap_or_default();
                 let latency = t.pulled.elapsed();
                 self.stats.requests.inc();
                 self.stats.diagonal_runs.inc();
                 self.stats.packed_requests.inc();
-                self.stats.tokens.add(out.stats.tokens as u64);
+                self.stats.tokens.add(t.prompt_tokens as u64);
+                self.stats.generated_tokens.add(t.driver.generated.len() as u64);
                 self.stats.latency.observe(latency);
-                complete(
-                    t.ticket,
-                    Ok(Response {
-                        id: t.wire_id,
-                        greedy_tail,
-                        logits: t.want_logits.then_some(out.logits),
-                        mode_used: ExecMode::Diagonal,
-                        stats: out.stats,
-                        latency,
-                    }),
-                );
+                let resp = Response {
+                    id: t.wire_id,
+                    greedy_tail: t.driver.last_greedy,
+                    generated: t.driver.generated,
+                    logits: t.want_logits.then_some(out.logits),
+                    mode_used: ExecMode::Diagonal,
+                    stats: out.stats,
+                    latency,
+                };
+                emit(&t.ticket, Event::Done { stats: Box::new(resp) });
             }
         }
         Ok(())
@@ -500,48 +970,98 @@ impl<B: StepBackend> InferenceEngine<B> {
     /// completed inline: rejected, or executed single-shot).
     fn admit<T, F>(
         &mut self,
-        (req, ticket): (Request, T),
+        (req, ticket): (GenerateRequest, T),
         session: &mut WavefrontSession,
-        tickets: &mut HashMap<u64, PackedTicket<T>>,
+        tickets: &mut HashMap<u64, ServeTicket<T>>,
         next_key: &mut u64,
-        complete: &mut F,
+        emit: &mut F,
     ) -> bool
     where
-        F: FnMut(T, Result<Response>),
+        F: FnMut(&T, Event),
     {
         if let Err(e) = self.validate(&req) {
-            complete(ticket, Err(e));
+            emit(&ticket, Event::Error { error: e });
             return false;
         }
-        let n_segments = req.tokens.len().div_ceil(self.backend.config().seg);
-        match self.resolve_mode(&req, n_segments) {
+        let n_segments = req.prompt.len().div_ceil(self.backend.config().seg);
+        // Generation always packs into the wavefront (decode is
+        // diagonal-native; Auto's prefill-length heuristic does not
+        // apply) unless the client explicitly forced another mode.
+        let resolved = if req.max_new_tokens > 0
+            && !matches!(req.mode, Some(ExecMode::Sequential) | Some(ExecMode::FullAttention))
+        {
+            ExecMode::Diagonal
+        } else {
+            self.resolve_mode(&req, n_segments)
+        };
+        match resolved {
             ExecMode::Diagonal => {
+                let segments = match segment_tokens(self.backend.config(), &req.prompt) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        emit(&ticket, Event::Error { error: e });
+                        return false;
+                    }
+                };
+                let prompt_segments = segments.len();
                 let key = *next_key;
                 *next_key += 1;
-                match session.submit(key, &req.tokens) {
+                match session.submit_stream(key, segments, req.want_logits) {
                     Ok(()) => {
+                        if req.max_new_tokens == 0 {
+                            // Pure prefill: close the stream up front so
+                            // the lane hands over the moment the last
+                            // segment is injected (maximal ramp overlap,
+                            // exactly the pre-decode packing behavior).
+                            let _ = session.finish_stream(key);
+                        }
+                        let pulled = Instant::now();
                         tickets.insert(
                             key,
-                            PackedTicket {
-                                ticket,
+                            ServeTicket {
+                                driver: GenDriver::new(&req, prompt_segments),
+                                handle: req.handle(),
+                                deadline: req.deadline.map(|d| pulled + d),
                                 wire_id: req.id,
+                                prompt_tokens: req.prompt.len(),
                                 want_logits: req.want_logits,
-                                pulled: Instant::now(),
+                                pulled,
+                                ticket,
                             },
                         );
                         true
                     }
                     Err(e) => {
-                        complete(ticket, Err(e));
+                        emit(&ticket, Event::Error { error: e });
                         false
                     }
                 }
             }
             // Sequential / full-attention overrides run single-shot
             // between wavefront iterations (at most one per iteration —
-            // see the admission loop).
+            // see the admission loop), streaming their events inline.
+            // Inline GENERATION is refused: a sequential decode of
+            // max_new_tokens would monopolize the engine thread for its
+            // whole run, stalling every packed request and freezing
+            // cancel/deadline polling. (Prefill-only overrides stay
+            // bounded by their prompt, as before.)
             _ => {
-                complete(ticket, self.process(&req));
+                if req.max_new_tokens > 0 {
+                    self.stats.rejected.inc();
+                    emit(
+                        &ticket,
+                        Event::Error {
+                            error: Error::Request(
+                                "generation on the serving path requires diagonal mode \
+                                 (a non-diagonal decode would stall the shared wavefront); \
+                                 drop the mode override, or use process()/generate() directly"
+                                    .into(),
+                            ),
+                        },
+                    );
+                    return false;
+                }
+                let _ = self.generate(&req, |ev| emit(&ticket, ev));
                 false
             }
         }
@@ -563,12 +1083,23 @@ mod tests {
         (0..n as u32).map(|i| (i * 13 + 1) % 64).collect()
     }
 
+    /// Fold an event stream back into the old `(ticket, Result)` shape
+    /// most assertions want.
+    fn collect_terminal(got: &mut Vec<(u64, Result<Response>)>, ticket: u64, ev: Event) {
+        match ev {
+            Event::Done { stats } => got.push((ticket, Ok(*stats))),
+            Event::Error { error } => got.push((ticket, Err(error))),
+            _ => {}
+        }
+    }
+
     #[test]
     fn process_roundtrip_and_stats() {
         let mut e = engine(ExecMode::Diagonal);
-        let resp = e.process(&Request::new(1, toks(24))).unwrap();
+        let resp = e.process(&GenerateRequest::new(1, toks(24))).unwrap();
         assert_eq!(resp.mode_used, ExecMode::Diagonal);
         assert_eq!(resp.greedy_tail.len(), e.config().seg);
+        assert!(resp.generated.is_empty());
         assert_eq!(e.stats.requests.get(), 1);
         assert_eq!(e.stats.diagonal_runs.get(), 1);
         assert!(resp.latency > Duration::ZERO);
@@ -580,7 +1111,7 @@ mod tests {
     fn diagonal_equals_sequential_through_engine() {
         let mut e1 = engine(ExecMode::Diagonal);
         let mut e2 = engine(ExecMode::Sequential);
-        let mut r = Request::new(2, toks(8 * 4));
+        let mut r = GenerateRequest::new(2, toks(8 * 4));
         r.want_logits = true;
         let a = e1.process(&r).unwrap();
         let b = e2.process(&r).unwrap();
@@ -589,22 +1120,73 @@ mod tests {
     }
 
     #[test]
+    fn streamed_generation_events_are_consistent() {
+        // 2-segment prompt + 12 new tokens (seg = 8): one full decode
+        // segment is fed back, then 4 more tokens come from its exit.
+        let mut e = engine(ExecMode::Diagonal);
+        let req = GenerateRequest::new(3, toks(8 * 2)).generate(12);
+        let mut tokens = Vec::new();
+        let mut segments = Vec::new();
+        let mut done = None;
+        e.generate(&req, |ev| match ev {
+            Event::Token { pos, token } => tokens.push((pos, token)),
+            Event::SegmentDone { index, .. } => segments.push(index),
+            Event::Done { stats } => done = Some(*stats),
+            Event::Error { error } => panic!("unexpected error: {error}"),
+        })
+        .unwrap();
+        let done = done.expect("terminal Done event");
+        assert_eq!(done.generated.len(), 12);
+        assert_eq!(tokens.len(), 12);
+        for (i, (pos, tok)) in tokens.iter().enumerate() {
+            assert_eq!(*pos, i, "token positions are contiguous");
+            assert_eq!(*tok, done.generated[i], "stream matches the aggregate");
+        }
+        // 2 prompt exits + 1 fed decode segment exit, in order.
+        assert_eq!(segments, vec![0, 1, 2]);
+        assert_eq!(done.stats.segments, 3);
+        assert_eq!(e.stats.generated_tokens.get(), 12);
+    }
+
+    #[test]
+    fn generation_identical_across_schedules() {
+        // The decode recurrence is schedule-invariant: diagonal
+        // in-wavefront decode == sequential decode, bit for bit.
+        let mut e1 = engine(ExecMode::Diagonal);
+        let mut e2 = engine(ExecMode::Sequential);
+        let mut req = GenerateRequest::new(4, toks(8 * 3)).generate(20);
+        req.want_logits = true;
+        let a = e1.process(&req).unwrap();
+        let b = e2.process(&req).unwrap();
+        assert_eq!(a.generated, b.generated);
+        assert_eq!(a.greedy_tail, b.greedy_tail);
+        assert_eq!(a.logits.unwrap(), b.logits.unwrap());
+    }
+
+    #[test]
     fn auto_mode_respects_policy() {
         let mut e = engine(ExecMode::Auto).with_policy(FallbackPolicy::MinSegments(3));
-        let short = e.process(&Request::new(3, toks(8))).unwrap();
+        let short = e.process(&GenerateRequest::new(3, toks(8))).unwrap();
         assert_eq!(short.mode_used, ExecMode::Sequential);
-        let long = e.process(&Request::new(4, toks(8 * 5))).unwrap();
+        let long = e.process(&GenerateRequest::new(4, toks(8 * 5))).unwrap();
         assert_eq!(long.mode_used, ExecMode::Diagonal);
         assert_eq!(e.stats.sequential_runs.get(), 1);
         assert_eq!(e.stats.diagonal_runs.get(), 1);
     }
 
     #[test]
-    fn rejects_empty_and_oversized() {
+    fn rejects_empty_oversized_and_bad_sampling() {
         let mut e = engine(ExecMode::Diagonal).with_max_tokens(16);
-        assert!(e.process(&Request::new(5, vec![])).is_err());
-        assert!(e.process(&Request::new(6, toks(17))).is_err());
-        assert_eq!(e.stats.rejected.get(), 2);
+        assert!(e.process(&GenerateRequest::new(5, vec![])).is_err());
+        assert!(e.process(&GenerateRequest::new(6, toks(17))).is_err());
+        // prompt + decode budget together exceed the limit
+        assert!(e.process(&GenerateRequest::new(7, toks(10)).generate(7)).is_err());
+        let bad = GenerateRequest::new(8, toks(8)).with_sampling(SamplingParams {
+            temperature: -0.5,
+            ..Default::default()
+        });
+        assert!(e.process(&bad).is_err());
+        assert_eq!(e.stats.rejected.get(), 4);
     }
 
     #[test]
@@ -621,19 +1203,69 @@ mod tests {
     #[test]
     fn full_attention_mode() {
         let mut e = engine(ExecMode::FullAttention);
-        let resp = e.process(&Request::new(7, toks(12))).unwrap();
+        let resp = e.process(&GenerateRequest::new(7, toks(12))).unwrap();
         assert_eq!(resp.mode_used, ExecMode::FullAttention);
         assert_eq!(e.stats.full_attn_runs.get(), 1);
         assert_eq!(resp.greedy_tail.len(), 12); // per-token logits
+        // Generation is segment-recurrent; full attention refuses it.
+        assert!(e.process(&GenerateRequest::new(8, toks(12)).generate(4)).is_err());
+    }
+
+    #[test]
+    fn full_attention_does_not_dilute_wavefront_stats() {
+        // A full-attention run executes no wavefront slots; it must not
+        // add launches (which would drag mean_group toward zero) nor
+        // touch the occupancy ratio.
+        let mut e = engine(ExecMode::Diagonal);
+        e.process(&GenerateRequest::new(1, toks(24))).unwrap();
+        let launches_before = e.stats.launches.get();
+        let occ_before = e.stats.occupancy.parts();
+        let mg_before = e.stats.mean_group();
+        assert!(launches_before > 0 && mg_before > 0.0);
+
+        let mut r = GenerateRequest::new(2, toks(12));
+        r.mode = Some(ExecMode::FullAttention);
+        e.process(&r).unwrap();
+        assert_eq!(e.stats.full_attn_runs.get(), 1);
+        assert_eq!(e.stats.launches.get(), launches_before);
+        assert_eq!(e.stats.occupancy.parts(), occ_before);
+        assert_eq!(e.stats.mean_group(), mg_before);
+        // ...while request-level counters still advance.
+        assert_eq!(e.stats.requests.get(), 2);
+        let js = e.stats.to_json().to_json();
+        assert!(js.contains("\"full_attn_runs\":1"), "{js}");
+        assert!(js.contains("\"cancelled\":0"), "{js}");
+        assert!(js.contains("\"generated_tokens\""), "{js}");
     }
 
     #[test]
     fn per_request_mode_override() {
         let mut e = engine(ExecMode::Diagonal);
-        let mut r = Request::new(8, toks(16));
+        let mut r = GenerateRequest::new(8, toks(16));
         r.mode = Some(ExecMode::Sequential);
         let resp = e.process(&r).unwrap();
         assert_eq!(resp.mode_used, ExecMode::Sequential);
+    }
+
+    #[test]
+    fn pre_cancelled_request_never_runs() {
+        let mut e = engine(ExecMode::Diagonal);
+        let req = GenerateRequest::new(9, toks(8 * 4)).generate(64);
+        req.handle().cancel();
+        let err = e.process(&req).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert_eq!(e.stats.cancelled.get(), 1);
+        assert_eq!(e.stats.requests.get(), 0);
+    }
+
+    #[test]
+    fn zero_deadline_expires() {
+        let mut e = engine(ExecMode::Diagonal);
+        let req =
+            GenerateRequest::new(10, toks(8 * 4)).generate(64).with_deadline(Duration::ZERO);
+        let err = e.process(&req).unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert_eq!(e.stats.cancelled.get(), 1);
     }
 
     #[test]
@@ -642,22 +1274,22 @@ mod tests {
         // override, close the queue, drain: every response must
         // bit-match the single-shot path, and the packed aggregate must
         // beat the solo mean_group.
-        let queue: RequestQueue<(Request, u64)> = RequestQueue::new(16);
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(16);
         for i in 0..4u64 {
-            let mut r = Request::new(i, toks(8 * (2 + i as usize)));
+            let mut r = GenerateRequest::new(i, toks(8 * (2 + i as usize)));
             r.want_logits = true;
             queue.push((r, i)).unwrap();
         }
-        let mut seq_override = Request::new(9, toks(16));
+        let mut seq_override = GenerateRequest::new(9, toks(16));
         seq_override.mode = Some(ExecMode::Sequential);
         seq_override.want_logits = true;
         queue.push((seq_override, 9)).unwrap();
-        queue.push((Request::new(10, vec![]), 10)).unwrap(); // rejected
+        queue.push((GenerateRequest::new(10, vec![]), 10)).unwrap(); // rejected
         queue.close();
 
         let mut e = engine(ExecMode::Diagonal).with_lanes(2);
         let mut got: Vec<(u64, Result<Response>)> = Vec::new();
-        e.serve_queue(&queue, |ticket, resp| got.push((ticket, resp))).unwrap();
+        e.serve_queue(&queue, |t, ev| collect_terminal(&mut got, *t, ev)).unwrap();
         assert_eq!(got.len(), 6);
 
         let mut reference = engine(ExecMode::Sequential);
@@ -668,7 +1300,10 @@ mod tests {
             }
             let resp = resp.unwrap();
             assert_eq!(resp.id, ticket);
-            let mut r = Request::new(ticket, toks(if ticket == 9 { 16 } else { 8 * (2 + ticket as usize) }));
+            let mut r = GenerateRequest::new(
+                ticket,
+                toks(if ticket == 9 { 16 } else { 8 * (2 + ticket as usize) }),
+            );
             r.want_logits = true;
             let want = reference.process(&r).unwrap();
             assert_eq!(resp.logits.unwrap(), want.logits.unwrap(), "request {ticket}");
@@ -688,6 +1323,75 @@ mod tests {
     }
 
     #[test]
+    fn serve_queue_routes_generation_to_the_wavefront() {
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(8);
+        // Explicit sequential override WITH a decode budget: refused —
+        // an inline decode would stall the shared wavefront.
+        let mut seq_gen = GenerateRequest::new(0, toks(16)).generate(8);
+        seq_gen.mode = Some(ExecMode::Sequential);
+        queue.push((seq_gen, 0)).unwrap();
+        // Auto + short prompt would resolve sequential for prefill, but
+        // generation always packs as diagonal.
+        let auto_gen = GenerateRequest::new(1, toks(8)).generate(8);
+        queue.push((auto_gen, 1)).unwrap();
+        queue.close();
+
+        let mut e = engine(ExecMode::Auto).with_policy(FallbackPolicy::MinSegments(3));
+        let mut got: Vec<(u64, Result<Response>)> = Vec::new();
+        e.serve_queue(&queue, |t, ev| collect_terminal(&mut got, *t, ev)).unwrap();
+        got.sort_by_key(|(t, _)| *t);
+        assert_eq!(got.len(), 2);
+        let err = got[0].1.as_ref().unwrap_err();
+        assert!(err.to_string().contains("diagonal"), "{err}");
+        let resp = got[1].1.as_ref().unwrap();
+        assert_eq!(resp.mode_used, ExecMode::Diagonal);
+        assert_eq!(resp.generated.len(), 8);
+    }
+
+    #[test]
+    fn serve_queue_streams_generation_and_cancels() {
+        // Two generating requests; one is cancelled mid-stream via its
+        // handle. The survivor's continuation must match its solo run
+        // exactly, and the victim must terminate with Event::Error.
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(8);
+        let victim = GenerateRequest::new(0, toks(8 * 2)).generate(8 * 64);
+        let victim_handle = victim.handle();
+        queue.push((victim, 0)).unwrap();
+        let survivor = GenerateRequest::new(1, toks(8 * 3)).generate(20);
+        queue.push((survivor, 1)).unwrap();
+        queue.close();
+
+        let mut e = engine(ExecMode::Diagonal).with_lanes(2);
+        let mut survivor_tokens: Vec<u32> = Vec::new();
+        let mut victim_err = None;
+        let mut survivor_done = None;
+        e.serve_queue(&queue, |t, ev| match (*t, ev) {
+            (0, Event::Token { pos, .. }) => {
+                if pos >= 4 {
+                    victim_handle.cancel();
+                }
+            }
+            (0, Event::Error { error }) => victim_err = Some(error),
+            (1, Event::Token { token, .. }) => survivor_tokens.push(token),
+            (1, Event::Done { stats }) => survivor_done = Some(*stats),
+            _ => {}
+        })
+        .unwrap();
+
+        let victim_err = victim_err.expect("victim must terminate with an error");
+        assert!(victim_err.to_string().contains("cancelled"), "{victim_err}");
+        assert_eq!(e.stats.cancelled.get(), 1);
+
+        let done = survivor_done.expect("survivor completes");
+        assert_eq!(done.generated.len(), 20);
+        assert_eq!(survivor_tokens, done.generated);
+        let solo = engine(ExecMode::Diagonal)
+            .process(&GenerateRequest::new(1, toks(8 * 3)).generate(20))
+            .unwrap();
+        assert_eq!(done.generated, solo.generated, "cancel must not perturb the survivor");
+    }
+
+    #[test]
     fn serve_queue_pooled_backend_bitexact_and_counts_workers() {
         // Same weights as `engine()` (seed 9) but a 3-thread cell pool:
         // responses must bit-match the single-threaded sequential path,
@@ -697,20 +1401,20 @@ mod tests {
             NativeBackend::new(cfg.clone(), Params::random(&cfg, 9)).with_threads(3);
         let mut e = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
 
-        let queue: RequestQueue<(Request, u64)> = RequestQueue::new(8);
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(8);
         for i in 0..3u64 {
-            let mut r = Request::new(i, toks(8 * (2 + i as usize)));
+            let mut r = GenerateRequest::new(i, toks(8 * (2 + i as usize)));
             r.want_logits = true;
             queue.push((r, i)).unwrap();
         }
         queue.close();
         let mut got: Vec<(u64, Result<Response>)> = Vec::new();
-        e.serve_queue(&queue, |ticket, resp| got.push((ticket, resp))).unwrap();
+        e.serve_queue(&queue, |t, ev| collect_terminal(&mut got, *t, ev)).unwrap();
 
         let mut reference = engine(ExecMode::Sequential);
         for (ticket, resp) in got {
             let resp = resp.unwrap();
-            let mut r = Request::new(ticket, toks(8 * (2 + ticket as usize)));
+            let mut r = GenerateRequest::new(ticket, toks(8 * (2 + ticket as usize)));
             r.want_logits = true;
             let want = reference.process(&r).unwrap();
             assert_eq!(resp.logits.unwrap(), want.logits.unwrap(), "request {ticket}");
@@ -727,7 +1431,7 @@ mod tests {
 
     #[test]
     fn serve_queue_exits_on_close_when_empty() {
-        let queue: RequestQueue<(Request, ())> = RequestQueue::new(4);
+        let queue: RequestQueue<(GenerateRequest, ())> = RequestQueue::new(4);
         queue.close();
         let mut e = engine(ExecMode::Diagonal);
         e.serve_queue(&queue, |_, _| panic!("no jobs were queued")).unwrap();

@@ -1,11 +1,17 @@
 //! Serving coordinator: the production wrapper around the schedulers.
 //!
-//! * [`engine`] — `InferenceEngine`: owns a backend; `process` executes
-//!   one request in any [`crate::config::ExecMode`], `serve_queue` is
-//!   the continuous-batching drain loop that packs concurrent
-//!   diagonal-mode requests into one persistent
+//! * [`engine`] — `InferenceEngine`: owns a backend; the API is a
+//!   streaming generation lifecycle: a [`GenerateRequest`] (prompt +
+//!   decode budget + sampling + optional deadline) produces a stream of
+//!   [`Event`]s ending in `Done`/`Error`, cancellable via a
+//!   [`RequestHandle`]. `generate`/`process` execute one request in any
+//!   [`crate::config::ExecMode`]; `serve_queue` is the
+//!   continuous-batching drain loop that packs concurrent diagonal-mode
+//!   requests — prefill AND in-wavefront decode — into one persistent
 //!   [`crate::scheduler::WavefrontSession`] and completes them out of
 //!   submission order;
+//! * [`sampling`] — per-request token sampling (greedy by default,
+//!   seeded temperature/top-k otherwise);
 //! * [`fallback`] — the Table 9 runtime policy ("in cases when diagonal
 //!   batching is slower, we can fall back to the original inference
 //!   algorithm at runtime"): calibration + per-request mode choice;
@@ -17,7 +23,11 @@
 pub mod engine;
 pub mod fallback;
 pub mod queue;
+pub mod sampling;
 
-pub use engine::{EngineStats, InferenceEngine, Request, Response};
+pub use engine::{
+    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, Response,
+};
 pub use fallback::FallbackPolicy;
 pub use queue::RequestQueue;
+pub use sampling::SamplingParams;

@@ -36,6 +36,27 @@ pub enum Error {
 
 pub type Result<T> = std::result::Result<T, Error>;
 
+impl Error {
+    /// Best-effort duplicate, for fan-out paths that both return an
+    /// error and emit it on an event stream (`std::io::Error` is not
+    /// `Clone`, so `Io` degrades to a `Request` carrying its message).
+    pub fn duplicate(&self) -> Error {
+        match self {
+            Error::Io(e) => Error::Request(format!("io: {e}")),
+            Error::Json(s) => Error::Json(s.clone()),
+            Error::Xla(s) => Error::Xla(s.clone()),
+            Error::Shape { what, expected, got } => {
+                Error::Shape { what, expected: expected.clone(), got: got.clone() }
+            }
+            Error::Missing(s) => Error::Missing(s.clone()),
+            Error::Config(s) => Error::Config(s.clone()),
+            Error::Schedule(s) => Error::Schedule(s.clone()),
+            Error::Request(s) => Error::Request(s.clone()),
+            Error::Bench(s) => Error::Bench(s.clone()),
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -69,6 +69,22 @@ impl Value {
         u32::try_from(n).map_err(|_| Error::Json(format!("{n} > u32::MAX")))
     }
 
+    /// Unsigned 64-bit integer. JSON numbers are f64, so only integers
+    /// below 2^53 round-trip exactly — larger values are rejected
+    /// rather than silently rounded (wire ids must stay stable). 2^53
+    /// itself is excluded too: 2^53 + 1 rounds onto it during parsing,
+    /// so accepting it would silently alias the two.
+    pub fn as_u64(&self) -> Result<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n >= MAX_EXACT {
+            return Err(Error::Json(format!(
+                "expected unsigned integer in the exact f64 range (0..2^53), got {n}"
+            )));
+        }
+        Ok(n as u64)
+    }
+
     pub fn as_f32(&self) -> Result<f32> {
         Ok(self.as_f64()? as f32)
     }
@@ -414,6 +430,25 @@ mod tests {
         assert!(v.req("s").unwrap().as_f64().is_err());
         assert!(Value::Num(1.5).as_usize().is_err());
         assert!(Value::Num(-1.0).as_usize().is_err());
+    }
+
+    #[test]
+    fn u64_roundtrip_large_ids() {
+        // The largest exactly-representable integer survives a
+        // serialize -> parse -> as_u64 round trip (client-chosen wire
+        // ids must not be mangled).
+        let big: u64 = (1u64 << 53) - 1;
+        let text = Value::Num(big as f64).to_json();
+        let back = Value::parse(&text).unwrap().as_u64().unwrap();
+        assert_eq!(back, big);
+        assert_eq!(Value::Num(0.0).as_u64().unwrap(), 0);
+        assert!(Value::Num(-1.0).as_u64().is_err());
+        assert!(Value::Num(1.5).as_u64().is_err());
+        assert!(Value::Num(1e18).as_u64().is_err(), "beyond exact f64 integers");
+        // 2^53 is rejected: 2^53 + 1 parses to the same f64, so
+        // accepting it would alias distinct wire values.
+        assert!(Value::Num(9_007_199_254_740_992.0).as_u64().is_err());
+        assert!(Value::Str("7".into()).as_u64().is_err());
     }
 
     #[test]

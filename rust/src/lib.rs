@@ -57,19 +57,45 @@
 //! drains a bounded request queue into one long-lived session
 //! continuously — that is what [`server`] runs.
 //!
+//! ## Generation
+//!
+//! The engine's API is a *streaming lifecycle*: a
+//! [`coordinator::GenerateRequest`] (prompt + `max_new_tokens` +
+//! [`coordinator::SamplingParams`] + optional deadline) produces a
+//! stream of [`coordinator::Event`]s — `SegmentDone` per exited
+//! segment, `Token` per generated token, then a terminal
+//! `Done`/`Error` — cancellable mid-flight via a
+//! [`coordinator::RequestHandle`]. Decode happens *inside the live
+//! wavefront*: when a request's prefill segments drain, its sampled
+//! continuation is appended to the same lane
+//! ([`scheduler::WavefrontSession::append_segment`]), so concurrent
+//! generations keep sharing grouped launches — and each continuation is
+//! bit-identical to running prompt + generated tokens through the
+//! sequential single-shot oracle (decode is just more segments of the
+//! same exact recurrence). `InferenceEngine::process` is the
+//! collect-all-events special case returning the terminal
+//! [`coordinator::Response`]. Try it without artifacts:
+//! `diagonal-batching generate --synthetic 42 --tokens 64
+//! --max-new-tokens 32`, or `cargo run --release --example
+//! generate_stream`.
+//!
 //! ## Serving
 //!
 //! `diagonal-batching serve --addr HOST:PORT --lanes N` starts the TCP
-//! JSON-lines server. `--lanes N` sets the wavefront's slot-lane width
-//! `B`: up to `N` concurrent requests batch into every grouped launch
-//! on the native backend (keep `N = 1` on the current single-lane HLO
-//! artifacts; stream packing still fills ramp bubbles there). Clients
-//! send one JSON object per line; besides inference requests the
-//! protocol has `{"cmd": "ping"}`, `{"cmd": "shutdown"}` and
-//! `{"cmd": "stats"}`, which returns the live [`coordinator::EngineStats`]
-//! snapshot — request/launch counters, `mean_group`, `occupancy`,
-//! `padded_cells` and `latency_ms_{mean,p50,p90,p99}` (see [`server`]
-//! for the exact shapes).
+//! JSON-lines server (`--synthetic SEED` serves the built-in
+//! artifact-free model). `--lanes N` sets the wavefront's slot-lane
+//! width `B`: up to `N` concurrent requests batch into every grouped
+//! launch on the native backend (keep `N = 1` on the current
+//! single-lane HLO artifacts; stream packing still fills ramp bubbles
+//! there). Clients send one JSON object per line and receive one line
+//! per event (`segment`, `token`, then terminal `done`/`error`);
+//! besides requests the protocol has `{"cmd": "ping"}`,
+//! `{"cmd": "cancel", "id": N}` (works from any connection),
+//! `{"cmd": "shutdown"}` and `{"cmd": "stats"}`, which returns the live
+//! [`coordinator::EngineStats`] snapshot — request/launch/cancel
+//! counters, `mean_group`, `occupancy`, `padded_cells`,
+//! `generated_tokens` and `latency_ms_{mean,p50,p90,p99}` (see
+//! [`server`] for the exact frame shapes).
 //!
 //! ## Benchmarks
 //!

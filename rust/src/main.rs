@@ -1,15 +1,20 @@
 //! `diagonal-batching` — the L3 launcher.
 //!
 //! ```text
-//! diagonal-batching serve  [--model tiny] [--mode diagonal] [--addr HOST:PORT]
-//!                          [--lanes N] [--threads N]
-//! diagonal-batching run    [--model tiny] [--mode diagonal|seq|full|auto]
-//!                          [--tokens N] [--backend hlo|native] [--compare true]
-//! diagonal-batching bench  [--suite GLOB] [--json PATH] [--compare BASELINE]
-//!                          [--max-regression 1.15] [--fast true] [--list true]
-//! diagonal-batching tables [--device a100|h100]     # regenerate paper tables
+//! diagonal-batching serve    [--model tiny] [--mode diagonal] [--addr HOST:PORT]
+//!                            [--lanes N] [--threads N] [--synthetic SEED]
+//! diagonal-batching generate [--tokens N] [--max-new-tokens M] [--temperature T]
+//!                            [--top-k K] [--seed S] [--connect HOST:PORT]
+//!                            [--cancel-after K]     # stream tokens to stdout
+//! diagonal-batching ctl      --connect HOST:PORT --cmd ping|stats|shutdown|cancel
+//!                            [--id N]               # control a running server
+//! diagonal-batching run      [--model tiny] [--mode diagonal|seq|full|auto]
+//!                            [--tokens N] [--backend hlo|native] [--compare true]
+//! diagonal-batching bench    [--suite GLOB] [--json PATH] [--compare BASELINE]
+//!                            [--max-regression 1.15] [--fast true] [--list true]
+//! diagonal-batching tables   [--device a100|h100]   # regenerate paper tables
 //! diagonal-batching babilong [--task qa1|qa2] [--len N] [--episodes N]
-//! diagonal-batching info   [--model tiny]           # artifact inventory
+//! diagonal-batching info     [--model tiny]         # artifact inventory
 //! ```
 //!
 //! Hand-rolled flag parsing (offline toolchain has no clap); every
@@ -19,12 +24,15 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use diagonal_batching::babilong::{self, Task};
-use diagonal_batching::config::{BackendKind, ExecMode, Manifest, RuntimeConfig};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::config::{BackendKind, ExecMode, Manifest, ModelConfig, RuntimeConfig};
+use diagonal_batching::coordinator::{
+    Event, GenerateRequest, InferenceEngine, SamplingParams,
+};
+use diagonal_batching::json::Value;
 use diagonal_batching::model::{NativeBackend, Params};
 use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::StepBackend;
-use diagonal_batching::server::Server;
+use diagonal_batching::server::{Client, Server};
 use diagonal_batching::simulator::{tables, DeviceSpec};
 
 fn main() -> ExitCode {
@@ -89,7 +97,9 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     }
 
     match cmd.as_str() {
-        "serve" => cmd_serve(&cfg),
+        "serve" => cmd_serve(&cfg, &flags),
+        "generate" => cmd_generate(&cfg, &flags),
+        "ctl" => cmd_ctl(&flags),
         "run" => cmd_run(&cfg, &flags),
         "bench" => cmd_bench(&cfg, &flags),
         "tables" => cmd_tables(&cfg, &flags),
@@ -108,7 +118,7 @@ fn print_usage() {
         "diagonal-batching — Diagonal Batching for Recurrent Memory Transformers
 
 USAGE:
-  diagonal-batching <serve|run|bench|tables|babilong|info> [--flags]
+  diagonal-batching <serve|generate|ctl|run|bench|tables|babilong|info> [--flags]
 
 COMMON FLAGS:
   --manifest PATH   artifacts/manifest.json
@@ -119,6 +129,9 @@ COMMON FLAGS:
 
 SUBCOMMANDS:
   serve     --addr HOST:PORT                 start the TCP JSON-lines server
+                                             (streaming event frames; see the
+                                             server module docs for the wire
+                                             protocol)
             --lanes N                        N wavefront lanes batch N concurrent
                                              requests per launch on the native
                                              backend; the current single-lane HLO
@@ -131,6 +144,21 @@ SUBCOMMANDS:
                                              count, 1 = the sequential reference
                                              path — bit-identical results either
                                              way)
+            --synthetic SEED                 serve a built-in untrained synthetic
+                                             model (native backend, no artifacts
+                                             needed — demos and CI smoke tests)
+  generate  --tokens N                       synthesize an N-token prompt and
+            --max-new-tokens M               stream M generated tokens to stdout
+            --temperature T --top-k K        sampling (default greedy)
+            --seed S
+            --connect HOST:PORT              drive a running server instead of
+                                             an in-process engine
+            --cancel-after K                 (with --connect) cancel the request
+                                             after K streamed events — exercises
+                                             the mid-stream cancel path
+            --synthetic SEED                 local engine without artifacts
+  ctl       --connect HOST:PORT              one control command against a
+            --cmd ping|stats|shutdown|cancel running server (cancel takes --id N)
   run       --tokens N --compare true        one forward pass (+drift check)
   bench     --suite GLOB --json PATH         the pallas-bench harness: run the
             --compare BASELINE               registered suites matching GLOB
@@ -165,10 +193,34 @@ fn boxed_backend(
     })
 }
 
-fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
+/// The serve/generate backends: either the manifest-driven real model
+/// or the built-in synthetic one (`--synthetic SEED`, artifact-free).
+fn serving_backend(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<Box<dyn StepBackend + Send>, Box<dyn std::error::Error>> {
+    if let Some(seed) = flags.get("synthetic") {
+        let seed: u64 = seed.parse()?;
+        let mc = ModelConfig::synthetic();
+        println!(
+            "synthetic model (seed {seed}): d={} L={} seg={} — untrained, artifact-free",
+            mc.d_model, mc.n_layers, mc.seg
+        );
+        return Ok(Box::new(
+            NativeBackend::new(mc.clone(), Params::random(&mc, seed))
+                .with_threads(cfg.resolved_threads()),
+        ));
+    }
     let manifest = Manifest::load(&cfg.manifest)?;
     println!("loading model '{}' (backend {})...", cfg.model, cfg.backend);
-    let backend = boxed_backend(cfg, &manifest)?;
+    boxed_backend(cfg, &manifest)
+}
+
+fn cmd_serve(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let backend = serving_backend(cfg, flags)?;
     let mut engine = InferenceEngine::new(backend, cfg.mode)
         .with_max_tokens(cfg.max_request_tokens)
         .with_lanes(cfg.lanes);
@@ -181,13 +233,14 @@ fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
             cal.crossover_segments()
         );
     }
-    let threads = match cfg.backend {
-        BackendKind::Native => cfg.resolved_threads(),
-        BackendKind::Hlo => 1,
+    let threads = match (flags.contains_key("synthetic"), cfg.backend) {
+        (true, _) | (false, BackendKind::Native) => cfg.resolved_threads(),
+        (false, BackendKind::Hlo) => 1,
     };
     let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
     println!(
-        "serving on {} (mode {}, {} wavefront lane{}, {} worker thread{}) — Ctrl-C to stop",
+        "serving on {} (mode {}, {} wavefront lane{}, {} worker thread{}) — \
+         {{\"cmd\": \"shutdown\"}} or Ctrl-C to stop",
         server.addr,
         cfg.mode,
         cfg.lanes,
@@ -195,9 +248,148 @@ fn cmd_serve(cfg: &RuntimeConfig) -> Result<(), Box<dyn std::error::Error>> {
         threads,
         if threads == 1 { "" } else { "s" }
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // Blocks until a protocol shutdown drains the engine, then exits
+    // cleanly (the CI smoke test watchdogs this path).
+    server.join();
+    println!("server stopped cleanly");
+    Ok(())
+}
+
+/// Stream a generation to stdout: token ids on stdout (one line at the
+/// end), progress/summary on stderr. Local engine by default,
+/// `--connect` drives a running server over TCP instead.
+fn cmd_generate(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let n_tokens: usize = flags.get("tokens").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let max_new: usize =
+        flags.get("max-new-tokens").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let sampling = SamplingParams {
+        temperature: flags.get("temperature").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
+        top_k: flags.get("top-k").map(|s| s.parse()).transpose()?.unwrap_or(0),
+        seed: flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0),
+    };
+
+    if let Some(addr) = flags.get("connect") {
+        return generate_remote(addr, n_tokens, max_new, sampling, flags);
     }
+
+    let backend = serving_backend(cfg, flags)?;
+    let vocab = backend.config().vocab as u32;
+    let prompt: Vec<u32> = (0..n_tokens as u32).map(|i| (i * 31 + 7) % vocab).collect();
+    let mut engine = InferenceEngine::new(backend, cfg.mode);
+    let req = GenerateRequest::new(1, prompt).generate(max_new).with_sampling(sampling);
+    let mut produced = Vec::new();
+    engine.generate(&req, |ev| match ev {
+        Event::SegmentDone { index, .. } => eprintln!("segment {index} done"),
+        Event::Token { token, .. } => produced.push(token),
+        Event::Done { stats } => eprintln!(
+            "done: {} segments, {} launches, mean group {:.2}, {:?}",
+            stats.stats.segments,
+            stats.stats.launches,
+            stats.stats.mean_group(),
+            stats.latency
+        ),
+        Event::Error { error } => eprintln!("error: {error}"),
+    })?;
+    println!(
+        "{}",
+        produced.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    Ok(())
+}
+
+fn generate_remote(
+    addr: &str,
+    n_tokens: usize,
+    max_new: usize,
+    sampling: SamplingParams,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let vocab: u32 = flags.get("vocab").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let cancel_after: Option<usize> =
+        flags.get("cancel-after").map(|s| s.parse()).transpose()?;
+    let prompt: Vec<u32> = (0..n_tokens as u32).map(|i| (i * 31 + 7) % vocab).collect();
+    // Wire id: unique enough for one CLI invocation against one server.
+    let id = 1_000_000 + std::process::id() as u64;
+
+    let mut fields = vec![
+        ("id", Value::Num(id as f64)),
+        ("tokens", Value::arr_u32(&prompt)),
+        ("max_new_tokens", Value::Num(max_new as f64)),
+    ];
+    if !sampling.is_greedy() {
+        fields.push(("temperature", Value::Num(sampling.temperature as f64)));
+        fields.push(("top_k", Value::Num(sampling.top_k as f64)));
+        fields.push(("seed", Value::Num(sampling.seed as f64)));
+    }
+
+    let mut client = Client::connect(addr)?;
+    // The canceller rides a second connection, like a real operator.
+    let mut canceller = match cancel_after {
+        Some(_) => Some(Client::connect(addr)?),
+        None => None,
+    };
+    let mut events = 0usize;
+    let mut produced = Vec::new();
+    let mut cancel_sent = false;
+    let result = client.request_stream(&Value::obj(fields), |frame| {
+        events += 1;
+        if let Some(Ok(tok)) = frame.get("token").map(Value::as_u32) {
+            produced.push(tok);
+        }
+        if let (Some(k), Some(c), false) = (cancel_after, canceller.as_mut(), cancel_sent) {
+            if events >= k {
+                cancel_sent = true;
+                match c.cancel(id) {
+                    Ok(ok) => eprintln!("cancel sent after {events} events (active: {ok})"),
+                    Err(e) => eprintln!("cancel failed: {e}"),
+                }
+            }
+        }
+    });
+    println!(
+        "{}",
+        produced.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    match result {
+        Ok(done) => {
+            eprintln!(
+                "done: {} generated, latency {} ms",
+                done.req("generated")?.as_u32_vec()?.len(),
+                done.req("latency_ms")?.as_f64()?
+            );
+            if cancel_after.is_some() {
+                return Err("expected the stream to be cancelled, but it completed".into());
+            }
+            Ok(())
+        }
+        // A deliberate mid-stream cancel terminating the stream is this
+        // invocation's success condition.
+        Err(e) if cancel_sent && e.to_string().contains("cancelled") => {
+            eprintln!("stream cancelled mid-generation after {} tokens — OK", produced.len());
+            Ok(())
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// One control command against a running server.
+fn cmd_ctl(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let addr = flags.get("connect").ok_or("ctl needs --connect HOST:PORT")?;
+    let cmd = flags.get("cmd").ok_or("ctl needs --cmd ping|stats|shutdown|cancel")?;
+    let mut client = Client::connect(addr)?;
+    let mut fields = vec![("cmd", Value::Str(cmd.clone()))];
+    if let Some(id) = flags.get("id") {
+        fields.push(("id", Value::Num(id.parse::<u64>()? as f64)));
+    }
+    let resp = client.roundtrip(&Value::obj(fields))?;
+    println!("{}", resp.to_json());
+    if resp.get("error").is_some() {
+        return Err(format!("server refused: {}", resp.to_json()).into());
+    }
+    Ok(())
 }
 
 fn cmd_run(
@@ -213,7 +405,7 @@ fn cmd_run(
 
     let backend = boxed_backend(cfg, &manifest)?;
     let mut engine = InferenceEngine::new(backend, cfg.mode);
-    let mut req = Request::new(1, tokens.clone());
+    let mut req = GenerateRequest::new(1, tokens.clone());
     req.want_logits = true;
     let resp = engine.process(&req)?;
     println!(
@@ -226,7 +418,7 @@ fn cmd_run(
     );
     if compare {
         // Diagonal vs sequential drift — the paper's Table 2 metric.
-        let mut rd = Request::new(2, tokens.clone());
+        let mut rd = GenerateRequest::new(2, tokens.clone());
         rd.want_logits = true;
         rd.mode = Some(ExecMode::Diagonal);
         let mut rs = rd.clone();
@@ -413,7 +605,7 @@ fn cmd_babilong(
     let mut preds = Vec::new();
     let t0 = std::time::Instant::now();
     for (i, e) in eps.iter().enumerate() {
-        let mut req = Request::new(i as u64, e.tokens.clone());
+        let mut req = GenerateRequest::new(i as u64, e.tokens.clone());
         req.want_logits = true;
         let resp = engine.process(&req)?;
         // the answer is predicted at the query position of the last segment

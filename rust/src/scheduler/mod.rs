@@ -37,4 +37,4 @@ pub use executor::{
     WorkerStats,
 };
 pub use plan::{Schedule, ScheduleKind};
-pub use session::{SessionOutput, WavefrontSession};
+pub use session::{SegmentExit, SessionOutput, WavefrontSession};

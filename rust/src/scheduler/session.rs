@@ -43,6 +43,29 @@
 //! by the time `grouped_step` returns, the whole wavefront has landed,
 //! and results are written by slot index so a pooled step is
 //! bit-identical to a sequential one (`rust/tests/parallel_parity.rs`).
+//!
+//! **Decode phase (streaming generation).** A request submitted with
+//! [`submit_stream`](WavefrontSession::submit_stream) keeps its token
+//! stream *open*: after the queued segments drain, the lane stays
+//! reserved and the caller may feed further segments with
+//! [`append_segment`](WavefrontSession::append_segment) — this is how
+//! the serving engine implements autoregressive decode: each segment
+//! that exits the last layer is surfaced immediately as a
+//! [`SegmentExit`] (via [`pop_exited`](WavefrontSession::pop_exited)),
+//! the engine samples the next segment from its logits and appends it
+//! to the *same live wavefront*. Exact recurrence is preserved by
+//! construction — a decode segment is just one more segment of the same
+//! request, streaming through the same lane against the same `(A, z)`
+//! memory, so the generated continuation is bit-identical to running
+//! prompt + generated tokens through the single-shot executor. While a
+//! request waits for its frontier segment to exit (the inherent
+//! `L - 1`-iteration recurrence latency of autoregressive decode), its
+//! lane injects nothing — but *other* lanes and requests keep filling
+//! the grouped launches, which is what keeps multi-user generation
+//! packed instead of serialized. [`finish_stream`](WavefrontSession::finish_stream)
+//! closes an open stream; [`cancel`](WavefrontSession::cancel) evicts a
+//! request anywhere in its lifecycle, freeing its lane and zeroing its
+//! memory slots.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -64,7 +87,17 @@ struct Inflight {
     segments: Vec<Vec<u32>>,
     /// Next segment index to inject at layer 0.
     next_seg: usize,
-    /// Completed per-segment logits, in segment order.
+    /// Segments that have exited the last layer so far.
+    exited: usize,
+    /// Open streams (`submit_stream`) may still grow via
+    /// `append_segment`; their lane stays reserved while they wait.
+    open: bool,
+    /// Surface per-segment exits through the [`SegmentExit`] queue.
+    events: bool,
+    /// Accumulate per-segment logits for the final [`SessionOutput`]
+    /// (off for streaming requests that only consume exit events).
+    keep_logits: bool,
+    /// Completed per-segment logits, in segment order (`keep_logits`).
     logits: Vec<Tensor>,
     submitted: Instant,
     /// Iteration counter value when segment 0 was injected.
@@ -73,6 +106,18 @@ struct Inflight {
     /// request's occupancy window).
     active0: u64,
     slot0: u64,
+}
+
+/// A segment that just exited the last layer — the streaming
+/// observation the decode loop feeds on. Only emitted for requests
+/// admitted via [`WavefrontSession::submit_stream`].
+#[derive(Clone, Debug)]
+pub struct SegmentExit {
+    pub id: u64,
+    /// Segment index within the request, in exit order.
+    pub index: usize,
+    /// `[seg, vocab]` logits of the exited segment.
+    pub logits: Tensor,
 }
 
 /// A completed request: per-segment logits plus its slice of the
@@ -135,6 +180,8 @@ pub struct WavefrontSession {
     pending: VecDeque<u64>,
     inflight: HashMap<u64, Inflight>,
     done: VecDeque<SessionOutput>,
+    /// Per-segment exits of event-emitting requests, in exit order.
+    exits: VecDeque<SegmentExit>,
     iterations: u64,
     active_cells: u64,
     slot_steps: u64,
@@ -158,6 +205,7 @@ impl WavefrontSession {
             pending: VecDeque::new(),
             inflight: HashMap::new(),
             done: VecDeque::new(),
+            exits: VecDeque::new(),
             iterations: 0,
             active_cells: 0,
             slot_steps: 0,
@@ -198,6 +246,34 @@ impl WavefrontSession {
 
     /// [`submit`](Self::submit) for pre-segmented input.
     pub fn submit_segments(&mut self, id: u64, segments: Vec<Vec<u32>>) -> Result<()> {
+        self.admit(id, segments, false, false, true)
+    }
+
+    /// Admit a request with an *open* token stream: after the queued
+    /// `segments` drain, the request's lane stays reserved and further
+    /// segments may be fed with [`append_segment`](Self::append_segment)
+    /// (autoregressive decode) until [`finish_stream`](Self::finish_stream)
+    /// closes it. Every exiting segment is surfaced as a [`SegmentExit`].
+    /// `keep_logits` controls whether the final [`SessionOutput`] also
+    /// accumulates per-segment logits (streaming consumers usually only
+    /// need the exit events).
+    pub fn submit_stream(
+        &mut self,
+        id: u64,
+        segments: Vec<Vec<u32>>,
+        keep_logits: bool,
+    ) -> Result<()> {
+        self.admit(id, segments, true, true, keep_logits)
+    }
+
+    fn admit(
+        &mut self,
+        id: u64,
+        segments: Vec<Vec<u32>>,
+        open: bool,
+        events: bool,
+        keep_logits: bool,
+    ) -> Result<()> {
         if segments.is_empty() {
             return Err(Error::Request("empty token sequence".into()));
         }
@@ -215,6 +291,10 @@ impl WavefrontSession {
             Inflight {
                 segments,
                 next_seg: 0,
+                exited: 0,
+                open,
+                events,
+                keep_logits,
                 logits: Vec::new(),
                 submitted: Instant::now(),
                 first_iter: None,
@@ -226,6 +306,78 @@ impl WavefrontSession {
         Ok(())
     }
 
+    /// Feed one more segment to an open stream (the decode hand-off:
+    /// the engine samples this segment from the previous [`SegmentExit`]'s
+    /// logits). The segment enters the request's reserved lane at the
+    /// next [`step`](Self::step).
+    pub fn append_segment(&mut self, id: u64, tokens: Vec<u32>) -> Result<()> {
+        if tokens.len() != self.cfg.seg {
+            return Err(Error::Request(format!(
+                "every segment must hold exactly {} tokens",
+                self.cfg.seg
+            )));
+        }
+        match self.inflight.get_mut(&id) {
+            None => Err(Error::Request(format!("request id {id} not in flight"))),
+            Some(fl) if !fl.open => {
+                Err(Error::Request(format!("request id {id}: stream already closed")))
+            }
+            Some(fl) => {
+                fl.segments.push(tokens);
+                Ok(())
+            }
+        }
+    }
+
+    /// Close an open stream: no further [`append_segment`](Self::append_segment)
+    /// calls are accepted and the request completes when its last queued
+    /// segment exits (immediately, if that already happened). Idempotent
+    /// on already-closed streams.
+    pub fn finish_stream(&mut self, id: u64) -> Result<()> {
+        match self.inflight.get_mut(&id) {
+            None => Err(Error::Request(format!("request id {id} not in flight"))),
+            Some(fl) => {
+                fl.open = false;
+                self.try_complete(id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Evict a request anywhere in its lifecycle (pending, streaming, or
+    /// mid-decode): its in-flight cells vanish from the wavefront and
+    /// its lane is freed for the next pending request. Returns `false`
+    /// when `id` is not in flight (unknown or already completed). The
+    /// evicted request never reaches the completion queue.
+    ///
+    /// Memory hygiene needs no scrubbing here: the victim's leftover
+    /// `(A, z)` state is overwritten by the standard request-boundary
+    /// rule — the next occupant's first segment zeroes each layer as it
+    /// arrives (step (3)). Actively zeroing the lane would be WRONG:
+    /// a predecessor's trailing segments may still be traversing the
+    /// lane's upper layers, and they depend on the memory their own
+    /// earlier segments wrote there.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.inflight.remove(&id).is_none() {
+            return false;
+        }
+        self.pending.retain(|&p| p != id);
+        self.exits.retain(|e| e.id != id);
+        let (l_total, b_total) = (self.cfg.n_layers, self.lanes);
+        for lane in 0..b_total {
+            if self.streams[lane] == Some(id) {
+                self.streams[lane] = None;
+            }
+            for l in 0..l_total {
+                let slot = l * b_total + lane;
+                if matches!(self.tags[slot], Some(t) if t.req == id) {
+                    self.tags[slot] = None;
+                }
+            }
+        }
+        true
+    }
+
     /// Next completed request, in completion order (which is generally
     /// NOT submission order once requests of different lengths pack).
     pub fn pop_completed(&mut self) -> Option<SessionOutput> {
@@ -235,6 +387,14 @@ impl WavefrontSession {
     /// All completed requests accumulated so far.
     pub fn drain_completed(&mut self) -> Vec<SessionOutput> {
         self.done.drain(..).collect()
+    }
+
+    /// Next segment exit of an event-emitting request
+    /// ([`submit_stream`](Self::submit_stream)), in exit order. Drain
+    /// after every [`step`](Self::step) — this is the decode loop's
+    /// heartbeat.
+    pub fn pop_exited(&mut self) -> Option<SegmentExit> {
+        self.exits.pop_front()
     }
 
     /// Session-aggregate utilization: `launches` = wavefront iterations,
@@ -268,6 +428,9 @@ impl WavefrontSession {
 
         // (1) Injection: each lane pulls the next segment of its stream,
         // or starts the next pending request the moment its stream ends.
+        // An OPEN stream that ran out of queued segments keeps its lane
+        // reserved (injecting nothing) until the caller appends the next
+        // decode segment or closes it.
         for lane in 0..b_total {
             let tag = loop {
                 match self.streams[lane] {
@@ -285,6 +448,11 @@ impl WavefrontSession {
                             self.x_slots.set_index01(0, lane, &emb);
                             break Some(CellTag { req, seg: seg_idx });
                         }
+                        if fl.open {
+                            // Awaiting append_segment (decode frontier in
+                            // flight); the lane idles but stays owned.
+                            break None;
+                        }
                         // Stream exhausted; free the lane and retry.
                         self.streams[lane] = None;
                     }
@@ -298,9 +466,11 @@ impl WavefrontSession {
         }
 
         // (2) Occupancy accounting; bail out if the wavefront is empty.
+        // (Can legitimately happen mid-generation: every in-flight
+        // request may be an open stream awaiting its next appended
+        // segment, with all lanes idle-but-reserved.)
         let active = self.tags.iter().flatten().count() as u64;
         if active == 0 {
-            debug_assert!(self.inflight.is_empty(), "idle wavefront with requests in flight");
             return Ok(false);
         }
         self.iterations += 1;
@@ -329,36 +499,34 @@ impl WavefrontSession {
         self.z = z2;
 
         // (5) Segments exit fully processed at the last layer; a
-        // request completes when its final segment exits.
+        // request completes when its final segment exits with the
+        // stream closed.
         for lane in 0..b_total {
             if let Some(t) = self.tags[(l_total - 1) * b_total + lane] {
                 let logits = backend.lm_head(&y.index01(l_total - 1, lane))?;
-                let finished = {
+                // The tensor is cloned only when BOTH the per-request
+                // accumulator and the exit-event queue need it; the
+                // common single-consumer cases move it.
+                let event_logits = {
                     let fl = self.inflight.get_mut(&t.req).expect("exiting request in flight");
-                    debug_assert_eq!(fl.logits.len(), t.seg, "segments exit in order");
-                    fl.logits.push(logits);
-                    fl.logits.len() == fl.segments.len()
+                    debug_assert_eq!(fl.exited, t.seg, "segments exit in order");
+                    fl.exited += 1;
+                    if fl.events {
+                        if fl.keep_logits {
+                            fl.logits.push(logits.clone());
+                        }
+                        Some(logits)
+                    } else {
+                        if fl.keep_logits {
+                            fl.logits.push(logits);
+                        }
+                        None
+                    }
                 };
-                if finished {
-                    let fl = self.inflight.remove(&t.req).expect("finished request");
-                    let s_total = fl.segments.len();
-                    let span = self.iterations - fl.first_iter.expect("completed => injected");
-                    let slot_span = self.slot_steps - fl.slot0;
-                    let active_span = self.active_cells - fl.active0;
-                    let stats = RunStats {
-                        mode_diagonal: true,
-                        segments: s_total,
-                        launches: span,
-                        cells: (s_total * l_total) as u64,
-                        slot_steps: slot_span,
-                        padded_cells: slot_span - active_span,
-                        wall: fl.submitted.elapsed(),
-                        tokens: s_total * self.cfg.seg,
-                    };
-                    self.segments_done += s_total;
-                    self.tokens_done += stats.tokens;
-                    self.done.push_back(SessionOutput { id: t.req, logits: fl.logits, stats });
+                if let Some(logits) = event_logits {
+                    self.exits.push_back(SegmentExit { id: t.req, index: t.seg, logits });
                 }
+                self.try_complete(t.req);
             }
         }
 
@@ -376,9 +544,53 @@ impl WavefrontSession {
     }
 
     /// Step until every admitted request has completed.
+    ///
+    /// Open streams are the caller's responsibility: an open stream
+    /// awaiting [`append_segment`](Self::append_segment) makes the
+    /// wavefront idle without being complete, and this loop returns.
     pub fn run_to_completion<B: StepBackend + ?Sized>(&mut self, backend: &mut B) -> Result<()> {
         while self.step(backend)? {}
         Ok(())
+    }
+
+    /// Move a request to the completion queue once its stream is closed
+    /// and every queued segment has exited.
+    fn try_complete(&mut self, id: u64) {
+        let ready = match self.inflight.get(&id) {
+            Some(fl) => !fl.open && fl.exited == fl.segments.len(),
+            None => false,
+        };
+        if !ready {
+            return;
+        }
+        let fl = self.inflight.remove(&id).expect("checked above");
+        // Free the lane if the request still holds one (open streams
+        // keep theirs until completion; closed streams released it when
+        // injection exhausted them, possibly to a successor — only a
+        // slot still pointing at `id` is ours to clear).
+        for s in self.streams.iter_mut() {
+            if *s == Some(id) {
+                *s = None;
+            }
+        }
+        let l_total = self.cfg.n_layers;
+        let s_total = fl.segments.len();
+        let span = self.iterations - fl.first_iter.expect("completed => injected");
+        let slot_span = self.slot_steps - fl.slot0;
+        let active_span = self.active_cells - fl.active0;
+        let stats = RunStats {
+            mode_diagonal: true,
+            segments: s_total,
+            launches: span,
+            cells: (s_total * l_total) as u64,
+            slot_steps: slot_span,
+            padded_cells: slot_span - active_span,
+            wall: fl.submitted.elapsed(),
+            tokens: s_total * self.cfg.seg,
+        };
+        self.segments_done += s_total;
+        self.tokens_done += stats.tokens;
+        self.done.push_back(SessionOutput { id, logits: fl.logits, stats });
     }
 }
 
@@ -495,6 +707,245 @@ mod tests {
         assert!(session.submit(1, &[]).is_err());
         session.submit(1, &tokens(8, 0)).unwrap();
         assert!(session.submit(1, &tokens(8, 0)).is_err());
+    }
+
+    /// Drive an open stream by hand: feed the argmax of each frontier
+    /// exit back as the next segment, `decode_segments` times, then
+    /// close. Returns (output, generated-token segments).
+    fn drive_decode(
+        b: &mut NativeBackend,
+        session: &mut WavefrontSession,
+        id: u64,
+        prompt_segments: usize,
+        decode_segments: usize,
+    ) -> (SessionOutput, Vec<Vec<u32>>) {
+        let mut fed = prompt_segments;
+        let mut appended = 0;
+        let mut generated = Vec::new();
+        for _ in 0..10_000 {
+            session.step(b).unwrap();
+            while let Some(exit) = session.pop_exited() {
+                assert_eq!(exit.id, id);
+                if exit.index + 1 == fed {
+                    if appended < decode_segments {
+                        let seg: Vec<u32> =
+                            exit.logits.argmax_rows().iter().map(|&t| t as u32).collect();
+                        session.append_segment(id, seg.clone()).unwrap();
+                        generated.push(seg);
+                        fed += 1;
+                        appended += 1;
+                    } else {
+                        session.finish_stream(id).unwrap();
+                    }
+                }
+            }
+            if let Some(out) = session.pop_completed() {
+                return (out, generated);
+            }
+        }
+        panic!("decode did not complete");
+    }
+
+    #[test]
+    fn open_stream_decode_is_exact_recurrence() {
+        // Streamed decode (prompt, then two greedy segments appended to
+        // the LIVE wavefront) must be bit-identical to running
+        // prompt + generated through the single-shot sequential oracle.
+        let mut b = backend(50);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let prompt = tokens(8 * 2, 7);
+        let segments = crate::scheduler::segment_tokens(&cfg(), &prompt).unwrap();
+        session.submit_stream(1, segments, true).unwrap();
+        let (out, generated) = drive_decode(&mut b, &mut session, 1, 2, 2);
+
+        assert_eq!(out.stats.segments, 4); // 2 prompt + 2 decode
+        let mut full = prompt.clone();
+        for seg in &generated {
+            full.extend_from_slice(seg);
+        }
+        let oracle = sequential_reference(50, &full);
+        assert_eq!(out.logits.len(), oracle.len());
+        for (a, o) in out.logits.iter().zip(&oracle) {
+            // f32::to_bits equality — PartialEq on the tensors is
+            // equivalent here, but make bit-exactness explicit.
+            let (ab, ob): (Vec<u32>, Vec<u32>) = (
+                a.data().iter().map(|x| x.to_bits()).collect(),
+                o.data().iter().map(|x| x.to_bits()).collect(),
+            );
+            assert_eq!(ab, ob);
+        }
+    }
+
+    #[test]
+    fn decode_packs_with_other_requests() {
+        // A second lane keeps serving closed requests (bit-exactly)
+        // while lane 0 decodes; the decoding stream's bubbles do not
+        // stall anyone else.
+        let mut b = backend(51);
+        let mut session = WavefrontSession::new(cfg(), 2);
+        let prompt = tokens(8, 1);
+        let other = tokens(8 * 4, 9);
+        session
+            .submit_stream(1, crate::scheduler::segment_tokens(&cfg(), &prompt).unwrap(), true)
+            .unwrap();
+        session.submit(2, &other).unwrap();
+
+        let mut fed = 1;
+        let mut appended = 0;
+        let mut done_other = None;
+        let mut done_gen = None;
+        for _ in 0..10_000 {
+            session.step(&mut b).unwrap();
+            while let Some(exit) = session.pop_exited() {
+                assert_eq!(exit.id, 1, "closed submits emit no exit events");
+                if exit.index + 1 == fed {
+                    if appended < 3 {
+                        let seg: Vec<u32> =
+                            exit.logits.argmax_rows().iter().map(|&t| t as u32).collect();
+                        session.append_segment(1, seg).unwrap();
+                        fed += 1;
+                        appended += 1;
+                    } else {
+                        session.finish_stream(1).unwrap();
+                    }
+                }
+            }
+            while let Some(out) = session.pop_completed() {
+                match out.id {
+                    1 => done_gen = Some(out),
+                    _ => done_other = Some(out),
+                }
+            }
+            if done_gen.is_some() && done_other.is_some() {
+                break;
+            }
+        }
+        let done_other = done_other.expect("closed request finished");
+        assert_eq!(done_other.logits, sequential_reference(51, &other));
+        assert_eq!(done_gen.expect("decode finished").stats.segments, 4);
+    }
+
+    #[test]
+    fn cancel_frees_reserved_lane_for_pending_request() {
+        // Single lane: an open stream parks on the lane; a closed
+        // request waits behind it; cancelling the stream hands the lane
+        // over and the survivor stays bit-exact.
+        let mut b = backend(52);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let gen_prompt = tokens(8, 3);
+        let waiting = tokens(8 * 3, 5);
+        session
+            .submit_stream(1, crate::scheduler::segment_tokens(&cfg(), &gen_prompt).unwrap(), true)
+            .unwrap();
+        session.submit(2, &waiting).unwrap();
+        // Let the open stream's only segment travel a couple of layers.
+        session.step(&mut b).unwrap();
+        session.step(&mut b).unwrap();
+        assert_eq!(session.backlog(), 1, "closed request still waits for the lane");
+
+        assert!(session.cancel(1));
+        assert!(!session.cancel(1), "double cancel is a no-op");
+        session.run_to_completion(&mut b).unwrap();
+        let out = session.pop_completed().unwrap();
+        assert_eq!(out.id, 2);
+        assert_eq!(out.logits, sequential_reference(52, &waiting));
+        assert!(session.is_idle());
+        assert!(session.pop_exited().is_none(), "cancel purged the victim's exit events");
+    }
+
+    #[test]
+    fn cancel_does_not_corrupt_predecessor_still_in_lane() {
+        // Single lane: request A's stream is exhausted and the lane
+        // hands over to B while A's tail segments still traverse the
+        // upper layers (they depend on the memory A's earlier segments
+        // wrote there). Cancelling B must not touch that state — A's
+        // remaining logits stay bit-exact.
+        let mut b = backend(55);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let a_toks = tokens(8 * 2, 1);
+        let b_toks = tokens(8 * 3, 2);
+        session.submit(1, &a_toks).unwrap();
+        session.submit(2, &b_toks).unwrap();
+        // 3 steps (L = 3): A fully injected, B's segment 0 entered the
+        // lane, A's last segment still one layer short of the top.
+        for _ in 0..3 {
+            session.step(&mut b).unwrap();
+        }
+        assert!(session.cancel(2));
+        session.run_to_completion(&mut b).unwrap();
+        let out = session.pop_completed().unwrap();
+        assert_eq!(out.id, 1);
+        assert_eq!(out.logits, sequential_reference(55, &a_toks));
+        // The reclaimed lane still serves a fresh request exactly.
+        let late = tokens(8 * 2, 9);
+        session.submit(3, &late).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        assert_eq!(session.pop_completed().unwrap().logits, sequential_reference(55, &late));
+    }
+
+    #[test]
+    fn cancel_mid_flight_keeps_survivors_bitexact() {
+        let mut b = backend(53);
+        let mut session = WavefrontSession::new(cfg(), 2);
+        let victim = tokens(8 * 6, 2);
+        let survivor = tokens(8 * 4, 8);
+        session.submit(1, &victim).unwrap();
+        session.submit(2, &survivor).unwrap();
+        for _ in 0..3 {
+            session.step(&mut b).unwrap();
+        }
+        assert!(session.cancel(1));
+        session.run_to_completion(&mut b).unwrap();
+        let outs = session.drain_completed();
+        assert_eq!(outs.len(), 1, "the victim must never complete");
+        assert_eq!(outs[0].id, 2);
+        assert_eq!(outs[0].logits, sequential_reference(53, &survivor));
+        // The freed lane serves the next request from a clean slate.
+        let late = tokens(8 * 2, 4);
+        session.submit(3, &late).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        assert_eq!(session.pop_completed().unwrap().logits, sequential_reference(53, &late));
+    }
+
+    #[test]
+    fn stream_guards() {
+        let mut session = WavefrontSession::new(cfg(), 1);
+        assert!(session.append_segment(9, tokens(8, 0)).is_err(), "unknown id");
+        assert!(session.finish_stream(9).is_err(), "unknown id");
+        assert!(!session.cancel(9), "unknown id");
+
+        session.submit(1, &tokens(8, 0)).unwrap();
+        assert!(
+            session.append_segment(1, tokens(8, 1)).is_err(),
+            "closed submissions reject appends"
+        );
+
+        let segs = crate::scheduler::segment_tokens(&cfg(), &tokens(8, 2)).unwrap();
+        session.submit_stream(2, segs, false).unwrap();
+        assert!(session.append_segment(2, tokens(4, 0)).is_err(), "wrong segment length");
+        session.append_segment(2, tokens(8, 3)).unwrap();
+        session.finish_stream(2).unwrap();
+        assert!(session.finish_stream(2).is_ok(), "finish is idempotent");
+        assert!(session.append_segment(2, tokens(8, 4)).is_err(), "closed after finish");
+    }
+
+    #[test]
+    fn finish_without_logits_completes_with_empty_logits() {
+        let mut b = backend(54);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let segs = crate::scheduler::segment_tokens(&cfg(), &tokens(8 * 2, 6)).unwrap();
+        session.submit_stream(1, segs, false).unwrap();
+        session.finish_stream(1).unwrap();
+        let mut exits = 0;
+        while session.step(&mut b).unwrap() {
+            while session.pop_exited().is_some() {
+                exits += 1;
+            }
+        }
+        assert_eq!(exits, 2, "exit events still flow without kept logits");
+        let out = session.pop_completed().unwrap();
+        assert!(out.logits.is_empty());
+        assert_eq!(out.stats.segments, 2);
     }
 
     #[test]

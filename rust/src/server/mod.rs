@@ -1,51 +1,104 @@
-//! TCP JSON-lines inference server + client.
+//! TCP JSON-lines inference server + client: the streaming generation
+//! protocol.
 //!
-//! Wire protocol (one JSON object per line):
+//! Wire protocol (one JSON object per line; `<-` lines are frames the
+//! server streams back — one line per engine [`Event`]):
 //!
 //! ```text
-//! -> {"id": 1, "tokens": [3, 17, ...], "mode": "diagonal"?, "want_logits": true?}
-//! <- {"id": 1, "greedy_tail": [...], "mode": "diagonal",
-//!     "latency_ms": 12.3, "segments": 4, "launches": 7, "tokens": 128,
-//!     "mean_group": 2.4, "cells": 12, "padded_cells": 6, "occupancy": 0.83}
+//! -> {"id": 1, "tokens": [3, 17, ...], "max_new_tokens": 64,
+//!     "temperature": 0.8?, "top_k": 40?, "seed": 7?, "deadline_ms": 5000?,
+//!     "mode": "diagonal"?, "want_logits": true?}
+//! <- {"id": 1, "event": "segment", "index": 0, "greedy": [...]}
+//! <- {"id": 1, "event": "token", "pos": 0, "token": 17}
+//! <- {"id": 1, "event": "token", "pos": 1, "token": 3}
+//! <- {"id": 1, "event": "done", "greedy_tail": [...], "generated": [...],
+//!     "mode": "diagonal", "latency_ms": 12.3, "segments": 4, "launches": 7,
+//!     "tokens": 128, "mean_group": 2.4, "cells": 12, "padded_cells": 6,
+//!     "occupancy": 0.83}
+//! <- {"id": 1, "event": "error", "error": "cancelled"}      # terminal, instead of done
+//! -> {"cmd": "cancel", "id": 1}                             # from ANY connection
+//! <- {"ok": true, "id": 1}
 //! -> {"cmd": "stats"}
-//! <- {"requests": 10, "rejected": 0, "diagonal_runs": 9, "sequential_runs": 1,
-//!     "full_attn_runs": 0, "packed_requests": 9, "tokens": 1280,
-//!     "launches": 63, "active_cells": 151, "slot_steps": 189,
-//!     "padded_cells": 38, "mean_group": 2.4, "occupancy": 0.8,
-//!     "workers": 4, "pool_cells": 148, "pool_busy_ms": 310.2,
-//!     "worker_utilization": 0.71,
+//! <- {"requests": 10, "rejected": 0, "cancelled": 1, "diagonal_runs": 9,
+//!     "sequential_runs": 1, "full_attn_runs": 0, "packed_requests": 9,
+//!     "tokens": 1280, "generated_tokens": 512, "launches": 63,
+//!     "active_cells": 151, "slot_steps": 189, "padded_cells": 38,
+//!     "mean_group": 2.4, "occupancy": 0.8, "workers": 4, "pool_cells": 148,
+//!     "pool_busy_ms": 310.2, "worker_utilization": 0.71,
 //!     "latency_ms_mean": 10.5, "latency_ms_p50": 8.2,
 //!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8}
 //! -> {"cmd": "ping"}
 //! <- {"ok": true}
 //! -> {"cmd": "shutdown"}
+//! <- {"ok": true}
 //! ```
+//!
+//! Every request produces a stream of event frames ending in a terminal
+//! `done` or `error`; a pure prefill request (`max_new_tokens` absent
+//! or 0) streams its per-segment partial results and then `done`.
+//! `event` is the frame discriminator; `ping`/`stats`/`cancel` replies
+//! are single plain objects. Each connection is strictly sequential —
+//! one request, its full event stream, then the next line is read — so
+//! a `cancel` for an in-flight stream must come from a *different*
+//! connection (which is what the `generate --cancel-after` CLI and a
+//! dropped-connection eviction do). Request `id`s must be unique among
+//! ACTIVE requests (they key cross-connection `cancel`); omit `id` to
+//! have the server assign one.
 //!
 //! Topology: connection threads parse and enqueue; ONE engine thread
 //! drains the bounded queue into a persistent packed wavefront
-//! ([`InferenceEngine::serve_queue`]) — concurrent requests share
-//! grouped launches and fill each other's ramp bubbles, and responses
-//! complete out of submission order (each connection blocks only on its
-//! own reply channel). Backpressure stays explicit
-//! (`{"error": "queue full"}`).
+//! ([`InferenceEngine::serve_queue`]) — concurrent requests (prefill
+//! AND in-wavefront decode) share grouped launches and fill each
+//! other's ramp bubbles, and events stream back out of submission
+//! order (each connection blocks only on its own event channel).
+//! Backpressure stays explicit (`{"event": "error", "error": "queue
+//! full"}`), and per-request event buffers are bounded: a client that
+//! stalls its socket far enough for the buffer to fill is cancelled
+//! (slow-consumer eviction) instead of growing server memory. A client
+//! that disconnects mid-stream is detected on the next failed frame
+//! write; its request is cancelled and evicted from the wavefront,
+//! leaving every other in-flight request bit-exact.
 
 mod protocol;
 
-pub use protocol::{parse_request, render_response, WireRequest};
+pub use protocol::{parse_request, render_done, render_event};
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::ExecMode;
-use crate::coordinator::{EngineStats, InferenceEngine, Request, RequestQueue, Response};
+use crate::coordinator::{
+    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, RequestQueue,
+};
 use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::scheduler::StepBackend;
 
-type Job = (Request, mpsc::Sender<Result<Response>>);
+/// Events buffered per in-flight request before the slow-consumer
+/// eviction kicks in. Bounds server memory: a stalled client can hold
+/// at most this many events (pre-streaming, each request buffered
+/// exactly one response; tokens stream now, so give decode some slack).
+const EVENT_BUFFER: usize = 1024;
+
+/// Per-connection reply route: a BOUNDED event channel plus the
+/// request's cancel handle. The engine thread only ever `try_send`s —
+/// if the buffer is full (the client stalled far beyond it), the
+/// request is cancelled instead of buffering without bound, and the
+/// ticket drop closes the channel to wake the connection thread.
+struct ConnTicket {
+    tx: mpsc::SyncSender<Event>,
+    handle: RequestHandle,
+}
+
+type Job = (GenerateRequest, ConnTicket);
+
+/// Active-request cancellation handles, keyed by wire id (so
+/// `{"cmd": "cancel", "id": N}` works from any connection).
+type CancelRegistry = Arc<Mutex<HashMap<u64, RequestHandle>>>;
 
 /// Handle to a running server.
 pub struct Server {
@@ -71,24 +124,35 @@ impl Server {
         let queue = Arc::new(RequestQueue::<Job>::new(queue_depth));
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = engine.stats_handle();
+        let registry: CancelRegistry = Arc::new(Mutex::new(HashMap::new()));
 
         // Engine thread: continuous-batching drain loop — every
         // diagonal-mode request packs into one persistent wavefront;
-        // each job's reply channel receives its response whenever it
-        // completes (out of submission order).
+        // each job's event channel receives its stream as it happens
+        // (out of submission order).
         let q2 = queue.clone();
         let engine_thread = std::thread::spawn(move || {
-            if let Err(e) = engine.serve_queue(&q2, |reply, resp| {
-                let _ = reply.send(resp);
+            if let Err(e) = engine.serve_queue(&q2, |t: &ConnTicket, ev| {
+                if t.tx.try_send(ev).is_err() {
+                    // Slow consumer: the connection thread is stalled in
+                    // a socket write and the bounded buffer is full.
+                    // Cancel the request — the engine evicts its lane;
+                    // the doomed stream's dropped events don't matter
+                    // because the ticket drop closes the channel and
+                    // wakes the connection thread.
+                    t.handle.cancel();
+                }
             }) {
                 eprintln!("engine loop aborted: {e}");
                 // Fail fast instead of stranding clients: close the
                 // queue (new pushes get "queue closed") and fail every
                 // job already enqueued so its connection thread's
-                // rx.recv() returns.
+                // rx.recv() returns a terminal event.
                 q2.close();
-                while let Some((_req, reply)) = q2.try_pop() {
-                    let _ = reply.send(Err(Error::Request(format!("engine stopped: {e}"))));
+                while let Some((_req, t)) = q2.try_pop() {
+                    let _ = t.tx.try_send(Event::Error {
+                        error: Error::Request(format!("engine stopped: {e}")),
+                    });
                 }
             }
         });
@@ -97,6 +161,7 @@ impl Server {
         let q3 = queue.clone();
         let sd = shutdown.clone();
         let st = stats.clone();
+        let reg = registry.clone();
         let accept_thread = std::thread::spawn(move || {
             let next_id = Arc::new(AtomicU64::new(1));
             for stream in listener.incoming() {
@@ -108,8 +173,9 @@ impl Server {
                 let sd2 = sd.clone();
                 let ids = next_id.clone();
                 let stats = st.clone();
+                let registry = reg.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &q, &sd2, &ids, &stats);
+                    let _ = handle_conn(stream, &q, &sd2, &ids, &stats, &registry);
                 });
             }
         });
@@ -137,6 +203,21 @@ impl Server {
             let _ = t.join();
         }
     }
+
+    /// Run in the foreground until a protocol `{"cmd": "shutdown"}`
+    /// (or an engine abort) terminates the engine thread, then tear
+    /// down the acceptor and return — the clean-exit path the `serve`
+    /// subcommand blocks on.
+    pub fn join(mut self) {
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
 }
 
 fn handle_conn(
@@ -145,6 +226,7 @@ fn handle_conn(
     shutdown: &AtomicBool,
     ids: &AtomicU64,
     stats: &EngineStats,
+    registry: &CancelRegistry,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -153,50 +235,165 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply_text = match Value::parse(&line) {
-            Err(e) => error_json(None, &Error::Json(e.to_string())),
-            Ok(v) => {
-                if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str().ok().map(String::from)) {
-                    match cmd.as_str() {
-                        "shutdown" => {
-                            shutdown.store(true, Ordering::SeqCst);
-                            queue.close();
-                            writeln!(writer, "{}", Value::obj(vec![("ok", Value::Bool(true))]).to_json())?;
-                            break;
-                        }
-                        "ping" => Value::obj(vec![("ok", Value::Bool(true))]).to_json(),
-                        "stats" => stats.to_json().to_json(),
-                        other => error_json(None, &Error::Request(format!("unknown cmd '{other}'"))),
-                    }
-                } else {
-                    match parse_request(&v, || ids.fetch_add(1, Ordering::Relaxed)) {
-                        Err(e) => error_json(None, &e),
-                        Ok(req) => {
-                            let id = req.id;
-                            let (tx, rx) = mpsc::channel();
-                            match queue.push((req, tx)) {
-                                Err(e) => error_json(Some(id), &e),
-                                Ok(()) => match rx.recv() {
-                                    Ok(Ok(resp)) => render_response(&resp).to_json(),
-                                    Ok(Err(e)) => error_json(Some(id), &e),
-                                    Err(_) => error_json(
-                                        Some(id),
-                                        &Error::Request("engine stopped".into()),
-                                    ),
-                                },
-                            }
-                        }
-                    }
+        let v = match Value::parse(&line) {
+            Err(e) => {
+                writeln!(writer, "{}", error_json(None, &Error::Json(e.to_string())))?;
+                continue;
+            }
+            Ok(v) => v,
+        };
+
+        // Control commands reply with a single plain object.
+        if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str().ok().map(String::from)) {
+            match cmd.as_str() {
+                "shutdown" => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    queue.close();
+                    writeln!(
+                        writer,
+                        "{}",
+                        Value::obj(vec![("ok", Value::Bool(true))]).to_json()
+                    )?;
+                    break;
                 }
+                "ping" => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Value::obj(vec![("ok", Value::Bool(true))]).to_json()
+                    )?;
+                }
+                "stats" => writeln!(writer, "{}", stats.to_json().to_json())?,
+                "cancel" => match v.get("id").map(Value::as_u64).transpose() {
+                    Ok(Some(id)) => {
+                        let found = registry
+                            .lock()
+                            .unwrap()
+                            .get(&id)
+                            .map(|h| {
+                                h.cancel();
+                                true
+                            })
+                            .unwrap_or(false);
+                        writeln!(
+                            writer,
+                            "{}",
+                            Value::obj(vec![
+                                ("ok", Value::Bool(found)),
+                                ("id", Value::Num(id as f64)),
+                            ])
+                            .to_json()
+                        )?;
+                    }
+                    _ => writeln!(
+                        writer,
+                        "{}",
+                        error_json(None, &Error::Request("cancel needs a numeric id".into()))
+                    )?,
+                },
+                other => writeln!(
+                    writer,
+                    "{}",
+                    error_json(None, &Error::Request(format!("unknown cmd '{other}'")))
+                )?,
+            }
+            continue;
+        }
+
+        // Inference request: enqueue, then stream its events back.
+        // Auto-assigned ids share a namespace with client-chosen ones,
+        // so skip over any id a client currently holds active.
+        let next_auto_id = || loop {
+            let candidate = ids.fetch_add(1, Ordering::Relaxed);
+            if !registry.lock().unwrap().contains_key(&candidate) {
+                return candidate;
             }
         };
-        writeln!(writer, "{reply_text}")?;
+        let req = match parse_request(&v, next_auto_id) {
+            Err(e) => {
+                writeln!(writer, "{}", error_json(None, &e))?;
+                continue;
+            }
+            Ok(req) => req,
+        };
+        let wire_id = req.id;
+        let handle = req.handle();
+        {
+            let mut reg = registry.lock().unwrap();
+            if reg.contains_key(&wire_id) {
+                drop(reg);
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json(
+                        Some(wire_id),
+                        &Error::Request(format!("id {wire_id} already in flight")),
+                    )
+                )?;
+                continue;
+            }
+            reg.insert(wire_id, handle.clone());
+        }
+        let (tx, rx) = mpsc::sync_channel::<Event>(EVENT_BUFFER);
+        if let Err(e) = queue.push((req, ConnTicket { tx, handle: handle.clone() })) {
+            registry.lock().unwrap().remove(&wire_id);
+            writeln!(writer, "{}", error_json(Some(wire_id), &e))?;
+            continue;
+        }
+        // Stream until the terminal event. A failed write means the
+        // client disconnected mid-stream: cancel the request (the
+        // engine evicts its lane) and keep draining so the channel
+        // closes cleanly.
+        let mut client_gone = false;
+        loop {
+            match rx.recv() {
+                Ok(ev) => {
+                    let terminal = ev.is_terminal();
+                    if !client_gone {
+                        let frame = render_event(wire_id, &ev).to_json();
+                        if writeln!(writer, "{frame}").is_err() {
+                            client_gone = true;
+                            handle.cancel();
+                        }
+                    }
+                    if terminal {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    // Channel closed without a terminal frame: the
+                    // engine thread died, or the slow-consumer eviction
+                    // dropped the terminal event after the buffer
+                    // filled. Tell the client if it still listens.
+                    if !client_gone {
+                        let _ = writeln!(
+                            writer,
+                            "{}",
+                            error_json(
+                                Some(wire_id),
+                                &Error::Request(
+                                    "request stream closed (engine stopped or evicted)".into(),
+                                )
+                            )
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+        registry.lock().unwrap().remove(&wire_id);
+        if client_gone {
+            return Ok(()); // reads would fail too; connection is dead
+        }
     }
     Ok(())
 }
 
 fn error_json(id: Option<u64>, e: &Error) -> String {
-    let mut fields = vec![("error", Value::Str(e.to_string()))];
+    let mut fields = vec![
+        ("event", Value::Str("error".into())),
+        ("error", Value::Str(e.to_string())),
+    ];
     if let Some(id) = id {
         fields.push(("id", Value::Num(id as f64)));
     }
@@ -216,9 +413,7 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream), writer })
     }
 
-    /// Send one request object, wait for the one-line reply.
-    pub fn roundtrip(&mut self, v: &Value) -> Result<Value> {
-        writeln!(self.writer, "{}", v.to_json())?;
+    fn read_frame(&mut self) -> Result<Value> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         if line.is_empty() {
@@ -227,17 +422,76 @@ impl Client {
         Value::parse(&line)
     }
 
-    /// Run inference on a token sequence.
+    /// Send one object, wait for the one-line reply (control commands).
+    pub fn roundtrip(&mut self, v: &Value) -> Result<Value> {
+        writeln!(self.writer, "{}", v.to_json())?;
+        self.read_frame()
+    }
+
+    /// Send a request frame and consume its whole event stream:
+    /// non-terminal frames go to `on_event`, the terminal `done` frame
+    /// is returned, a terminal `error` frame becomes `Err`.
+    pub fn request_stream(
+        &mut self,
+        v: &Value,
+        mut on_event: impl FnMut(&Value),
+    ) -> Result<Value> {
+        writeln!(self.writer, "{}", v.to_json())?;
+        loop {
+            let frame = self.read_frame()?;
+            match frame.get("event").and_then(|e| e.as_str().ok()) {
+                Some("done") => return Ok(frame),
+                Some("error") => {
+                    let msg = frame
+                        .get("error")
+                        .and_then(|e| e.as_str().ok())
+                        .unwrap_or("?")
+                        .to_string();
+                    return Err(Error::Request(msg));
+                }
+                _ => on_event(&frame),
+            }
+        }
+    }
+
+    /// Run inference on a token sequence (prefill only); returns the
+    /// terminal `done` frame.
     pub fn infer(&mut self, tokens: &[u32], mode: Option<ExecMode>) -> Result<Value> {
         let mut fields = vec![("tokens", Value::arr_u32(tokens))];
         if let Some(m) = mode {
             fields.push(("mode", Value::Str(m.to_string())));
         }
-        let resp = self.roundtrip(&Value::obj(fields))?;
-        if let Some(err) = resp.get("error") {
-            return Err(Error::Request(err.as_str().unwrap_or("?").to_string()));
-        }
-        Ok(resp)
+        self.request_stream(&Value::obj(fields), |_| {})
+    }
+
+    /// Stream a generation: `on_event` sees every `segment`/`token`
+    /// frame; returns the terminal `done` frame.
+    pub fn generate(
+        &mut self,
+        tokens: &[u32],
+        max_new_tokens: usize,
+        on_event: impl FnMut(&Value),
+    ) -> Result<Value> {
+        self.request_stream(
+            &Value::obj(vec![
+                ("tokens", Value::arr_u32(tokens)),
+                ("max_new_tokens", Value::Num(max_new_tokens as f64)),
+            ]),
+            on_event,
+        )
+    }
+
+    /// Cancel the active request with wire id `id`. Connections are
+    /// strictly sequential, so this must be sent on a connection that
+    /// is NOT currently consuming that request's stream (open a second
+    /// `Client` to cancel your own). Returns whether the server knew
+    /// the id.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        let resp = self.roundtrip(&Value::obj(vec![
+            ("cmd", Value::Str("cancel".into())),
+            ("id", Value::Num(id as f64)),
+        ]))?;
+        Ok(resp.get("ok").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
     }
 
     pub fn ping(&mut self) -> Result<bool> {
@@ -271,23 +525,147 @@ mod tests {
 
         let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
         let resp = client.infer(&tokens, None).unwrap();
+        assert_eq!(resp.req("event").unwrap().as_str().unwrap(), "done");
         assert_eq!(resp.req("mode").unwrap().as_str().unwrap(), "diagonal");
         assert_eq!(resp.req("tokens").unwrap().as_usize().unwrap(), 16);
         assert_eq!(
             resp.req("greedy_tail").unwrap().as_arr().unwrap().len(),
             8 // test config seg
         );
+        assert!(resp.req("generated").unwrap().as_u32_vec().unwrap().is_empty());
 
         // mode override
         let resp = client.infer(&tokens, Some(ExecMode::Sequential)).unwrap();
         assert_eq!(resp.req("mode").unwrap().as_str().unwrap(), "sequential");
 
-        // malformed input -> error object, connection stays usable
-        let bad = client.roundtrip(&Value::obj(vec![("tokens", Value::Str("x".into()))])).unwrap();
+        // malformed input -> error frame, connection stays usable
+        let bad = client
+            .roundtrip(&Value::obj(vec![("tokens", Value::Str("x".into()))]))
+            .unwrap();
         assert!(bad.get("error").is_some());
+        assert_eq!(bad.req("event").unwrap().as_str().unwrap(), "error");
         assert!(client.ping().unwrap());
 
         server.stop();
+    }
+
+    #[test]
+    fn generation_streams_over_tcp() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut segments = 0usize;
+        let done = client
+            .generate(&tokens, 12, |frame| {
+                match frame.req("event").unwrap().as_str().unwrap() {
+                    "token" => streamed.push(frame.req("token").unwrap().as_u32().unwrap()),
+                    "segment" => segments += 1,
+                    other => panic!("unexpected frame {other}"),
+                }
+            })
+            .unwrap();
+        let generated = done.req("generated").unwrap().as_u32_vec().unwrap();
+        assert_eq!(generated.len(), 12);
+        assert_eq!(streamed, generated, "streamed tokens match the aggregate");
+        // 2 prompt segments + 1 fed decode segment exited.
+        assert_eq!(segments, 3);
+        assert_eq!(done.req("segments").unwrap().as_usize().unwrap(), 3);
+        server.stop();
+    }
+
+    #[test]
+    fn cancel_from_second_connection() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let addr = server.addr.to_string();
+        let mut gen_conn = Client::connect(&addr).unwrap();
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+
+        // Big decode budget so the cancel lands mid-stream.
+        let err = {
+            let mut canceller = Client::connect(&addr).unwrap();
+            let mut cancelled = false;
+            gen_conn
+                .request_stream(
+                    &Value::obj(vec![
+                        ("id", Value::Num(7.0)),
+                        ("tokens", Value::arr_u32(&tokens)),
+                        ("max_new_tokens", Value::Num(200_000.0)),
+                    ]),
+                    |frame| {
+                        if !cancelled
+                            && frame.req("event").unwrap().as_str().unwrap() == "token"
+                        {
+                            cancelled = true;
+                            assert!(canceller.cancel(7).unwrap(), "id 7 must be active");
+                        }
+                    },
+                )
+                .unwrap_err()
+        };
+        assert!(err.to_string().contains("cancelled"), "{err}");
+
+        // Unknown ids report ok: false; the server keeps serving.
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(!c.cancel(999).unwrap());
+        assert!(c.infer(&tokens, None).is_ok());
+        let stats = c
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.req("cancelled").unwrap().as_usize().unwrap(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn duplicate_active_ids_rejected() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let addr = server.addr.to_string();
+        let mut a = Client::connect(&addr).unwrap();
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+
+        let mut b = Client::connect(&addr).unwrap();
+        let mut clashed = false;
+        // Budget far beyond what can finish before the probe: id 5 is
+        // guaranteed active when the second connection tries to reuse
+        // it, and the cancel below ends the stream deterministically.
+        let err = a
+            .request_stream(
+                &Value::obj(vec![
+                    ("id", Value::Num(5.0)),
+                    ("tokens", Value::arr_u32(&tokens)),
+                    ("max_new_tokens", Value::Num(200_000.0)),
+                ]),
+                |frame| {
+                    if !clashed && frame.req("event").unwrap().as_str().unwrap() == "token" {
+                        clashed = true;
+                        // Same id while active -> rejected with an error
+                        // frame on the second connection.
+                        let err = b.infer_with_id(5, &tokens).unwrap_err();
+                        assert!(err.to_string().contains("already in flight"), "{err}");
+                        assert!(b.cancel(5).unwrap());
+                    }
+                },
+            )
+            .unwrap_err();
+        assert!(clashed, "the stream produced tokens");
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        // After the terminal event the id is free again.
+        assert!(b.infer_with_id(5, &tokens).is_ok());
+        server.stop();
+    }
+
+    impl Client {
+        /// Test helper: prefill with an explicit wire id.
+        fn infer_with_id(&mut self, id: u64, tokens: &[u32]) -> Result<Value> {
+            self.request_stream(
+                &Value::obj(vec![
+                    ("id", Value::Num(id as f64)),
+                    ("tokens", Value::arr_u32(tokens)),
+                ]),
+                |_| {},
+            )
+        }
     }
 
     #[test]
@@ -303,9 +681,11 @@ mod tests {
             .unwrap();
         for field in [
             "requests",
+            "cancelled",
             "diagonal_runs",
             "sequential_runs",
             "packed_requests",
+            "generated_tokens",
             "launches",
             "mean_group",
             "padded_cells",

@@ -1,21 +1,24 @@
-//! Wire <-> coordinator type mapping.
+//! Wire <-> coordinator type mapping: request frames in, event frames
+//! out (one JSON object per line; see the module docs of
+//! [`crate::server`] for the full protocol).
+
+use std::time::Duration;
 
 use crate::config::ExecMode;
-use crate::coordinator::{Request, Response};
+use crate::coordinator::{Event, GenerateRequest, Response, SamplingParams};
 use crate::error::Result;
 use crate::json::Value;
 
-/// Parsed request line (before engine processing).
-#[derive(Clone, Debug)]
-pub struct WireRequest {
-    pub request: Request,
-}
-
 /// Parse a request object; `next_id` supplies an id when absent.
-pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Request> {
+///
+/// Recognized fields: `tokens` (required), `id`, `mode`,
+/// `want_logits`, `max_new_tokens`, `temperature`, `top_k`, `seed`,
+/// `deadline_ms`. Ids parse through the full `u64` path so large
+/// client-chosen ids (up to 2^53, the exact-f64 range) round-trip.
+pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<GenerateRequest> {
     let tokens = v.req("tokens")?.as_u32_vec()?;
     let id = match v.get("id") {
-        Some(x) => x.as_usize()? as u64,
+        Some(x) => x.as_u64()?,
         None => next_id(),
     };
     let mode: Option<ExecMode> = match v.get("mode") {
@@ -26,18 +29,67 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Request
         Some(w) => w.as_bool()?,
         None => false,
     };
-    Ok(Request { id, tokens, mode, want_logits })
+    let max_new_tokens =
+        v.get("max_new_tokens").map(Value::as_usize).transpose()?.unwrap_or(0);
+    let mut sampling = SamplingParams::default();
+    if let Some(t) = v.get("temperature") {
+        sampling.temperature = t.as_f32()?;
+    }
+    if let Some(k) = v.get("top_k") {
+        sampling.top_k = k.as_usize()?;
+    }
+    if let Some(s) = v.get("seed") {
+        sampling.seed = s.as_u64()?;
+    }
+    let mut req =
+        GenerateRequest::new(id, tokens).generate(max_new_tokens).with_sampling(sampling);
+    if let Some(ms) = v.get("deadline_ms").map(Value::as_u64).transpose()? {
+        req = req.with_deadline(Duration::from_millis(ms));
+    }
+    req.mode = mode;
+    req.want_logits = want_logits;
+    Ok(req)
 }
 
-/// Render a successful response (logits are summarized, never shipped raw
-/// — the greedy tail plus norms is what serving clients consume).
-pub fn render_response(resp: &Response) -> Value {
+/// Render one engine [`Event`] as a wire frame. Every frame carries the
+/// request's wire `id` and an `event` discriminator
+/// (`"segment" | "token" | "done" | "error"`); `done` and `error` are
+/// terminal.
+pub fn render_event(id: u64, ev: &Event) -> Value {
+    match ev {
+        Event::SegmentDone { index, greedy } => Value::obj(vec![
+            ("id", Value::Num(id as f64)),
+            ("event", Value::Str("segment".into())),
+            ("index", Value::Num(*index as f64)),
+            ("greedy", Value::arr_u32(greedy)),
+        ]),
+        Event::Token { pos, token } => Value::obj(vec![
+            ("id", Value::Num(id as f64)),
+            ("event", Value::Str("token".into())),
+            ("pos", Value::Num(*pos as f64)),
+            ("token", Value::Num(*token as f64)),
+        ]),
+        Event::Done { stats } => render_done(stats),
+        Event::Error { error } => Value::obj(vec![
+            ("id", Value::Num(id as f64)),
+            ("event", Value::Str("error".into())),
+            ("error", Value::Str(error.to_string())),
+        ]),
+    }
+}
+
+/// Render the terminal `done` frame (logits are summarized, never
+/// shipped raw — the greedy tail / generated tokens plus norms is what
+/// serving clients consume).
+pub fn render_done(resp: &Response) -> Value {
     let mut fields = vec![
         ("id", Value::Num(resp.id as f64)),
+        ("event", Value::Str("done".into())),
         (
             "greedy_tail",
             Value::Arr(resp.greedy_tail.iter().map(|&t| Value::Num(t as f64)).collect()),
         ),
+        ("generated", Value::arr_u32(&resp.generated)),
         ("mode", Value::Str(resp.mode_used.to_string())),
         ("latency_ms", Value::Num(resp.latency.as_secs_f64() * 1e3)),
         ("segments", Value::Num(resp.stats.segments as f64)),
@@ -65,28 +117,71 @@ mod tests {
         let v = Value::parse(r#"{"tokens": [1, 2, 3]}"#).unwrap();
         let r = parse_request(&v, || 42).unwrap();
         assert_eq!(r.id, 42);
-        assert_eq!(r.tokens, vec![1, 2, 3]);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
         assert!(r.mode.is_none());
         assert!(!r.want_logits);
+        assert_eq!(r.max_new_tokens, 0);
+        assert!(r.deadline.is_none());
+        assert!(r.sampling.is_greedy());
     }
 
     #[test]
-    fn parse_full() {
-        let v = Value::parse(r#"{"id": 7, "tokens": [5], "mode": "seq", "want_logits": true}"#)
-            .unwrap();
+    fn parse_full_generation_request() {
+        let v = Value::parse(
+            r#"{"id": 7, "tokens": [5], "mode": "seq", "want_logits": true,
+                "max_new_tokens": 64, "temperature": 0.75, "top_k": 40,
+                "seed": 123, "deadline_ms": 1500}"#,
+        )
+        .unwrap();
         let r = parse_request(&v, || 0).unwrap();
         assert_eq!(r.id, 7);
         assert_eq!(r.mode, Some(ExecMode::Sequential));
         assert!(r.want_logits);
+        assert_eq!(r.max_new_tokens, 64);
+        assert_eq!(r.sampling.temperature, 0.75);
+        assert_eq!(r.sampling.top_k, 40);
+        assert_eq!(r.sampling.seed, 123);
+        assert_eq!(r.deadline, Some(Duration::from_millis(1500)));
     }
 
     #[test]
-    fn response_carries_utilization_stats() {
+    fn large_client_ids_roundtrip() {
+        let big: u64 = (1u64 << 53) - 1;
+        let v = Value::parse(&format!(r#"{{"id": {big}, "tokens": [1]}}"#)).unwrap();
+        let r = parse_request(&v, || 0).unwrap();
+        assert_eq!(r.id, big);
+        // ...and the id survives back onto the wire in an event frame.
+        let frame = render_event(r.id, &Event::Token { pos: 0, token: 3 });
+        assert_eq!(frame.req("id").unwrap().as_u64().unwrap(), big);
+    }
+
+    #[test]
+    fn event_frames() {
+        let seg = render_event(4, &Event::SegmentDone { index: 2, greedy: vec![7, 8] });
+        assert_eq!(seg.req("event").unwrap().as_str().unwrap(), "segment");
+        assert_eq!(seg.req("index").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(seg.req("greedy").unwrap().as_u32_vec().unwrap(), vec![7, 8]);
+
+        let tok = render_event(4, &Event::Token { pos: 5, token: 17 });
+        assert_eq!(tok.req("event").unwrap().as_str().unwrap(), "token");
+        assert_eq!(tok.req("pos").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(tok.req("token").unwrap().as_u32().unwrap(), 17);
+
+        let err = render_event(
+            4,
+            &Event::Error { error: crate::error::Error::Request("nope".into()) },
+        );
+        assert_eq!(err.req("event").unwrap().as_str().unwrap(), "error");
+        assert!(err.req("error").unwrap().as_str().unwrap().contains("nope"));
+    }
+
+    #[test]
+    fn done_frame_carries_utilization_stats_and_generated() {
         use crate::scheduler::RunStats;
-        use std::time::Duration;
         let resp = Response {
             id: 3,
             greedy_tail: vec![1, 2],
+            generated: vec![9, 10, 11],
             logits: None,
             mode_used: ExecMode::Diagonal,
             stats: RunStats {
@@ -101,21 +196,29 @@ mod tests {
             },
             latency: Duration::from_millis(2),
         };
-        let v = render_response(&resp);
+        let v = render_done(&resp);
+        assert_eq!(v.req("event").unwrap().as_str().unwrap(), "done");
         assert_eq!(v.req("cells").unwrap().as_usize().unwrap(), 12);
         assert_eq!(v.req("padded_cells").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(v.req("generated").unwrap().as_u32_vec().unwrap(), vec![9, 10, 11]);
         let occ = v.req("occupancy").unwrap().as_f64().unwrap();
         assert!((occ - 12.0 / 18.0).abs() < 1e-9, "occupancy {occ}");
         assert_eq!(v.req("mean_group").unwrap().as_f64().unwrap(), 2.0);
+        // Terminal done frames also render through render_event.
+        let via_event = render_event(3, &Event::Done { stats: Box::new(resp) });
+        assert_eq!(via_event, v);
     }
 
     #[test]
     fn parse_rejects_bad_fields() {
         for bad in [
-            r#"{"mode": "diag"}"#,                   // missing tokens
-            r#"{"tokens": "x"}"#,                    // wrong type
-            r#"{"tokens": [1], "mode": "warp"}"#,    // bad mode
-            r#"{"tokens": [-1]}"#,                   // negative token
+            r#"{"mode": "diag"}"#,                       // missing tokens
+            r#"{"tokens": "x"}"#,                        // wrong type
+            r#"{"tokens": [1], "mode": "warp"}"#,        // bad mode
+            r#"{"tokens": [-1]}"#,                       // negative token
+            r#"{"tokens": [1], "id": -3}"#,              // negative id
+            r#"{"tokens": [1], "max_new_tokens": 1.5}"#, // fractional budget
+            r#"{"tokens": [1], "deadline_ms": "soon"}"#, // wrong type
         ] {
             let v = Value::parse(bad).unwrap();
             assert!(parse_request(&v, || 0).is_err(), "{bad}");

@@ -4,7 +4,7 @@
 
 use diagonal_batching::babilong::{accuracy, Generator, Task};
 use diagonal_batching::config::{BabilongSpec, ExecMode, Manifest, ModelConfig};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
 use diagonal_batching::model::{NativeBackend, Params};
 use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::StepBackend;
@@ -57,7 +57,7 @@ fn answers<B: StepBackend>(
         .iter()
         .enumerate()
         .map(|(i, e)| {
-            let mut req = Request::new(i as u64, e.tokens.clone());
+            let mut req = GenerateRequest::new(i as u64, e.tokens.clone());
             req.want_logits = true;
             req.mode = Some(mode);
             let resp = engine.process(&req).unwrap();

@@ -67,7 +67,7 @@ fn hlo_suites_skip_cleanly_but_stay_in_the_report() {
 fn serve_suites_measure_the_native_engine() {
     let report = run_matching("serve", &artifact_free_settings());
     let names: Vec<&str> = report.suites.iter().map(|s| s.name.as_str()).collect();
-    assert_eq!(names, ["throughput_packed", "serve_latency"]);
+    assert_eq!(names, ["throughput_packed", "serve_latency", "serve_generate"]);
     for s in &report.suites {
         assert_eq!(s.status, SuiteStatus::Ok, "{}: {}", s.name, s.detail);
     }

@@ -146,6 +146,101 @@ fn serve_hlo_backend_if_artifacts_present() {
 }
 
 #[test]
+fn client_disconnect_mid_stream_evicts_and_keeps_serving() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 16).unwrap();
+    let addr = server.addr.to_string();
+
+    // Raw connection: start a huge generation, read a couple of event
+    // frames, then DROP the socket mid-stream.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let tokens: Vec<String> = (0..16).map(|i| (i % 60).to_string()).collect();
+        writeln!(
+            w,
+            "{{\"id\": 77, \"tokens\": [{}], \"max_new_tokens\": 500000}}",
+            tokens.join(", ")
+        )
+        .unwrap();
+        for _ in 0..3 {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.contains("\"event\""), "expected an event frame, got {line}");
+        }
+        // Socket dropped here, mid-stream.
+    }
+
+    // The server notices on a failed frame write, cancels the request,
+    // and evicts its lane. Poll stats until the eviction lands (bounded
+    // by a watchdog).
+    let mut c = Client::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let stats = c
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        if stats.req("cancelled").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect was never detected: {}",
+            stats.to_json()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Other requests on the SAME engine stay bit-exact vs a fresh solo
+    // engine with identical weights (seed 77 in native_engine).
+    let probe = toks(40, 5);
+    let served = c.infer(&probe, None).unwrap();
+    let mut solo = native_engine(ExecMode::Diagonal);
+    let want = solo
+        .process(&diagonal_batching::coordinator::GenerateRequest::new(1, probe.clone()))
+        .unwrap();
+    assert_eq!(
+        served.req("greedy_tail").unwrap().as_u32_vec().unwrap(),
+        want.greedy_tail.iter().map(|&t| t as u32).collect::<Vec<u32>>(),
+        "survivor diverged after an eviction"
+    );
+    server.stop();
+}
+
+#[test]
+fn generation_burst_over_tcp_is_exact() {
+    // Four concurrent TCP clients generating simultaneously: every
+    // continuation must equal the same request's solo in-process run.
+    let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 16).unwrap();
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let prompt = toks(24, 100 + t);
+            let done = c.generate(&prompt, 20, |_| {}).unwrap();
+            (prompt, done.req("generated").unwrap().as_u32_vec().unwrap())
+        }));
+    }
+    let mut solo = native_engine(ExecMode::Diagonal);
+    for h in handles {
+        let (prompt, generated) = h.join().unwrap();
+        let want = solo
+            .process(
+                &diagonal_batching::coordinator::GenerateRequest::new(9, prompt).generate(20),
+            )
+            .unwrap();
+        assert_eq!(generated, want.generated, "packed decode != solo decode");
+    }
+    server.stop();
+}
+
+#[test]
 fn shutdown_via_protocol() {
     let server = Server::start(native_engine(ExecMode::Diagonal), "127.0.0.1:0", 4).unwrap();
     let addr = server.addr.to_string();

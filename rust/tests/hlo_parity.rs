@@ -6,7 +6,7 @@
 //! (run `make artifacts` first); CI-style runs get the full coverage.
 
 use diagonal_batching::config::{ExecMode, Manifest};
-use diagonal_batching::coordinator::{InferenceEngine, Request};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
 use diagonal_batching::model::{NativeBackend, Params};
 use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::{Executor, ScheduleMode, StepBackend};
@@ -180,10 +180,10 @@ fn engine_auto_mode_on_hlo_backend() {
     // well past the measured micro crossover (~50-70 segments on this
     // testbed): the calibrated policy must pick diagonal
     let long = tokens(seg * 160, vocab, 10);
-    let resp = engine.process(&Request::new(1, long)).unwrap();
+    let resp = engine.process(&GenerateRequest::new(1, long)).unwrap();
     assert_eq!(resp.mode_used, ExecMode::Diagonal);
     // and far below it: sequential
     let short = tokens(seg, vocab, 11);
-    let resp = engine.process(&Request::new(2, short)).unwrap();
+    let resp = engine.process(&GenerateRequest::new(2, short)).unwrap();
     assert_eq!(resp.mode_used, ExecMode::Sequential);
 }

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use diagonal_batching::config::{ExecMode, ModelConfig};
-use diagonal_batching::coordinator::{InferenceEngine, Request, RequestQueue};
+use diagonal_batching::coordinator::{Event, GenerateRequest, InferenceEngine, RequestQueue};
 use diagonal_batching::model::{NativeBackend, Params};
 
 const PRODUCERS: usize = 4;
@@ -70,7 +70,7 @@ fn serve_queue_pooled_concurrent_stress() {
     )
     .with_lanes(2);
     let stats = engine.stats_handle();
-    let queue: Arc<RequestQueue<(Request, u64)>> = Arc::new(RequestQueue::new(QUEUE_DEPTH));
+    let queue: Arc<RequestQueue<(GenerateRequest, u64)>> = Arc::new(RequestQueue::new(QUEUE_DEPTH));
 
     // Watchdog: a deadlock must fail the test run, not hang it. The
     // budget is generous (debug builds, loaded CI machines); a healthy
@@ -98,7 +98,7 @@ fn serve_queue_pooled_concurrent_stress() {
             std::thread::spawn(move || {
                 for i in 0..PER_PRODUCER {
                     let id = (p * PER_PRODUCER + i) as u64;
-                    let req = Request::new(id, tokens_for(id, seg));
+                    let req = GenerateRequest::new(id, tokens_for(id, seg));
                     let mut job = (req, id);
                     loop {
                         match queue.push(job) {
@@ -107,7 +107,7 @@ fn serve_queue_pooled_concurrent_stress() {
                                 // Queue full: victims of our own load
                                 // test. Back off briefly and retry.
                                 std::thread::sleep(Duration::from_micros(200));
-                                job = (Request::new(id, tokens_for(id, seg)), id);
+                                job = (GenerateRequest::new(id, tokens_for(id, seg)), id);
                             }
                         }
                     }
@@ -149,14 +149,17 @@ fn serve_queue_pooled_concurrent_stress() {
         })
     };
 
-    // Drain on this thread; completions land in the closure.
+    // Drain on this thread; terminal events land in the closure.
     let mut completed: Vec<u64> = Vec::new();
     engine
-        .serve_queue(&queue, |ticket, resp| {
-            let resp = resp.expect("no request may fail under load");
-            assert_eq!(resp.id, ticket, "response routed to the wrong ticket");
-            assert!(!resp.greedy_tail.is_empty(), "request {ticket} produced no output");
-            completed.push(ticket);
+        .serve_queue(&queue, |ticket, ev| match ev {
+            Event::Done { stats: resp } => {
+                assert_eq!(resp.id, *ticket, "response routed to the wrong ticket");
+                assert!(!resp.greedy_tail.is_empty(), "request {ticket} produced no output");
+                completed.push(*ticket);
+            }
+            Event::Error { error } => panic!("request {ticket} failed under load: {error}"),
+            _ => {}
         })
         .unwrap();
     done.store(true, Ordering::SeqCst);
@@ -174,8 +177,9 @@ fn serve_queue_pooled_concurrent_stress() {
     assert_eq!(stats.requests.get(), total);
     assert_eq!(stats.packed_requests.get(), total);
     assert_eq!(stats.rejected.get(), 0);
+    // `tokens` counts prompt tokens as submitted (unpadded).
     let expect_tokens: u64 =
-        (0..total).map(|id| (segments_for(id) * c.seg) as u64).sum();
+        (0..total).map(|id| tokens_for(id, c.seg).len() as u64).sum();
     assert_eq!(stats.tokens.get(), expect_tokens, "token accounting drifted");
 
     let (active, slots) = stats.occupancy.parts();
