@@ -1,0 +1,12 @@
+//! Memory-state prefix cache under a shared-prefix burst: hit rate,
+//! prefill cells saved, and bit-exact outputs vs. a cold run.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `cache_reuse`; this binary is the legacy `cargo bench` entry
+//! point and is equivalent to `diagonal-batching bench --suite cache_reuse`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("cache_reuse")
+}

@@ -127,6 +127,12 @@ pub fn all() -> Vec<Suite> {
             about: "Pooled wavefront-step throughput at 1/2/4/8 worker threads",
             run: parallel_scaling,
         },
+        Suite {
+            name: "cache_reuse",
+            tags: &["serve", "native", "measured"],
+            about: "Shared-prefix burst through the memory-state prefix cache",
+            run: cache_reuse,
+        },
     ]
 }
 
@@ -1113,6 +1119,164 @@ fn serve_latency(ctx: &mut SuiteCtx) -> Result<()> {
          (mean group {:.2}, occupancy {:.3})",
         stats.mean_group(),
         stats.occupancy.value()
+    ));
+    Ok(())
+}
+
+/// Memory-state prefix cache under a shared-prefix burst: client 0
+/// cold-fills the store, then clients 1..N — all sharing its
+/// 6-segment prompt prefix, diverging at the tail — run concurrently
+/// through `serve_queue` with the cache enabled. Three gates, matching
+/// the ISSUE's acceptance criteria: (1) every follow-up client hits
+/// the cache (hit rate 1.0 > 0); (2) hit requests execute strictly
+/// fewer prefill cells than the cold run of the same request; (3) the
+/// outputs stay bit-identical to the cold run — generated tokens,
+/// greedy tails and the computed logits (`f32::to_bits`) alike.
+fn cache_reuse(ctx: &mut SuiteCtx) -> Result<()> {
+    let cfg = serving_config();
+    let lanes = ctx.settings().lanes.max(1);
+    let n_clients: u64 = if ctx.settings().fast { 6 } else { 12 };
+    let shared_segs = 6usize;
+    let tail_segs = 2usize;
+    let new_tokens = 2 * cfg.seg;
+    let mut rng = Rng::new(77);
+    let shared: Vec<u32> =
+        (0..shared_segs * cfg.seg).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let prompt = |i: u64| -> Vec<u32> {
+        let mut p = shared.clone();
+        p.extend(
+            (0..(tail_segs * cfg.seg) as u32)
+                .map(|t| (t * 13 + 7 * i as u32 + 1) % cfg.vocab as u32),
+        );
+        p
+    };
+
+    // Drive ids through one engine's serve_queue, in submission order.
+    let drain = |engine: &mut InferenceEngine<NativeBackend>,
+                 ids: std::ops::Range<u64>|
+     -> Result<Vec<crate::coordinator::Response>> {
+        let count = (ids.end - ids.start) as usize;
+        let base = ids.start;
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(count.max(1));
+        for i in ids {
+            let mut r = GenerateRequest::new(i, prompt(i)).generate(new_tokens);
+            r.want_logits = true;
+            queue.push((r, i))?;
+        }
+        queue.close();
+        let mut done: Vec<Option<crate::coordinator::Response>> =
+            (0..count).map(|_| None).collect();
+        let mut failed = 0u64;
+        engine.serve_queue(&queue, |t, ev| match ev {
+            Event::Done { stats } => done[(*t - base) as usize] = Some(*stats),
+            Event::Error { .. } => failed += 1,
+            _ => {}
+        })?;
+        check(failed == 0, format!("{failed} requests failed"))?;
+        done.into_iter()
+            .enumerate()
+            .map(|(i, d)| d.ok_or_else(|| Error::Bench(format!("request {i} never completed"))))
+            .collect()
+    };
+
+    // Cold reference: cache disabled, every request prefills in full.
+    // Client 0 runs untimed first, mirroring the warm pass below, so
+    // the cold/warm wallclocks cover the SAME burst (clients 1..N).
+    let mut cold_engine = InferenceEngine::new(
+        NativeBackend::new(cfg.clone(), Params::random(&cfg, 41)),
+        ExecMode::Diagonal,
+    )
+    .with_lanes(lanes);
+    let cold0 = drain(&mut cold_engine, 0..1)?;
+    let t0 = Instant::now();
+    let cold_burst = drain(&mut cold_engine, 1..n_clients)?;
+    let cold_wall = t0.elapsed().as_secs_f64();
+    let cold: Vec<crate::coordinator::Response> =
+        cold0.into_iter().chain(cold_burst).collect();
+
+    // Warm: same weights, cache on. Client 0 fills the store; the rest
+    // of the burst reuses its shared prefix concurrently.
+    let mut warm_engine = InferenceEngine::new(
+        NativeBackend::new(cfg.clone(), Params::random(&cfg, 41)),
+        ExecMode::Diagonal,
+    )
+    .with_lanes(lanes)
+    .with_cache_bytes(16 << 20);
+    let warm0 = drain(&mut warm_engine, 0..1)?;
+    check(warm0[0].reused_segments == 0, "client 0 must be a cold fill")?;
+    let t0 = Instant::now();
+    let warm = drain(&mut warm_engine, 1..n_clients)?;
+    let warm_wall = t0.elapsed().as_secs_f64();
+
+    let mut hit_cells = 0u64;
+    let mut cold_cells = 0u64;
+    for (w, c) in warm.iter().zip(&cold[1..]) {
+        check(
+            w.reused_segments == shared_segs,
+            format!("client {}: reused {} of {shared_segs} shared segments", w.id, w.reused_segments),
+        )?;
+        check(w.generated == c.generated, format!("client {}: decode diverged", w.id))?;
+        check(w.greedy_tail == c.greedy_tail, format!("client {}: greedy tail diverged", w.id))?;
+        let (wl, cl) = (w.logits.as_ref().unwrap(), c.logits.as_ref().unwrap());
+        check(wl.len() + shared_segs == cl.len(), "computed-logit counts")?;
+        for (a, b) in wl.iter().zip(&cl[shared_segs..]) {
+            let eq = a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits());
+            check(eq, format!("client {}: computed logits diverged from the cold run", w.id))?;
+        }
+        check(
+            w.stats.cells < c.stats.cells,
+            format!(
+                "client {}: a hit must execute strictly fewer cells ({} vs cold {})",
+                w.id, w.stats.cells, c.stats.cells
+            ),
+        )?;
+        hit_cells += w.stats.cells;
+        cold_cells += c.stats.cells;
+    }
+    let stats = &warm_engine.stats;
+    let hits = stats.cache_hits.get();
+    check(
+        hits == n_clients - 1,
+        format!("hit-rate gate: {hits} hits for {} shared-prefix clients", n_clients - 1),
+    )?;
+    check(
+        stats.cache_hit_segments.get() == (n_clients - 1) * shared_segs as u64,
+        "every hit must reuse the whole shared prefix",
+    )?;
+
+    let mut t = Table::new(
+        &format!(
+            "cache_reuse — {n_clients} clients x ({} shared + {} tail segments, {} new tokens), \
+             {lanes} lane(s)",
+            shared_segs, tail_segs, new_tokens
+        ),
+        &["quantity", "cold", "warm (prefix cache)"],
+    );
+    let per = |cells: u64, n: u64| cells as f64 / n as f64;
+    t.row(vec![
+        "cells/request".into(),
+        format!("{:.1}", per(cold_cells, n_clients - 1)),
+        format!("{:.1}", per(hit_cells, n_clients - 1)),
+    ]);
+    t.row(vec!["wall (ms)".into(), format!("{:.1}", cold_wall * 1e3), format!("{:.1}", warm_wall * 1e3)]);
+    t.row(vec![
+        "cache".into(),
+        "off".into(),
+        format!("{} hits, {} bytes, {} evictions", hits, stats.cache_bytes.get(), stats.cache_evictions.get()),
+    ]);
+    ctx.table(&t);
+
+    ctx.metric_higher("cache_hit_rate", hits as f64 / (n_clients - 1) as f64);
+    ctx.metric_higher("prefill_cells_saved_frac", 1.0 - hit_cells as f64 / cold_cells as f64);
+    ctx.metric_info("cache_bytes", stats.cache_bytes.get() as f64);
+    ctx.metric_info("evictions", stats.cache_evictions.get() as f64);
+    ctx.metric_info("cold_wall_s", cold_wall);
+    ctx.metric_info("warm_wall_s", warm_wall);
+    ctx.note(format!(
+        "OK: {} hits / {} shared-prefix clients, {:.0}% of cells saved, outputs bit-exact vs cold",
+        hits,
+        n_clients - 1,
+        100.0 * (1.0 - hit_cells as f64 / cold_cells as f64)
     ));
     Ok(())
 }

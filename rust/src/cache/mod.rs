@@ -1,0 +1,42 @@
+//! Memory-state snapshot store: prefix-reuse cache + session
+//! suspend/resume.
+//!
+//! ARMT's per-layer associative memory is constant-size regardless of
+//! context length (`simulator/memory.rs` quantifies the gap vs. a
+//! KV cache), so checkpointing a request's entire inference state
+//! after segment `k` is almost free. This module turns that into two
+//! serving features:
+//!
+//! * **Prefix reuse** — [`PrefixStore`] is a trie keyed on rolling
+//!   hashes of segment token blocks, mapping longest-cached-prefix →
+//!   [`MemSnapshot`], LRU-evicted under a byte budget
+//!   (`--cache-bytes`). The engine consults it on admission: a request
+//!   whose prompt shares a cached prefix seeds its wavefront lane from
+//!   the snapshot and skips the cached prefill segments entirely
+//!   ([`WavefrontSession::submit_stream_resumed`]) — the RMT analog of
+//!   vLLM prefix caching / SGLang RadixAttention, with a few hundred
+//!   kilobytes of state where those systems manage a paged KV pool.
+//! * **Suspend/resume** — a completed request's final memory state is
+//!   a [`MemSnapshot`] too: retained in the engine under an
+//!   engine-assigned resume token (`"save": true` / `{"cmd": "save",
+//!   "id": N}`; the `done` frame echoes the token, and a later request
+//!   with `"resume": token` carries only the *new* tokens; retention
+//!   is LRU-capped) or exported to disk
+//!   ([`MemSnapshot::save`]/[`load`](MemSnapshot::load)) — multi-turn
+//!   conversations never re-prefill their history.
+//!
+//! The load-bearing invariant (gated by `rust/tests/cache_resume.rs`
+//! and the `cache_reuse` bench suite): a run resumed from a snapshot —
+//! in-memory hit or disk round-trip — is **byte-identical**
+//! (`f32::to_bits`) to recomputing the full prompt through the
+//! sequential oracle. Serialization therefore ships raw f32 bit
+//! patterns, and the trie verifies stored blocks verbatim instead of
+//! trusting hashes.
+//!
+//! [`WavefrontSession::submit_stream_resumed`]: crate::scheduler::WavefrontSession::submit_stream_resumed
+
+mod prefix;
+mod snapshot;
+
+pub use prefix::{chain_hash, PrefixStore};
+pub use snapshot::MemSnapshot;

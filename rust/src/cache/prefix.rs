@@ -1,0 +1,450 @@
+//! [`PrefixStore`]: a trie of segment token blocks mapping
+//! longest-cached-prefix → [`MemSnapshot`], with LRU eviction under a
+//! configurable byte budget.
+//!
+//! The serving analog of vLLM-style prefix caching / RadixAttention —
+//! except the cached object per prefix is a constant-size memory state
+//! instead of a paged KV pool. Keys are exact `seg`-sized token blocks
+//! (what [`segment_tokens`](crate::scheduler::segment_tokens)
+//! produces); edges are addressed by a rolling chain hash of the block
+//! sequence, and every edge stores its block verbatim so a hash
+//! collision can never alias two different prefixes — on a colliding
+//! insert the store refuses rather than corrupt, and on lookup a
+//! mismatching block terminates the walk. Exactness beats memory here.
+//!
+//! Eviction is least-recently-used over *snapshot entries* (interior
+//! trie nodes carry no state worth accounting): every lookup hit and
+//! insert advances a logical clock, and when the accounted bytes
+//! exceed the budget, the entry with the oldest clock goes — emptied
+//! branches are pruned on the way out.
+
+use std::collections::HashMap;
+
+use crate::cache::MemSnapshot;
+
+/// Seed/offset pair of FNV-1a 64.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Rolling chain hash: the edge key of `block` under a parent whose
+/// own chain hash is `parent` (root = 0). Exposed so callers can log
+/// or shard by prefix identity.
+pub fn chain_hash(parent: u64, block: &[u32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for byte in parent.to_le_bytes() {
+        h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+    }
+    for tok in block {
+        for byte in tok.to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+struct Entry {
+    snap: MemSnapshot,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Node {
+    /// Edges keyed by the child's chain hash; the child records its
+    /// block so collisions are detected, never silently merged.
+    children: HashMap<u64, Child>,
+    entry: Option<Entry>,
+}
+
+struct Child {
+    block: Vec<u32>,
+    node: Node,
+}
+
+// Node has no methods: traversal lives in `PrefixStore::evict_lru` and
+// is ITERATIVE on purpose — a prompt of S segments builds an S-deep
+// chain, and recursing per level would overflow the engine thread's
+// stack on exactly the long-context workloads this repo is about.
+
+/// Trie of cached memory states keyed on segment-block prefixes.
+pub struct PrefixStore {
+    root: Node,
+    budget: usize,
+    bytes: usize,
+    entries: usize,
+    clock: u64,
+    evictions: u64,
+}
+
+impl PrefixStore {
+    /// A store that evicts least-recently-used snapshots once the
+    /// accounted bytes exceed `budget_bytes` (the `--cache-bytes`
+    /// setting).
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            root: Node::default(),
+            budget: budget_bytes,
+            bytes: 0,
+            entries: 0,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently accounted against the budget.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Cached snapshots (not trie nodes).
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Snapshots evicted by the byte budget so far (monotone).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Longest cached prefix of `blocks`: the deepest `p <= blocks.len()`
+    /// such that a snapshot is stored for exactly `blocks[..p]`.
+    /// Returns `(p, snapshot)` and refreshes that entry's LRU clock.
+    /// Pass `&blocks[..blocks.len() - 1]` to guarantee at least one
+    /// segment is left to compute (a run needs an exit to produce
+    /// logits from).
+    pub fn lookup(&mut self, blocks: &[Vec<u32>]) -> Option<(usize, MemSnapshot)> {
+        // Pass 1 (immutable): find the deepest depth holding an entry.
+        let mut node = &self.root;
+        let mut hash = 0u64;
+        let mut best: Option<usize> = None;
+        for (i, block) in blocks.iter().enumerate() {
+            hash = chain_hash(hash, block);
+            match node.children.get(&hash) {
+                Some(child) if child.block == *block => {
+                    node = &child.node;
+                    if node.entry.is_some() {
+                        best = Some(i + 1);
+                    }
+                }
+                // Absent edge, or a hash collision (different block
+                // behind the same key): nothing deeper can match.
+                _ => break,
+            }
+        }
+        let depth = best?;
+        // Pass 2 (mutable): walk to `depth`, touch, clone out.
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        let mut hash = 0u64;
+        for block in &blocks[..depth] {
+            hash = chain_hash(hash, block);
+            node = &mut node.children.get_mut(&hash).expect("walked in pass 1").node;
+        }
+        let entry = node.entry.as_mut().expect("found in pass 1");
+        entry.last_used = clock;
+        Some((depth, entry.snap.clone()))
+    }
+
+    /// Cache `snap` as the state after exactly the prefix `blocks`
+    /// (`snap.segments` must equal `blocks.len()`). Replaces an
+    /// existing entry for the same prefix (refreshing its clock), then
+    /// evicts LRU entries until the byte budget holds again. Returns
+    /// the number of entries evicted. A hash collision along the path
+    /// refuses the insert (exactness over coverage); a snapshot larger
+    /// than the whole budget is evicted right back out.
+    pub fn insert(&mut self, blocks: &[Vec<u32>], snap: MemSnapshot) -> u64 {
+        debug_assert_eq!(
+            snap.segments,
+            blocks.len(),
+            "snapshot recurrence counter must match its key depth"
+        );
+        if blocks.is_empty() {
+            return 0;
+        }
+        let mut node = &mut self.root;
+        let mut hash = 0u64;
+        for block in blocks {
+            hash = chain_hash(hash, block);
+            let child = node
+                .children
+                .entry(hash)
+                .or_insert_with(|| Child { block: block.clone(), node: Node::default() });
+            if child.block != *block {
+                // FNV collision between distinct blocks under one
+                // parent: ~2^-64 per pair. Refuse — a silent merge
+                // would hand request B request A's memory.
+                return 0;
+            }
+            node = &mut child.node;
+        }
+        self.clock += 1;
+        // Accounting is linear in actual storage: trie edges are shared
+        // between entries, so each entry is charged its snapshot plus
+        // only its OWN (unshared) tail block — charging the whole key
+        // path would grow quadratically with prompt length and evict
+        // far earlier than the configured budget warrants.
+        let bytes =
+            snap.byte_size() + blocks.last().map_or(0, |b| b.len() * std::mem::size_of::<u32>());
+        if let Some(old) = node.entry.take() {
+            self.bytes -= old.bytes;
+            self.entries -= 1;
+        }
+        node.entry = Some(Entry { snap, bytes, last_used: self.clock });
+        self.bytes += bytes;
+        self.entries += 1;
+        self.enforce_budget()
+    }
+
+    /// LRU eviction is a full-trie scan per victim — O(entries),
+    /// simple, and iterative (explicit stacks; no recursion to blow on
+    /// deep chains). Fine for stores sized in the
+    /// hundreds-to-thousands of snapshots; revisit with an intrusive
+    /// clock->node index if budgets ever hold orders of magnitude more.
+    fn enforce_budget(&mut self) -> u64 {
+        let mut evicted = 0;
+        while self.bytes > self.budget && self.entries > 0 {
+            let Some(freed) = self.evict_lru() else { break };
+            self.bytes -= freed;
+            self.entries -= 1;
+            self.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Remove the least-recently-used entry; returns its accounted
+    /// bytes. A leaf entry's now-dead chain is pruned back to the
+    /// deepest surviving ancestor (a node holding its own entry or a
+    /// second branch).
+    fn evict_lru(&mut self) -> Option<usize> {
+        // Pass 1 (iterative DFS): the oldest entry and its edge path.
+        let mut best: Option<(u64, Vec<u64>)> = None;
+        let mut stack: Vec<(&Node, Vec<u64>)> = vec![(&self.root, Vec::new())];
+        while let Some((node, path)) = stack.pop() {
+            if let Some(e) = &node.entry {
+                if best.as_ref().is_none_or(|(clock, _)| e.last_used < *clock) {
+                    best = Some((e.last_used, path.clone()));
+                }
+            }
+            for (key, child) in &node.children {
+                let mut p = path.clone();
+                p.push(*key);
+                stack.push((&child.node, p));
+            }
+        }
+        let (_, path) = best?;
+        // Pass 2 (immutable walk): the target's bytes, whether it has
+        // children (then only its entry goes), and the prune point —
+        // the deepest ancestor that keeps an entry or another branch.
+        // Every node strictly below the prune point carries nothing
+        // but the victim, so cutting that one edge drops exactly it.
+        let (cut, target_has_children, bytes) = {
+            let mut node = &self.root;
+            let mut cut = 0usize;
+            for (i, key) in path.iter().enumerate() {
+                if i > 0 && (node.entry.is_some() || node.children.len() > 1) {
+                    cut = i;
+                }
+                node = &node.children[key].node;
+            }
+            (cut, !node.children.is_empty(), node.entry.as_ref().map(|e| e.bytes)?)
+        };
+        // Pass 3 (mutable walk): remove.
+        if target_has_children || path.is_empty() {
+            let mut node = &mut self.root;
+            for key in &path {
+                node = &mut node.children.get_mut(key).expect("walked in pass 2").node;
+            }
+            node.entry.take();
+        } else {
+            let mut node = &mut self.root;
+            for key in &path[..cut] {
+                node = &mut node.children.get_mut(key).expect("walked in pass 2").node;
+            }
+            node.children.remove(&path[cut]);
+        }
+        Some(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::tensor::Tensor;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::synthetic()
+    }
+
+    fn snap(segments: usize, fill: f32) -> MemSnapshot {
+        let c = cfg();
+        let layers = (0..c.n_layers)
+            .map(|_| {
+                (
+                    Tensor::full(&[c.d_model, c.phi_dim], fill),
+                    Tensor::full(&[c.phi_dim], fill),
+                )
+            })
+            .collect();
+        MemSnapshot::from_layers(&c, segments, layers).unwrap()
+    }
+
+    fn blocks(tags: &[u32]) -> Vec<Vec<u32>> {
+        let seg = cfg().seg;
+        tags.iter().map(|&t| (0..seg as u32).map(|i| t * 100 + i).collect()).collect()
+    }
+
+    #[test]
+    fn longest_prefix_wins() {
+        let mut store = PrefixStore::new(usize::MAX);
+        store.insert(&blocks(&[1]), snap(1, 0.1));
+        store.insert(&blocks(&[1, 2, 3]), snap(3, 0.3));
+        assert_eq!(store.len(), 2);
+
+        // Deepest stored prefix below the query depth.
+        let q = blocks(&[1, 2, 3, 4]);
+        let (p, s) = store.lookup(&q).unwrap();
+        assert_eq!(p, 3);
+        assert_eq!(s.segments, 3);
+        assert_eq!(s.a[0].data()[0], 0.3);
+
+        // Falls back to the shorter prefix when the path diverges.
+        let q = blocks(&[1, 9]);
+        let (p, s) = store.lookup(&q).unwrap();
+        assert_eq!(p, 1);
+        assert_eq!(s.segments, 1);
+
+        // Nothing cached along a different root.
+        assert!(store.lookup(&blocks(&[7, 8])).is_none());
+    }
+
+    #[test]
+    fn shared_prefix_across_divergent_tails() {
+        // The serving shape: many prompts share a long prefix and
+        // diverge at the tail. A snapshot stored at the shared depth
+        // serves them all.
+        let mut store = PrefixStore::new(usize::MAX);
+        store.insert(&blocks(&[5, 6]), snap(2, 0.2));
+        for tail in [10u32, 11, 12] {
+            let (p, s) = store.lookup(&blocks(&[5, 6, tail])).unwrap();
+            assert_eq!((p, s.segments), (2, 2));
+        }
+    }
+
+    #[test]
+    fn insert_replaces_same_prefix_without_leaking_bytes() {
+        let mut store = PrefixStore::new(usize::MAX);
+        store.insert(&blocks(&[1, 2]), snap(2, 0.1));
+        let bytes_one = store.bytes();
+        store.insert(&blocks(&[1, 2]), snap(2, 0.9));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.bytes(), bytes_one);
+        let (_, s) = store.lookup(&blocks(&[1, 2])).unwrap();
+        assert_eq!(s.a[0].data()[0], 0.9);
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        let one = snap(1, 0.0).byte_size() + cfg().seg * 4;
+        // Room for two entries, not three.
+        let mut store = PrefixStore::new(2 * one + one / 2);
+        store.insert(&blocks(&[1]), snap(1, 0.1));
+        store.insert(&blocks(&[2]), snap(1, 0.2));
+        assert_eq!(store.evictions(), 0);
+
+        // Touch [1] so [2] is the LRU victim.
+        assert!(store.lookup(&blocks(&[1])).is_some());
+        let evicted = store.insert(&blocks(&[3]), snap(1, 0.3));
+        assert_eq!(evicted, 1);
+        assert_eq!(store.evictions(), 1);
+        assert_eq!(store.len(), 2);
+        assert!(store.bytes() <= store.budget_bytes());
+        assert!(store.lookup(&blocks(&[1])).is_some(), "recently used survives");
+        assert!(store.lookup(&blocks(&[2])).is_none(), "LRU entry evicted");
+        assert!(store.lookup(&blocks(&[3])).is_some());
+    }
+
+    #[test]
+    fn oversized_snapshot_evicts_itself() {
+        let mut store = PrefixStore::new(16); // smaller than any snapshot
+        let evicted = store.insert(&blocks(&[1]), snap(1, 0.1));
+        assert_eq!(evicted, 1);
+        assert!(store.is_empty());
+        assert_eq!(store.bytes(), 0);
+        assert!(store.lookup(&blocks(&[1])).is_none());
+    }
+
+    #[test]
+    fn eviction_prunes_empty_branches() {
+        // Entries are charged their snapshot + own tail block only
+        // (shared edges are not double-counted).
+        let one = snap(3, 0.0).byte_size() + cfg().seg * 4;
+        let mut store = PrefixStore::new(one + one / 2);
+        store.insert(&blocks(&[1, 2, 3]), snap(3, 0.1));
+        store.insert(&blocks(&[4, 5, 6]), snap(3, 0.2));
+        assert_eq!(store.evictions(), 1);
+        // The evicted chain is fully gone, including interior nodes.
+        assert!(store.root.children.len() == 1, "emptied branch pruned");
+        assert!(store.lookup(&blocks(&[4, 5, 6])).is_some());
+    }
+
+    #[test]
+    fn eviction_handles_interior_entries_and_deep_chains() {
+        // A 64-deep chain with a second entry at depth 1: evicting the
+        // interior (older) entry must keep the chain below it intact,
+        // evicting the deep leaf later must prune the dead chain — and
+        // the iterative walkers must take the depth in stride.
+        let tags: Vec<u32> = (0..64).collect();
+        let deep = blocks(&tags);
+        let one = snap(1, 0.0).byte_size() + cfg().seg * 4;
+        let mut store = PrefixStore::new(one + one / 2);
+
+        store.insert(&deep[..1], snap(1, 0.1));
+        let evicted = store.insert(&deep, snap(64, 0.9));
+        // Budget holds one entry: the older interior entry goes, the
+        // deep chain survives it untouched.
+        assert_eq!(evicted, 1);
+        assert_eq!(store.len(), 1);
+        assert!(store.lookup(&deep[..1]).is_none(), "interior entry evicted");
+        let (p, s) = store.lookup(&deep).unwrap();
+        assert_eq!((p, s.segments), (64, 64));
+
+        // A fresh unrelated insert now evicts the deep leaf; its whole
+        // dead chain is pruned back to the root.
+        store.insert(&blocks(&[999]), snap(1, 0.5));
+        assert_eq!(store.len(), 1);
+        assert!(store.lookup(&deep).is_none());
+        assert_eq!(store.root.children.len(), 1, "dead 64-deep chain pruned");
+        assert!(store.lookup(&blocks(&[999])).is_some());
+    }
+
+    #[test]
+    fn lookup_capped_by_caller_slice() {
+        // The engine passes blocks[..len-1] so at least one segment is
+        // always computed; a full-length entry is then unreachable.
+        let mut store = PrefixStore::new(usize::MAX);
+        let q = blocks(&[1, 2]);
+        store.insert(&q, snap(2, 0.5));
+        assert!(store.lookup(&q[..q.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn chain_hash_is_order_sensitive() {
+        let a = blocks(&[1, 2]);
+        let b = blocks(&[2, 1]);
+        let ha = chain_hash(chain_hash(0, &a[0]), &a[1]);
+        let hb = chain_hash(chain_hash(0, &b[0]), &b[1]);
+        assert_ne!(ha, hb);
+        assert_ne!(chain_hash(0, &a[0]), chain_hash(0, &a[1]));
+    }
+}

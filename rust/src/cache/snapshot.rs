@@ -1,0 +1,303 @@
+//! [`MemSnapshot`]: one request's frozen recurrent memory.
+//!
+//! ARMT's whole pitch (vs. a KV cache) is that the per-layer state is
+//! *constant-size*: `A [d_model, phi_dim]` plus `z [phi_dim]` per
+//! layer, regardless of how many segments have streamed through. That
+//! makes checkpointing an entire inference after segment `k` almost
+//! free — the snapshot is a few hundred kilobytes for the paper
+//! configs, not a paged KV pool — which is what the prefix-reuse cache
+//! ([`crate::cache::PrefixStore`]) and conversation suspend/resume are
+//! built on.
+//!
+//! Exactness contract: a snapshot restored into a wavefront lane
+//! ([`WavefrontSession::submit_stream_resumed`](crate::scheduler::WavefrontSession::submit_stream_resumed))
+//! or the sequential loop must reproduce the full-recompute run **bit
+//! for bit** (`f32::to_bits`), including through a disk round-trip. So
+//! serialization never goes through decimal floats: every f32 is
+//! stored as its raw `u32` bit pattern (exact in JSON — integers below
+//! 2^53 survive the f64 number model losslessly), preserving NaN
+//! payloads, signed zeros and denormals.
+
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::tensor::Tensor;
+
+/// One lane's per-layer associative memory + recurrence counter after
+/// some segment `k` — everything needed to continue the recurrence as
+/// if the first `k` segments had just been computed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemSnapshot {
+    /// Model the state was produced by (`ModelConfig::name`); a
+    /// best-effort guard — dimensions are checked exactly, weights
+    /// cannot be.
+    pub model: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub phi_dim: usize,
+    /// Tokens per segment of the producing model (keys in the prefix
+    /// trie are `seg`-sized token blocks).
+    pub seg: usize,
+    /// Recurrence counter: segments consumed to reach this state. A
+    /// resumed run's next segment has absolute index `segments`.
+    pub segments: usize,
+    /// Per-layer associative memory `A [d_model, phi_dim]`.
+    pub a: Vec<Tensor>,
+    /// Per-layer normalizer state `z [phi_dim]`.
+    pub z: Vec<Tensor>,
+}
+
+impl MemSnapshot {
+    /// Assemble from per-layer `(A, z)` pairs in layer order.
+    pub fn from_layers(
+        cfg: &ModelConfig,
+        segments: usize,
+        layers: Vec<(Tensor, Tensor)>,
+    ) -> Result<Self> {
+        if layers.len() != cfg.n_layers {
+            return Err(Error::Config(format!(
+                "snapshot needs {} layers, got {}",
+                cfg.n_layers,
+                layers.len()
+            )));
+        }
+        let (a, z): (Vec<Tensor>, Vec<Tensor>) = layers.into_iter().unzip();
+        let snap = Self {
+            model: cfg.name.clone(),
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            phi_dim: cfg.phi_dim,
+            seg: cfg.seg,
+            segments,
+            a,
+            z,
+        };
+        snap.validate_for(cfg)?;
+        Ok(snap)
+    }
+
+    /// Check this snapshot can seed a lane of `cfg`'s wavefront: every
+    /// dimension must match and the state tensors must have the
+    /// declared shapes. (The model *name* is compared too — a rename
+    /// is the only weight-mismatch signal available at this layer.)
+    pub fn validate_for(&self, cfg: &ModelConfig) -> Result<()> {
+        let fail = |msg: String| Err(Error::Config(format!("snapshot mismatch: {msg}")));
+        if self.model != cfg.name {
+            return fail(format!("model '{}' vs engine '{}'", self.model, cfg.name));
+        }
+        if self.n_layers != cfg.n_layers
+            || self.d_model != cfg.d_model
+            || self.phi_dim != cfg.phi_dim
+            || self.seg != cfg.seg
+        {
+            return fail(format!(
+                "dims (L {}, d {}, p {}, seg {}) vs (L {}, d {}, p {}, seg {})",
+                self.n_layers,
+                self.d_model,
+                self.phi_dim,
+                self.seg,
+                cfg.n_layers,
+                cfg.d_model,
+                cfg.phi_dim,
+                cfg.seg
+            ));
+        }
+        if self.segments == 0 {
+            return fail("zero-segment snapshot (nothing was consumed)".into());
+        }
+        if self.a.len() != self.n_layers || self.z.len() != self.n_layers {
+            return fail(format!("{} A / {} z layers", self.a.len(), self.z.len()));
+        }
+        for (l, (a, z)) in self.a.iter().zip(&self.z).enumerate() {
+            if a.shape() != [self.d_model, self.phi_dim] {
+                return fail(format!("layer {l} A shape {:?}", a.shape()));
+            }
+            if z.shape() != [self.phi_dim] {
+                return fail(format!("layer {l} z shape {:?}", z.shape()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Approximate resident size — what the [`PrefixStore`]'s byte
+    /// budget accounts (state floats dominate; per-entry bookkeeping
+    /// is folded in as a small constant).
+    ///
+    /// [`PrefixStore`]: crate::cache::PrefixStore
+    pub fn byte_size(&self) -> usize {
+        let floats = self.n_layers * (self.d_model * self.phi_dim + self.phi_dim);
+        floats * std::mem::size_of::<f32>() + self.model.len() + 128
+    }
+
+    /// Serialize. Floats travel as raw `u32` bit patterns
+    /// (`f32::to_bits`), so the round-trip is bit-exact — NaNs, signed
+    /// zeros and denormals included.
+    pub fn to_json(&self) -> Value {
+        let bits = |t: &Tensor| {
+            Value::Arr(t.data().iter().map(|f| Value::Num(f.to_bits() as f64)).collect())
+        };
+        Value::obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("n_layers", Value::Num(self.n_layers as f64)),
+            ("d_model", Value::Num(self.d_model as f64)),
+            ("phi_dim", Value::Num(self.phi_dim as f64)),
+            ("seg", Value::Num(self.seg as f64)),
+            ("segments", Value::Num(self.segments as f64)),
+            ("a_bits", Value::Arr(self.a.iter().map(&bits).collect())),
+            ("z_bits", Value::Arr(self.z.iter().map(&bits).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let n_layers = v.req("n_layers")?.as_usize()?;
+        let d_model = v.req("d_model")?.as_usize()?;
+        let phi_dim = v.req("phi_dim")?.as_usize()?;
+        let tensor_from_bits = |v: &Value, shape: &[usize]| -> Result<Tensor> {
+            let data = v
+                .as_arr()?
+                .iter()
+                .map(|b| {
+                    let bits = b.as_u64()?;
+                    let bits = u32::try_from(bits)
+                        .map_err(|_| Error::Json(format!("f32 bit pattern {bits} > u32")))?;
+                    Ok(f32::from_bits(bits))
+                })
+                .collect::<Result<Vec<f32>>>()?;
+            Tensor::new(shape, data)
+        };
+        let read_layers = |key: &str, shape: &[usize]| -> Result<Vec<Tensor>> {
+            let arr = v.req(key)?.as_arr()?;
+            if arr.len() != n_layers {
+                return Err(Error::Json(format!(
+                    "snapshot {key}: {} layers, expected {n_layers}",
+                    arr.len()
+                )));
+            }
+            arr.iter().map(|t| tensor_from_bits(t, shape)).collect()
+        };
+        Ok(Self {
+            model: v.req("model")?.as_str()?.to_string(),
+            n_layers,
+            d_model,
+            phi_dim,
+            seg: v.req("seg")?.as_usize()?,
+            segments: v.req("segments")?.as_usize()?,
+            a: read_layers("a_bits", &[d_model, phi_dim])?,
+            z: read_layers("z_bits", &[phi_dim])?,
+        })
+    }
+
+    /// Write to disk (one JSON document) — the suspend half of
+    /// conversation suspend/resume.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json() + "\n")?;
+        Ok(())
+    }
+
+    /// Read back from disk. `load(p)` after `save(p)` is bit-identical
+    /// to the original snapshot.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::synthetic()
+    }
+
+    fn snap(seed: u64, segments: usize) -> MemSnapshot {
+        let c = cfg();
+        let mut rng = Rng::new(seed);
+        let layers = (0..c.n_layers)
+            .map(|_| {
+                (
+                    Tensor::randn(&[c.d_model, c.phi_dim], 0.3, &mut rng),
+                    Tensor::randn(&[c.phi_dim], 0.3, &mut rng),
+                )
+            })
+            .collect();
+        MemSnapshot::from_layers(&c, segments, layers).unwrap()
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let s = snap(7, 5);
+        let back = MemSnapshot::from_json(&Value::parse(&s.to_json().to_json()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        for (a, b) in s.a.iter().zip(&back.a) {
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                a.data().iter().map(|x| x.to_bits()).collect(),
+                b.data().iter().map(|x| x.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_special_float_bits() {
+        // NaN payloads, -0.0, denormals and infinities must survive —
+        // decimal formatting would destroy all of them.
+        let mut s = snap(8, 1);
+        let d = s.a[0].data_mut();
+        d[0] = f32::from_bits(0x7fc0_0abc); // NaN with payload
+        d[1] = -0.0;
+        d[2] = f32::from_bits(1); // smallest denormal
+        d[3] = f32::INFINITY;
+        d[4] = f32::NEG_INFINITY;
+        let back = MemSnapshot::from_json(&Value::parse(&s.to_json().to_json()).unwrap()).unwrap();
+        for (x, y) in s.a[0].data().iter().zip(back.a[0].data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let s = snap(9, 3);
+        let path = std::env::temp_dir().join(format!("snap_test_{}.json", std::process::id()));
+        s.save(&path).unwrap();
+        let back = MemSnapshot::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let c = cfg();
+        assert!(snap(1, 2).validate_for(&c).is_ok());
+
+        let mut wrong_model = snap(1, 2);
+        wrong_model.model = "other".into();
+        assert!(wrong_model.validate_for(&c).is_err());
+
+        let mut wrong_dim = snap(1, 2);
+        wrong_dim.d_model += 1;
+        assert!(wrong_dim.validate_for(&c).is_err());
+
+        let mut zero_segments = snap(1, 2);
+        zero_segments.segments = 0;
+        assert!(zero_segments.validate_for(&c).is_err());
+
+        let mut missing_layer = snap(1, 2);
+        missing_layer.a.pop();
+        assert!(missing_layer.validate_for(&c).is_err());
+
+        // from_layers refuses a short layer list outright.
+        assert!(MemSnapshot::from_layers(&c, 1, vec![]).is_err());
+    }
+
+    #[test]
+    fn byte_size_covers_state() {
+        let c = cfg();
+        let s = snap(2, 1);
+        let floats = c.n_layers * (c.d_model * c.phi_dim + c.phi_dim);
+        assert!(s.byte_size() >= floats * 4);
+    }
+}

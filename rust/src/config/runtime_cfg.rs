@@ -107,6 +107,12 @@ pub struct RuntimeConfig {
     /// Auto mode: minimum segments before diagonal pays off (calibrated
     /// at startup or cost-model driven; see coordinator::fallback).
     pub fallback_min_segments: usize,
+    /// Byte budget of the memory-state prefix cache (`--cache-bytes`):
+    /// prompt-boundary snapshots are stored in an LRU trie and shared
+    /// prompt prefixes skip their prefill entirely; saved conversations
+    /// resume without re-prefilling history. `0` (the default) disables
+    /// the cache — and with it all snapshot capture overhead.
+    pub cache_bytes: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -122,6 +128,7 @@ impl Default for RuntimeConfig {
             lanes: 1,
             threads: 0,
             fallback_min_segments: 4,
+            cache_bytes: 0,
         }
     }
 }
@@ -160,6 +167,9 @@ impl RuntimeConfig {
         if let Some(x) = v.get("fallback_min_segments") {
             c.fallback_min_segments = x.as_usize()?;
         }
+        if let Some(x) = v.get("cache_bytes") {
+            c.cache_bytes = x.as_usize()?;
+        }
         Ok(c)
     }
 
@@ -194,6 +204,7 @@ impl RuntimeConfig {
             ("lanes", Value::Num(self.lanes as f64)),
             ("threads", Value::Num(self.threads as f64)),
             ("fallback_min_segments", Value::Num(self.fallback_min_segments as f64)),
+            ("cache_bytes", Value::Num(self.cache_bytes as f64)),
         ])
     }
 }
@@ -238,6 +249,16 @@ mod tests {
         assert_eq!(c.queue_depth, 64);
         assert_eq!(c.lanes, 1);
         assert_eq!(c.threads, 0); // auto
+        assert_eq!(c.cache_bytes, 0); // cache off
+    }
+
+    #[test]
+    fn cache_bytes_roundtrip() {
+        let v = Value::parse(r#"{"cache_bytes": 1048576}"#).unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.cache_bytes, 1 << 20);
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.cache_bytes, 1 << 20);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cache::{MemSnapshot, PrefixStore};
 use crate::config::{ExecMode, ModelConfig};
 use crate::coordinator::fallback::{Calibration, FallbackPolicy};
 use crate::coordinator::queue::RequestQueue;
@@ -45,13 +46,43 @@ use crate::scheduler::{
 };
 use crate::tensor::Tensor;
 
+/// Where a request's recurrent memory starts: fresh (None on
+/// [`GenerateRequest::resume`]), a conversation the engine retained
+/// under an engine-assigned token, or an explicit snapshot (disk
+/// round-trip).
+#[derive(Clone, Debug)]
+pub enum ResumeFrom {
+    /// A conversation saved in the engine (`"save": true` or
+    /// `{"cmd": "save", "id": N}`): the engine-assigned token echoed
+    /// as `resume_token` in the terminal `done` frame. Tokens are
+    /// unique per engine — a later save can never silently overwrite
+    /// another conversation. The prompt carries only the NEW tokens —
+    /// the saved history is never re-prefilled.
+    Token(u64),
+    /// An explicit [`MemSnapshot`] — what `--resume-file` loads from
+    /// disk, and what embedding callers pass directly.
+    Snapshot(Box<MemSnapshot>),
+}
+
+/// Cross-thread request flags, shared between a [`GenerateRequest`] and
+/// every [`RequestHandle`] cloned off it.
+#[derive(Debug, Default)]
+struct ReqFlags {
+    cancel: AtomicBool,
+    /// Retain the final memory state at completion (conversation
+    /// suspend). Settable mid-flight from any thread, like cancel.
+    save: AtomicBool,
+}
+
 /// One generation request: prompt tokens plus the decode budget and
 /// sampling configuration. `max_new_tokens = 0` is a pure prefill
 /// (scoring) request — the old one-shot RPC is that special case.
 #[derive(Clone, Debug)]
 pub struct GenerateRequest {
     pub id: u64,
-    /// Prompt tokens (segmented and padded internally).
+    /// Prompt tokens (segmented and padded internally). When
+    /// [`resume`](Self::resume) is set these are only the NEW tokens —
+    /// the resumed history stays frozen in the snapshot.
     pub prompt: Vec<u32>,
     /// Decode budget: how many new tokens to generate after the prompt.
     pub max_new_tokens: usize,
@@ -62,10 +93,16 @@ pub struct GenerateRequest {
     /// Optional per-request mode override.
     pub mode: Option<ExecMode>,
     /// Return full logits in the terminal [`Response`] (false = only
-    /// the greedy tail / generated tokens).
+    /// the greedy tail / generated tokens). With a prefix-cache hit or
+    /// resume, logits cover only the segments actually computed.
     pub want_logits: bool,
-    /// Shared with every [`RequestHandle`] cloned off this request.
-    cancel: Arc<AtomicBool>,
+    /// Seed the recurrence from a saved conversation or snapshot
+    /// instead of empty memory.
+    pub resume: Option<ResumeFrom>,
+    /// Shared with every [`RequestHandle`] cloned off this request —
+    /// cancellation plus the save-on-completion flag
+    /// ([`with_save`](Self::with_save) / [`RequestHandle::request_save`]).
+    flags: Arc<ReqFlags>,
 }
 
 impl GenerateRequest {
@@ -78,7 +115,8 @@ impl GenerateRequest {
             deadline: None,
             mode: None,
             want_logits: false,
-            cancel: Arc::new(AtomicBool::new(false)),
+            resume: None,
+            flags: Arc::new(ReqFlags::default()),
         }
     }
 
@@ -106,25 +144,57 @@ impl GenerateRequest {
         self
     }
 
-    /// A handle that can cancel this request from any thread. Clones of
-    /// the request share the flag.
+    /// Builder: retain the final memory state (conversation suspend) —
+    /// the terminal [`Response`] then carries an engine-assigned
+    /// `resume_token` plus the snapshot, and the engine keeps a copy
+    /// for [`ResumeFrom::Token`]. Sets the same shared flag as
+    /// [`RequestHandle::request_save`], so the intent lives in exactly
+    /// one place.
+    pub fn with_save(self) -> Self {
+        self.flags.save.store(true, Ordering::SeqCst);
+        self
+    }
+
+    pub fn save_requested(&self) -> bool {
+        self.flags.save.load(Ordering::SeqCst)
+    }
+
+    /// Builder: resume a conversation the engine saved earlier
+    /// (`prompt` then carries only the new tokens).
+    pub fn resume_token(mut self, token: u64) -> Self {
+        self.resume = Some(ResumeFrom::Token(token));
+        self
+    }
+
+    /// Builder: resume from an explicit snapshot (e.g. loaded from
+    /// disk via [`MemSnapshot::load`]).
+    pub fn resume_snapshot(mut self, snapshot: MemSnapshot) -> Self {
+        self.resume = Some(ResumeFrom::Snapshot(Box::new(snapshot)));
+        self
+    }
+
+    /// A handle that can cancel this request (or flag it for save)
+    /// from any thread. Clones of the request share the flags.
     pub fn handle(&self) -> RequestHandle {
-        RequestHandle { id: self.id, cancel: Arc::clone(&self.cancel) }
+        RequestHandle { id: self.id, flags: Arc::clone(&self.flags) }
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.cancel.load(Ordering::SeqCst)
+        self.flags.cancel.load(Ordering::SeqCst)
     }
 }
 
-/// Per-request cancellation handle ([`GenerateRequest::handle`]). The
-/// engine polls the flag between wavefront iterations; an in-flight
-/// request is evicted from its lane (memory freed, other requests
-/// untouched) and terminates its event stream with [`Event::Error`].
+/// Per-request control handle ([`GenerateRequest::handle`]). The
+/// engine polls the cancel flag between wavefront iterations; an
+/// in-flight request is evicted from its lane (memory freed, other
+/// requests untouched) and terminates its event stream with
+/// [`Event::Error`]. The save flag marks the request for conversation
+/// suspend at completion (`{"cmd": "save", "id": N}` sets it from any
+/// connection, like cancel).
 #[derive(Clone, Debug)]
 pub struct RequestHandle {
     id: u64,
-    cancel: Arc<AtomicBool>,
+    flags: Arc<ReqFlags>,
 }
 
 impl RequestHandle {
@@ -133,11 +203,22 @@ impl RequestHandle {
     }
 
     pub fn cancel(&self) {
-        self.cancel.store(true, Ordering::SeqCst);
+        self.flags.cancel.store(true, Ordering::SeqCst);
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.cancel.load(Ordering::SeqCst)
+        self.flags.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Ask for the request's final memory state to be retained at
+    /// completion (no-op if the engine did not enable capture for this
+    /// request — see the serving docs).
+    pub fn request_save(&self) {
+        self.flags.save.store(true, Ordering::SeqCst);
+    }
+
+    pub fn save_requested(&self) -> bool {
+        self.flags.save.load(Ordering::SeqCst)
     }
 }
 
@@ -174,8 +255,21 @@ pub struct Response {
     /// (`max_new_tokens` of them on success).
     pub generated: Vec<u32>,
     /// Full per-segment logits if requested (prompt + fed decode
-    /// segments).
+    /// segments). With a prefix-cache hit or resume, only the segments
+    /// actually computed — the first entry is absolute segment
+    /// `reused_segments`.
     pub logits: Option<Vec<Tensor>>,
+    /// Prefill segments skipped via a prefix-cache hit or a resumed
+    /// conversation (their memory came from a [`MemSnapshot`]).
+    pub reused_segments: usize,
+    /// Set when the conversation was saved at completion: pass as the
+    /// wire field `"resume": token` (or [`GenerateRequest::resume_token`])
+    /// to continue it with only new tokens. Engine-assigned and unique
+    /// — never aliases another conversation.
+    pub resume_token: Option<u64>,
+    /// The final memory state, when saving was requested — what
+    /// `--save-file` writes to disk ([`MemSnapshot::save`]).
+    pub final_state: Option<MemSnapshot>,
     pub mode_used: ExecMode,
     pub stats: RunStats,
     pub latency: Duration,
@@ -222,6 +316,18 @@ pub struct EngineStats {
     /// full the wavefront's *slots* are, this says how busy the
     /// *threads* executing them are.
     pub worker_busy: Ratio,
+    /// Prefix-cache lookups that found a reusable cached prefix.
+    pub cache_hits: Counter,
+    /// Prefill segments skipped thanks to prefix-cache hits — work the
+    /// engine never had to execute.
+    pub cache_hit_segments: Counter,
+    /// Bytes currently resident in the prefix store (gauge, refreshed
+    /// on every store operation).
+    pub cache_bytes: Gauge,
+    /// Snapshots dropped by retention limits: prefix-store entries
+    /// evicted by the byte budget plus saved conversations beyond the
+    /// engine's cap.
+    pub cache_evictions: Counter,
 }
 
 impl EngineStats {
@@ -269,6 +375,10 @@ impl EngineStats {
             ("padded_cells", Value::Num(slots.saturating_sub(active) as f64)),
             ("mean_group", Value::Num(mean_group)),
             ("occupancy", Value::Num(occupancy)),
+            ("cache_hits", Value::Num(self.cache_hits.get() as f64)),
+            ("cache_hit_segments", Value::Num(self.cache_hit_segments.get() as f64)),
+            ("cache_bytes", Value::Num(self.cache_bytes.get() as f64)),
+            ("evictions", Value::Num(self.cache_evictions.get() as f64)),
             ("workers", Value::Num(self.workers.get() as f64)),
             ("pool_cells", Value::Num(self.pool_cells.get() as f64)),
             ("pool_busy_ms", Value::Num(self.worker_busy.parts().0 as f64 / 1e3)),
@@ -378,10 +488,33 @@ struct ServeTicket<T> {
     /// Raw (unpadded) prompt length, for the `tokens` counter.
     prompt_tokens: usize,
     want_logits: bool,
+    /// Full history segment blocks, the prefix-store insert key (None
+    /// when token-resumed — the history tokens are not known).
+    blocks: Option<Vec<Vec<u32>>>,
+    /// Absolute prompt segment count (reused + computed).
+    total_prompt: usize,
+    /// Prefill segments skipped on admission (prefix hit or resume).
+    reused: usize,
     pulled: Instant,
     deadline: Option<Instant>,
     handle: RequestHandle,
     driver: GenDriver,
+}
+
+/// How a request's prefill will run: which segments still need
+/// computing, and where their memory starts.
+struct PrefillPlan {
+    /// Segments to compute (the tail after any reused prefix).
+    segments: Vec<Vec<u32>>,
+    /// Seed state for the first computed segment (prefix hit / resume).
+    snapshot: Option<MemSnapshot>,
+    /// Absolute prompt segment count (reused + computed).
+    total_prompt: usize,
+    /// Segments whose computation was skipped.
+    reused: usize,
+    /// Full history block key for prefix-store inserts; None when the
+    /// history tokens are unknown (token resume).
+    blocks: Option<Vec<Vec<u32>>>,
 }
 
 /// Engine over any [`StepBackend`].
@@ -396,7 +529,23 @@ pub struct InferenceEngine<B: StepBackend> {
     /// current single-lane HLO artifacts execute extra lanes serially —
     /// correct but not faster — so leave this at 1 there.
     lanes: usize,
+    /// Prefix-reuse cache (`--cache-bytes`); None = disabled, zero
+    /// capture overhead.
+    cache: Option<PrefixStore>,
+    /// Saved conversations, keyed by engine-assigned resume token
+    /// ([`ResumeFrom::Token`]). Bounded: least-recently-resumed
+    /// conversations are dropped beyond [`with_max_saved`](Self::with_max_saved).
+    saved: HashMap<u64, SavedConversation>,
+    next_resume_token: u64,
+    saved_clock: u64,
+    max_saved: usize,
     pub stats: Arc<EngineStats>,
+}
+
+/// One retained conversation: its final memory state plus an LRU clock.
+struct SavedConversation {
+    snap: MemSnapshot,
+    last_used: u64,
 }
 
 impl<B: StepBackend> InferenceEngine<B> {
@@ -407,6 +556,11 @@ impl<B: StepBackend> InferenceEngine<B> {
             policy: FallbackPolicy::AlwaysDiagonal,
             max_request_tokens: 1 << 20,
             lanes: 1,
+            cache: None,
+            saved: HashMap::new(),
+            next_resume_token: 1,
+            saved_clock: 0,
+            max_saved: 256,
             stats: Arc::new(EngineStats::default()),
         }
     }
@@ -424,6 +578,37 @@ impl<B: StepBackend> InferenceEngine<B> {
     pub fn with_lanes(mut self, lanes: usize) -> Self {
         self.lanes = lanes.max(1);
         self
+    }
+
+    /// Enable the memory-state prefix cache with an LRU byte budget
+    /// (`--cache-bytes N`; 0 disables). With the cache on, every
+    /// diagonal request's prompt-segment boundary states are captured
+    /// and inserted into the [`PrefixStore`], and admissions look up
+    /// the longest cached prefix to skip its prefill entirely.
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache = (bytes > 0).then(|| PrefixStore::new(bytes));
+        self
+    }
+
+    /// Whether the prefix cache is enabled — which is also the
+    /// precondition for MID-FLIGHT saves on the serving path (capture
+    /// is only armed for every packed request when the cache is on; a
+    /// request submitted with `save: true` always captures).
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Cap on retained conversations (default 256): beyond it the
+    /// least-recently-resumed snapshot is dropped — the saved store is
+    /// bounded like the prefix store, never an unbounded memory sink.
+    pub fn with_max_saved(mut self, max: usize) -> Self {
+        self.max_saved = max.max(1);
+        self
+    }
+
+    /// Saved conversations currently retained ([`ResumeFrom::Token`]).
+    pub fn saved_conversations(&self) -> usize {
+        self.saved.len()
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -512,6 +697,132 @@ impl<B: StepBackend> InferenceEngine<B> {
         Ok(())
     }
 
+    /// Resolve a request's prefill: segment the prompt, resolve any
+    /// resume source, and — when the cache is enabled — look up the
+    /// longest cached prefix (capped one short of the full prompt, so
+    /// at least one segment always runs and produces exit logits).
+    fn plan_prefill(&mut self, req: &GenerateRequest) -> Result<PrefillPlan> {
+        let cfg = self.backend.config();
+        let blocks = segment_tokens(cfg, &req.prompt)?;
+        if let Some(resume) = &req.resume {
+            let snap = match resume {
+                ResumeFrom::Snapshot(s) => (**s).clone(),
+                ResumeFrom::Token(t) => {
+                    self.saved_clock += 1;
+                    let clock = self.saved_clock;
+                    let saved = self.saved.get_mut(t).ok_or_else(|| {
+                        Error::Request(format!(
+                            "unknown resume token {t} (conversation not saved, or evicted)"
+                        ))
+                    })?;
+                    saved.last_used = clock;
+                    saved.snap.clone()
+                }
+            };
+            snap.validate_for(cfg)?;
+            let reused = snap.segments;
+            return Ok(PrefillPlan {
+                total_prompt: reused + blocks.len(),
+                reused,
+                segments: blocks,
+                snapshot: Some(snap),
+                blocks: None,
+            });
+        }
+        let mut reused = 0;
+        let mut snapshot = None;
+        if let Some(store) = &mut self.cache {
+            if blocks.len() > 1 {
+                if let Some((depth, snap)) = store.lookup(&blocks[..blocks.len() - 1]) {
+                    reused = depth;
+                    snapshot = Some(snap);
+                    self.stats.cache_hits.inc();
+                    self.stats.cache_hit_segments.add(depth as u64);
+                }
+            }
+            self.stats.cache_bytes.set(store.bytes() as u64);
+        }
+        Ok(PrefillPlan {
+            segments: blocks[reused..].to_vec(),
+            snapshot,
+            total_prompt: blocks.len(),
+            reused,
+            blocks: Some(blocks),
+        })
+    }
+
+    /// Insert an after-segment snapshot (absolute index `index`) into
+    /// the prefix store, keyed by the history blocks up to and
+    /// including that segment.
+    fn insert_prefix(&mut self, blocks: &Option<Vec<Vec<u32>>>, index: usize, snap: MemSnapshot) {
+        let (Some(store), Some(blocks)) = (&mut self.cache, blocks) else { return };
+        if index + 1 > blocks.len() {
+            return; // not a prompt segment of a known history
+        }
+        debug_assert_eq!(snap.segments, index + 1);
+        let evicted = store.insert(&blocks[..index + 1], snap);
+        self.stats.cache_evictions.add(evicted);
+        self.stats.cache_bytes.set(store.bytes() as u64);
+    }
+
+    /// Fold a completed request's final memory state into the saved
+    /// conversations (save flag) and the prefix store (the decoded
+    /// history becomes a reusable prefix for follow-up turns). Returns
+    /// what the terminal [`Response`] should carry.
+    fn retain_final(
+        &mut self,
+        handle: &RequestHandle,
+        blocks: &Option<Vec<Vec<u32>>>,
+        total_prompt: usize,
+        driver: &GenDriver,
+        final_state: Option<MemSnapshot>,
+    ) -> (Option<u64>, Option<MemSnapshot>) {
+        let Some(snap) = final_state else { return (None, None) };
+        let seg = self.backend.config().seg;
+        // Segments the decode phase actually fed back: history = prompt
+        // blocks + those (always full) segments. The final emitted
+        // tokens of an exhausted budget belong to a segment that was
+        // never fed, so they are NOT part of the cached recurrence.
+        let fed_decode = driver.fed.saturating_sub(total_prompt);
+        if fed_decode > 0 && self.cache.is_some() && blocks.is_some() {
+            let mut history = blocks.clone().expect("checked above");
+            for chunk in driver.generated[..fed_decode * seg].chunks(seg) {
+                history.push(chunk.to_vec());
+            }
+            debug_assert_eq!(history.len(), snap.segments);
+            let depth = history.len() - 1;
+            self.insert_prefix(&Some(history), depth, snap.clone());
+        }
+        if handle.save_requested() {
+            // Engine-assigned tokens: unique per engine, so one
+            // client's save can never overwrite another conversation.
+            let token = self.next_resume_token;
+            self.next_resume_token += 1;
+            self.saved_clock += 1;
+            self.saved.insert(
+                token,
+                SavedConversation { snap: snap.clone(), last_used: self.saved_clock },
+            );
+            // Bounded retention: drop the least-recently-resumed
+            // conversation beyond the cap.
+            while self.saved.len() > self.max_saved {
+                let Some(&oldest) = self
+                    .saved
+                    .iter()
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| k)
+                else {
+                    break;
+                };
+                self.saved.remove(&oldest);
+                self.stats.cache_evictions.inc();
+            }
+            (Some(token), Some(snap))
+        } else {
+            (None, None)
+        }
+    }
+
     /// Fold one finished run into the aggregate utilization counters.
     /// Full-attention runs execute no wavefront slots (`slot_steps = 0`)
     /// and are skipped — recording them would dilute `mean_group` with
@@ -572,6 +883,14 @@ impl<B: StepBackend> InferenceEngine<B> {
                             .into(),
                     ));
                 }
+                if req.resume.is_some() || req.save_requested() {
+                    self.stats.rejected.inc();
+                    return Err(Error::Config(
+                        "full-attention mode has no recurrent memory state to save \
+                         or resume (use diagonal or sequential)"
+                            .into(),
+                    ));
+                }
                 self.stats.full_attn_runs.inc();
                 let t0 = Instant::now();
                 let out = self.backend.full_attn(&req.prompt)?;
@@ -591,6 +910,9 @@ impl<B: StepBackend> InferenceEngine<B> {
                     greedy_tail,
                     generated: Vec::new(),
                     logits: req.want_logits.then(|| vec![out]),
+                    reused_segments: 0,
+                    resume_token: None,
+                    final_state: None,
                     mode_used: ExecMode::FullAttention,
                     stats,
                     latency: started.elapsed(),
@@ -625,14 +947,30 @@ impl<B: StepBackend> InferenceEngine<B> {
         started: Instant,
     ) -> Result<Response> {
         let cfg = self.backend.config().clone();
-        let segments = segment_tokens(&cfg, &req.prompt)?;
-        let prompt_segments = segments.len();
+        let plan = self.plan_prefill(req)?;
+        let (total_prompt, reused, blocks) = (plan.total_prompt, plan.reused, plan.blocks);
         let mut session = WavefrontSession::new(cfg, 1);
-        session.submit_stream(0, segments, req.want_logits)?;
+        match plan.snapshot {
+            Some(snap) => {
+                session.submit_stream_resumed(0, snap, plan.segments, req.want_logits)?
+            }
+            None => session.submit_stream(0, plan.segments, req.want_logits)?,
+        }
+        let handle = req.handle();
+        // Snapshot capture: prompt-boundary states feed the prefix
+        // store, the final state feeds conversation save/resume.
+        if handle.save_requested() || self.cache.is_some() {
+            session.capture_final(0)?;
+        }
+        if self.cache.is_some() && blocks.is_some() {
+            for idx in reused..total_prompt {
+                session.capture_after(0, idx)?;
+            }
+        }
         if req.max_new_tokens == 0 {
             session.finish_stream(0)?;
         }
-        let mut driver = GenDriver::new(req, prompt_segments);
+        let mut driver = GenDriver::new(req, total_prompt);
         let deadline = req.deadline.map(|d| started + d);
         loop {
             if req.is_cancelled() {
@@ -647,6 +985,9 @@ impl<B: StepBackend> InferenceEngine<B> {
             }
             let progressed = session.step(&mut self.backend)?;
             while let Some(exit) = session.pop_exited() {
+                if let Some(snap) = exit.snapshot {
+                    self.insert_prefix(&blocks, exit.index, snap);
+                }
                 match driver.on_exit(exit.index, &exit.logits, emit) {
                     ExitAction::Wait => {}
                     ExitAction::Feed(seg) => session.append_segment(0, seg)?,
@@ -656,11 +997,21 @@ impl<B: StepBackend> InferenceEngine<B> {
             if let Some(out) = session.pop_completed() {
                 let mut stats = out.stats;
                 stats.wall = started.elapsed();
+                let (resume_token, final_state) = self.retain_final(
+                    &handle,
+                    &blocks,
+                    total_prompt,
+                    &driver,
+                    out.final_state,
+                );
                 return Ok(Response {
                     id: req.id,
                     greedy_tail: driver.last_greedy,
                     generated: driver.generated,
                     logits: req.want_logits.then_some(out.logits),
+                    reused_segments: reused,
+                    resume_token,
+                    final_state,
                     mode_used: ExecMode::Diagonal,
                     stats,
                     latency: started.elapsed(),
@@ -686,14 +1037,31 @@ impl<B: StepBackend> InferenceEngine<B> {
         let cfg = self.backend.config().clone();
         let l_total = cfg.n_layers;
         let calls0 = self.backend.step_calls();
-        let mut segments = segment_tokens(&cfg, &req.prompt)?;
-        let mut driver = GenDriver::new(req, segments.len());
+        let plan = self.plan_prefill(req)?;
+        let (total_prompt, reused, blocks) = (plan.total_prompt, plan.reused, plan.blocks);
+        let mut segments = plan.segments;
+        let mut driver = GenDriver::new(req, total_prompt);
+        let handle = req.handle();
         let deadline = req.deadline.map(|d| started + d);
 
-        // Per-layer recurrent state.
-        let mut a: Vec<Tensor> =
-            (0..l_total).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect();
-        let mut z: Vec<Tensor> = (0..l_total).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect();
+        // Per-layer recurrent state — seeded from the snapshot on a
+        // prefix hit / resume (the sequential loop is the second,
+        // independent implementation of the same seeding rule).
+        let (mut a, mut z): (Vec<Tensor>, Vec<Tensor>) = match plan.snapshot {
+            Some(snap) => (snap.a, snap.z),
+            None => (
+                (0..l_total).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect(),
+                (0..l_total).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect(),
+            ),
+        };
+        let snapshot_now = |a: &[Tensor], z: &[Tensor], consumed: usize| {
+            MemSnapshot::from_layers(
+                &cfg,
+                consumed,
+                a.iter().cloned().zip(z.iter().cloned()).collect(),
+            )
+            .ok()
+        };
 
         let mut logits_acc = Vec::new();
         let mut idx = 0;
@@ -714,7 +1082,15 @@ impl<B: StepBackend> InferenceEngine<B> {
                 z[l] = z2;
             }
             let logits = self.backend.lm_head(&x)?;
-            match driver.on_exit(idx, &logits, emit) {
+            let abs = reused + idx;
+            // Prompt-boundary snapshot into the prefix store (same
+            // policy as the wavefront path's targeted captures).
+            if self.cache.is_some() && blocks.is_some() && abs < total_prompt {
+                if let Some(snap) = snapshot_now(&a, &z, abs + 1) {
+                    self.insert_prefix(&blocks, abs, snap);
+                }
+            }
+            match driver.on_exit(abs, &logits, emit) {
                 ExitAction::Wait | ExitAction::Finish => {}
                 ExitAction::Feed(seg) => segments.push(seg),
             }
@@ -736,11 +1112,20 @@ impl<B: StepBackend> InferenceEngine<B> {
             wall: started.elapsed(),
             tokens: s_total * cfg.seg,
         };
+        let want_final = handle.save_requested()
+            || (self.cache.is_some() && blocks.is_some() && driver.fed > total_prompt);
+        let final_state =
+            if want_final { snapshot_now(&a, &z, reused + s_total) } else { None };
+        let (resume_token, final_state) =
+            self.retain_final(&handle, &blocks, total_prompt, &driver, final_state);
         Ok(Response {
             id: req.id,
             greedy_tail: driver.last_greedy,
             generated: driver.generated,
             logits: req.want_logits.then_some(logits_acc),
+            reused_segments: reused,
+            resume_token,
+            final_state,
             mode_used: ExecMode::Sequential,
             stats,
             latency: started.elapsed(),
@@ -921,9 +1306,13 @@ impl<B: StepBackend> InferenceEngine<B> {
 
             // Segment exits: stream partial results and run the decode
             // hand-off — sample the frontier's continuation and feed it
-            // back into the same live wavefront.
+            // back into the same live wavefront. Prompt-boundary
+            // snapshots riding the exits go into the prefix store.
             while let Some(exit) = session.pop_exited() {
                 let Some(t) = tickets.get_mut(&exit.id) else { continue };
+                if let Some(snap) = exit.snapshot {
+                    self.insert_prefix(&t.blocks, exit.index, snap);
+                }
                 let (driver, ticket) = (&mut t.driver, &t.ticket);
                 let action = driver.on_exit(exit.index, &exit.logits, &mut |ev| emit(ticket, ev));
                 let hand_off = match action {
@@ -950,11 +1339,21 @@ impl<B: StepBackend> InferenceEngine<B> {
                 self.stats.tokens.add(t.prompt_tokens as u64);
                 self.stats.generated_tokens.add(t.driver.generated.len() as u64);
                 self.stats.latency.observe(latency);
+                let (resume_token, final_state) = self.retain_final(
+                    &t.handle,
+                    &t.blocks,
+                    t.total_prompt,
+                    &t.driver,
+                    out.final_state,
+                );
                 let resp = Response {
                     id: t.wire_id,
                     greedy_tail: t.driver.last_greedy,
                     generated: t.driver.generated,
                     logits: t.want_logits.then_some(out.logits),
+                    reused_segments: t.reused,
+                    resume_token,
+                    final_state,
                     mode_used: ExecMode::Diagonal,
                     stats: out.stats,
                     latency,
@@ -996,18 +1395,37 @@ impl<B: StepBackend> InferenceEngine<B> {
         };
         match resolved {
             ExecMode::Diagonal => {
-                let segments = match segment_tokens(self.backend.config(), &req.prompt) {
-                    Ok(s) => s,
+                let plan = match self.plan_prefill(&req) {
+                    Ok(p) => p,
                     Err(e) => {
                         emit(&ticket, Event::Error { error: e });
                         return false;
                     }
                 };
-                let prompt_segments = segments.len();
                 let key = *next_key;
                 *next_key += 1;
-                match session.submit_stream(key, segments, req.want_logits) {
+                let handle = req.handle();
+                let submitted = match plan.snapshot {
+                    Some(snap) => {
+                        session.submit_stream_resumed(key, snap, plan.segments, req.want_logits)
+                    }
+                    None => session.submit_stream(key, plan.segments, req.want_logits),
+                };
+                match submitted {
                     Ok(()) => {
+                        // Snapshot capture (infallible right after a
+                        // successful submit): prompt-boundary states
+                        // feed the prefix store, the final state feeds
+                        // conversation save/resume — including a
+                        // mid-flight {"cmd": "save"}.
+                        if handle.save_requested() || self.cache.is_some() {
+                            let _ = session.capture_final(key);
+                        }
+                        if self.cache.is_some() && plan.blocks.is_some() {
+                            for idx in plan.reused..plan.total_prompt {
+                                let _ = session.capture_after(key, idx);
+                            }
+                        }
                         if req.max_new_tokens == 0 {
                             // Pure prefill: close the stream up front so
                             // the lane hands over the moment the last
@@ -1019,12 +1437,15 @@ impl<B: StepBackend> InferenceEngine<B> {
                         tickets.insert(
                             key,
                             ServeTicket {
-                                driver: GenDriver::new(&req, prompt_segments),
-                                handle: req.handle(),
+                                driver: GenDriver::new(&req, plan.total_prompt),
+                                handle,
                                 deadline: req.deadline.map(|d| pulled + d),
                                 wire_id: req.id,
                                 prompt_tokens: req.prompt.len(),
                                 want_logits: req.want_logits,
+                                blocks: plan.blocks,
+                                total_prompt: plan.total_prompt,
+                                reused: plan.reused,
                                 pulled,
                                 ticket,
                             },
@@ -1435,5 +1856,147 @@ mod tests {
         queue.close();
         let mut e = engine(ExecMode::Diagonal);
         e.serve_queue(&queue, |_, _| panic!("no jobs were queued")).unwrap();
+    }
+
+    fn bits(ts: &[Tensor]) -> Vec<Vec<u32>> {
+        ts.iter().map(|t| t.data().iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn prefix_cache_hit_is_bitexact_and_counted() {
+        // Two prompts sharing a 3-segment prefix: the second request
+        // reuses the cached prefix, computes strictly fewer cells, and
+        // its computed logits bit-match the cold oracle's tail.
+        let shared = toks(8 * 3);
+        let mut tail_a = shared.clone();
+        tail_a.extend(toks(8).iter().map(|t| (t + 1) % 64));
+        let mut tail_b = shared.clone();
+        tail_b.extend(toks(8 * 2).iter().map(|t| (t + 2) % 64));
+
+        let mut cold = engine(ExecMode::Diagonal);
+        let mut warm = engine(ExecMode::Diagonal).with_cache_bytes(1 << 22);
+
+        let mut ra = GenerateRequest::new(1, tail_a.clone());
+        ra.want_logits = true;
+        let cold_a = cold.process(&ra).unwrap();
+        let warm_a = warm.process(&ra).unwrap();
+        assert_eq!(warm_a.reused_segments, 0, "empty cache: no reuse");
+        assert_eq!(warm.stats.cache_hits.get(), 0);
+        assert!(warm.stats.cache_bytes.get() > 0, "prefill snapshots were inserted");
+        assert_eq!(bits(&warm_a.logits.unwrap()), bits(&cold_a.logits.unwrap()));
+
+        let mut rb = GenerateRequest::new(2, tail_b.clone());
+        rb.want_logits = true;
+        let cold_b = cold.process(&rb).unwrap();
+        let warm_b = warm.process(&rb).unwrap();
+        assert_eq!(warm_b.reused_segments, 3, "shared prefix reused");
+        assert_eq!(warm.stats.cache_hits.get(), 1);
+        assert_eq!(warm.stats.cache_hit_segments.get(), 3);
+        assert!(
+            warm_b.stats.cells < cold_b.stats.cells,
+            "hit request must execute strictly fewer prefill cells"
+        );
+        assert_eq!(warm_b.stats.segments, 2, "only the tail was computed");
+        // Computed logits == the oracle's logits for those segments.
+        let cold_logits = cold_b.logits.unwrap();
+        assert_eq!(bits(&warm_b.logits.unwrap()), bits(&cold_logits[3..]));
+        assert_eq!(warm_b.greedy_tail, cold_b.greedy_tail);
+        let js = warm.stats.to_json().to_json();
+        assert!(js.contains("\"cache_hits\":1"), "{js}");
+        assert!(js.contains("\"cache_hit_segments\":3"), "{js}");
+    }
+
+    #[test]
+    fn cache_hit_generation_matches_cold_run() {
+        // Generation after a prefix hit: the continuation must be
+        // token-identical to the cold full-prefill run.
+        let prompt = toks(8 * 4);
+        let mut cold = engine(ExecMode::Diagonal);
+        let mut warm = engine(ExecMode::Diagonal).with_cache_bytes(1 << 22);
+        let req = GenerateRequest::new(1, prompt.clone()).generate(20);
+        let want = cold.process(&req).unwrap();
+
+        warm.process(&GenerateRequest::new(2, prompt.clone())).unwrap(); // seed the store
+        let got = warm.process(&GenerateRequest::new(3, prompt).generate(20)).unwrap();
+        assert_eq!(got.reused_segments, 3, "all but the last prompt segment reused");
+        assert_eq!(got.generated, want.generated);
+        assert_eq!(got.greedy_tail, want.greedy_tail);
+    }
+
+    #[test]
+    fn save_and_resume_token_roundtrip_is_exact() {
+        // Turn 1 saves; turn 2 resumes with only the new tokens. The
+        // result must bit-match one straight-through run over the
+        // concatenated history — with zero history prefill in turn 2.
+        let turn1 = toks(8 * 2);
+        let extra: Vec<u32> = toks(8).iter().map(|t| (t + 3) % 64).collect();
+
+        let mut e = engine(ExecMode::Diagonal);
+        // generate(16): the first decode segment (8 tokens) is fed back
+        // into the recurrence, the second is emitted without being fed
+        // — so the saved state covers 2 prompt + 1 decode segments.
+        let r1 = GenerateRequest::new(7, turn1.clone()).generate(16).with_save();
+        let resp1 = e.process(&r1).unwrap();
+        let token = resp1.resume_token.expect("engine assigned a resume token");
+        assert!(resp1.final_state.is_some());
+        assert_eq!(e.saved_conversations(), 1);
+
+        let mut turn2 = extra.clone();
+        let mut r2 = GenerateRequest::new(8, turn2.clone()).generate(8).resume_token(token);
+        r2.want_logits = true;
+        let resp2 = e.process(&r2).unwrap();
+        assert_eq!(resp2.reused_segments, 3, "2 prompt + 1 fed decode segment of history");
+
+        // Oracle: full recompute over turn-1 history + turn-2 tokens.
+        let mut full = turn1;
+        full.extend_from_slice(&resp1.generated[..8]); // the fed decode segment
+        full.append(&mut turn2);
+        let mut oracle = engine(ExecMode::Sequential);
+        let mut ro = GenerateRequest::new(9, full).generate(8);
+        ro.want_logits = true;
+        let want = oracle.process(&ro).unwrap();
+        assert_eq!(resp2.generated, want.generated);
+        let want_logits = want.logits.unwrap();
+        let got_logits = resp2.logits.unwrap();
+        assert_eq!(bits(&got_logits), bits(&want_logits[3..]));
+    }
+
+    #[test]
+    fn resume_guards() {
+        let mut e = engine(ExecMode::Diagonal);
+        let err = e
+            .process(&GenerateRequest::new(1, toks(8)).resume_token(42))
+            .unwrap_err();
+        assert!(err.to_string().contains("resume token"), "{err}");
+
+        // Full attention has no recurrent state to seed.
+        let snap_src = e.process(&GenerateRequest::new(2, toks(8)).with_save()).unwrap();
+        let snap = snap_src.final_state.unwrap();
+        let mut r = GenerateRequest::new(3, toks(8)).resume_snapshot(snap);
+        r.mode = Some(ExecMode::FullAttention);
+        assert!(e.process(&r).is_err());
+    }
+
+    #[test]
+    fn saved_conversations_are_bounded_and_tokens_unique() {
+        // Two saves on a max_saved(1) engine: distinct tokens, the
+        // older conversation is dropped (counted as an eviction) and
+        // resuming it fails loudly while the newer one still works.
+        let mut e = engine(ExecMode::Diagonal).with_max_saved(1);
+        let t1 = e
+            .process(&GenerateRequest::new(1, toks(8)).with_save())
+            .unwrap()
+            .resume_token
+            .unwrap();
+        let t2 = e
+            .process(&GenerateRequest::new(2, toks(16)).with_save())
+            .unwrap()
+            .resume_token
+            .unwrap();
+        assert_ne!(t1, t2, "tokens never alias");
+        assert_eq!(e.saved_conversations(), 1);
+        assert_eq!(e.stats.cache_evictions.get(), 1);
+        assert!(e.process(&GenerateRequest::new(3, toks(8)).resume_token(t1)).is_err());
+        assert!(e.process(&GenerateRequest::new(4, toks(8)).resume_token(t2)).is_ok());
     }
 }

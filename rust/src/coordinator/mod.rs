@@ -9,7 +9,12 @@
 //!   continuous-batching drain loop that packs concurrent diagonal-mode
 //!   requests — prefill AND in-wavefront decode — into one persistent
 //!   [`crate::scheduler::WavefrontSession`] and completes them out of
-//!   submission order;
+//!   submission order. With [`InferenceEngine::with_cache_bytes`] the
+//!   engine also runs the memory-state cache ([`crate::cache`]):
+//!   admissions reuse the longest cached prompt prefix (skipping its
+//!   prefill bit-exactly) and completed conversations can be saved and
+//!   resumed ([`GenerateRequest::resume`], `"save"`) without ever
+//!   re-prefilling history;
 //! * [`sampling`] — per-request token sampling (greedy by default,
 //!   seeded temperature/top-k otherwise);
 //! * [`fallback`] — the Table 9 runtime policy ("in cases when diagonal
@@ -26,7 +31,7 @@ pub mod queue;
 pub mod sampling;
 
 pub use engine::{
-    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, Response,
+    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, Response, ResumeFrom,
 };
 pub use fallback::FallbackPolicy;
 pub use queue::RequestQueue;

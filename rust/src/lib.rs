@@ -91,11 +91,27 @@
 //! per event (`segment`, `token`, then terminal `done`/`error`);
 //! besides requests the protocol has `{"cmd": "ping"}`,
 //! `{"cmd": "cancel", "id": N}` (works from any connection),
-//! `{"cmd": "shutdown"}` and `{"cmd": "stats"}`, which returns the live
+//! `{"cmd": "save", "id": N}` (conversation suspend), `{"cmd":
+//! "shutdown"}` and `{"cmd": "stats"}`, which returns the live
 //! [`coordinator::EngineStats`] snapshot — request/launch/cancel
 //! counters, `mean_group`, `occupancy`, `padded_cells`,
-//! `generated_tokens` and `latency_ms_{mean,p50,p90,p99}` (see
-//! [`server`] for the exact frame shapes).
+//! `generated_tokens`, the cache counters (`cache_hits`,
+//! `cache_hit_segments`, `cache_bytes`, `evictions`) and
+//! `latency_ms_{mean,p50,p90,p99}` (see [`server`] for the exact frame
+//! shapes).
+//!
+//! ## Memory-state cache
+//!
+//! `--cache-bytes N` enables the [`cache`] subsystem: because ARMT's
+//! per-layer memory is constant-size, a request's entire inference
+//! state after segment `k` is a tiny [`cache::MemSnapshot`]. The
+//! engine checkpoints every prompt-segment boundary into a
+//! [`cache::PrefixStore`] (a trie over segment token blocks, LRU under
+//! the byte budget), so prompts sharing a cached prefix skip its
+//! prefill entirely — bit-exactly — and conversations can be saved
+//! (`"save": true`, resume tokens) or exported to disk and resumed
+//! without ever re-prefilling history. See ARCHITECTURE.md
+//! "Memory-state cache" and `examples/chat_resume.rs`.
 //!
 //! ## Benchmarks
 //!
@@ -107,6 +123,7 @@
 //! `BENCHMARKS.md` and `ARCHITECTURE.md` at the repository root.
 
 pub mod babilong;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod error;

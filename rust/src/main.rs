@@ -3,10 +3,13 @@
 //! ```text
 //! diagonal-batching serve    [--model tiny] [--mode diagonal] [--addr HOST:PORT]
 //!                            [--lanes N] [--threads N] [--synthetic SEED]
+//!                            [--cache-bytes N]      # memory-state prefix cache
 //! diagonal-batching generate [--tokens N] [--max-new-tokens M] [--temperature T]
 //!                            [--top-k K] [--seed S] [--connect HOST:PORT]
 //!                            [--cancel-after K]     # stream tokens to stdout
-//! diagonal-batching ctl      --connect HOST:PORT --cmd ping|stats|shutdown|cancel
+//!                            [--save true | --resume TOKEN]       # with --connect
+//!                            [--save-file P | --resume-file P]    # local engine
+//! diagonal-batching ctl      --connect HOST:PORT --cmd ping|stats|shutdown|cancel|save
 //!                            [--id N]               # control a running server
 //! diagonal-batching run      [--model tiny] [--mode diagonal|seq|full|auto]
 //!                            [--tokens N] [--backend hlo|native] [--compare true]
@@ -24,6 +27,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use diagonal_batching::babilong::{self, Task};
+use diagonal_batching::cache::MemSnapshot;
 use diagonal_batching::config::{BackendKind, ExecMode, Manifest, ModelConfig, RuntimeConfig};
 use diagonal_batching::coordinator::{
     Event, GenerateRequest, InferenceEngine, SamplingParams,
@@ -95,6 +99,9 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(t) = flags.get("threads") {
         cfg.threads = t.parse::<usize>()?;
     }
+    if let Some(b) = flags.get("cache-bytes") {
+        cfg.cache_bytes = b.parse::<usize>()?;
+    }
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg, &flags),
@@ -147,6 +154,11 @@ SUBCOMMANDS:
             --synthetic SEED                 serve a built-in untrained synthetic
                                              model (native backend, no artifacts
                                              needed — demos and CI smoke tests)
+            --cache-bytes N                  enable the memory-state prefix cache
+                                             with an N-byte LRU budget: shared
+                                             prompt prefixes skip their prefill
+                                             (bit-exactly) and conversations can
+                                             be saved/resumed; 0 = off (default)
   generate  --tokens N                       synthesize an N-token prompt and
             --max-new-tokens M               stream M generated tokens to stdout
             --temperature T --top-k K        sampling (default greedy)
@@ -156,9 +168,20 @@ SUBCOMMANDS:
             --cancel-after K                 (with --connect) cancel the request
                                              after K streamed events — exercises
                                              the mid-stream cancel path
+            --save true                      (with --connect) save the finished
+                                             conversation server-side; the done
+                                             frame echoes a resume token
+            --resume TOKEN                   (with --connect) continue a saved
+                                             conversation — the prompt carries
+                                             only NEW tokens, zero re-prefill
+            --save-file PATH                 (local) write the final memory
+                                             state to disk after generating
+            --resume-file PATH               (local) resume from a state saved
+                                             with --save-file
             --synthetic SEED                 local engine without artifacts
   ctl       --connect HOST:PORT              one control command against a
-            --cmd ping|stats|shutdown|cancel running server (cancel takes --id N)
+            --cmd ping|stats|shutdown|      running server (cancel and save
+                  cancel|save                take --id N)
   run       --tokens N --compare true        one forward pass (+drift check)
   bench     --suite GLOB --json PATH         the pallas-bench harness: run the
             --compare BASELINE               registered suites matching GLOB
@@ -223,7 +246,8 @@ fn cmd_serve(
     let backend = serving_backend(cfg, flags)?;
     let mut engine = InferenceEngine::new(backend, cfg.mode)
         .with_max_tokens(cfg.max_request_tokens)
-        .with_lanes(cfg.lanes);
+        .with_lanes(cfg.lanes)
+        .with_cache_bytes(cfg.cache_bytes);
     if cfg.mode == ExecMode::Auto {
         let cal = engine.calibrate(3)?;
         println!(
@@ -238,8 +262,13 @@ fn cmd_serve(
         (false, BackendKind::Hlo) => 1,
     };
     let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
+    let cache = if cfg.cache_bytes == 0 {
+        "off".to_string()
+    } else {
+        format!("{} bytes", cfg.cache_bytes)
+    };
     println!(
-        "serving on {} (mode {}, {} wavefront lane{}, {} worker thread{}) — \
+        "serving on {} (mode {}, {} wavefront lane{}, {} worker thread{}, prefix cache {cache}) — \
          {{\"cmd\": \"shutdown\"}} or Ctrl-C to stop",
         server.addr,
         cfg.mode,
@@ -278,21 +307,44 @@ fn cmd_generate(
     let backend = serving_backend(cfg, flags)?;
     let vocab = backend.config().vocab as u32;
     let prompt: Vec<u32> = (0..n_tokens as u32).map(|i| (i * 31 + 7) % vocab).collect();
-    let mut engine = InferenceEngine::new(backend, cfg.mode);
-    let req = GenerateRequest::new(1, prompt).generate(max_new).with_sampling(sampling);
+    let mut engine =
+        InferenceEngine::new(backend, cfg.mode).with_cache_bytes(cfg.cache_bytes);
+    let mut req = GenerateRequest::new(1, prompt).generate(max_new).with_sampling(sampling);
+    // Conversation suspend/resume to disk: --resume-file seeds the
+    // recurrence from a saved snapshot (the prompt is then only the NEW
+    // tokens), --save-file writes the final state back out.
+    if let Some(path) = flags.get("resume-file") {
+        let snap = MemSnapshot::load(path)?;
+        eprintln!("resuming from {path}: {} history segments stay frozen", snap.segments);
+        req = req.resume_snapshot(snap);
+    }
+    let save_file = flags.get("save-file").cloned();
+    if save_file.is_some() {
+        req = req.with_save();
+    }
     let mut produced = Vec::new();
+    let mut final_state = None;
     engine.generate(&req, |ev| match ev {
         Event::SegmentDone { index, .. } => eprintln!("segment {index} done"),
         Event::Token { token, .. } => produced.push(token),
-        Event::Done { stats } => eprintln!(
-            "done: {} segments, {} launches, mean group {:.2}, {:?}",
-            stats.stats.segments,
-            stats.stats.launches,
-            stats.stats.mean_group(),
-            stats.latency
-        ),
+        Event::Done { stats } => {
+            eprintln!(
+                "done: {} segments ({} reused), {} launches, mean group {:.2}, {:?}",
+                stats.stats.segments,
+                stats.reused_segments,
+                stats.stats.launches,
+                stats.stats.mean_group(),
+                stats.latency
+            );
+            final_state = stats.final_state.clone();
+        }
         Event::Error { error } => eprintln!("error: {error}"),
     })?;
+    if let Some(path) = save_file {
+        let snap = final_state.ok_or("no final state was captured")?;
+        snap.save(&path)?;
+        eprintln!("saved conversation ({} segments) to {path}", snap.segments);
+    }
     println!(
         "{}",
         produced.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
@@ -323,6 +375,16 @@ fn generate_remote(
         fields.push(("temperature", Value::Num(sampling.temperature as f64)));
         fields.push(("top_k", Value::Num(sampling.top_k as f64)));
         fields.push(("seed", Value::Num(sampling.seed as f64)));
+    }
+    // Conversation suspend/resume against a running server: --save true
+    // retains the final memory state under this request's wire id (the
+    // done frame echoes it as resume_token), --resume TOKEN continues a
+    // saved conversation with only the new tokens.
+    if flags.get("save").map(|s| s.parse()).transpose()?.unwrap_or(false) {
+        fields.push(("save", Value::Bool(true)));
+    }
+    if let Some(token) = flags.get("resume") {
+        fields.push(("resume", Value::Num(token.parse::<u64>()? as f64)));
     }
 
     let mut client = Client::connect(addr)?;
@@ -356,10 +418,17 @@ fn generate_remote(
     match result {
         Ok(done) => {
             eprintln!(
-                "done: {} generated, latency {} ms",
+                "done: {} generated, {} prefill segments reused, latency {} ms",
                 done.req("generated")?.as_u32_vec()?.len(),
+                done.req("reused_segments")?.as_usize()?,
                 done.req("latency_ms")?.as_f64()?
             );
+            if let Some(token) = done.get("resume_token") {
+                eprintln!(
+                    "conversation saved — resume with: generate --connect ... --resume {}",
+                    token.as_u64()?
+                );
+            }
             if cancel_after.is_some() {
                 return Err("expected the stream to be cancelled, but it completed".into());
             }
@@ -378,7 +447,7 @@ fn generate_remote(
 /// One control command against a running server.
 fn cmd_ctl(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let addr = flags.get("connect").ok_or("ctl needs --connect HOST:PORT")?;
-    let cmd = flags.get("cmd").ok_or("ctl needs --cmd ping|stats|shutdown|cancel")?;
+    let cmd = flags.get("cmd").ok_or("ctl needs --cmd ping|stats|shutdown|cancel|save")?;
     let mut client = Client::connect(addr)?;
     let mut fields = vec![("cmd", Value::Str(cmd.clone()))];
     if let Some(id) = flags.get("id") {

@@ -66,10 +66,35 @@
 //! closes an open stream; [`cancel`](WavefrontSession::cancel) evicts a
 //! request anywhere in its lifecycle, freeing its lane and zeroing its
 //! memory slots.
+//!
+//! **Snapshots and resume (memory-state cache).** Because the per-lane
+//! recurrent state is constant-size, a request's inference can be
+//! frozen after any segment `k` as a [`MemSnapshot`] and continued
+//! later — bit-exactly. Two primitives carry the whole
+//! [`crate::cache`] subsystem:
+//!
+//! * [`submit_stream_resumed`](WavefrontSession::submit_stream_resumed)
+//!   admits a request whose first `snapshot.segments` segments were
+//!   already computed elsewhere: instead of zeroing each layer's
+//!   `(A, z)` as its first segment arrives (the request-boundary
+//!   rule), the lane is seeded from the snapshot layer by layer, and
+//!   segment indices continue from the snapshot's recurrence counter —
+//!   so the resumed cells are indistinguishable, state-wise, from the
+//!   cells a full run would have executed;
+//! * [`capture_after`](WavefrontSession::capture_after) /
+//!   [`capture_final`](WavefrontSession::capture_final) record a
+//!   request's post-segment state as it streams: a targeted segment's
+//!   per-layer states are collected while it ascends the wavefront and
+//!   the completed snapshot rides its [`SegmentExit`]; the final
+//!   memory state (after the last segment, whatever index that turns
+//!   out to be) lands in [`SessionOutput::final_state`]. Capture never
+//!   perturbs execution — it only clones state the step already
+//!   produced.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
+use crate::cache::MemSnapshot;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::scheduler::executor::{segment_tokens, RunStats, StepBackend};
@@ -82,13 +107,54 @@ struct CellTag {
     seg: usize,
 }
 
+/// Snapshot-capture bookkeeping for one request (only allocated when
+/// the caller asked for snapshots).
+struct Capture {
+    /// Absolute segment indices to snapshot after. A set: the capture
+    /// loop probes it once per tagged cell per step, and with the
+    /// prefix cache enabled every prompt boundary is a target — a Vec
+    /// scan would be quadratic in prompt length.
+    targets: HashSet<usize>,
+    /// Per-target per-layer post-cell states, filled as the target
+    /// segment ascends the wavefront; complete exactly when the target
+    /// exits layer `L - 1`.
+    building: HashMap<usize, Vec<Option<(Tensor, Tensor)>>>,
+    /// Keep the latest post-cell state per layer; at completion this is
+    /// the request's final memory (segments traverse a layer in order,
+    /// so the last write per layer is the last segment's).
+    capture_final: bool,
+    last: Vec<Option<(Tensor, Tensor)>>,
+}
+
+impl Capture {
+    fn new(n_layers: usize) -> Self {
+        Self {
+            targets: HashSet::new(),
+            building: HashMap::new(),
+            capture_final: false,
+            last: vec![None; n_layers],
+        }
+    }
+}
+
 /// Bookkeeping for a request between `submit` and completion.
 struct Inflight {
     segments: Vec<Vec<u32>>,
-    /// Next segment index to inject at layer 0.
+    /// Next segment index to inject at layer 0 (relative to
+    /// `segments`; absolute index = `seg_offset + next_seg`).
     next_seg: usize,
-    /// Segments that have exited the last layer so far.
+    /// Segments that have exited the last layer so far (count of
+    /// *computed* segments, excluding any resumed prefix).
     exited: usize,
+    /// Absolute index of `segments[0]`: 0 for fresh requests, the
+    /// snapshot's recurrence counter for resumed ones.
+    seg_offset: usize,
+    /// Memory state seeding the lane instead of the zero reset, applied
+    /// layer-by-layer as the first (resumed) segment arrives.
+    resume: Option<MemSnapshot>,
+    /// Snapshot-capture state ([`WavefrontSession::capture_after`] /
+    /// [`WavefrontSession::capture_final`]).
+    capture: Option<Capture>,
     /// Open streams (`submit_stream`) may still grow via
     /// `append_segment`; their lane stays reserved while they wait.
     open: bool,
@@ -108,16 +174,36 @@ struct Inflight {
     slot0: u64,
 }
 
+impl Inflight {
+    /// Pop the completed targeted snapshot for `seg` (absolute index),
+    /// if one was requested and every layer's state landed. Called at
+    /// the segment's exit — layer `L - 1` is the last to run, so the
+    /// snapshot completes in the exit's own iteration.
+    fn take_ready_snapshot(&mut self, cfg: &ModelConfig, seg: usize) -> Option<MemSnapshot> {
+        let cap = self.capture.as_mut()?;
+        if !cap.targets.remove(&seg) {
+            return None;
+        }
+        let layers = cap.building.remove(&seg)?;
+        let layers: Option<Vec<(Tensor, Tensor)>> = layers.into_iter().collect();
+        MemSnapshot::from_layers(cfg, seg + 1, layers?).ok()
+    }
+}
+
 /// A segment that just exited the last layer — the streaming
 /// observation the decode loop feeds on. Only emitted for requests
 /// admitted via [`WavefrontSession::submit_stream`].
 #[derive(Clone, Debug)]
 pub struct SegmentExit {
     pub id: u64,
-    /// Segment index within the request, in exit order.
+    /// Absolute segment index within the request (resumed requests
+    /// continue counting from their snapshot), in exit order.
     pub index: usize,
     /// `[seg, vocab]` logits of the exited segment.
     pub logits: Tensor,
+    /// The post-segment memory state, when this segment was requested
+    /// via [`WavefrontSession::capture_after`].
+    pub snapshot: Option<MemSnapshot>,
 }
 
 /// A completed request: per-segment logits plus its slice of the
@@ -127,6 +213,10 @@ pub struct SessionOutput {
     pub id: u64,
     /// One `[seg, vocab]` logits tensor per segment, in order.
     pub logits: Vec<Tensor>,
+    /// The request's final memory state, when requested via
+    /// [`WavefrontSession::capture_final`] — the suspend half of
+    /// conversation suspend/resume.
+    pub final_state: Option<MemSnapshot>,
     pub stats: RunStats,
 }
 
@@ -246,7 +336,7 @@ impl WavefrontSession {
 
     /// [`submit`](Self::submit) for pre-segmented input.
     pub fn submit_segments(&mut self, id: u64, segments: Vec<Vec<u32>>) -> Result<()> {
-        self.admit(id, segments, false, false, true)
+        self.admit(id, segments, false, false, true, 0, None)
     }
 
     /// Admit a request with an *open* token stream: after the queued
@@ -263,9 +353,31 @@ impl WavefrontSession {
         segments: Vec<Vec<u32>>,
         keep_logits: bool,
     ) -> Result<()> {
-        self.admit(id, segments, true, true, keep_logits)
+        self.admit(id, segments, true, true, keep_logits, 0, None)
     }
 
+    /// [`submit_stream`](Self::submit_stream) for a request whose first
+    /// `snapshot.segments` segments were already computed: the lane is
+    /// seeded from the snapshot's per-layer `(A, z)` instead of the
+    /// zero reset, `remaining` holds only the segments still to run,
+    /// and segment indices (exit events, [`capture_after`](Self::capture_after)
+    /// targets) continue from the snapshot's recurrence counter. The
+    /// computed cells are bit-identical to the tail of a full run —
+    /// the cache subsystem's exactness contract
+    /// (`rust/tests/cache_resume.rs`, P11).
+    pub fn submit_stream_resumed(
+        &mut self,
+        id: u64,
+        snapshot: MemSnapshot,
+        remaining: Vec<Vec<u32>>,
+        keep_logits: bool,
+    ) -> Result<()> {
+        snapshot.validate_for(&self.cfg)?;
+        let offset = snapshot.segments;
+        self.admit(id, remaining, true, true, keep_logits, offset, Some(snapshot))
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn admit(
         &mut self,
         id: u64,
@@ -273,6 +385,8 @@ impl WavefrontSession {
         open: bool,
         events: bool,
         keep_logits: bool,
+        seg_offset: usize,
+        resume: Option<MemSnapshot>,
     ) -> Result<()> {
         if segments.is_empty() {
             return Err(Error::Request("empty token sequence".into()));
@@ -292,6 +406,9 @@ impl WavefrontSession {
                 segments,
                 next_seg: 0,
                 exited: 0,
+                seg_offset,
+                resume,
+                capture: None,
                 open,
                 events,
                 keep_logits,
@@ -304,6 +421,51 @@ impl WavefrontSession {
         );
         self.pending.push_back(id);
         Ok(())
+    }
+
+    /// Request the post-segment memory state of absolute segment
+    /// `seg_index`: once that segment exits the last layer, its
+    /// [`SegmentExit::snapshot`] carries a complete [`MemSnapshot`]
+    /// (recurrence counter `seg_index + 1`). Only stream submissions
+    /// accept targets (the exit event is the delivery channel), and the
+    /// target must not have entered the wavefront yet — call right
+    /// after submission, or for decode segments not yet appended.
+    pub fn capture_after(&mut self, id: u64, seg_index: usize) -> Result<()> {
+        let l_total = self.cfg.n_layers;
+        match self.inflight.get_mut(&id) {
+            None => Err(Error::Request(format!("request id {id} not in flight"))),
+            Some(fl) if !fl.events => Err(Error::Request(format!(
+                "request id {id}: targeted snapshots need a stream submission \
+                 (exit events deliver them)"
+            ))),
+            Some(fl) => {
+                if seg_index < fl.seg_offset + fl.next_seg {
+                    return Err(Error::Request(format!(
+                        "request id {id}: segment {seg_index} already entered the wavefront"
+                    )));
+                }
+                fl.capture
+                    .get_or_insert_with(|| Capture::new(l_total))
+                    .targets
+                    .insert(seg_index);
+                Ok(())
+            }
+        }
+    }
+
+    /// Keep the request's *final* memory state (after its last segment,
+    /// whatever index that turns out to be — decode lengths are not
+    /// known up front): delivered in [`SessionOutput::final_state`] at
+    /// completion. Works for open and closed submissions alike.
+    pub fn capture_final(&mut self, id: u64) -> Result<()> {
+        let l_total = self.cfg.n_layers;
+        match self.inflight.get_mut(&id) {
+            None => Err(Error::Request(format!("request id {id} not in flight"))),
+            Some(fl) => {
+                fl.capture.get_or_insert_with(|| Capture::new(l_total)).capture_final = true;
+                Ok(())
+            }
+        }
     }
 
     /// Feed one more segment to an open stream (the decode hand-off:
@@ -334,14 +496,31 @@ impl WavefrontSession {
     /// segment exits (immediately, if that already happened). Idempotent
     /// on already-closed streams.
     pub fn finish_stream(&mut self, id: u64) -> Result<()> {
-        match self.inflight.get_mut(&id) {
-            None => Err(Error::Request(format!("request id {id} not in flight"))),
-            Some(fl) => {
-                fl.open = false;
-                self.try_complete(id);
-                Ok(())
+        let Some(fl) = self.inflight.get_mut(&id) else {
+            return Err(Error::Request(format!("request id {id} not in flight")));
+        };
+        let was_open = fl.open;
+        fl.open = false;
+        // Closing hand-off for the final-state capture: while the
+        // stream was open its lane was reserved, so the per-layer state
+        // never needed copying — seed `last` from the lane ONCE now.
+        // Layers the remaining in-flight segments have not reached yet
+        // hold stale (pre-final) state here, but step (4b) keeps
+        // overwriting those as the tail ascends (the stream is closed
+        // from this point on), so `last` is complete and final by the
+        // time the last segment exits.
+        if was_open && fl.capture.as_ref().is_some_and(|c| c.capture_final) {
+            if let Some(lane) = self.streams.iter().position(|s| *s == Some(id)) {
+                let l_total = self.cfg.n_layers;
+                let fl = self.inflight.get_mut(&id).expect("present above");
+                let cap = fl.capture.as_mut().expect("checked above");
+                for l in 0..l_total {
+                    cap.last[l] = Some((self.a.index01(l, lane), self.z.index01(l, lane)));
+                }
             }
         }
+        self.try_complete(id);
+        Ok(())
     }
 
     /// Evict a request anywhere in its lifecycle (pending, streaming, or
@@ -446,7 +625,10 @@ impl WavefrontSession {
                             }
                             let emb = backend.embed(&fl.segments[seg_idx])?;
                             self.x_slots.set_index01(0, lane, &emb);
-                            break Some(CellTag { req, seg: seg_idx });
+                            // Tags carry ABSOLUTE segment indices so a
+                            // resumed request's cells/exits continue the
+                            // numbering of its cached prefix.
+                            break Some(CellTag { req, seg: fl.seg_offset + seg_idx });
                         }
                         if fl.open {
                             // Awaiting append_segment (decode frontier in
@@ -479,15 +661,28 @@ impl WavefrontSession {
 
         // (3) Request boundary: a first segment reaching layer `l` finds
         // the previous request's final state in the lane — reset to the
-        // empty memory a fresh request starts from.
+        // empty memory a fresh request starts from, or, for a resumed
+        // request, to the snapshot state its cached prefix produced
+        // (the same timing either way: exactly when the first segment
+        // arrives at the layer, never earlier — a predecessor's tail
+        // may still be traversing the slots above).
         let mut mask = vec![0.0f32; l_total * b_total];
         for l in 0..l_total {
             for lane in 0..b_total {
                 if let Some(t) = self.tags[l * b_total + lane] {
                     mask[l * b_total + lane] = 1.0;
-                    if t.seg == 0 {
-                        self.a.zero_index01(l, lane);
-                        self.z.zero_index01(l, lane);
+                    let fl = self.inflight.get(&t.req).expect("tagged request in flight");
+                    if t.seg == fl.seg_offset {
+                        match &fl.resume {
+                            Some(snap) => {
+                                self.a.set_index01(l, lane, &snap.a[l]);
+                                self.z.set_index01(l, lane, &snap.z[l]);
+                            }
+                            None => {
+                                self.a.zero_index01(l, lane);
+                                self.z.zero_index01(l, lane);
+                            }
+                        }
                     }
                 }
             }
@@ -498,6 +693,41 @@ impl WavefrontSession {
         self.a = a2;
         self.z = z2;
 
+        // (4b) Snapshot capture: clone post-cell memory for
+        // capture-enabled requests. Runs before (5) so a targeted
+        // segment completing at layer L-1 delivers its snapshot on the
+        // very exit event that announces it. Pure observation — the
+        // wavefront's own state is untouched.
+        for l in 0..l_total {
+            for lane in 0..b_total {
+                let Some(t) = self.tags[l * b_total + lane] else { continue };
+                let Some(fl) = self.inflight.get_mut(&t.req) else { continue };
+                let Some(cap) = fl.capture.as_mut() else { continue };
+                let targeted = cap.targets.contains(&t.seg);
+                // The running `last` copy is only needed once the
+                // stream is CLOSED: from then on the lane can be handed
+                // to a successor while the tail traverses the upper
+                // layers, so the state must be copied as it is
+                // produced. While the stream is open the lane stays
+                // reserved — `finish_stream` seeds `last` from the lane
+                // at close time, keeping the decode hot path free of
+                // per-step state clones.
+                let keep_last = cap.capture_final && !fl.open;
+                if !targeted && !keep_last {
+                    continue;
+                }
+                let state = (self.a.index01(l, lane), self.z.index01(l, lane));
+                if targeted {
+                    let slots =
+                        cap.building.entry(t.seg).or_insert_with(|| vec![None; l_total]);
+                    slots[l] = Some(state.clone());
+                }
+                if keep_last {
+                    cap.last[l] = Some(state);
+                }
+            }
+        }
+
         // (5) Segments exit fully processed at the last layer; a
         // request completes when its final segment exits with the
         // stream closed.
@@ -507,24 +737,25 @@ impl WavefrontSession {
                 // The tensor is cloned only when BOTH the per-request
                 // accumulator and the exit-event queue need it; the
                 // common single-consumer cases move it.
-                let event_logits = {
+                let (event_logits, snapshot) = {
                     let fl = self.inflight.get_mut(&t.req).expect("exiting request in flight");
-                    debug_assert_eq!(fl.exited, t.seg, "segments exit in order");
+                    debug_assert_eq!(fl.seg_offset + fl.exited, t.seg, "segments exit in order");
                     fl.exited += 1;
+                    let snapshot = fl.take_ready_snapshot(&self.cfg, t.seg);
                     if fl.events {
                         if fl.keep_logits {
                             fl.logits.push(logits.clone());
                         }
-                        Some(logits)
+                        (Some(logits), snapshot)
                     } else {
                         if fl.keep_logits {
                             fl.logits.push(logits);
                         }
-                        None
+                        (None, snapshot)
                     }
                 };
                 if let Some(logits) = event_logits {
-                    self.exits.push_back(SegmentExit { id: t.req, index: t.seg, logits });
+                    self.exits.push_back(SegmentExit { id: t.req, index: t.seg, logits, snapshot });
                 }
                 self.try_complete(t.req);
             }
@@ -563,7 +794,18 @@ impl WavefrontSession {
         if !ready {
             return;
         }
-        let fl = self.inflight.remove(&id).expect("checked above");
+        let mut fl = self.inflight.remove(&id).expect("checked above");
+        // Assemble the final memory state (capture_final): every layer
+        // has processed the last segment by now, so the per-layer
+        // `last` writes are exactly the post-final-segment memory.
+        let total_segments = fl.seg_offset + fl.segments.len();
+        let final_state = fl.capture.take().and_then(|cap| {
+            if !cap.capture_final {
+                return None;
+            }
+            let layers: Option<Vec<(Tensor, Tensor)>> = cap.last.into_iter().collect();
+            MemSnapshot::from_layers(&self.cfg, total_segments, layers?).ok()
+        });
         // Free the lane if the request still holds one (open streams
         // keep theirs until completion; closed streams released it when
         // injection exhausted them, possibly to a successor — only a
@@ -590,7 +832,7 @@ impl WavefrontSession {
         };
         self.segments_done += s_total;
         self.tokens_done += stats.tokens;
-        self.done.push_back(SessionOutput { id, logits: fl.logits, stats });
+        self.done.push_back(SessionOutput { id, logits: fl.logits, final_state, stats });
     }
 }
 
@@ -946,6 +1188,153 @@ mod tests {
         let out = session.pop_completed().unwrap();
         assert!(out.logits.is_empty());
         assert_eq!(out.stats.segments, 2);
+    }
+
+    /// Run `prefix` segments through a throwaway 1-lane session and
+    /// return the captured post-prefix snapshot.
+    fn snapshot_after(b: &mut NativeBackend, prefix: &[Vec<u32>]) -> MemSnapshot {
+        let mut session = WavefrontSession::new(cfg(), 1);
+        session.submit_stream(99, prefix.to_vec(), false).unwrap();
+        session.capture_after(99, prefix.len() - 1).unwrap();
+        session.finish_stream(99).unwrap();
+        let mut snap = None;
+        while session.step(b).unwrap() {
+            while let Some(exit) = session.pop_exited() {
+                if let Some(s) = exit.snapshot {
+                    assert_eq!(exit.index + 1, s.segments);
+                    snap = Some(s);
+                }
+            }
+        }
+        session.drain_completed();
+        snap.expect("prefix snapshot delivered on its exit")
+    }
+
+    #[test]
+    fn resume_after_any_k_is_bitexact() {
+        // Suspend after segment k, resume with the remaining segments:
+        // the computed tail must match the straight-through sequential
+        // oracle byte for byte — for every k.
+        let toks = tokens(8 * 5, 13);
+        let reference = sequential_reference(61, &toks);
+        let segments = crate::scheduler::segment_tokens(&cfg(), &toks).unwrap();
+        let mut b = backend(61);
+        for k in 1..segments.len() {
+            let snap = snapshot_after(&mut b, &segments[..k]);
+            assert_eq!(snap.segments, k);
+
+            let mut session = WavefrontSession::new(cfg(), 1);
+            session
+                .submit_stream_resumed(1, snap, segments[k..].to_vec(), true)
+                .unwrap();
+            session.finish_stream(1).unwrap();
+            session.run_to_completion(&mut b).unwrap();
+            let out = session.pop_completed().unwrap();
+            assert_eq!(out.logits.len(), segments.len() - k, "k = {k}");
+            for (i, (got, want)) in out.logits.iter().zip(&reference[k..]).enumerate() {
+                let (gb, wb): (Vec<u32>, Vec<u32>) = (
+                    got.data().iter().map(|x| x.to_bits()).collect(),
+                    want.data().iter().map(|x| x.to_bits()).collect(),
+                );
+                assert_eq!(gb, wb, "k = {k}, resumed segment {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn capture_final_matches_targeted_last_segment() {
+        // The running final capture and a targeted snapshot of the last
+        // segment are two routes to the same state — they must agree
+        // exactly, and carry the right recurrence counter.
+        let mut b = backend(62);
+        let segments = crate::scheduler::segment_tokens(&cfg(), &tokens(8 * 3, 4)).unwrap();
+        let mut session = WavefrontSession::new(cfg(), 1);
+        session.submit_stream(1, segments.clone(), false).unwrap();
+        session.capture_after(1, 2).unwrap();
+        session.capture_final(1).unwrap();
+        session.finish_stream(1).unwrap();
+        let mut targeted = None;
+        while session.step(&mut b).unwrap() {
+            while let Some(exit) = session.pop_exited() {
+                if let Some(s) = exit.snapshot {
+                    targeted = Some(s);
+                }
+            }
+        }
+        let out = session.pop_completed().unwrap();
+        let final_state = out.final_state.expect("capture_final delivered");
+        let targeted = targeted.expect("targeted snapshot delivered");
+        assert_eq!(final_state.segments, 3);
+        assert_eq!(final_state, targeted);
+    }
+
+    #[test]
+    fn resumed_request_packs_with_others_bitexact() {
+        // A resumed request shares the wavefront with a fresh one; both
+        // stay exact, and the resumed request reports only the cells it
+        // actually computed.
+        let long = tokens(8 * 5, 3);
+        let other = tokens(8 * 4, 9);
+        let reference = sequential_reference(63, &long);
+        let segments = crate::scheduler::segment_tokens(&cfg(), &long).unwrap();
+        let mut b = backend(63);
+        let snap = snapshot_after(&mut b, &segments[..2]);
+
+        let mut session = WavefrontSession::new(cfg(), 2);
+        session.submit_stream_resumed(1, snap, segments[2..].to_vec(), true).unwrap();
+        session.finish_stream(1).unwrap();
+        session.submit(2, &other).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        let mut outs = session.drain_completed();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].logits, reference[2..].to_vec());
+        assert_eq!(outs[0].stats.segments, 3, "only computed segments counted");
+        assert_eq!(outs[0].stats.cells, (3 * 3) as u64);
+        assert_eq!(outs[1].logits, sequential_reference(63, &other));
+    }
+
+    #[test]
+    fn capture_and_resume_guards() {
+        let mut b = backend(64);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        assert!(session.capture_after(9, 0).is_err(), "unknown id");
+        assert!(session.capture_final(9).is_err(), "unknown id");
+
+        session.submit(1, &tokens(8 * 2, 1)).unwrap();
+        assert!(
+            session.capture_after(1, 0).is_err(),
+            "closed submissions have no exit events to deliver snapshots on"
+        );
+        assert!(session.capture_final(1).is_ok(), "final capture works on closed submits");
+
+        let segs = crate::scheduler::segment_tokens(&cfg(), &tokens(8 * 3, 2)).unwrap();
+        session.submit_stream(2, segs, false).unwrap();
+        session.capture_after(2, 2).unwrap();
+        session.step(&mut b).unwrap();
+        // Request 1 holds the lane; request 2 has not injected yet, so
+        // early targets are still available — but once its segment 0
+        // enters, that target is gone.
+        for _ in 0..10 {
+            session.step(&mut b).unwrap();
+        }
+        assert!(session.capture_after(2, 0).is_err(), "segment already entered");
+
+        // A snapshot from a mismatched model is refused.
+        let other_cfg = ModelConfig { d_model: 64, ..cfg() };
+        let bad = MemSnapshot {
+            model: cfg().name,
+            n_layers: cfg().n_layers,
+            d_model: other_cfg.d_model,
+            phi_dim: cfg().phi_dim,
+            seg: cfg().seg,
+            segments: 1,
+            a: vec![Tensor::zeros(&[other_cfg.d_model, cfg().phi_dim]); cfg().n_layers],
+            z: vec![Tensor::zeros(&[cfg().phi_dim]); cfg().n_layers],
+        };
+        assert!(session
+            .submit_stream_resumed(3, bad, vec![tokens(8, 0)], false)
+            .is_err());
     }
 
     #[test]

@@ -7,23 +7,27 @@
 //! ```text
 //! -> {"id": 1, "tokens": [3, 17, ...], "max_new_tokens": 64,
 //!     "temperature": 0.8?, "top_k": 40?, "seed": 7?, "deadline_ms": 5000?,
-//!     "mode": "diagonal"?, "want_logits": true?}
+//!     "mode": "diagonal"?, "want_logits": true?, "save": true?, "resume": 9?}
 //! <- {"id": 1, "event": "segment", "index": 0, "greedy": [...]}
 //! <- {"id": 1, "event": "token", "pos": 0, "token": 17}
 //! <- {"id": 1, "event": "token", "pos": 1, "token": 3}
 //! <- {"id": 1, "event": "done", "greedy_tail": [...], "generated": [...],
 //!     "mode": "diagonal", "latency_ms": 12.3, "segments": 4, "launches": 7,
 //!     "tokens": 128, "mean_group": 2.4, "cells": 12, "padded_cells": 6,
-//!     "occupancy": 0.83}
+//!     "occupancy": 0.83, "reused_segments": 0, "resume_token": 1?}
 //! <- {"id": 1, "event": "error", "error": "cancelled"}      # terminal, instead of done
 //! -> {"cmd": "cancel", "id": 1}                             # from ANY connection
+//! <- {"ok": true, "id": 1}
+//! -> {"cmd": "save", "id": 1}          # suspend-on-completion, from ANY connection
 //! <- {"ok": true, "id": 1}
 //! -> {"cmd": "stats"}
 //! <- {"requests": 10, "rejected": 0, "cancelled": 1, "diagonal_runs": 9,
 //!     "sequential_runs": 1, "full_attn_runs": 0, "packed_requests": 9,
 //!     "tokens": 1280, "generated_tokens": 512, "launches": 63,
 //!     "active_cells": 151, "slot_steps": 189, "padded_cells": 38,
-//!     "mean_group": 2.4, "occupancy": 0.8, "workers": 4, "pool_cells": 148,
+//!     "mean_group": 2.4, "occupancy": 0.8,
+//!     "cache_hits": 7, "cache_hit_segments": 35, "cache_bytes": 912384,
+//!     "evictions": 2, "workers": 4, "pool_cells": 148,
 //!     "pool_busy_ms": 310.2, "worker_utilization": 0.71,
 //!     "latency_ms_mean": 10.5, "latency_ms_p50": 8.2,
 //!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8}
@@ -32,6 +36,23 @@
 //! -> {"cmd": "shutdown"}
 //! <- {"ok": true}
 //! ```
+//!
+//! **Memory-state cache.** With `--cache-bytes N` the engine runs the
+//! prefix-reuse cache ([`crate::cache`]): prompts sharing a cached
+//! segment-block prefix skip its prefill entirely (`reused_segments`
+//! in the `done` frame; `segment` event indices start after the
+//! reused prefix), bit-exactly. Conversation suspend/resume rides the
+//! same snapshots: `"save": true` on a request — or `{"cmd": "save",
+//! "id": N}` from any connection while it is active — retains its
+//! final memory state under an engine-assigned token, echoed as
+//! `resume_token` in the `done` frame (tokens are unique, saves never
+//! alias another conversation; retention is LRU-capped); a later
+//! request with `"resume": token` continues that conversation
+//! carrying ONLY the new tokens (zero history re-prefill). Saved
+//! state lives in the engine; mid-flight saves need the cache enabled
+//! (capture is only armed for every packed request then — without it
+//! the save cmd is refused with an error instead of acking a no-op),
+//! while `"save": true` at submission always works.
 //!
 //! Every request produces a stream of event frames ending in a terminal
 //! `done` or `error`; a pure prefill request (`max_new_tokens` absent
@@ -124,6 +145,10 @@ impl Server {
         let queue = Arc::new(RequestQueue::<Job>::new(queue_depth));
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = engine.stats_handle();
+        // Mid-flight {"cmd": "save"} only works when the engine arms
+        // snapshot capture for every packed request (cache enabled);
+        // the reply must say so instead of acknowledging a no-op.
+        let mid_flight_save = engine.cache_enabled();
         let registry: CancelRegistry = Arc::new(Mutex::new(HashMap::new()));
 
         // Engine thread: continuous-batching drain loop — every
@@ -175,7 +200,8 @@ impl Server {
                 let stats = st.clone();
                 let registry = reg.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &q, &sd2, &ids, &stats, &registry);
+                    let _ =
+                        handle_conn(stream, &q, &sd2, &ids, &stats, &registry, mid_flight_save);
                 });
             }
         });
@@ -227,6 +253,7 @@ fn handle_conn(
     ids: &AtomicU64,
     stats: &EngineStats,
     registry: &CancelRegistry,
+    mid_flight_save: bool,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -264,14 +291,40 @@ fn handle_conn(
                     )?;
                 }
                 "stats" => writeln!(writer, "{}", stats.to_json().to_json())?,
-                "cancel" => match v.get("id").map(Value::as_u64).transpose() {
+                "cancel" | "save" => match v.get("id").map(Value::as_u64).transpose() {
+                    Ok(Some(_)) if cmd == "save" && !mid_flight_save => {
+                        // Without the cache, capture is only armed for
+                        // requests submitted with "save": true — a
+                        // mid-flight flag would be a silent no-op, so
+                        // refuse it honestly.
+                        writeln!(
+                            writer,
+                            "{}",
+                            error_json(
+                                None,
+                                &Error::Request(
+                                    "mid-flight save requires the server to run with \
+                                     --cache-bytes; submit the request with \"save\": true \
+                                     instead"
+                                        .into(),
+                                )
+                            )
+                        )?;
+                    }
                     Ok(Some(id)) => {
                         let found = registry
                             .lock()
                             .unwrap()
                             .get(&id)
                             .map(|h| {
-                                h.cancel();
+                                if cmd == "cancel" {
+                                    h.cancel();
+                                } else {
+                                    // Suspend-on-completion: the engine
+                                    // retains the request's final memory
+                                    // state under this wire id.
+                                    h.request_save();
+                                }
                                 true
                             })
                             .unwrap_or(false);
@@ -288,7 +341,7 @@ fn handle_conn(
                     _ => writeln!(
                         writer,
                         "{}",
-                        error_json(None, &Error::Request("cancel needs a numeric id".into()))
+                        error_json(None, &Error::Request(format!("{cmd} needs a numeric id")))
                     )?,
                 },
                 other => writeln!(
@@ -666,6 +719,107 @@ mod tests {
                 |_| {},
             )
         }
+    }
+
+    #[test]
+    fn save_and_resume_over_tcp() {
+        let cfg = crate::model::tests::test_config();
+        let engine = InferenceEngine::new(
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, 21)),
+            ExecMode::Diagonal,
+        )
+        .with_cache_bytes(1 << 22);
+        let server = Server::start(engine, "127.0.0.1:0", 8).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+
+        // Turn 1: generate 16 tokens and save the conversation. One
+        // decode segment (seg = 8) is fed back, so the saved state
+        // covers 2 prompt + 1 decode segments.
+        let done = client
+            .request_stream(
+                &Value::obj(vec![
+                    ("id", Value::Num(5.0)),
+                    ("tokens", Value::arr_u32(&tokens)),
+                    ("max_new_tokens", Value::Num(16.0)),
+                    ("save", Value::Bool(true)),
+                ]),
+                |_| {},
+            )
+            .unwrap();
+        let token = done.req("resume_token").unwrap().as_u64().unwrap();
+        assert_eq!(done.req("reused_segments").unwrap().as_usize().unwrap(), 0);
+
+        // Turn 2: resume by token, carrying ONLY the new tokens — the
+        // saved history is never re-prefilled.
+        let new_toks: Vec<u32> = (0..8).map(|i| (i + 7) % 60).collect();
+        let done2 = client
+            .request_stream(
+                &Value::obj(vec![
+                    ("tokens", Value::arr_u32(&new_toks)),
+                    ("resume", Value::Num(token as f64)),
+                ]),
+                |_| {},
+            )
+            .unwrap();
+        assert_eq!(done2.req("reused_segments").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(done2.req("segments").unwrap().as_usize().unwrap(), 1);
+
+        // Unknown resume tokens fail loudly; stats expose the cache.
+        let err = client
+            .request_stream(
+                &Value::obj(vec![
+                    ("tokens", Value::arr_u32(&new_toks)),
+                    ("resume", Value::Num(999.0)),
+                ]),
+                |_| {},
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("resume token"), "{err}");
+        let stats = client
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        for field in ["cache_hits", "cache_hit_segments", "cache_bytes", "evictions"] {
+            assert!(stats.get(field).is_some(), "missing stats field {field}");
+        }
+        assert!(stats.req("cache_bytes").unwrap().as_usize().unwrap() > 0);
+
+        // {"cmd": "save"} without an id is rejected like cancel.
+        let bad = client
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("save".into()))]))
+            .unwrap();
+        assert!(bad.get("error").is_some());
+        server.stop();
+    }
+
+    #[test]
+    fn mid_flight_save_refused_without_cache() {
+        // No --cache-bytes: the engine never arms capture for plain
+        // requests, so a mid-flight {"cmd": "save"} would silently do
+        // nothing — the server must refuse it instead of acking.
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let resp = c
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("save".into())),
+                ("id", Value::Num(1.0)),
+            ]))
+            .unwrap();
+        let err = resp.req("error").unwrap().as_str().unwrap();
+        assert!(err.contains("cache-bytes"), "{err}");
+        // Submitting WITH "save": true still works without the cache.
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+        let done = c
+            .request_stream(
+                &Value::obj(vec![
+                    ("tokens", Value::arr_u32(&tokens)),
+                    ("save", Value::Bool(true)),
+                ]),
+                |_| {},
+            )
+            .unwrap();
+        assert!(done.get("resume_token").is_some());
+        server.stop();
     }
 
     #[test]

@@ -13,8 +13,12 @@ use crate::json::Value;
 ///
 /// Recognized fields: `tokens` (required), `id`, `mode`,
 /// `want_logits`, `max_new_tokens`, `temperature`, `top_k`, `seed`,
-/// `deadline_ms`. Ids parse through the full `u64` path so large
-/// client-chosen ids (up to 2^53, the exact-f64 range) round-trip.
+/// `deadline_ms`, `save` (retain the final memory state; the `done`
+/// frame then carries `resume_token`) and `resume` (a previously
+/// returned token — `tokens` then holds only the NEW tokens, the
+/// saved history is never re-prefilled). Ids parse through the full
+/// `u64` path so large client-chosen ids (up to 2^53, the exact-f64
+/// range) round-trip.
 pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<GenerateRequest> {
     let tokens = v.req("tokens")?.as_u32_vec()?;
     let id = match v.get("id") {
@@ -45,6 +49,12 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
         GenerateRequest::new(id, tokens).generate(max_new_tokens).with_sampling(sampling);
     if let Some(ms) = v.get("deadline_ms").map(Value::as_u64).transpose()? {
         req = req.with_deadline(Duration::from_millis(ms));
+    }
+    if v.get("save").map(Value::as_bool).transpose()?.unwrap_or(false) {
+        req = req.with_save();
+    }
+    if let Some(token) = v.get("resume").map(Value::as_u64).transpose()? {
+        req = req.resume_token(token);
     }
     req.mode = mode;
     req.want_logits = want_logits;
@@ -99,7 +109,11 @@ pub fn render_done(resp: &Response) -> Value {
         ("cells", Value::Num(resp.stats.cells as f64)),
         ("padded_cells", Value::Num(resp.stats.padded_cells as f64)),
         ("occupancy", Value::Num(resp.stats.occupancy())),
+        ("reused_segments", Value::Num(resp.reused_segments as f64)),
     ];
+    if let Some(token) = resp.resume_token {
+        fields.push(("resume_token", Value::Num(token as f64)));
+    }
     if let Some(logits) = &resp.logits {
         let norms: Vec<Value> =
             logits.iter().map(|t| Value::Num(t.norm() as f64)).collect();
@@ -183,6 +197,9 @@ mod tests {
             greedy_tail: vec![1, 2],
             generated: vec![9, 10, 11],
             logits: None,
+            reused_segments: 2,
+            resume_token: Some(3),
+            final_state: None,
             mode_used: ExecMode::Diagonal,
             stats: RunStats {
                 mode_diagonal: true,
@@ -198,6 +215,8 @@ mod tests {
         };
         let v = render_done(&resp);
         assert_eq!(v.req("event").unwrap().as_str().unwrap(), "done");
+        assert_eq!(v.req("reused_segments").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.req("resume_token").unwrap().as_u64().unwrap(), 3);
         assert_eq!(v.req("cells").unwrap().as_usize().unwrap(), 12);
         assert_eq!(v.req("padded_cells").unwrap().as_usize().unwrap(), 6);
         assert_eq!(v.req("generated").unwrap().as_u32_vec().unwrap(), vec![9, 10, 11]);
@@ -207,6 +226,29 @@ mod tests {
         // Terminal done frames also render through render_event.
         let via_event = render_event(3, &Event::Done { stats: Box::new(resp) });
         assert_eq!(via_event, v);
+    }
+
+    #[test]
+    fn parse_save_and_resume_fields() {
+        use crate::coordinator::ResumeFrom;
+        let v = Value::parse(r#"{"tokens": [1, 2], "save": true, "resume": 77}"#).unwrap();
+        let r = parse_request(&v, || 0).unwrap();
+        assert!(r.save_requested());
+        assert!(matches!(r.resume, Some(ResumeFrom::Token(77))));
+        // Absent fields keep the defaults.
+        let v = Value::parse(r#"{"tokens": [1]}"#).unwrap();
+        let r = parse_request(&v, || 0).unwrap();
+        assert!(!r.save_requested());
+        assert!(r.resume.is_none());
+        // Type errors are rejected.
+        for bad in [
+            r#"{"tokens": [1], "save": 1}"#,
+            r#"{"tokens": [1], "resume": "x"}"#,
+            r#"{"tokens": [1], "resume": -2}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(parse_request(&v, || 0).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -67,10 +67,17 @@ fn hlo_suites_skip_cleanly_but_stay_in_the_report() {
 fn serve_suites_measure_the_native_engine() {
     let report = run_matching("serve", &artifact_free_settings());
     let names: Vec<&str> = report.suites.iter().map(|s| s.name.as_str()).collect();
-    assert_eq!(names, ["throughput_packed", "serve_latency", "serve_generate"]);
+    assert_eq!(names, ["throughput_packed", "serve_latency", "serve_generate", "cache_reuse"]);
     for s in &report.suites {
         assert_eq!(s.status, SuiteStatus::Ok, "{}: {}", s.name, s.detail);
     }
+    // The cache suite's hard gates ran green; its hit-rate metric is a
+    // full sweep (every shared-prefix client hit).
+    let cache = &report.suites[3];
+    let hit_rate = cache.metrics.iter().find(|m| m.name == "cache_hit_rate").unwrap();
+    assert!(hit_rate.value > 0.0, "cache_hit_rate {}", hit_rate.value);
+    let saved = cache.metrics.iter().find(|m| m.name == "prefill_cells_saved_frac").unwrap();
+    assert!(saved.value > 0.0, "prefill_cells_saved_frac {}", saved.value);
     let serve = &report.suites[1];
     for metric in ["latency_ms_p50", "latency_ms_p90", "latency_ms_p99", "mean_group"] {
         assert!(

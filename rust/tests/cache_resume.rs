@@ -1,0 +1,332 @@
+//! Memory-state snapshot store: the resume-exactness gate.
+//!
+//! The load-bearing invariant of the `cache` subsystem, tested like
+//! the packing (P7), jitter (P10) and decode-exactness contracts
+//! before it:
+//!
+//!  * P11: for random workloads, suspend-after-segment-k then
+//!    resume-and-continue is BIT-IDENTICAL (`f32::to_bits`) to the
+//!    straight-through run — for all k, across worker-pool thread
+//!    counts {1, N}, with the snapshot pushed through its JSON
+//!    serialization, and with the resumed request packed into ragged
+//!    multi-lane sessions next to unrelated traffic.
+//!  * The engine-level acceptance gate: a generation resumed from a
+//!    `MemSnapshot` — via an in-memory prefix-cache hit AND via a disk
+//!    round-trip — produces byte-identical tokens and logits to the
+//!    sequential full-recompute oracle, while executing strictly fewer
+//!    prefill cells than the cold run.
+
+use diagonal_batching::cache::MemSnapshot;
+use diagonal_batching::config::{ExecMode, ModelConfig};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
+use diagonal_batching::json::Value;
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::scheduler::{
+    segment_tokens, Executor, ScheduleMode, WavefrontSession,
+};
+use diagonal_batching::tensor::{Rng, Tensor};
+
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(3);
+    let head_dim = [4usize, 8][rng.below(2)];
+    let d_model = n_heads * head_dim;
+    let k_assoc = [4usize, 8][rng.below(2)];
+    let nu = 1 + rng.below(3);
+    let seg = 4 + rng.below(8);
+    let mem = 1 + rng.below(4);
+    let n_layers = 1 + rng.below(4);
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 32 + rng.below(64),
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff: d_model * 2,
+        seg,
+        mem,
+        k_assoc,
+        dpfp_nu: nu,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim,
+        phi_dim: 2 * nu * k_assoc,
+        seg_total: seg + mem,
+    }
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `prefix` through a throwaway 1-lane session, returning the
+/// captured post-prefix snapshot AFTER a JSON round-trip — every
+/// resumed byte in these tests has survived serialization.
+fn suspend_after(backend: &mut NativeBackend, prefix: &[Vec<u32>]) -> MemSnapshot {
+    let cfg = backend.config().clone();
+    let mut session = WavefrontSession::new(cfg, 1);
+    session.submit_stream(99, prefix.to_vec(), false).unwrap();
+    session.capture_after(99, prefix.len() - 1).unwrap();
+    session.finish_stream(99).unwrap();
+    let mut snap = None;
+    while session.step(backend).unwrap() {
+        while let Some(exit) = session.pop_exited() {
+            if let Some(s) = exit.snapshot {
+                snap = Some(s);
+            }
+        }
+    }
+    let snap = snap.expect("prefix snapshot delivered");
+    let round_tripped =
+        MemSnapshot::from_json(&Value::parse(&snap.to_json().to_json()).unwrap()).unwrap();
+    assert_eq!(round_tripped, snap, "serialization must be lossless");
+    round_tripped
+}
+
+#[test]
+fn p11_suspend_resume_bitexact_for_all_k_threads_and_lanes() {
+    let mut rng = Rng::new(0xCAC4E);
+    for case in 0..6 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let s = 2 + rng.below(5);
+        let n_tokens = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+        let tokens: Vec<u32> = (0..n_tokens).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let segments = segment_tokens(&cfg, &tokens).unwrap();
+        let lanes = 1 + rng.below(3);
+        let other_s = 1 + rng.below(4);
+        let other: Vec<u32> = (0..other_s * cfg.seg - rng.below(cfg.seg.min(3)))
+            .map(|_| rng.below(cfg.vocab) as u32)
+            .collect();
+
+        // Straight-through reference (the sequential oracle).
+        let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let reference = Executor::new(&mut b, ScheduleMode::Sequential).run(&tokens).unwrap();
+        let other_ref = Executor::new(&mut b, ScheduleMode::Sequential).run(&other).unwrap();
+
+        for threads in [1usize, 3] {
+            let mut backend =
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)).with_threads(threads);
+            for k in 1..segments.len() {
+                let snap = suspend_after(&mut backend, &segments[..k]);
+                assert_eq!(snap.segments, k);
+
+                // Resume packed into a ragged multi-lane session next
+                // to an unrelated request.
+                let mut session = WavefrontSession::new(cfg.clone(), lanes);
+                session
+                    .submit_stream_resumed(1, snap, segments[k..].to_vec(), true)
+                    .unwrap();
+                session.finish_stream(1).unwrap();
+                session.submit(2, &other).unwrap();
+                session.run_to_completion(&mut backend).unwrap();
+                let mut outs = session.drain_completed();
+                outs.sort_by_key(|o| o.id);
+                assert_eq!(outs.len(), 2, "case {case} k {k} threads {threads}");
+
+                assert_eq!(
+                    outs[0].logits.len(),
+                    segments.len() - k,
+                    "case {case} k {k}: only the remaining segments are computed"
+                );
+                for (i, (got, want)) in
+                    outs[0].logits.iter().zip(&reference.logits[k..]).enumerate()
+                {
+                    assert_eq!(
+                        bits(got),
+                        bits(want),
+                        "case {case} k {k} threads {threads} lanes {lanes} segment {i} \
+                         cfg {cfg:?}"
+                    );
+                }
+                for (i, (got, want)) in
+                    outs[1].logits.iter().zip(&other_ref.logits).enumerate()
+                {
+                    assert_eq!(
+                        bits(got),
+                        bits(want),
+                        "case {case} k {k}: concurrent request perturbed, segment {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn engine(seed: u64, mode: ExecMode) -> InferenceEngine<NativeBackend> {
+    let cfg = ModelConfig::synthetic();
+    InferenceEngine::new(NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)), mode)
+}
+
+fn prompt_of(n: usize, salt: u32) -> Vec<u32> {
+    let vocab = ModelConfig::synthetic().vocab as u32;
+    (0..n as u32).map(|i| (i * 29 + salt) % vocab).collect()
+}
+
+/// The acceptance gate, part 1: an in-memory prefix-cache hit resumes
+/// bit-identically to the sequential full-recompute oracle and
+/// executes strictly fewer prefill cells than the cold run.
+#[test]
+fn acceptance_prefix_hit_matches_sequential_oracle() {
+    let cfg = ModelConfig::synthetic();
+    let seg = cfg.seg;
+    let shared = prompt_of(seg * 5, 3);
+    let mut tail = shared.clone();
+    tail.extend(prompt_of(seg * 2, 17));
+
+    // Sequential full-recompute oracle.
+    let mut oracle = engine(7, ExecMode::Sequential);
+    let mut want_req = GenerateRequest::new(1, tail.clone()).generate(2 * seg);
+    want_req.want_logits = true;
+    let want = oracle.process(&want_req).unwrap();
+
+    // Cold diagonal run (cells baseline), then a warm engine: first
+    // request seeds the store, second hits it.
+    let mut cold = engine(7, ExecMode::Diagonal);
+    let cold_resp = cold.process(&want_req).unwrap();
+
+    let mut warm = engine(7, ExecMode::Diagonal).with_cache_bytes(1 << 22);
+    warm.process(&GenerateRequest::new(2, shared)).unwrap();
+    let mut hit_req = GenerateRequest::new(3, tail).generate(2 * seg);
+    hit_req.want_logits = true;
+    let hit = warm.process(&hit_req).unwrap();
+
+    assert_eq!(hit.reused_segments, 5, "the shared prefix came from the cache");
+    assert_eq!(warm.stats.cache_hits.get(), 1);
+    assert!(
+        hit.stats.cells < cold_resp.stats.cells,
+        "hit must execute strictly fewer prefill cells ({} vs {})",
+        hit.stats.cells,
+        cold_resp.stats.cells
+    );
+
+    // Byte-identical tokens and logits vs the oracle.
+    assert_eq!(hit.generated, want.generated);
+    assert_eq!(hit.greedy_tail, want.greedy_tail);
+    let (hl, wl) = (hit.logits.unwrap(), want.logits.unwrap());
+    assert_eq!(hl.len() + 5, wl.len());
+    for (got, want) in hl.iter().zip(&wl[5..]) {
+        assert_eq!(bits(got), bits(want));
+    }
+}
+
+/// The acceptance gate, part 2: a disk round-trip — suspend to a file,
+/// load it back, resume — is byte-identical to recomputing the full
+/// history through the sequential oracle.
+#[test]
+fn acceptance_disk_roundtrip_matches_sequential_oracle() {
+    let cfg = ModelConfig::synthetic();
+    let seg = cfg.seg;
+    let turn1 = prompt_of(seg * 3, 5);
+    let turn2 = prompt_of(seg, 23);
+
+    let mut e = engine(11, ExecMode::Diagonal);
+    // generate(2 * seg): one decode segment is fed back, so the saved
+    // history is 3 prompt + 1 decode segments.
+    let resp1 = e.process(&GenerateRequest::new(1, turn1.clone()).generate(2 * seg).with_save())
+        .unwrap();
+    let snap = resp1.final_state.expect("saved conversation");
+    assert_eq!(snap.segments, 4);
+
+    let path = std::env::temp_dir().join(format!("cache_resume_{}.json", std::process::id()));
+    snap.save(&path).unwrap();
+    let restored = MemSnapshot::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(restored, snap, "disk round-trip is lossless");
+
+    // Resume from disk on a FRESH engine with the same weights; the
+    // pooled backend variant must agree byte-for-byte too.
+    for threads in [1usize, 3] {
+        let cfg = ModelConfig::synthetic();
+        let backend =
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, 11)).with_threads(threads);
+        let mut fresh = InferenceEngine::new(backend, ExecMode::Diagonal);
+        let mut r2 = GenerateRequest::new(2, turn2.clone())
+            .generate(seg)
+            .resume_snapshot(restored.clone());
+        r2.want_logits = true;
+        let resp2 = fresh.process(&r2).unwrap();
+        assert_eq!(resp2.reused_segments, 4, "zero history re-prefill");
+
+        // Oracle: the full history recomputed straight through.
+        let mut full = turn1.clone();
+        full.extend_from_slice(&resp1.generated[..seg]); // the fed decode segment
+        full.extend_from_slice(&turn2);
+        let mut oracle = engine(11, ExecMode::Sequential);
+        let mut ro = GenerateRequest::new(3, full).generate(seg);
+        ro.want_logits = true;
+        let want = oracle.process(&ro).unwrap();
+
+        assert_eq!(resp2.generated, want.generated, "threads {threads}");
+        assert_eq!(resp2.greedy_tail, want.greedy_tail);
+        let (gl, wl) = (resp2.logits.unwrap(), want.logits.unwrap());
+        assert_eq!(gl.len() + 4, wl.len());
+        for (got, want) in gl.iter().zip(&wl[4..]) {
+            assert_eq!(bits(got), bits(want), "threads {threads}");
+        }
+    }
+}
+
+/// Sequential-mode resume is the same exactness contract through the
+/// second, independent implementation of the recurrence.
+#[test]
+fn sequential_resume_matches_diagonal_resume() {
+    let cfg = ModelConfig::synthetic();
+    let seg = cfg.seg;
+    let history = prompt_of(seg * 4, 9);
+    let fresh_tokens = prompt_of(seg, 31);
+
+    let mut e = engine(13, ExecMode::Diagonal);
+    let saved = e
+        .process(&GenerateRequest::new(1, history).with_save())
+        .unwrap()
+        .final_state
+        .unwrap();
+
+    let mut run = |mode: ExecMode| {
+        let mut r = GenerateRequest::new(9, fresh_tokens.clone())
+            .generate(seg)
+            .resume_snapshot(saved.clone());
+        r.mode = Some(mode);
+        r.want_logits = true;
+        engine(13, mode).process(&r).unwrap()
+    };
+    let diag = run(ExecMode::Diagonal);
+    let sequential = run(ExecMode::Sequential);
+    assert_eq!(diag.generated, sequential.generated);
+    let (dl, sl) = (diag.logits.unwrap(), sequential.logits.unwrap());
+    assert_eq!(dl.len(), sl.len());
+    for (a, b) in dl.iter().zip(&sl) {
+        assert_eq!(bits(a), bits(b));
+    }
+}
+
+/// Eviction safety: once the LRU budget evicts a prefix, requests fall
+/// back to a cold prefill with identical results.
+#[test]
+fn eviction_falls_back_to_cold_prefill_exactly() {
+    let cfg = ModelConfig::synthetic();
+    let seg = cfg.seg;
+    let prompt = prompt_of(seg * 4, 2);
+    let mut want_req = GenerateRequest::new(1, prompt.clone());
+    want_req.want_logits = true;
+
+    let mut plain = engine(17, ExecMode::Diagonal);
+    let want = plain.process(&want_req).unwrap();
+
+    // A budget too small for even one snapshot: every insert evicts
+    // itself, every lookup misses — behavior must match no-cache runs.
+    let mut tiny = engine(17, ExecMode::Diagonal).with_cache_bytes(64);
+    for round in 0..3 {
+        let resp = tiny.process(&want_req).unwrap();
+        assert_eq!(resp.reused_segments, 0, "round {round}: nothing to reuse");
+        assert_eq!(
+            bits(&resp.logits.clone().unwrap()[0]),
+            bits(&want.logits.as_ref().unwrap()[0])
+        );
+    }
+    assert_eq!(tiny.stats.cache_hits.get(), 0);
+    assert!(tiny.stats.cache_evictions.get() > 0, "budget must have evicted");
+    assert_eq!(tiny.stats.cache_bytes.get(), 0);
+}
