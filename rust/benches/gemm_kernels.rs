@@ -1,0 +1,15 @@
+//! The tiered GEMM kernel layer, measured: cache-blocked SIMD f32 vs
+//! the scalar oracle (bit-identical, timed in the same run), the
+//! f16/bf16/int8 weight stores at a memory-bound serving size, and
+//! achieved GFLOP/s against the measured CI-host roofline.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `gemm_kernels`; this binary is the legacy `cargo bench` entry
+//! point and is equivalent to
+//! `diagonal-batching bench --suite gemm_kernels`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("gemm_kernels")
+}

@@ -44,7 +44,8 @@ pub struct BenchSettings {
     /// Where to look for the AOT artifacts; HLO suites skip when this
     /// does not load.
     pub manifest_path: String,
-    /// Simulated device model: "a100" (default) or "h100".
+    /// Simulated device model: "a100" (default), "h100", or "ci" (the
+    /// measured CI-host CPU).
     pub device: String,
     /// CI-sized iteration budgets (roughly 8x shorter measurements).
     pub fast: bool,
@@ -67,6 +68,7 @@ impl BenchSettings {
     pub fn device_spec(&self) -> DeviceSpec {
         match self.device.as_str() {
             "h100" => DeviceSpec::h100(),
+            "ci" | "ci-host" => DeviceSpec::ci_host(),
             _ => DeviceSpec::a100(),
         }
     }

@@ -3,6 +3,7 @@
 
 use crate::error::{Error, Result};
 use crate::json::Value;
+use crate::tensor::{KernelPolicy, Precision};
 
 /// How the engine executes the (segment, layer) grid.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -113,6 +114,17 @@ pub struct RuntimeConfig {
     /// resume without re-prefilling history. `0` (the default) disables
     /// the cache — and with it all snapshot capture overhead.
     pub cache_bytes: usize,
+    /// GEMM kernel policy (`--kernel scalar|blocked`). `blocked` (the
+    /// default) is the cache-blocked SIMD tier, bit-identical to the
+    /// `scalar` oracle; `scalar` forces the reference loops. The
+    /// `PALLAS_KERNEL` env var seeds the default.
+    pub kernel: KernelPolicy,
+    /// Weight storage precision for the native backend
+    /// (`--precision f32|f16|bf16|int8`). Anything but `f32` trades a
+    /// bounded output error for smaller, faster weight reads; the HLO
+    /// backend ignores this. The `PALLAS_PRECISION` env var seeds the
+    /// default.
+    pub precision: Precision,
 }
 
 impl Default for RuntimeConfig {
@@ -129,6 +141,8 @@ impl Default for RuntimeConfig {
             threads: 0,
             fallback_min_segments: 4,
             cache_bytes: 0,
+            kernel: crate::tensor::env_kernel_policy(),
+            precision: crate::tensor::env_precision(),
         }
     }
 }
@@ -170,6 +184,12 @@ impl RuntimeConfig {
         if let Some(x) = v.get("cache_bytes") {
             c.cache_bytes = x.as_usize()?;
         }
+        if let Some(x) = v.get("kernel") {
+            c.kernel = x.as_str()?.parse()?;
+        }
+        if let Some(x) = v.get("precision") {
+            c.precision = x.as_str()?.parse()?;
+        }
         Ok(c)
     }
 
@@ -205,6 +225,8 @@ impl RuntimeConfig {
             ("threads", Value::Num(self.threads as f64)),
             ("fallback_min_segments", Value::Num(self.fallback_min_segments as f64)),
             ("cache_bytes", Value::Num(self.cache_bytes as f64)),
+            ("kernel", Value::Str(self.kernel.to_string())),
+            ("precision", Value::Str(self.precision.to_string())),
         ])
     }
 }
@@ -275,6 +297,25 @@ mod tests {
     #[test]
     fn bad_mode_rejected() {
         let v = Value::parse(r#"{"mode": "sideways"}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn kernel_precision_roundtrip() {
+        let v = Value::parse(r#"{"kernel": "scalar", "precision": "int8"}"#).unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.kernel, KernelPolicy::Scalar);
+        assert_eq!(c.precision, Precision::Int8);
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.kernel, KernelPolicy::Scalar);
+        assert_eq!(back.precision, Precision::Int8);
+    }
+
+    #[test]
+    fn bad_kernel_and_precision_rejected() {
+        let v = Value::parse(r#"{"kernel": "vectorish"}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+        let v = Value::parse(r#"{"precision": "fp4"}"#).unwrap();
         assert!(RuntimeConfig::from_json(&v).is_err());
     }
 }

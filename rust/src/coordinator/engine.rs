@@ -328,6 +328,15 @@ pub struct EngineStats {
     /// evicted by the byte budget plus saved conversations beyond the
     /// engine's cap.
     pub cache_evictions: Counter,
+    /// Floating-point operations the GEMM kernel tier retired while
+    /// this engine was serving (delta-accumulated from the
+    /// process-global [`tensor::kernel_totals`](crate::tensor::kernel_totals)
+    /// each wavefront iteration).
+    pub kernel_flops: Counter,
+    /// Wall-nanoseconds the kernel tier spent retiring those flops.
+    /// `kernel_flops / kernel_ns` is the achieved GFLOP/s, exactly
+    /// (flops per nanosecond == 1e9 flops per second).
+    pub kernel_ns: Counter,
 }
 
 impl EngineStats {
@@ -348,6 +357,17 @@ impl EngineStats {
     pub fn padded_cells(&self) -> u64 {
         let (active, slots) = self.occupancy.parts();
         slots.saturating_sub(active)
+    }
+
+    /// Achieved GFLOP/s of the kernel tier over this engine's serving
+    /// windows (0.0 before any kernel work lands).
+    pub fn kernel_gflops(&self) -> f64 {
+        let ns = self.kernel_ns.get();
+        if ns == 0 {
+            0.0
+        } else {
+            self.kernel_flops.get() as f64 / ns as f64
+        }
     }
 
     /// Snapshot as a JSON object (the server's `{"cmd": "stats"}` body).
@@ -387,6 +407,32 @@ impl EngineStats {
             ("latency_ms_p50", Value::Num(self.latency.quantile(0.5).as_secs_f64() * 1e3)),
             ("latency_ms_p90", Value::Num(self.latency.quantile(0.9).as_secs_f64() * 1e3)),
             ("latency_ms_p99", Value::Num(self.latency.quantile(0.99).as_secs_f64() * 1e3)),
+            ("kernel_flops", Value::Num(self.kernel_flops.get() as f64)),
+            ("kernel_time_ms", Value::Num(self.kernel_ns.get() as f64 / 1e6)),
+            ("kernel_gflops", Value::Num(self.kernel_gflops())),
+            ("kernel_policy", Value::Str(crate::tensor::kernel_policy().to_string())),
+            // Per-kernel breakdown, process-global since process start
+            // (the engine-window deltas above cover "this engine"; the
+            // breakdown tells you WHICH kernels are doing the work).
+            (
+                "kernels",
+                Value::Obj(
+                    crate::tensor::kernel_snapshot()
+                        .iter()
+                        .map(|k| {
+                            (
+                                k.name.to_string(),
+                                Value::obj(vec![
+                                    ("calls", Value::Num(k.calls as f64)),
+                                    ("flops", Value::Num(k.flops as f64)),
+                                    ("time_ms", Value::Num(k.ns as f64 / 1e6)),
+                                    ("gflops", Value::Num(k.gflops())),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -1210,6 +1256,7 @@ impl<B: StepBackend> InferenceEngine<B> {
         let mut last = session.stats();
         let mut last_ws = self.backend.worker_stats();
         let mut last_wall = Instant::now();
+        let mut last_kernel = crate::tensor::kernel_totals();
         self.stats.workers.set(last_ws.threads as u64);
         loop {
             // Admission. Block only when the wavefront is empty; keep
@@ -1303,6 +1350,15 @@ impl<B: StepBackend> InferenceEngine<B> {
             self.stats.pool_cells.add(ws.pool_cells.saturating_sub(last_ws.pool_cells));
             self.stats.worker_busy.add(busy_us, capacity_us);
             last_ws = ws;
+
+            // Kernel-tier deltas (process-global counters, same
+            // snapshot-and-subtract scheme as the pool stats above):
+            // the flops the GEMM tier retired this iteration and the
+            // time it spent retiring them.
+            let kt = crate::tensor::kernel_totals();
+            self.stats.kernel_flops.add(kt.0.saturating_sub(last_kernel.0));
+            self.stats.kernel_ns.add(kt.1.saturating_sub(last_kernel.1));
+            last_kernel = kt;
 
             // Segment exits: stream partial results and run the decode
             // hand-off — sample the frontier's continuation and feed it
@@ -1848,6 +1904,15 @@ mod tests {
         let js = e.stats.to_json().to_json();
         assert!(js.contains("\"workers\":3"), "{js}");
         assert!(js.contains("worker_utilization"), "{js}");
+
+        // The kernel-tier counters must have seen this engine's GEMMs:
+        // serving ran real matmuls, so the flop/time deltas are nonzero
+        // and the derived throughput is finite and positive.
+        assert!(e.stats.kernel_flops.get() > 0, "{js}");
+        assert!(e.stats.kernel_ns.get() > 0, "{js}");
+        assert!(e.stats.kernel_gflops() > 0.0 && e.stats.kernel_gflops().is_finite());
+        assert!(js.contains("kernel_gflops"), "{js}");
+        assert!(js.contains("\"matmul_f32\":"), "per-kernel breakdown missing: {js}");
     }
 
     #[test]

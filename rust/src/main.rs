@@ -21,7 +21,9 @@
 //! ```
 //!
 //! Hand-rolled flag parsing (offline toolchain has no clap); every
-//! subcommand accepts `--manifest PATH` (default artifacts/manifest.json).
+//! subcommand accepts `--manifest PATH` (default artifacts/manifest.json),
+//! `--kernel scalar|blocked` (GEMM tier), and `--precision
+//! f32|f16|bf16|int8` (native-backend weight storage).
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -38,6 +40,7 @@ use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::StepBackend;
 use diagonal_batching::server::{Client, Server};
 use diagonal_batching::simulator::{tables, DeviceSpec};
+use diagonal_batching::tensor::Precision;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -102,6 +105,16 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(b) = flags.get("cache-bytes") {
         cfg.cache_bytes = b.parse::<usize>()?;
     }
+    if let Some(k) = flags.get("kernel") {
+        cfg.kernel = k.parse()?;
+    }
+    if let Some(p) = flags.get("precision") {
+        cfg.precision = p.parse()?;
+    }
+    // One global switch: the tensor entry points dispatch on it and the
+    // config default already honors PALLAS_KERNEL, so an explicit flag
+    // or config file wins over the env var here.
+    diagonal_batching::tensor::set_kernel_policy(cfg.kernel);
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg, &flags),
@@ -132,6 +145,10 @@ COMMON FLAGS:
   --model NAME      tiny | toy
   --mode MODE       diagonal | seq | full | auto
   --backend KIND    hlo | native
+  --kernel POLICY   blocked | scalar — GEMM tier: cache-blocked SIMD
+                    (default, bit-identical) or the reference loops
+  --precision P     f32 | f16 | bf16 | int8 — native-backend weight
+                    storage (sub-f32 trades bounded error for speed)
   --config PATH     RuntimeConfig JSON
 
 SUBCOMMANDS:
@@ -186,7 +203,8 @@ SUBCOMMANDS:
   bench     --suite GLOB --json PATH         the pallas-bench harness: run the
             --compare BASELINE               registered suites matching GLOB
             --max-regression 1.15            (name or tag; e.g. 'fig*', 'serve',
-            --fast true --device a100|h100   'fig*,table*'), write the versioned
+            --fast true                      'fig*,table*'), write the versioned
+            --device a100|h100|ci
             --list true                      BENCH_*.json report, and optionally
                                              gate against a baseline report
                                              (nonzero exit on regressions)
@@ -202,7 +220,16 @@ fn boxed_backend(
 ) -> Result<Box<dyn StepBackend + Send>, Box<dyn std::error::Error>> {
     Ok(match cfg.backend {
         // PJRT owns its own threading; --threads applies to native only.
-        BackendKind::Hlo => Box::new(HloBackend::load(manifest, &cfg.model)?),
+        BackendKind::Hlo => {
+            if cfg.precision != Precision::F32 {
+                eprintln!(
+                    "note: --precision {} applies to the native backend only; \
+                     the HLO artifacts stay f32",
+                    cfg.precision
+                );
+            }
+            Box::new(HloBackend::load(manifest, &cfg.model)?)
+        }
         BackendKind::Native => {
             let entry = manifest.model(&cfg.model)?;
             Box::new(
@@ -210,7 +237,8 @@ fn boxed_backend(
                     entry.config.clone(),
                     Params::load(manifest, &cfg.model)?,
                 )
-                .with_threads(cfg.resolved_threads()),
+                .with_threads(cfg.resolved_threads())
+                .with_precision(cfg.precision),
             )
         }
     })
@@ -231,7 +259,8 @@ fn serving_backend(
         );
         return Ok(Box::new(
             NativeBackend::new(mc.clone(), Params::random(&mc, seed))
-                .with_threads(cfg.resolved_threads()),
+                .with_threads(cfg.resolved_threads())
+                .with_precision(cfg.precision),
         ));
     }
     let manifest = Manifest::load(&cfg.manifest)?;

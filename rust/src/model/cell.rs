@@ -5,11 +5,78 @@
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
-use crate::model::params::{LayerTensors, Params};
-use crate::tensor::{self, Tensor};
+use crate::model::params::{LayerTensors, Params, QuantLayer};
+use crate::tensor::{self, Tensor, WeightView};
 
 /// Re-exported alias: a materialized single-layer parameter view.
 pub type LayerView<'a> = LayerTensors<'a>;
+
+/// Borrowed kernel-facing weight set for one layer. Every *weight*
+/// matmul in the cell goes through a [`WeightView`] — which may be
+/// exact f32 (byte-identical to the plain tensor path) or a prepared
+/// f16/bf16/int8 [`WeightMat`](crate::tensor::WeightMat) — while
+/// activation-by-activation products (attention scores, `probs @ v`,
+/// the delta-rule state math) and the small norm/bias vectors stay
+/// plain f32 tensors. This is the single seam through which the whole
+/// wavefront runs on quantized weights end-to-end.
+pub(crate) struct CellWeights<'a> {
+    wq: WeightView<'a>,
+    wk: WeightView<'a>,
+    wv: WeightView<'a>,
+    wo: WeightView<'a>,
+    wg: WeightView<'a>,
+    wu: WeightView<'a>,
+    wd: WeightView<'a>,
+    aq: WeightView<'a>,
+    ak: WeightView<'a>,
+    av: WeightView<'a>,
+    n1: &'a Tensor,
+    n2: &'a Tensor,
+    ab: &'a Tensor,
+}
+
+impl<'a> CellWeights<'a> {
+    /// Exact-f32 views over a materialized layer (the legacy path —
+    /// byte-identical to pre-kernel-tier behavior).
+    pub(crate) fn from_layer(lt: &'a LayerTensors<'a>) -> Self {
+        Self {
+            wq: WeightView::from_tensor(&lt.wq),
+            wk: WeightView::from_tensor(&lt.wk),
+            wv: WeightView::from_tensor(&lt.wv),
+            wo: WeightView::from_tensor(&lt.wo),
+            wg: WeightView::from_tensor(&lt.wg),
+            wu: WeightView::from_tensor(&lt.wu),
+            wd: WeightView::from_tensor(&lt.wd),
+            aq: WeightView::from_tensor(&lt.aq),
+            ak: WeightView::from_tensor(&lt.ak),
+            av: WeightView::from_tensor(&lt.av),
+            n1: &lt.n1,
+            n2: &lt.n2,
+            ab: &lt.ab,
+        }
+    }
+
+    /// Views over prepared kernel weights (any [`Precision`]
+    /// (crate::tensor::Precision)) — what [`cell_task`] uses once
+    /// [`Params::prepare`] has run.
+    pub(crate) fn from_quant(q: &'a QuantLayer) -> Self {
+        Self {
+            wq: q.wq.view(),
+            wk: q.wk.view(),
+            wv: q.wv.view(),
+            wo: q.wo.view(),
+            wg: q.wg.view(),
+            wu: q.wu.view(),
+            wd: q.wd.view(),
+            aq: q.aq.view(),
+            ak: q.ak.view(),
+            av: q.av.view(),
+            n1: &q.n1,
+            n2: &q.n2,
+            ab: &q.ab,
+        }
+    }
+}
 
 /// Associative read with residual (eq. 6):
 /// `x_i += A phi(W_Q x_i) / (z^T phi(W_Q x_i) + eps)`.
@@ -17,7 +84,17 @@ pub type LayerView<'a> = LayerTensors<'a>;
 /// x: [T, d], a: [d, p], z: [p], wq: [d, k]. With a = z = 0 this is an
 /// exact identity (segment 0 needs no gate).
 pub fn assoc_read(cfg: &ModelConfig, x: &Tensor, a: &Tensor, z: &Tensor, wq: &Tensor) -> Tensor {
-    let q = tensor::dpfp(&tensor::matmul(x, wq), cfg.dpfp_nu); // [T, p]
+    assoc_read_w(cfg, x, a, z, WeightView::from_tensor(wq))
+}
+
+fn assoc_read_w(
+    cfg: &ModelConfig,
+    x: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+    wq: WeightView<'_>,
+) -> Tensor {
+    let q = tensor::dpfp(&wq.matmul(x), cfg.dpfp_nu); // [T, p]
     let num = tensor::matmul_bt(&q, a); // [T, d] = q @ a^T
     let (t, d) = (x.shape()[0], x.shape()[1]);
     let mut out = x.clone();
@@ -45,9 +122,29 @@ pub fn assoc_update(
     av: &Tensor,
     ab: &Tensor,
 ) -> (Tensor, Tensor) {
+    assoc_update_w(
+        cfg,
+        y_mem,
+        a,
+        z,
+        WeightView::from_tensor(ak),
+        WeightView::from_tensor(av),
+        ab,
+    )
+}
+
+fn assoc_update_w(
+    cfg: &ModelConfig,
+    y_mem: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+    ak: WeightView<'_>,
+    av: WeightView<'_>,
+    ab: &Tensor,
+) -> (Tensor, Tensor) {
     let eps = cfg.eps;
-    let k = tensor::dpfp(&tensor::matmul(y_mem, ak), cfg.dpfp_nu); // [m, p]
-    let v = tensor::matmul(y_mem, av); // [m, d]
+    let k = tensor::dpfp(&ak.matmul(y_mem), cfg.dpfp_nu); // [m, p]
+    let v = av.matmul(y_mem); // [m, d]
     let m = y_mem.shape()[0];
     let d = cfg.d_model;
     let p = cfg.phi_dim;
@@ -109,12 +206,32 @@ pub fn attention(
     wo: &Tensor,
     seg: usize,
 ) -> Tensor {
+    attention_w(
+        cfg,
+        x,
+        WeightView::from_tensor(wq),
+        WeightView::from_tensor(wk),
+        WeightView::from_tensor(wv),
+        WeightView::from_tensor(wo),
+        seg,
+    )
+}
+
+fn attention_w(
+    cfg: &ModelConfig,
+    x: &Tensor,
+    wq: WeightView<'_>,
+    wk: WeightView<'_>,
+    wv: WeightView<'_>,
+    wo: WeightView<'_>,
+    seg: usize,
+) -> Tensor {
     let (t, d) = (x.shape()[0], x.shape()[1]);
     let h = cfg.n_heads;
     let hd = d / h;
-    let q = tensor::matmul(x, wq);
-    let k = tensor::matmul(x, wk);
-    let v = tensor::matmul(x, wv);
+    let q = wq.matmul(x);
+    let k = wk.matmul(x);
+    let v = wv.matmul(x);
 
     let head = |m: &Tensor, hi: usize| -> Tensor {
         let mut out = Tensor::zeros(&[t, hd]);
@@ -147,14 +264,23 @@ pub fn attention(
                 .copy_from_slice(oh.row(i));
         }
     }
-    tensor::matmul(&merged, wo)
+    wo.matmul(&merged)
 }
 
 /// SwiGLU MLP: (silu(x wg) * (x wu)) wd. x: [T, d].
 pub fn swiglu(x: &Tensor, wg: &Tensor, wu: &Tensor, wd: &Tensor) -> Tensor {
-    let gate = tensor::map(&tensor::matmul(x, wg), tensor::silu);
-    let up = tensor::matmul(x, wu);
-    tensor::matmul(&tensor::mul(&gate, &up), wd)
+    swiglu_w(
+        x,
+        WeightView::from_tensor(wg),
+        WeightView::from_tensor(wu),
+        WeightView::from_tensor(wd),
+    )
+}
+
+fn swiglu_w(x: &Tensor, wg: WeightView<'_>, wu: WeightView<'_>, wd: WeightView<'_>) -> Tensor {
+    let gate = tensor::map(&wg.matmul(x), tensor::silu);
+    let up = wu.matmul(x);
+    wd.matmul(&tensor::mul(&gate, &up))
 }
 
 /// One full (segment, layer) cell: read -> transformer layer -> update.
@@ -166,21 +292,33 @@ pub fn layer_step(
     a: &Tensor,
     z: &Tensor,
 ) -> (Tensor, Tensor, Tensor) {
-    let xr = assoc_read(cfg, x, a, z, &lp.aq);
-    let attn = attention(
+    layer_step_w(cfg, &CellWeights::from_layer(lp), x, a, z)
+}
+
+/// [`layer_step`] over any [`CellWeights`] — the one implementation
+/// both the legacy tensor path and the prepared kernel path share.
+pub(crate) fn layer_step_w(
+    cfg: &ModelConfig,
+    w: &CellWeights<'_>,
+    x: &Tensor,
+    a: &Tensor,
+    z: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let xr = assoc_read_w(cfg, x, a, z, w.aq);
+    let attn = attention_w(
         cfg,
-        &tensor::rmsnorm(&xr, &lp.n1, cfg.eps),
-        &lp.wq,
-        &lp.wk,
-        &lp.wv,
-        &lp.wo,
+        &tensor::rmsnorm(&xr, w.n1, cfg.eps),
+        w.wq,
+        w.wk,
+        w.wv,
+        w.wo,
         cfg.seg,
     );
     let h = tensor::add(&xr, &attn);
-    let mlp = swiglu(&tensor::rmsnorm(&h, &lp.n2, cfg.eps), &lp.wg, &lp.wu, &lp.wd);
+    let mlp = swiglu_w(&tensor::rmsnorm(&h, w.n2, cfg.eps), w.wg, w.wu, w.wd);
     let y = tensor::add(&h, &mlp);
     let y_mem = y.slice0(cfg.seg, cfg.seg_total);
-    let (a2, z2) = assoc_update(cfg, &y_mem, a, z, &lp.ak, &lp.av, &lp.ab);
+    let (a2, z2) = assoc_update_w(cfg, &y_mem, a, z, w.ak, w.av, w.ab);
     (y, a2, z2)
 }
 
@@ -196,6 +334,11 @@ pub fn layer_step(
 /// caller's thread, keyed by slot index. Bit-identical to the inline
 /// sequential loop by construction: same code path, same accumulation
 /// order, disjoint outputs.
+///
+/// When `params` has been [`Params::prepare`]d, the cell runs on the
+/// shared kernel-ready weights (no per-cell tensor copies; possibly
+/// quantized). Unprepared params fall back to materializing the layer
+/// — the original, byte-identical path.
 pub fn cell_task(
     cfg: &ModelConfig,
     params: &Params,
@@ -204,8 +347,13 @@ pub fn cell_task(
     a: &Tensor,
     z: &Tensor,
 ) -> (Tensor, Tensor, Tensor) {
-    let view = params.layer(layer);
-    layer_step(cfg, &view, x, a, z)
+    match params.kernel_layer(layer) {
+        Some(q) => layer_step_w(cfg, &CellWeights::from_quant(q), x, a, z),
+        None => {
+            let view = params.layer(layer);
+            layer_step(cfg, &view, x, a, z)
+        }
+    }
 }
 
 /// Vanilla full-attention forward over the whole context (the quadratic
@@ -348,6 +496,58 @@ mod tests {
         assert_eq!(y.shape(), &[c.seg_total, c.d_model]);
         assert!(a2.norm() > 0.0, "memory must be written");
         assert!(z2.norm() > 0.0);
+    }
+
+    #[test]
+    fn prepared_f32_cell_is_bit_identical() {
+        // Preparing at F32 changes where the weights live, not one bit
+        // of the math: cell_task over prepared params must equal the
+        // legacy materialized-layer path exactly.
+        let c = cfg();
+        let p = Params::random(&c, 10);
+        let mut prepared = p.clone();
+        prepared.prepare(crate::tensor::Precision::F32);
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[c.d_model, c.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[c.phi_dim], 0.1, &mut rng);
+        for l in 0..c.n_layers {
+            let (y1, a1, z1) = cell_task(&c, &p, l, &x, &a, &z);
+            let (y2, a2, z2) = cell_task(&c, &prepared, l, &x, &a, &z);
+            assert_eq!(y1, y2, "layer {l}: y");
+            assert_eq!(a1, a2, "layer {l}: A'");
+            assert_eq!(z1, z2, "layer {l}: z'");
+        }
+    }
+
+    #[test]
+    fn quantized_cell_error_within_budget() {
+        use crate::tensor::{
+            Precision, BF16_CELL_ERR_BUDGET, F16_CELL_ERR_BUDGET, INT8_CELL_ERR_BUDGET,
+        };
+        let c = cfg();
+        let p = Params::random(&c, 12);
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(&[c.seg_total, c.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[c.d_model, c.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[c.phi_dim], 0.1, &mut rng);
+        let (y_ref, a_ref, z_ref) = cell_task(&c, &p, 0, &x, &a, &z);
+        for (prec, budget) in [
+            (Precision::F16, F16_CELL_ERR_BUDGET),
+            (Precision::Bf16, BF16_CELL_ERR_BUDGET),
+            (Precision::Int8, INT8_CELL_ERR_BUDGET),
+        ] {
+            let mut q = p.clone();
+            q.prepare(prec);
+            let (y, a2, z2) = cell_task(&c, &q, 0, &x, &a, &z);
+            assert!(
+                y.rel_error(&y_ref) < budget,
+                "{prec}: y rel error {} over {budget}",
+                y.rel_error(&y_ref)
+            );
+            assert!(a2.rel_error(&a_ref) < budget, "{prec}: A'");
+            assert!(z2.rel_error(&z_ref) < budget, "{prec}: z'");
+        }
     }
 
     #[test]

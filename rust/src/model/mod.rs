@@ -17,7 +17,7 @@ mod params;
 mod pool;
 
 pub use cell::{assoc_read, assoc_update, attention, cell_task, layer_step, swiglu, LayerView};
-pub use params::{params_order, Params, GLOBAL_ORDER, PARAM_ORDER};
+pub use params::{params_order, KernelWeights, Params, QuantLayer, GLOBAL_ORDER, PARAM_ORDER};
 pub use pool::{default_threads, CellJob, CellResult, ParallelCellPool, PoolStats};
 
 use std::sync::Arc;
@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::scheduler::{StepBackend, WorkerStats};
-use crate::tensor::{self, Tensor};
+use crate::tensor::{self, Precision, Tensor};
 
 /// Pure-rust [`StepBackend`].
 ///
@@ -45,8 +45,15 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Single-threaded backend (identical to the pre-pool code path).
-    pub fn new(cfg: ModelConfig, params: Params) -> Self {
+    /// Single-threaded backend. Prepares the params' kernel-ready f32
+    /// weight storage if the caller hasn't already — byte-identical to
+    /// the unprepared path, but cells share one weight copy instead of
+    /// materializing 13 tensors per cell step. Use
+    /// [`with_precision`](Self::with_precision) for f16/bf16/int8.
+    pub fn new(cfg: ModelConfig, mut params: Params) -> Self {
+        if params.precision().is_none() {
+            params.prepare(Precision::F32);
+        }
         Self { cfg, params: Arc::new(params), pool: None, step_calls: 0, cells_computed: 0 }
     }
 
@@ -66,6 +73,34 @@ impl NativeBackend {
     /// Worker threads executing cells (1 = inline).
     pub fn threads(&self) -> usize {
         self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// Re-prepare the weights at `prec` (f32 exact; f16/bf16/int8
+    /// quantized with f32 accumulation — bounded-error, see the
+    /// `*_CELL_ERR_BUDGET` constants in [`crate::tensor::kernels`]).
+    /// Rebuilds the worker pool so every worker sees the new weights;
+    /// order-independent with [`with_threads`](Self::with_threads).
+    pub fn with_precision(mut self, prec: Precision) -> Self {
+        if self.params.precision() == Some(prec) {
+            return self;
+        }
+        let mut p = (*self.params).clone();
+        p.prepare(prec);
+        self.params = Arc::new(p);
+        let threads = self.threads();
+        if threads > 1 {
+            self.pool = Some(ParallelCellPool::new(
+                self.cfg.clone(),
+                Arc::clone(&self.params),
+                threads,
+            ));
+        }
+        self
+    }
+
+    /// The weight precision the backend is running at.
+    pub fn precision(&self) -> Precision {
+        self.params.precision().unwrap_or(Precision::F32)
     }
 
     /// Determinism-test hook: randomized per-cell worker sleep (no-op
@@ -191,8 +226,7 @@ impl StepBackend for NativeBackend {
         }
         self.step_calls += 1;
         self.cells_computed += 1;
-        let view = self.params.layer(layer);
-        Ok(cell::layer_step(&self.cfg, &view, x, a, z))
+        Ok(cell::cell_task(&self.cfg, &self.params, layer, x, a, z))
     }
 
     fn embed(&mut self, tokens: &[u32]) -> Result<Tensor> {
@@ -417,6 +451,67 @@ pub(crate) mod tests {
         // single_step stays inline — pool counters must not move.
         b.single_step(0, &x.index0(0), &a.index0(0), &z.index0(0)).unwrap();
         assert_eq!(b.worker_stats().pool_cells, l as u64);
+    }
+
+    #[test]
+    fn backend_prepares_f32_and_stays_bitexact() {
+        // NativeBackend::new auto-prepares at F32; results must be
+        // byte-identical to the never-prepared cell path.
+        let cfg = test_config();
+        let mut b = NativeBackend::new(cfg.clone(), Params::random(&cfg, 30));
+        assert_eq!(b.precision(), Precision::F32);
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[cfg.phi_dim], 0.1, &mut rng);
+        let (y, a2, z2) = b.single_step(1, &x, &a, &z).unwrap();
+        let raw = Params::random(&cfg, 30);
+        let (y0, a0, z0) = cell::layer_step(&cfg, &raw.layer(1), &x, &a, &z);
+        assert_eq!(y, y0);
+        assert_eq!(a2, a0);
+        assert_eq!(z2, z0);
+    }
+
+    #[test]
+    fn quantized_grouped_step_pooled_matches_inline_bitexact() {
+        // Quantization changes the numbers vs f32, but pooled vs inline
+        // must still agree byte-for-byte at any precision: every cell
+        // runs the same kernels in the same order on exactly one
+        // thread.
+        let cfg = test_config();
+        let l = cfg.n_layers;
+        let mut rng = Rng::new(33);
+        let x = Tensor::randn(&[l, cfg.seg_total, cfg.d_model], 0.5, &mut rng);
+        let a = Tensor::randn(&[l, cfg.d_model, cfg.phi_dim], 0.1, &mut rng);
+        let z = Tensor::randn(&[l, cfg.phi_dim], 0.1, &mut rng);
+        let mask = vec![1.0; l];
+
+        let mut inline = NativeBackend::new(cfg.clone(), Params::random(&cfg, 34))
+            .with_precision(Precision::Int8);
+        assert_eq!(inline.precision(), Precision::Int8);
+        let (y1, a1, z1) = inline.grouped_step(&x, &a, &z, &mask).unwrap();
+
+        // Both construction orders must work: threads-then-precision
+        // and precision-then-threads.
+        let mut p1 = NativeBackend::new(cfg.clone(), Params::random(&cfg, 34))
+            .with_threads(3)
+            .with_precision(Precision::Int8);
+        let mut p2 = NativeBackend::new(cfg.clone(), Params::random(&cfg, 34))
+            .with_precision(Precision::Int8)
+            .with_threads(3);
+        for b in [&mut p1, &mut p2] {
+            let (y2, a2, z2) = b.grouped_step(&x, &a, &z, &mask).unwrap();
+            assert_eq!(y1, y2);
+            assert_eq!(a1, a2);
+            assert_eq!(z1, z2);
+        }
+
+        // And the quantized run stays within the checked-in budget of
+        // the f32 oracle.
+        let mut f32b = NativeBackend::new(cfg.clone(), Params::random(&cfg, 34));
+        let (yf, _, _) = f32b.grouped_step(&x, &a, &z, &mask).unwrap();
+        let err = y1.rel_error(&yf);
+        assert!(err < crate::tensor::kernels::INT8_CELL_ERR_BUDGET, "int8 rel error {err}");
     }
 
     #[test]

@@ -5,10 +5,11 @@
 
 use std::collections::HashMap;
 use std::io::Read;
+use std::sync::Arc;
 
 use crate::config::{Manifest, ModelConfig};
 use crate::error::{Error, Result};
-use crate::tensor::{Rng, Tensor};
+use crate::tensor::{Precision, Rng, Tensor, WeightMat};
 
 /// Stacked per-layer parameter names, in the artifact order (must match
 /// python `model.PARAM_ORDER`).
@@ -29,6 +30,70 @@ pub const fn params_order() -> [&'static str; 13] {
 pub struct Params {
     tensors: HashMap<String, Tensor>,
     n_layers: usize,
+    /// Kernel-ready weights prepared at one [`Precision`] (None until
+    /// [`Params::prepare`] runs). Behind an `Arc` so `Clone` stays
+    /// cheap and every pool worker shares a single prepared copy.
+    kernel: Option<Arc<KernelWeights>>,
+}
+
+/// One layer's ten weight matrices in kernel-ready [`WeightMat`]
+/// storage, plus the small f32 vectors the cell math reads directly
+/// (norm gains and the assoc gate bias are elementwise — quantizing
+/// them buys nothing and costs accuracy).
+pub struct QuantLayer {
+    /// Attention query projection `[d, d]`.
+    pub wq: WeightMat,
+    /// Attention key projection `[d, d]`.
+    pub wk: WeightMat,
+    /// Attention value projection `[d, d]`.
+    pub wv: WeightMat,
+    /// Attention output projection `[d, d]`.
+    pub wo: WeightMat,
+    /// SwiGLU gate projection `[d, f]`.
+    pub wg: WeightMat,
+    /// SwiGLU up projection `[d, f]`.
+    pub wu: WeightMat,
+    /// SwiGLU down projection `[f, d]`.
+    pub wd: WeightMat,
+    /// Associative-memory query projection `[d, k_assoc]`.
+    pub aq: WeightMat,
+    /// Associative-memory key projection `[d, k_assoc]`.
+    pub ak: WeightMat,
+    /// Associative-memory value projection `[d, d]`.
+    pub av: WeightMat,
+    /// Pre-attention RMSNorm gain `[d]` (f32 always).
+    pub n1: Tensor,
+    /// Pre-MLP RMSNorm gain `[d]` (f32 always).
+    pub n2: Tensor,
+    /// Associative write-gate bias `[d]` (f32 always).
+    pub ab: Tensor,
+}
+
+impl QuantLayer {
+    /// Bytes of stored weight-matrix payload in this layer.
+    pub fn weight_bytes(&self) -> usize {
+        [
+            &self.wq, &self.wk, &self.wv, &self.wo, &self.wg, &self.wu, &self.wd, &self.aq,
+            &self.ak, &self.av,
+        ]
+        .iter()
+        .map(|w| w.bytes())
+        .sum()
+    }
+}
+
+/// All layers' weights prepared at one precision — what
+/// [`Params::prepare`] builds and the cell kernels consume.
+pub struct KernelWeights {
+    precision: Precision,
+    layers: Vec<QuantLayer>,
+}
+
+impl KernelWeights {
+    /// The precision every layer was prepared at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
 }
 
 /// Borrowed single-layer view used by the cell math.
@@ -74,7 +139,7 @@ impl Params {
                 .collect();
             tensors.insert(p.name.clone(), Tensor::new(&p.shape, data)?);
         }
-        let s = Self { tensors, n_layers: entry.config.n_layers };
+        let s = Self { tensors, n_layers: entry.config.n_layers, kernel: None };
         s.validate(&entry.config)?;
         Ok(s)
     }
@@ -118,7 +183,7 @@ impl Params {
             };
             tensors.insert(name.to_string(), t);
         }
-        Self { tensors, n_layers: l }
+        Self { tensors, n_layers: l, kernel: None }
     }
 
     fn validate(&self, cfg: &ModelConfig) -> Result<()> {
@@ -177,11 +242,19 @@ impl Params {
         }
     }
 
-    /// Overwrite one stacked/global tensor (trainer support).
+    /// Overwrite one stacked/global tensor (trainer support). If the
+    /// params were [`Params::prepare`]d and a stacked weight changed,
+    /// the kernel weights are rebuilt at the same precision so the
+    /// kernel tier never serves stale weights.
     pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
         match self.tensors.get(name) {
             Some(old) if old.shape() == t.shape() => {
                 self.tensors.insert(name.to_string(), t);
+                if PARAM_ORDER.contains(&name) {
+                    if let Some(prec) = self.precision() {
+                        self.prepare(prec);
+                    }
+                }
                 Ok(())
             }
             Some(old) => Err(Error::Shape {
@@ -191,6 +264,54 @@ impl Params {
             }),
             None => Err(Error::Missing(name.into())),
         }
+    }
+
+    /// Build (or rebuild) the kernel-ready weight storage at `prec`.
+    /// F32 is worth preparing too: the cell then reads shared
+    /// [`WeightMat`]s instead of copying 13 tensors out of the stacked
+    /// store per cell step.
+    pub fn prepare(&mut self, prec: Precision) {
+        let layers = (0..self.n_layers)
+            .map(|l| {
+                let lt = self.layer(l);
+                QuantLayer {
+                    wq: WeightMat::from_tensor(&lt.wq, prec),
+                    wk: WeightMat::from_tensor(&lt.wk, prec),
+                    wv: WeightMat::from_tensor(&lt.wv, prec),
+                    wo: WeightMat::from_tensor(&lt.wo, prec),
+                    wg: WeightMat::from_tensor(&lt.wg, prec),
+                    wu: WeightMat::from_tensor(&lt.wu, prec),
+                    wd: WeightMat::from_tensor(&lt.wd, prec),
+                    aq: WeightMat::from_tensor(&lt.aq, prec),
+                    ak: WeightMat::from_tensor(&lt.ak, prec),
+                    av: WeightMat::from_tensor(&lt.av, prec),
+                    n1: lt.n1,
+                    n2: lt.n2,
+                    ab: lt.ab,
+                }
+            })
+            .collect();
+        self.kernel = Some(Arc::new(KernelWeights { precision: prec, layers }));
+    }
+
+    /// The precision the params were prepared at (None: not prepared —
+    /// the cell falls back to the legacy per-layer tensor copies).
+    pub fn precision(&self) -> Option<Precision> {
+        self.kernel.as_ref().map(|k| k.precision)
+    }
+
+    /// Kernel-ready weights for layer `l`, if prepared.
+    pub fn kernel_layer(&self, l: usize) -> Option<&QuantLayer> {
+        self.kernel.as_ref().map(|k| &k.layers[l])
+    }
+
+    /// Total stored weight-matrix bytes across all prepared layers
+    /// (0 when unprepared) — the footprint the quantized tiers shrink.
+    pub fn kernel_weight_bytes(&self) -> usize {
+        self.kernel
+            .as_ref()
+            .map(|k| k.layers.iter().map(|l| l.weight_bytes()).sum())
+            .unwrap_or(0)
     }
 }
 
@@ -239,5 +360,73 @@ mod tests {
     fn norm_gains_init_to_one() {
         let p = Params::random(&cfg(), 3);
         assert!(p.global("nf").unwrap().data().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn prepare_builds_every_layer_at_the_asked_precision() {
+        let c = cfg();
+        let mut p = Params::random(&c, 4);
+        assert!(p.precision().is_none());
+        assert!(p.kernel_layer(0).is_none());
+        assert_eq!(p.kernel_weight_bytes(), 0);
+
+        p.prepare(Precision::Int8);
+        assert_eq!(p.precision(), Some(Precision::Int8));
+        for l in 0..c.n_layers {
+            let q = p.kernel_layer(l).unwrap();
+            assert_eq!(q.wq.precision(), Precision::Int8);
+            assert_eq!(q.wq.shape(), (c.d_model, c.d_model));
+            assert_eq!(q.wg.shape(), (c.d_model, c.d_ff));
+            assert_eq!(q.wd.shape(), (c.d_ff, c.d_model));
+            assert_eq!(q.aq.shape(), (c.d_model, c.k_assoc));
+            assert_eq!(q.n1.shape(), &[c.d_model]);
+        }
+        let int8_bytes = p.kernel_weight_bytes();
+        p.prepare(Precision::F32);
+        // int8 stores ~1/4 of the f32 payload (plus per-row scales).
+        let f32_bytes = p.kernel_weight_bytes();
+        assert!(int8_bytes * 3 < f32_bytes, "{int8_bytes} vs {f32_bytes}");
+    }
+
+    #[test]
+    fn prepared_f32_dequantizes_bit_equal() {
+        let c = cfg();
+        let mut p = Params::random(&c, 5);
+        p.prepare(Precision::F32);
+        let q = p.kernel_layer(1).unwrap();
+        assert_eq!(q.wq.dequantize(), p.layer(1).wq);
+        assert_eq!(q.wd.dequantize(), p.layer(1).wd);
+    }
+
+    #[test]
+    fn quantized_dequantize_error_bounded() {
+        let c = cfg();
+        let mut p = Params::random(&c, 6);
+        for (prec, budget) in
+            [(Precision::F16, 1e-3f32), (Precision::Bf16, 1e-2f32), (Precision::Int8, 1e-2f32)]
+        {
+            p.prepare(prec);
+            let q = p.kernel_layer(0).unwrap();
+            let err = q.wv.dequantize().rel_error(&p.layer(0).wv);
+            assert!(err < budget, "{prec}: rel error {err}");
+        }
+    }
+
+    #[test]
+    fn set_rebuilds_prepared_weights() {
+        let c = cfg();
+        let mut p = Params::random(&c, 7);
+        p.prepare(Precision::F32);
+        let shape = p.stacked("wq").unwrap().shape().to_vec();
+        p.set("wq", Tensor::full(&shape, 0.25)).unwrap();
+        // The prepared copy must reflect the new stacked tensor.
+        let q = p.kernel_layer(0).unwrap();
+        assert!(q.wq.dequantize().data().iter().all(|&v| v == 0.25));
+        assert_eq!(p.precision(), Some(Precision::F32));
+        // Global (unstacked) sets keep the prepared copy as-is but
+        // must not clear it.
+        let nf_shape = p.global("nf").unwrap().shape().to_vec();
+        p.set("nf", Tensor::zeros(&nf_shape)).unwrap();
+        assert_eq!(p.precision(), Some(Precision::F32));
     }
 }

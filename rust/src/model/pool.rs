@@ -11,7 +11,12 @@
 //! * **fan-out** — each active `(layer, lane)` cell becomes one
 //!   [`CellJob`] on a shared queue; `threads` persistent workers pull
 //!   jobs and execute [`cell_task`](crate::model::cell_task) against a
-//!   shared `Arc<Params>` snapshot (no copies, no locks on the weights);
+//!   shared `Arc<Params>` snapshot (no copies, no locks on the weights).
+//!   The snapshot carries the params' prepared kernel weights, so every
+//!   worker inherits the backend's [`Precision`](crate::tensor::Precision)
+//!   — f32, f16, bf16, or int8 — automatically, and
+//!   [`NativeBackend::with_precision`](crate::model::NativeBackend::with_precision)
+//!   rebuilds the pool so re-preparation can never race a running step;
 //! * **join** — [`execute`](ParallelCellPool::execute) blocks until
 //!   every job of the step has returned, *before* the session's memory
 //!   hand-off (the shift that feeds cell outputs to the next diagonal);

@@ -62,6 +62,28 @@ impl DeviceSpec {
         }
     }
 
+    /// The CI runner's CPU, measured — not guessed — with a small C
+    /// microbenchmark (gcc -O2 -mavx2 -mfma on the 1-core Xeon @
+    /// 2.10 GHz the hosted runners hand out): single-core AVX2 FMA peak
+    /// ~22.5-24.6 GFLOP/s, separate mul+add ~22.2-25.1 GFLOP/s,
+    /// streaming-read bandwidth ~10.6-11.5 GB/s, copy ~11.6-11.8 GB/s.
+    /// `peak_flops`/`mem_bw` take the round midpoints; `sms = 1`
+    /// (one core, no wave quantization, hence the tiny `wave_alpha`)
+    /// and `k0 = 16` (register-tiled CPU GEMMs saturate at much
+    /// smaller k than tensor-core tiles). This is the roofline the
+    /// `gemm_kernels` bench suite reports achieved GFLOP/s against.
+    pub fn ci_host() -> Self {
+        Self {
+            name: "ci-host-1core",
+            peak_flops: 24e9,
+            mem_bw: 11e9,
+            launch_s: 5e-6,
+            sms: 1.0,
+            wave_alpha: 0.25,
+            k0: 16.0,
+        }
+    }
+
     /// GEMM efficiency for a given tile count and inner dim.
     pub fn gemm_eff(&self, tiles: f64, k: f64) -> f64 {
         let u = tiles / self.sms;
@@ -128,6 +150,21 @@ mod tests {
         let tiny = ops::gemm(&d, 8, 8, 8, 1);
         assert!(d.time(&tiny) < 2.0 * d.launch_s);
         assert!(d.time(&tiny) >= d.launch_s);
+    }
+
+    #[test]
+    fn ci_host_is_a_cpu_not_a_gpu() {
+        let d = DeviceSpec::ci_host();
+        // Orders of magnitude below the accelerators, and single-"SM":
+        // occupancy must already be near-saturated at one tile.
+        assert!(d.peak_flops < DeviceSpec::a100().peak_flops / 1e3);
+        assert!(d.mem_bw < DeviceSpec::a100().mem_bw / 100.0);
+        assert!(d.gemm_eff(1.0, 128.0) > 0.7);
+        // A bench-sized GEMM lands in single-digit GFLOP/s territory —
+        // the regime the gemm_kernels suite actually measures.
+        let g = ops::gemm(&d, 96, 96, 192, 1);
+        let achieved = d.achieved_flops(&g);
+        assert!(achieved > 1e9 && achieved <= d.peak_flops, "{achieved}");
     }
 
     #[test]

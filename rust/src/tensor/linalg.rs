@@ -1,24 +1,41 @@
 //! Matmul family for the native backend.
 //!
-//! Plain triple loops over a shared row-blocked kernel ([`matmul_row`])
-//! — fast enough for the tiny CPU-validation configs, and *bit-stable*:
-//! every output row's accumulation order is fixed in one place, so the
-//! native diagonal and sequential executors agree bit-for-bit whether a
-//! cell runs inline or on a pool worker (the property the scheduler
-//! proptests and `parallel_parity` tests rely on). [`matmul_rows`]
-//! exposes the row blocks directly: today's cell pool parallelizes
-//! whole cells (which all funnel through this kernel), and row
-//! partitioning is the proven-bit-exact building block for splitting a
-//! single large cell across workers later.
+//! Two tiers behind one set of entry points ([`matmul`],
+//! [`matmul_rows`], [`matmul_at`], [`matmul_bt`]):
+//!
+//! * the **scalar oracle** (`*_scalar`) — plain triple loops over a
+//!   shared row kernel ([`matmul_row`]). Every output row's
+//!   accumulation order is fixed in one place, so the native diagonal
+//!   and sequential executors agree bit-for-bit whether a cell runs
+//!   inline or on a pool worker (the property the scheduler proptests
+//!   and `parallel_parity` tests rely on);
+//! * the **blocked tier** (`*_blocked`) — cache-blocked,
+//!   SIMD-dispatched kernels from [`super::kernels`] that preserve the
+//!   oracle's per-element accumulation chains exactly, and are
+//!   therefore *byte-identical* to it (enforced by
+//!   `blocked_matches_scalar_bitexact_ragged` below and
+//!   `tests/kernel_parity.rs`).
+//!
+//! The entry points dispatch on the process-wide
+//! [`super::kernels::kernel_policy`] and record flops/elapsed into the
+//! per-kernel counters; the forced `*_scalar` / `*_blocked` variants
+//! are public for parity tests and microbenchmarks and stay
+//! unrecorded. [`matmul_rows`] exposes row blocks directly: today's
+//! cell pool parallelizes whole cells (which all funnel through these
+//! kernels), and row partitioning is the proven-bit-exact building
+//! block for splitting a single large cell across workers later.
 
+use super::kernels::{self, KernelKind, KernelPolicy};
 use super::Tensor;
+use std::time::Instant;
 
 /// One output row of `A @ B`: `orow[j] += arow[p] * B[p, j]`. The
-/// row-blocked kernel every matmul entry point shares — a row's
-/// accumulation order is fixed here and nowhere else, so any partition
-/// of rows across workers reproduces the full product bit-for-bit.
+/// row-blocked oracle kernel — a row's accumulation order is fixed here
+/// (and mirrored, chain-for-chain, by the blocked tier), so any
+/// partition of rows across workers reproduces the full product
+/// bit-for-bit.
 #[inline]
-fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+pub(crate) fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
     for (p, &av) in arow.iter().enumerate() {
         if av == 0.0 {
             continue;
@@ -30,9 +47,19 @@ fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
     }
 }
 
-/// C[m,n] = A[m,k] @ B[k,n].
+/// C[m,n] = A[m,k] @ B[k,n], via the active [`kernels::kernel_policy`].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_rows(a, b, 0, a.shape()[0])
+}
+
+/// [`matmul`] forced onto the scalar oracle (unrecorded).
+pub fn matmul_scalar(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_rows_scalar(a, b, 0, a.shape()[0])
+}
+
+/// [`matmul`] forced onto the blocked tier (unrecorded).
+pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_rows_blocked(a, b, 0, a.shape()[0])
 }
 
 /// Rows `[r0, r1)` of `A[m,k] @ B[k,n]` as a `[r1 - r0, n]` tensor —
@@ -46,6 +73,18 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// for intra-cell parallelism when single cells grow large enough to
 /// need it.
 pub fn matmul_rows(a: &Tensor, b: &Tensor, r0: usize, r1: usize) -> Tensor {
+    let t0 = Instant::now();
+    let out = match kernels::kernel_policy() {
+        KernelPolicy::Scalar => matmul_rows_scalar(a, b, r0, r1),
+        KernelPolicy::Blocked => matmul_rows_blocked(a, b, r0, r1),
+    };
+    let flops = 2 * ((r1 - r0) * a.shape()[1] * b.shape()[1]) as u64;
+    kernels::record(KernelKind::MatMul, flops, t0.elapsed().as_nanos() as u64);
+    out
+}
+
+/// [`matmul_rows`] forced onto the scalar oracle (unrecorded).
+pub fn matmul_rows_scalar(a: &Tensor, b: &Tensor, r0: usize, r1: usize) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
@@ -61,8 +100,38 @@ pub fn matmul_rows(a: &Tensor, b: &Tensor, r0: usize, r1: usize) -> Tensor {
     Tensor::new(&[rows, n], out).expect("matmul_rows shape")
 }
 
-/// C[m,n] = A[k,m]^T @ B[k,n] (A stored transposed).
+/// [`matmul_rows`] forced onto the blocked tier (unrecorded).
+pub fn matmul_rows_blocked(a: &Tensor, b: &Tensor, r0: usize, r1: usize) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    assert!(r0 <= r1 && r1 <= m, "row block [{r0}, {r1}) out of 0..{m}");
+    let rows = r1 - r0;
+    let mut out = vec![0.0f32; rows * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..rows {
+        let arow = &ad[(r0 + i) * k..(r0 + i + 1) * k];
+        kernels::row_f32_skip(arow, bd, n, &mut out[i * n..(i + 1) * n]);
+    }
+    Tensor::new(&[rows, n], out).expect("matmul_rows shape")
+}
+
+/// C[m,n] = A[k,m]^T @ B[k,n] (A stored transposed), via the active
+/// [`kernels::kernel_policy`].
 pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let t0 = Instant::now();
+    let out = match kernels::kernel_policy() {
+        KernelPolicy::Scalar => matmul_at_scalar(a, b),
+        KernelPolicy::Blocked => matmul_at_blocked(a, b),
+    };
+    let flops = 2 * (a.shape()[0] * a.shape()[1] * b.shape()[1]) as u64;
+    kernels::record(KernelKind::MatMulAt, flops, t0.elapsed().as_nanos() as u64);
+    out
+}
+
+/// [`matmul_at`] forced onto the scalar oracle (unrecorded).
+pub fn matmul_at_scalar(a: &Tensor, b: &Tensor) -> Tensor {
     let (k, m) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_at inner dims");
@@ -86,8 +155,46 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(&[m, n], out).expect("matmul_at shape")
 }
 
-/// C[m,n] = A[m,k] @ B[n,k]^T (B stored transposed — attention scores).
+/// [`matmul_at`] forced onto the blocked tier (unrecorded): pack `A^T`
+/// to row-major `[m, k]`, then run the skip row kernel. Packing moves
+/// data, not arithmetic — each output element still accumulates in
+/// ascending-`p` order with the same zero-skips, so the result is
+/// byte-identical to the oracle's p-outer loop.
+pub fn matmul_at_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_at inner dims");
+    let ad = a.data();
+    let bd = b.data();
+    let mut at = vec![0.0f32; m * k];
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        for (i, &v) in arow.iter().enumerate() {
+            at[i * k + p] = v;
+        }
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        kernels::row_f32_skip(&at[i * k..(i + 1) * k], bd, n, &mut out[i * n..(i + 1) * n]);
+    }
+    Tensor::new(&[m, n], out).expect("matmul_at shape")
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]^T (B stored transposed — attention scores),
+/// via the active [`kernels::kernel_policy`].
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let t0 = Instant::now();
+    let out = match kernels::kernel_policy() {
+        KernelPolicy::Scalar => matmul_bt_scalar(a, b),
+        KernelPolicy::Blocked => matmul_bt_blocked(a, b),
+    };
+    let flops = 2 * (a.shape()[0] * a.shape()[1] * b.shape()[0]) as u64;
+    kernels::record(KernelKind::MatMulBt, flops, t0.elapsed().as_nanos() as u64);
+    out
+}
+
+/// [`matmul_bt`] forced onto the scalar oracle (unrecorded).
+pub fn matmul_bt_scalar(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_bt inner dims");
@@ -105,6 +212,30 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
             }
             orow[j] = acc;
         }
+    }
+    Tensor::new(&[m, n], out).expect("matmul_bt shape")
+}
+
+/// [`matmul_bt`] forced onto the blocked tier (unrecorded): pack `B^T`
+/// to row-major `[k, n]`, then run the dot row kernel (fresh zero
+/// accumulator, no zero-skip, assignment — the oracle's exact
+/// semantics for this variant).
+pub fn matmul_bt_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt inner dims");
+    let ad = a.data();
+    let bd = b.data();
+    let mut bt = vec![0.0f32; k * n];
+    for j in 0..n {
+        let brow = &bd[j * k..(j + 1) * k];
+        for (p, &v) in brow.iter().enumerate() {
+            bt[p * n + j] = v;
+        }
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        kernels::row_f32_dot(&ad[i * k..(i + 1) * k], &bt, n, &mut out[i * n..(i + 1) * n]);
     }
     Tensor::new(&[m, n], out).expect("matmul_bt shape")
 }
@@ -215,5 +346,54 @@ mod tests {
         let mut rng = Rng::new(5);
         let a = Tensor::randn(&[4, 4], 1.0, &mut rng);
         assert_eq!(matmul(&a, &eye), a);
+    }
+
+    /// The tentpole contract: the blocked tier is byte-identical
+    /// (`to_bits`, not approx) to the scalar oracle for all four
+    /// variants across ragged shapes straddling the register tile —
+    /// 1, odd, JTILE-1, JTILE, JTILE+1, and a multi-tile size — with
+    /// zeros (and negative zeros) sprinkled in to exercise the skip
+    /// paths. The deeper grids live in `tests/kernel_parity.rs`.
+    #[test]
+    fn blocked_matches_scalar_bitexact_ragged() {
+        let assert_bits = |x: &Tensor, y: &Tensor, ctx: &str| {
+            assert_eq!(x.shape(), y.shape(), "{ctx}: shape");
+            for (i, (a, b)) in x.data().iter().zip(y.data()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: elem {i}: {a} vs {b}");
+            }
+        };
+        let mut rng = Rng::new(0xB10C);
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 31), (4, 7, 32), (2, 9, 33), (5, 33, 65), (7, 16, 96)]
+        {
+            let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            for (i, v) in a.data_mut().iter_mut().enumerate() {
+                if i % 7 == 3 {
+                    *v = 0.0;
+                }
+                if i % 11 == 5 {
+                    *v = -0.0;
+                }
+            }
+            if let Some(v) = b.data_mut().first_mut() {
+                *v = -0.0;
+            }
+            let ctx = format!("m={m} k={k} n={n}");
+            assert_bits(&matmul_blocked(&a, &b), &matmul_scalar(&a, &b), &ctx);
+            // A^T path: reuse `a` transposed so shapes line up.
+            let at = a.t();
+            assert_bits(&matmul_at_blocked(&at, &b), &matmul_at_scalar(&at, &b), &ctx);
+            // B^T path: b transposed to [n, k].
+            let bt = b.t();
+            assert_bits(&matmul_bt_blocked(&a, &bt), &matmul_bt_scalar(&a, &bt), &ctx);
+            // Row blocks.
+            let mid = m / 2;
+            assert_bits(
+                &matmul_rows_blocked(&a, &b, mid, m),
+                &matmul_rows_scalar(&a, &b, mid, m),
+                &ctx,
+            );
+        }
     }
 }

@@ -8,15 +8,28 @@
 //! Split across submodules:
 //! * [`ops`] — elementwise / reduction / activation ops,
 //! * [`linalg`] — matmul family (incl. the grouped matmul used to mirror
-//!   the L1 grouped-GEMM kernel),
+//!   the L1 grouped-GEMM kernel), policy-dispatched between the scalar
+//!   oracle and the blocked SIMD tier,
+//! * [`kernels`] — the tiered GEMM kernel layer: [`KernelPolicy`],
+//!   blocked row kernels, f16/bf16/int8 weight storage
+//!   ([`WeightMat`]/[`WeightView`]), and per-kernel flop counters,
 //! * [`rng`] — a tiny deterministic PRNG (xoshiro256**) so tests and
 //!   workload generators never need the `rand` crate.
 
+pub mod kernels;
 mod linalg;
 mod ops;
 mod rng;
 
-pub use linalg::{grouped_matmul, matmul, matmul_at, matmul_bt, matmul_rows};
+pub use kernels::{
+    env_kernel_policy, env_precision, kernel_policy, kernel_snapshot, kernel_totals,
+    set_kernel_policy, KernelPolicy, KernelSnapshot, Precision, WeightMat, WeightView,
+};
+pub use linalg::{
+    grouped_matmul, matmul, matmul_at, matmul_at_blocked, matmul_at_scalar, matmul_blocked,
+    matmul_bt, matmul_bt_blocked, matmul_bt_scalar, matmul_rows, matmul_rows_blocked,
+    matmul_rows_scalar, matmul_scalar,
+};
 pub use ops::*;
 pub use rng::Rng;
 
