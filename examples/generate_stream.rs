@@ -51,6 +51,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             stats.stats.mean_group()
         ),
         Event::Error { error } => eprintln!("  error: {error}"),
+        _ => {}
     })?;
 
     // 2. Exactness: the same continuation must fall out of the

@@ -1,0 +1,12 @@
+//! Sharded serving scaling: lane x1/x2 and layer-split coordinator
+//! topologies vs the 1-process engine, over real TCP on localhost.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `shard_scaling`; this binary is the legacy `cargo bench` entry
+//! point and is equivalent to `diagonal-batching bench --suite shard_scaling`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("shard_scaling")
+}

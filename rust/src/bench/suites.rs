@@ -21,8 +21,11 @@ use crate::bench::{bench, bench_n, fmt_s, fmt_x, Table};
 use crate::config::{ExecMode, ModelConfig};
 use crate::coordinator::{Event, GenerateRequest, InferenceEngine, RequestQueue};
 use crate::error::{Error, Result};
+use crate::json::Value;
 use crate::model::{NativeBackend, Params};
 use crate::runtime::HloBackend;
+use crate::server::{Client, Server, ServerOptions};
+use crate::shard::{CoordinatorOptions, ShardCoordinator};
 use crate::scheduler::{Executor, RunStats, ScheduleMode, StepBackend, WavefrontSession};
 use crate::simulator::{ops, tables, DeviceSpec};
 use crate::tensor::{
@@ -142,6 +145,12 @@ pub fn all() -> Vec<Suite> {
             tags: &["serve", "native", "measured"],
             about: "Shared-prefix burst through the memory-state prefix cache",
             run: cache_reuse,
+        },
+        Suite {
+            name: "shard_scaling",
+            tags: &["serve", "native", "measured"],
+            about: "Sharded serving: lane x1/x2 and layer-split pipelines vs 1 process",
+            run: shard_scaling,
         },
     ]
 }
@@ -1635,6 +1644,155 @@ fn serve_generate(ctx: &mut SuiteCtx) -> Result<()> {
     ctx.note(format!(
         "OK: {n_requests} concurrent generations stayed bit-exact and packed to \
          mean group {mg:.2} (> solo bound {solo_bound:.2})"
+    ));
+    Ok(())
+}
+
+/// Sharded serving scaling: the same concurrent greedy burst through
+/// (1) one in-process engine, (2) a shard coordinator over 1 and then
+/// 2 lane workers, and (3) a 2-stage layer-split pipeline — all over
+/// real TCP on localhost. Gates: every topology's outputs are
+/// bit-equal to the 1-process oracle and no phantom failovers fire;
+/// the pipeline's per-segment hand-off cost is recorded and bounded.
+fn shard_scaling(ctx: &mut SuiteCtx) -> Result<()> {
+    let cfg = serving_config();
+    let seed = 61u64;
+    let n_requests: u64 = if ctx.settings().fast { 4 } else { 8 };
+    let prompt_segs = 2usize;
+    let new_tokens = 2 * cfg.seg;
+    let prompt = |i: u64| -> Vec<u32> {
+        (0..(prompt_segs * cfg.seg) as u32)
+            .map(|t| (t * 11 + i as u32) % cfg.vocab as u32)
+            .collect()
+    };
+
+    // 1-process oracle: the correctness reference for every topology
+    // and the serial-latency baseline.
+    let mut solo = InferenceEngine::new(
+        NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+        ExecMode::Diagonal,
+    );
+    let mut want: Vec<Vec<u32>> = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        want.push(solo.process(&GenerateRequest::new(i, prompt(i)).generate(new_tokens))?.generated);
+    }
+    let solo_wall = t0.elapsed().as_secs_f64();
+
+    let start_worker = |with_shard: bool| -> Result<Server> {
+        let engine = InferenceEngine::new(
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+            ExecMode::Diagonal,
+        );
+        let backend = with_shard.then(|| {
+            Box::new(NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)))
+                as Box<dyn StepBackend + Send>
+        });
+        Server::start_with(engine, "127.0.0.1:0", 32, ServerOptions { shard_backend: backend, fault: None })
+    };
+
+    // One concurrent client thread per request; every output is gated
+    // against the oracle.
+    let burst = |addr: String| -> Result<f64> {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let addr = addr.clone();
+                let p = prompt(i);
+                std::thread::spawn(move || -> Result<Vec<u32>> {
+                    let mut c = Client::connect(&addr)?;
+                    let frame = Value::obj(vec![
+                        ("id", Value::Num(i as f64)),
+                        ("tokens", Value::arr_u32(&p)),
+                        ("max_new_tokens", Value::Num(new_tokens as f64)),
+                    ]);
+                    let done = c.request_stream(&frame, |_| {})?;
+                    done.req("generated")?.as_u32_vec()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let got = h.join().map_err(|_| Error::Bench("client thread panicked".into()))??;
+            check(
+                got == want[i],
+                format!("request {i}: sharded output diverged from the 1-process oracle"),
+            )?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    let run_topology = |workers: usize, split: usize| -> Result<(f64, u64, u64, u64)> {
+        let servers: Vec<Server> =
+            (0..workers).map(|_| start_worker(split > 1)).collect::<Result<_>>()?;
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+        let coord = ShardCoordinator::start(
+            cfg.clone(),
+            &addrs,
+            "127.0.0.1:0",
+            CoordinatorOptions { layer_split: split, ..CoordinatorOptions::default() },
+        )?;
+        let wall = burst(coord.addr.to_string())?;
+        let stats = coord.stats();
+        let out = (
+            wall,
+            stats.shard_failovers.get(),
+            stats.shard_handoffs.get(),
+            stats.shard_handoff_bytes.get(),
+        );
+        coord.stop();
+        for s in servers {
+            s.stop();
+        }
+        Ok(out)
+    };
+
+    let (lane1_wall, f1, _, _) = run_topology(1, 1)?;
+    let (lane2_wall, f2, _, _) = run_topology(2, 1)?;
+    let (split_wall, f3, split_handoffs, split_bytes) = run_topology(2, 2)?;
+    check(f1 + f2 + f3 == 0, "phantom failover on a healthy shard")?;
+    check(split_handoffs > 0, "layer-split ran without hand-offs")?;
+    let bytes_per_handoff = split_bytes as f64 / split_handoffs as f64;
+
+    let total_tokens = (n_requests as usize * new_tokens) as f64;
+    let tps = |wall: f64| total_tokens / wall;
+    let mut t = Table::new(
+        &format!(
+            "shard_scaling — {n_requests} concurrent clients x ({} prompt + {new_tokens} new \
+             tokens), TCP localhost",
+            prompt_segs * cfg.seg
+        ),
+        &["topology", "wall (ms)", "tokens/s", "hand-off"],
+    );
+    t.row(vec!["1 process (serial)".into(), format!("{:.1}", solo_wall * 1e3), format!("{:.0}", tps(solo_wall)), "-".into()]);
+    t.row(vec!["coordinator + 1 lane worker".into(), format!("{:.1}", lane1_wall * 1e3), format!("{:.0}", tps(lane1_wall)), "checkpoints absorbed".into()]);
+    t.row(vec!["coordinator + 2 lane workers".into(), format!("{:.1}", lane2_wall * 1e3), format!("{:.0}", tps(lane2_wall)), "checkpoints absorbed".into()]);
+    t.row(vec![
+        "coordinator + 2-stage layer split".into(),
+        format!("{:.1}", split_wall * 1e3),
+        format!("{:.0}", tps(split_wall)),
+        format!("{split_handoffs} x {:.0} B", bytes_per_handoff),
+    ]);
+    ctx.table(&t);
+
+    // Deterministic gate: the per-segment hand-off is a constant-size
+    // memory snapshot, not activations-times-sequence. Bound it by the
+    // JSON-encoded size of the per-layer (a, z) state plus slack.
+    let state_floats: usize = cfg.n_layers * (cfg.phi_dim * cfg.d_model + cfg.phi_dim);
+    check(
+        bytes_per_handoff < (state_floats * 16 + 4096) as f64,
+        format!("hand-off blew up: {bytes_per_handoff:.0} bytes for {state_floats} state floats"),
+    )?;
+
+    ctx.metric_lower("handoff_bytes_per_segment", bytes_per_handoff);
+    ctx.metric_info("tokens_per_s_1proc", tps(solo_wall));
+    ctx.metric_info("tokens_per_s_lane1", tps(lane1_wall));
+    ctx.metric_info("tokens_per_s_lane2", tps(lane2_wall));
+    ctx.metric_info("tokens_per_s_split2", tps(split_wall));
+    ctx.metric_info("lane2_vs_lane1_speedup", lane1_wall / lane2_wall);
+    ctx.note(format!(
+        "OK: {n_requests} clients bit-exact across 1-process, lane x1/x2 and layer-split \
+         topologies; {:.0} B/segment hand-off",
+        bytes_per_handoff
     ));
     Ok(())
 }

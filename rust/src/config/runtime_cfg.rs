@@ -125,6 +125,15 @@ pub struct RuntimeConfig {
     /// backend ignores this. The `PALLAS_PRECISION` env var seeds the
     /// default.
     pub precision: Precision,
+    /// Shard worker addresses (`--workers a:1,b:2`); non-empty makes
+    /// the `shard` subcommand start a
+    /// [`ShardCoordinator`](crate::shard::ShardCoordinator) over them
+    /// instead of serving locally.
+    pub workers: Vec<String>,
+    /// Contiguous layer ranges per worker chain (`--layer-split K`);
+    /// 1 = whole requests per worker (lane sharding). The worker count
+    /// must be a multiple of this.
+    pub layer_split: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -143,6 +152,8 @@ impl Default for RuntimeConfig {
             cache_bytes: 0,
             kernel: crate::tensor::env_kernel_policy(),
             precision: crate::tensor::env_precision(),
+            workers: Vec::new(),
+            layer_split: 1,
         }
     }
 }
@@ -190,6 +201,13 @@ impl RuntimeConfig {
         if let Some(x) = v.get("precision") {
             c.precision = x.as_str()?.parse()?;
         }
+        if let Some(x) = v.get("workers") {
+            c.workers =
+                x.as_arr()?.iter().map(|w| Ok(w.as_str()?.to_string())).collect::<Result<_>>()?;
+        }
+        if let Some(x) = v.get("layer_split") {
+            c.layer_split = x.as_usize()?.max(1);
+        }
         Ok(c)
     }
 
@@ -227,6 +245,11 @@ impl RuntimeConfig {
             ("cache_bytes", Value::Num(self.cache_bytes as f64)),
             ("kernel", Value::Str(self.kernel.to_string())),
             ("precision", Value::Str(self.precision.to_string())),
+            (
+                "workers",
+                Value::Arr(self.workers.iter().map(|w| Value::Str(w.clone())).collect()),
+            ),
+            ("layer_split", Value::Num(self.layer_split as f64)),
         ])
     }
 }
@@ -309,6 +332,30 @@ mod tests {
         let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.kernel, KernelPolicy::Scalar);
         assert_eq!(back.precision, Precision::Int8);
+    }
+
+    #[test]
+    fn shard_fields_roundtrip() {
+        let v = Value::parse(
+            r#"{"workers": ["127.0.0.1:7501", "127.0.0.1:7502"], "layer_split": 2}"#,
+        )
+        .unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.workers, vec!["127.0.0.1:7501", "127.0.0.1:7502"]);
+        assert_eq!(c.layer_split, 2);
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.workers, c.workers);
+        assert_eq!(back.layer_split, 2);
+        // Defaults: no workers, lane mode.
+        let d = RuntimeConfig::default();
+        assert!(d.workers.is_empty());
+        assert_eq!(d.layer_split, 1);
+        // 0 clamps to 1 (a chain always has at least one range).
+        let v = Value::parse(r#"{"layer_split": 0}"#).unwrap();
+        assert_eq!(RuntimeConfig::from_json(&v).unwrap().layer_split, 1);
+        // Non-string worker entries are rejected.
+        let v = Value::parse(r#"{"workers": [7]}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
     }
 
     #[test]

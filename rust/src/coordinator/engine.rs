@@ -99,6 +99,11 @@ pub struct GenerateRequest {
     /// Seed the recurrence from a saved conversation or snapshot
     /// instead of empty memory.
     pub resume: Option<ResumeFrom>,
+    /// Emit an [`Event::Snapshot`] at every segment boundary (prompt
+    /// and decode) on the serving path — the shard coordinator's
+    /// failover checkpoints. Off by default: checkpoint capture costs a
+    /// state clone per boundary.
+    pub checkpoint: bool,
     /// Shared with every [`RequestHandle`] cloned off this request —
     /// cancellation plus the save-on-completion flag
     /// ([`with_save`](Self::with_save) / [`RequestHandle::request_save`]).
@@ -116,6 +121,7 @@ impl GenerateRequest {
             mode: None,
             want_logits: false,
             resume: None,
+            checkpoint: false,
             flags: Arc::new(ReqFlags::default()),
         }
     }
@@ -157,6 +163,13 @@ impl GenerateRequest {
 
     pub fn save_requested(&self) -> bool {
         self.flags.save.load(Ordering::SeqCst)
+    }
+
+    /// Builder: emit [`Event::Snapshot`] boundary checkpoints on the
+    /// serving path (see the field docs).
+    pub fn with_checkpoint(mut self) -> Self {
+        self.checkpoint = true;
+        self
     }
 
     /// Builder: resume a conversation the engine saved earlier
@@ -230,6 +243,14 @@ pub enum Event {
     SegmentDone { index: usize, greedy: Vec<u32> },
     /// One generated token; `pos` counts new tokens from 0.
     Token { pos: usize, token: u32 },
+    /// Non-terminal: the post-segment memory state of segment `index`
+    /// (absolute), emitted for requests submitted with
+    /// [`GenerateRequest::with_checkpoint`]. This is the shard
+    /// coordinator's failover checkpoint: holding the latest one lets a
+    /// dead worker's request resume on a survivor via
+    /// [`ResumeFrom::Snapshot`] with zero recompute of the consumed
+    /// segments.
+    Snapshot { index: usize, state: Box<MemSnapshot> },
     /// Terminal: the request finished; the aggregate [`Response`].
     Done { stats: Box<Response> },
     /// Terminal: the request failed, was cancelled, or missed its
@@ -337,6 +358,19 @@ pub struct EngineStats {
     /// `kernel_flops / kernel_ns` is the achieved GFLOP/s, exactly
     /// (flops per nanosecond == 1e9 flops per second).
     pub kernel_ns: Counter,
+    /// Requests the shard coordinator routed to a worker (coordinator
+    /// side; zero on plain workers and single-process engines).
+    pub shard_routed: Counter,
+    /// Worker deaths the coordinator survived by re-admitting the
+    /// in-flight request on another worker.
+    pub shard_failovers: Counter,
+    /// Cross-process hand-off frames: pipeline activation/state frames
+    /// plus absorbed failover checkpoints.
+    pub shard_handoffs: Counter,
+    /// Serialized bytes those hand-off frames carried.
+    pub shard_handoff_bytes: Counter,
+    /// Workers the coordinator currently believes are alive.
+    pub shard_workers: Gauge,
 }
 
 impl EngineStats {
@@ -411,6 +445,11 @@ impl EngineStats {
             ("kernel_time_ms", Value::Num(self.kernel_ns.get() as f64 / 1e6)),
             ("kernel_gflops", Value::Num(self.kernel_gflops())),
             ("kernel_policy", Value::Str(crate::tensor::kernel_policy().to_string())),
+            ("shard_routed", Value::Num(self.shard_routed.get() as f64)),
+            ("shard_failovers", Value::Num(self.shard_failovers.get() as f64)),
+            ("shard_handoffs", Value::Num(self.shard_handoffs.get() as f64)),
+            ("shard_handoff_bytes", Value::Num(self.shard_handoff_bytes.get() as f64)),
+            ("shard_workers", Value::Num(self.shard_workers.get() as f64)),
             // Per-kernel breakdown, process-global since process start
             // (the engine-window deltas above cover "this engine"; the
             // breakdown tells you WHICH kernels are doing the work).
@@ -438,7 +477,9 @@ impl EngineStats {
 }
 
 /// What the decode driver wants done with the stream after one exit.
-enum ExitAction {
+/// `pub(crate)` so the shard coordinator's pipeline path can drive the
+/// exact same state machine across processes.
+pub(crate) enum ExitAction {
     /// Not the frontier segment — nothing to feed yet.
     Wait,
     /// Feed this segment back into the live wavefront
@@ -456,21 +497,21 @@ enum ExitAction {
 /// segment `i`'s logits IS the predicted segment `i + 1`, so one exit
 /// yields up to `seg` new tokens and (budget permitting) one appended
 /// segment — exactly the recurrence the sequential oracle runs.
-struct GenDriver {
+pub(crate) struct GenDriver {
     sampler: Sampler,
     /// New tokens still to emit.
     budget_left: usize,
     /// New tokens emitted so far (the `pos` counter).
     emitted: usize,
     /// Segments fed to the stream so far (prompt + appended).
-    fed: usize,
-    generated: Vec<u32>,
+    pub(crate) fed: usize,
+    pub(crate) generated: Vec<u32>,
     /// Argmax of the most recently exited segment.
-    last_greedy: Vec<usize>,
+    pub(crate) last_greedy: Vec<usize>,
 }
 
 impl GenDriver {
-    fn new(req: &GenerateRequest, prompt_segments: usize) -> Self {
+    pub(crate) fn new(req: &GenerateRequest, prompt_segments: usize) -> Self {
         Self {
             sampler: Sampler::new(req.sampling),
             budget_left: req.max_new_tokens,
@@ -481,7 +522,7 @@ impl GenDriver {
         }
     }
 
-    fn on_exit<F: FnMut(Event)>(
+    pub(crate) fn on_exit<F: FnMut(Event)>(
         &mut self,
         index: usize,
         logits: &Tensor,
@@ -545,6 +586,8 @@ struct ServeTicket<T> {
     deadline: Option<Instant>,
     handle: RequestHandle,
     driver: GenDriver,
+    /// Emit boundary [`Event::Snapshot`]s (shard failover checkpoints).
+    checkpoint: bool,
 }
 
 /// How a request's prefill will run: which segments still need
@@ -1366,14 +1409,32 @@ impl<B: StepBackend> InferenceEngine<B> {
             // snapshots riding the exits go into the prefix store.
             while let Some(exit) = session.pop_exited() {
                 let Some(t) = tickets.get_mut(&exit.id) else { continue };
+                let checkpoint = t.checkpoint;
                 if let Some(snap) = exit.snapshot {
+                    if checkpoint {
+                        emit(
+                            &t.ticket,
+                            Event::Snapshot {
+                                index: exit.index,
+                                state: Box::new(snap.clone()),
+                            },
+                        );
+                    }
                     self.insert_prefix(&t.blocks, exit.index, snap);
                 }
                 let (driver, ticket) = (&mut t.driver, &t.ticket);
                 let action = driver.on_exit(exit.index, &exit.logits, &mut |ev| emit(ticket, ev));
                 let hand_off = match action {
                     ExitAction::Wait => Ok(()),
-                    ExitAction::Feed(seg) => session.append_segment(exit.id, seg),
+                    ExitAction::Feed(seg) => {
+                        let fed = session.append_segment(exit.id, seg);
+                        // The just-appended decode segment is the next
+                        // checkpoint boundary.
+                        if fed.is_ok() && checkpoint {
+                            let _ = session.capture_after(exit.id, exit.index + 1);
+                        }
+                        fed
+                    }
                     ExitAction::Finish => session.finish_stream(exit.id),
                 };
                 if let Err(e) = hand_off {
@@ -1482,6 +1543,16 @@ impl<B: StepBackend> InferenceEngine<B> {
                                 let _ = session.capture_after(key, idx);
                             }
                         }
+                        // Checkpointed requests (shard failover) want
+                        // EVERY prompt boundary regardless of the cache;
+                        // targets are a set, so overlap is harmless.
+                        // Decode boundaries are armed per-append in the
+                        // exit loop.
+                        if req.checkpoint {
+                            for idx in plan.reused..plan.total_prompt {
+                                let _ = session.capture_after(key, idx);
+                            }
+                        }
                         if req.max_new_tokens == 0 {
                             // Pure prefill: close the stream up front so
                             // the lane hands over the moment the last
@@ -1504,6 +1575,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                                 reused: plan.reused,
                                 pulled,
                                 ticket,
+                                checkpoint: req.checkpoint,
                             },
                         );
                         true
@@ -1610,6 +1682,7 @@ mod tests {
             Event::SegmentDone { index, .. } => segments.push(index),
             Event::Done { stats } => done = Some(*stats),
             Event::Error { error } => panic!("unexpected error: {error}"),
+            _ => {}
         })
         .unwrap();
         let done = done.expect("terminal Done event");

@@ -113,6 +113,21 @@
 //! without ever re-prefilling history. See ARCHITECTURE.md
 //! "Memory-state cache" and `examples/chat_resume.rs`.
 //!
+//! ## Sharded serving
+//!
+//! The same constant-size snapshots make multi-process serving cheap:
+//! `diagonal-batching shard --workers a:1,b:2` starts a [`shard`]
+//! coordinator that speaks the ordinary client protocol and spreads
+//! requests across `diagonal-batching worker` processes — whole
+//! requests per worker (lane sharding), or contiguous layer ranges per
+//! worker with activation hand-off (`--layer-split K`). Workers
+//! checkpoint each segment boundary back to the coordinator, so a
+//! worker killed mid-request fails over to a survivor and the merged
+//! client stream stays byte-identical to an uninterrupted run
+//! (`rust/tests/shard_failover.rs` proves this under injected death,
+//! stall and connection-drop faults). See ARCHITECTURE.md "Sharded
+//! serving".
+//!
 //! ## Benchmarks
 //!
 //! Every paper figure/table reproduction is a registered suite in
@@ -134,6 +149,7 @@ pub mod model;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod simulator;
 pub mod tensor;
 

@@ -4,6 +4,10 @@
 //! diagonal-batching serve    [--model tiny] [--mode diagonal] [--addr HOST:PORT]
 //!                            [--lanes N] [--threads N] [--synthetic SEED]
 //!                            [--cache-bytes N]      # memory-state prefix cache
+//! diagonal-batching worker   [serve flags] [--fault die_after=K|stall_after=K:MS
+//!                            |drop_after=K]         # serve + shard_* range service
+//! diagonal-batching shard    --workers A:P,B:P [--layer-split K] [--addr HOST:PORT]
+//!                            [--synthetic SEED]     # coordinator over workers
 //! diagonal-batching generate [--tokens N] [--max-new-tokens M] [--temperature T]
 //!                            [--top-k K] [--seed S] [--connect HOST:PORT]
 //!                            [--cancel-after K]     # stream tokens to stdout
@@ -38,7 +42,8 @@ use diagonal_batching::json::Value;
 use diagonal_batching::model::{NativeBackend, Params};
 use diagonal_batching::runtime::HloBackend;
 use diagonal_batching::scheduler::StepBackend;
-use diagonal_batching::server::{Client, Server};
+use diagonal_batching::server::{Client, Server, ServerOptions};
+use diagonal_batching::shard::{CoordinatorOptions, FaultPlan, ShardCoordinator};
 use diagonal_batching::simulator::{tables, DeviceSpec};
 use diagonal_batching::tensor::Precision;
 
@@ -111,6 +116,12 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(p) = flags.get("precision") {
         cfg.precision = p.parse()?;
     }
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    }
+    if let Some(k) = flags.get("layer-split") {
+        cfg.layer_split = k.parse::<usize>()?.max(1);
+    }
     // One global switch: the tensor entry points dispatch on it and the
     // config default already honors PALLAS_KERNEL, so an explicit flag
     // or config file wins over the env var here.
@@ -118,6 +129,8 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg, &flags),
+        "worker" => cmd_worker(&cfg, &flags),
+        "shard" => cmd_shard(&cfg, &flags),
         "generate" => cmd_generate(&cfg, &flags),
         "ctl" => cmd_ctl(&flags),
         "run" => cmd_run(&cfg, &flags),
@@ -138,7 +151,7 @@ fn print_usage() {
         "diagonal-batching — Diagonal Batching for Recurrent Memory Transformers
 
 USAGE:
-  diagonal-batching <serve|generate|ctl|run|bench|tables|babilong|info> [--flags]
+  diagonal-batching <serve|worker|shard|generate|ctl|run|bench|tables|babilong|info> [--flags]
 
 COMMON FLAGS:
   --manifest PATH   artifacts/manifest.json
@@ -176,6 +189,24 @@ SUBCOMMANDS:
                                              prompt prefixes skip their prefill
                                              (bit-exactly) and conversations can
                                              be saved/resumed; 0 = off (default)
+  worker    [serve flags]                    a serve process that additionally
+                                             hosts the shard_* layer-range
+                                             service, so a coordinator can lane-
+                                             or layer-shard onto it
+            --fault SPEC                     deterministic fault injection for
+                                             failover drills: die_after=K,
+                                             stall_after=K:MS or drop_after=K
+                                             (K counts protocol frames)
+  shard     --workers A:P,B:P[,...]          start the sharding coordinator:
+                                             clients speak the ordinary protocol
+                                             to --addr, requests spread across
+                                             the worker processes with snapshot
+                                             failover when one dies mid-request
+            --layer-split K                  contiguous layer ranges per chain
+                                             (worker count must be a multiple);
+                                             1 = whole requests per worker
+            --synthetic SEED                 coordinate the built-in synthetic
+                                             model (workers must match)
   generate  --tokens N                       synthesize an N-token prompt and
             --max-new-tokens M               stream M generated tokens to stdout
             --temperature T --top-k K        sampling (default greedy)
@@ -313,6 +344,76 @@ fn cmd_serve(
     Ok(())
 }
 
+/// A shard worker: the ordinary server plus the `shard_*` layer-range
+/// service, so one process can serve whole requests (lane sharding)
+/// AND host layer ranges for a pipeline coordinator. `--fault` arms
+/// deterministic fault injection (failover drills / CI chaos tests).
+fn cmd_worker(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let backend = serving_backend(cfg, flags)?;
+    // The range service steps outside the engine's wavefront, so it
+    // gets its own backend instance (same weights).
+    let shard_backend = serving_backend(cfg, flags)?;
+    let engine = InferenceEngine::new(backend, cfg.mode)
+        .with_max_tokens(cfg.max_request_tokens)
+        .with_lanes(cfg.lanes)
+        .with_cache_bytes(cfg.cache_bytes);
+    let fault = flags.get("fault").map(|s| FaultPlan::parse(s)).transpose()?;
+    if let Some(f) = &fault {
+        eprintln!("fault injection armed: {f:?}");
+    }
+    let server = Server::start_with(
+        engine,
+        &cfg.addr,
+        cfg.queue_depth,
+        ServerOptions { shard_backend: Some(shard_backend), fault },
+    )?;
+    println!(
+        "shard worker on {} (mode {}) — {{\"cmd\": \"shutdown\"}} or Ctrl-C to stop",
+        server.addr, cfg.mode
+    );
+    server.join();
+    println!("worker stopped cleanly");
+    Ok(())
+}
+
+/// The shard coordinator: client-facing protocol on `--addr`, work
+/// spread across `--workers` (comma-separated `worker` addresses),
+/// whole requests per worker or `--layer-split K` contiguous layer
+/// ranges per chain. See the `shard` module docs.
+fn cmd_shard(
+    cfg: &RuntimeConfig,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    if cfg.workers.is_empty() {
+        return Err("shard needs --workers HOST:PORT[,HOST:PORT...]".into());
+    }
+    let model_cfg = if flags.contains_key("synthetic") {
+        ModelConfig::synthetic()
+    } else {
+        Manifest::load(&cfg.manifest)?.model(&cfg.model)?.config.clone()
+    };
+    let coord = ShardCoordinator::start(
+        model_cfg,
+        &cfg.workers,
+        &cfg.addr,
+        CoordinatorOptions { layer_split: cfg.layer_split, ..CoordinatorOptions::default() },
+    )?;
+    println!(
+        "shard coordinator on {} — {} worker{}, layer split {} — \
+         {{\"cmd\": \"shutdown\"}} or Ctrl-C to stop",
+        coord.addr,
+        cfg.workers.len(),
+        if cfg.workers.len() == 1 { "" } else { "s" },
+        cfg.layer_split
+    );
+    coord.join();
+    println!("coordinator stopped cleanly");
+    Ok(())
+}
+
 /// Stream a generation to stdout: token ids on stdout (one line at the
 /// end), progress/summary on stderr. Local engine by default,
 /// `--connect` drives a running server over TCP instead.
@@ -368,6 +469,7 @@ fn cmd_generate(
             final_state = stats.final_state.clone();
         }
         Event::Error { error } => eprintln!("error: {error}"),
+        _ => {}
     })?;
     if let Some(path) = save_file {
         let snap = final_state.ok_or("no final state was captured")?;

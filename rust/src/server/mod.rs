@@ -37,6 +37,34 @@
 //! <- {"ok": true}
 //! ```
 //!
+//! **Shard extensions** (see [`crate::shard`]). Requests accept two
+//! extra fields: `"checkpoint": true` streams a non-terminal
+//! `{"event": "snapshot", "index": k, "state": {...}}` frame at every
+//! segment boundary (the coordinator's failover checkpoints — never
+//! forwarded to end clients), and `"resume_state": {...}` carries an
+//! inline [`MemSnapshot`](crate::cache::MemSnapshot) to seed the
+//! recurrence directly (the failover re-admission path; no prior save
+//! on this worker needed). A server started with a shard backend
+//! ([`Server::start_with`], the `worker` subcommand) additionally
+//! serves the layer-range pipeline protocol — single-reply commands,
+//! state travelling as bit-exact snapshot JSON:
+//!
+//! ```text
+//! -> {"cmd": "shard_init", "sid": 9, "lo": 0, "hi": 2}   # host layers [lo, hi)
+//! <- {"ok": true, "sid": 9}
+//! -> {"cmd": "shard_load", "sid": 9, "lo": 0, "hi": 2, "state": {...}}
+//! <- {"ok": true, "sid": 9}
+//! -> {"cmd": "shard_segment", "sid": 9, "tokens": [...]}     # first range only
+//! -> {"cmd": "shard_segment", "sid": 9, "x_bits": [...], "x_shape": [T, d]}
+//! <- {"sid": 9, "segments": 3, "state": {...},               # range [lo, hi) state
+//!     "x_bits": [...], "x_shape": [T, d]}                    # or, on the last range:
+//! <- {"sid": 9, "segments": 3, "state": {...}, "logits_bits": [...]}
+//! -> {"cmd": "shard_state", "sid": 9}
+//! <- {"sid": 9, "segments": 3, "state": {...}}
+//! -> {"cmd": "shard_drop", "sid": 9}
+//! <- {"ok": true, "sid": 9}
+//! ```
+//!
 //! **Memory-state cache.** With `--cache-bytes N` the engine runs the
 //! prefix-reuse cache ([`crate::cache`]): prompts sharing a cached
 //! segment-block prefix skip its prefill entirely (`reused_segments`
@@ -98,6 +126,7 @@ use crate::coordinator::{
 use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::scheduler::StepBackend;
+use crate::shard::{FaultPlan, FaultState, ShardService};
 
 /// Events buffered per in-flight request before the slow-consumer
 /// eviction kicks in. Bounds server memory: a stalled client can hold
@@ -121,6 +150,21 @@ type Job = (GenerateRequest, ConnTicket);
 /// `{"cmd": "cancel", "id": N}` works from any connection).
 type CancelRegistry = Arc<Mutex<HashMap<u64, RequestHandle>>>;
 
+/// Optional server capabilities beyond plain serving
+/// ([`Server::start_with`]).
+#[derive(Default)]
+pub struct ServerOptions {
+    /// Serve the `{"cmd": "shard_*"}` layer-range pipeline protocol
+    /// with this backend (what the `worker` subcommand enables). The
+    /// shard backend is separate from the engine's: pipeline lanes are
+    /// driven per-layer by the coordinator, not by the local wavefront.
+    pub shard_backend: Option<Box<dyn StepBackend + Send>>,
+    /// Test-only fault injection: die / stall / sever after K protocol
+    /// frames (`--fault`, [`FaultPlan`]). `None` = no faults, zero
+    /// overhead on the write path beyond one atomic load.
+    pub fault: Option<FaultPlan>,
+}
+
 /// Handle to a running server.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -136,9 +180,20 @@ impl Server {
     /// Start serving `engine` on `addr` (use port 0 for an ephemeral
     /// port; the bound address is in `server.addr`).
     pub fn start<B: StepBackend + Send + 'static>(
+        engine: InferenceEngine<B>,
+        addr: &str,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        Self::start_with(engine, addr, queue_depth, ServerOptions::default())
+    }
+
+    /// [`start`](Self::start) plus shard-worker duty and/or fault
+    /// injection ([`ServerOptions`]).
+    pub fn start_with<B: StepBackend + Send + 'static>(
         mut engine: InferenceEngine<B>,
         addr: &str,
         queue_depth: usize,
+        opts: ServerOptions,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -150,6 +205,8 @@ impl Server {
         // the reply must say so instead of acknowledging a no-op.
         let mid_flight_save = engine.cache_enabled();
         let registry: CancelRegistry = Arc::new(Mutex::new(HashMap::new()));
+        let shard = opts.shard_backend.map(|b| Arc::new(Mutex::new(ShardService::new(b))));
+        let fault = Arc::new(FaultState::new(opts.fault));
 
         // Engine thread: continuous-batching drain loop — every
         // diagonal-mode request packs into one persistent wavefront;
@@ -194,14 +251,30 @@ impl Server {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
+                if fault.is_dead() {
+                    // Injected death: accept and immediately drop, so
+                    // health probes see EOF instead of a reply.
+                    continue;
+                }
                 let q = q3.clone();
                 let sd2 = sd.clone();
                 let ids = next_id.clone();
                 let stats = st.clone();
                 let registry = reg.clone();
+                let shard = shard.clone();
+                let fault = fault.clone();
                 std::thread::spawn(move || {
-                    let _ =
-                        handle_conn(stream, &q, &sd2, &ids, &stats, &registry, mid_flight_save);
+                    let _ = handle_conn(
+                        stream,
+                        &q,
+                        &sd2,
+                        &ids,
+                        &stats,
+                        &registry,
+                        mid_flight_save,
+                        shard.as_deref(),
+                        &fault,
+                    );
                 });
             }
         });
@@ -246,6 +319,7 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     queue: &RequestQueue<Job>,
@@ -254,11 +328,16 @@ fn handle_conn(
     stats: &EngineStats,
     registry: &CancelRegistry,
     mid_flight_save: bool,
+    shard: Option<&Mutex<ShardService>>,
+    fault: &FaultState,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
+        if fault.is_dead() {
+            return Ok(()); // injected worker death: all connections go silent
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -344,6 +423,26 @@ fn handle_conn(
                         error_json(None, &Error::Request(format!("{cmd} needs a numeric id")))
                     )?,
                 },
+                "shard_init" | "shard_load" | "shard_segment" | "shard_state" | "shard_drop" => {
+                    let reply = match shard {
+                        None => error_json(
+                            None,
+                            &Error::Request(format!(
+                                "{cmd} needs a shard worker (start with `worker`, not `serve`)"
+                            )),
+                        ),
+                        Some(svc) => match svc.lock().unwrap().handle(&cmd, &v) {
+                            Ok(val) => val.to_json(),
+                            Err(e) => error_json(None, &e),
+                        },
+                    };
+                    // Shard replies count as protocol frames for fault
+                    // injection: a "dead" worker severs mid-pipeline.
+                    if !fault.before_frame() {
+                        return Ok(());
+                    }
+                    writeln!(writer, "{reply}")?;
+                }
                 other => writeln!(
                     writer,
                     "{}",
@@ -403,10 +502,18 @@ fn handle_conn(
                 Ok(ev) => {
                     let terminal = ev.is_terminal();
                     if !client_gone {
-                        let frame = render_event(wire_id, &ev).to_json();
-                        if writeln!(writer, "{frame}").is_err() {
+                        // Fault injection severs the stream exactly like
+                        // a crashed worker: the request is cancelled and
+                        // the socket closes without a terminal frame.
+                        if !fault.before_frame() {
                             client_gone = true;
                             handle.cancel();
+                        } else {
+                            let frame = render_event(wire_id, &ev).to_json();
+                            if writeln!(writer, "{frame}").is_err() {
+                                client_gone = true;
+                                handle.cancel();
+                            }
                         }
                     }
                     if terminal {
@@ -855,6 +962,89 @@ mod tests {
         assert!(stats.req("mean_group").unwrap().as_f64().unwrap() > 0.0);
         let occ = stats.req("occupancy").unwrap().as_f64().unwrap();
         assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+        server.stop();
+    }
+
+    #[test]
+    fn shard_cmds_require_a_worker() {
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let resp = c
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("shard_init".into())),
+                ("sid", Value::Num(1.0)),
+                ("lo", Value::Num(0.0)),
+                ("hi", Value::Num(1.0)),
+            ]))
+            .unwrap();
+        assert!(resp.req("error").unwrap().as_str().unwrap().contains("worker"));
+        server.stop();
+    }
+
+    #[test]
+    fn shard_segment_roundtrips_over_tcp() {
+        let cfg = crate::model::tests::test_config();
+        let opts = ServerOptions {
+            shard_backend: Some(Box::new(NativeBackend::new(
+                cfg.clone(),
+                Params::random(&cfg, 21),
+            ))),
+            fault: None,
+        };
+        let server = Server::start_with(test_engine(), "127.0.0.1:0", 8, opts).unwrap();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let ok = c
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("shard_init".into())),
+                ("sid", Value::Num(5.0)),
+                ("lo", Value::Num(0.0)),
+                ("hi", Value::Num(cfg.n_layers as f64)),
+            ]))
+            .unwrap();
+        assert!(ok.req("ok").unwrap().as_bool().unwrap());
+        let toks: Vec<u32> = (0..cfg.seg as u32).map(|i| i % 60).collect();
+        let reply = c
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("shard_segment".into())),
+                ("sid", Value::Num(5.0)),
+                ("tokens", Value::arr_u32(&toks)),
+            ]))
+            .unwrap();
+        // Full range [0, L): the reply is final-stage logits plus the
+        // range's post-segment state.
+        assert_eq!(reply.req("segments").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            reply.req("logits_bits").unwrap().as_arr().unwrap().len(),
+            cfg.seg * cfg.vocab
+        );
+        let state =
+            crate::cache::MemSnapshot::from_json(reply.req("state").unwrap()).unwrap();
+        assert_eq!(state.n_layers, cfg.n_layers);
+        assert_eq!(state.segments, 1);
+        let dropped = c
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("shard_drop".into())),
+                ("sid", Value::Num(5.0)),
+            ]))
+            .unwrap();
+        assert!(dropped.req("ok").unwrap().as_bool().unwrap());
+        server.stop();
+    }
+
+    #[test]
+    fn injected_death_severs_streams_and_probes() {
+        let opts =
+            ServerOptions { shard_backend: None, fault: Some(FaultPlan::DieAfterFrames(3)) };
+        let server = Server::start_with(test_engine(), "127.0.0.1:0", 8, opts).unwrap();
+        let addr = server.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+        // The stream dies after 3 frames: no terminal frame, socket EOF.
+        let err = c.generate(&tokens, 64, |_| {}).unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+        // The worker stays dead: health probes get EOF, not a pong.
+        let mut probe = Client::connect(&addr).unwrap();
+        assert!(probe.ping().is_err());
         server.stop();
     }
 

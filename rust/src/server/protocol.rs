@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::cache::MemSnapshot;
 use crate::config::ExecMode;
 use crate::coordinator::{Event, GenerateRequest, Response, SamplingParams};
 use crate::error::Result;
@@ -14,9 +15,12 @@ use crate::json::Value;
 /// Recognized fields: `tokens` (required), `id`, `mode`,
 /// `want_logits`, `max_new_tokens`, `temperature`, `top_k`, `seed`,
 /// `deadline_ms`, `save` (retain the final memory state; the `done`
-/// frame then carries `resume_token`) and `resume` (a previously
+/// frame then carries `resume_token`), `resume` (a previously
 /// returned token — `tokens` then holds only the NEW tokens, the
-/// saved history is never re-prefilled). Ids parse through the full
+/// saved history is never re-prefilled), `resume_state` (an inline
+/// [`MemSnapshot`] object — the shard coordinator's failover path;
+/// takes precedence over `resume`) and `checkpoint` (emit boundary
+/// `snapshot` frames on the serving path). Ids parse through the full
 /// `u64` path so large client-chosen ids (up to 2^53, the exact-f64
 /// range) round-trip.
 pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<GenerateRequest> {
@@ -56,6 +60,12 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
     if let Some(token) = v.get("resume").map(Value::as_u64).transpose()? {
         req = req.resume_token(token);
     }
+    if let Some(state) = v.get("resume_state") {
+        req = req.resume_snapshot(MemSnapshot::from_json(state)?);
+    }
+    if v.get("checkpoint").map(Value::as_bool).transpose()?.unwrap_or(false) {
+        req = req.with_checkpoint();
+    }
     req.mode = mode;
     req.want_logits = want_logits;
     Ok(req)
@@ -63,8 +73,11 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
 
 /// Render one engine [`Event`] as a wire frame. Every frame carries the
 /// request's wire `id` and an `event` discriminator
-/// (`"segment" | "token" | "done" | "error"`); `done` and `error` are
-/// terminal.
+/// (`"segment" | "token" | "snapshot" | "done" | "error"`); `done` and
+/// `error` are terminal. `snapshot` frames only appear for requests
+/// submitted with `"checkpoint": true` — they carry the full boundary
+/// [`MemSnapshot`] for the shard coordinator and are NOT forwarded to
+/// end clients.
 pub fn render_event(id: u64, ev: &Event) -> Value {
     match ev {
         Event::SegmentDone { index, greedy } => Value::obj(vec![
@@ -72,6 +85,12 @@ pub fn render_event(id: u64, ev: &Event) -> Value {
             ("event", Value::Str("segment".into())),
             ("index", Value::Num(*index as f64)),
             ("greedy", Value::arr_u32(greedy)),
+        ]),
+        Event::Snapshot { index, state } => Value::obj(vec![
+            ("id", Value::Num(id as f64)),
+            ("event", Value::Str("snapshot".into())),
+            ("index", Value::Num(*index as f64)),
+            ("state", state.to_json()),
         ]),
         Event::Token { pos, token } => Value::obj(vec![
             ("id", Value::Num(id as f64)),
@@ -248,6 +267,71 @@ mod tests {
         ] {
             let v = Value::parse(bad).unwrap();
             assert!(parse_request(&v, || 0).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parse_checkpoint_and_inline_resume_state() {
+        use crate::coordinator::ResumeFrom;
+        use crate::tensor::Tensor;
+        let snap = MemSnapshot {
+            model: "wire".into(),
+            n_layers: 1,
+            d_model: 2,
+            phi_dim: 2,
+            seg: 4,
+            segments: 3,
+            a: vec![Tensor::new(&[2, 2], vec![1.0, -0.0, 2.5, f32::MIN_POSITIVE]).unwrap()],
+            z: vec![Tensor::new(&[2], vec![0.25, -7.0]).unwrap()],
+        };
+        let frame = Value::obj(vec![
+            ("tokens", Value::arr_u32(&[1, 2])),
+            ("checkpoint", Value::Bool(true)),
+            ("resume_state", snap.to_json()),
+        ]);
+        let r = parse_request(&frame, || 0).unwrap();
+        assert!(r.checkpoint);
+        match r.resume {
+            Some(ResumeFrom::Snapshot(got)) => {
+                // f32-bit-exact round trip through the wire field.
+                assert_eq!(*got, snap);
+            }
+            other => panic!("expected an inline snapshot resume, got {other:?}"),
+        }
+        // checkpoint defaults off; bad types are rejected.
+        let v = Value::parse(r#"{"tokens": [1]}"#).unwrap();
+        assert!(!parse_request(&v, || 0).unwrap().checkpoint);
+        let v = Value::parse(r#"{"tokens": [1], "checkpoint": 1}"#).unwrap();
+        assert!(parse_request(&v, || 0).is_err());
+        let v = Value::parse(r#"{"tokens": [1], "resume_state": 5}"#).unwrap();
+        assert!(parse_request(&v, || 0).is_err());
+    }
+
+    #[test]
+    fn snapshot_frame_roundtrips_bit_exact() {
+        use crate::tensor::Tensor;
+        let snap = MemSnapshot {
+            model: "wire".into(),
+            n_layers: 1,
+            d_model: 2,
+            phi_dim: 2,
+            seg: 4,
+            segments: 2,
+            a: vec![Tensor::new(&[2, 2], vec![f32::NAN, 0.0, -0.0, 3.5]).unwrap()],
+            z: vec![Tensor::new(&[2], vec![1e-40, -1.5]).unwrap()],
+        };
+        let frame =
+            render_event(9, &Event::Snapshot { index: 1, state: Box::new(snap.clone()) });
+        assert_eq!(frame.req("event").unwrap().as_str().unwrap(), "snapshot");
+        assert_eq!(frame.req("index").unwrap().as_usize().unwrap(), 1);
+        let back = MemSnapshot::from_json(frame.req("state").unwrap()).unwrap();
+        // Bit patterns, not float equality: NaN payloads, -0.0 and
+        // denormals must survive the frame.
+        for (a, b) in snap.a[0].data().iter().zip(back.a[0].data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in snap.z[0].data().iter().zip(back.z[0].data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

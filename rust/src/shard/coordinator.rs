@@ -1,0 +1,1529 @@
+//! The shard coordinator: routes client requests across N `pallas`
+//! worker processes and survives worker deaths mid-request.
+//!
+//! One coordinator serves the ordinary client line protocol (the same
+//! frames [`crate::server::Server`] speaks) and spreads work over
+//! workers along two composable axes:
+//!
+//! * **Lane sharding** (`layer_split == 1`): each request is forwarded
+//!   whole to one worker; the event stream relays back with the wire
+//!   `id` rewritten. Greedy requests are forwarded with
+//!   `"checkpoint": true`, so the worker streams a boundary
+//!   [`MemSnapshot`] per segment; the coordinator absorbs those as
+//!   failover checkpoints. When the worker's connection severs before
+//!   a terminal frame, the request re-admits on a survivor seeded from
+//!   the newest *usable* checkpoint ([`usable_checkpoint`]) via
+//!   `"resume_state"` — or, for sampled requests (whose RNG state is
+//!   not in the snapshot), replays from segment 0 under the same seed.
+//!   Either way duplicate frames are suppressed by segment index /
+//!   token position, so the merged client stream is byte-identical to
+//!   an uninterrupted run.
+//! * **Layer-range sharding** (`layer_split > 1`): the model's layers
+//!   split into contiguous ranges ([`ShardPlan`]); the coordinator
+//!   drives one `shard_segment` call per (segment, range), handing
+//!   activations across sockets and sampling locally with the engine's
+//!   own [`GenDriver`] — the sequential oracle executed across
+//!   processes. Each stage reply carries that range's post-segment
+//!   state, so a dead stage reloads on a survivor via `shard_load` and
+//!   recomputes only the in-flight stage call.
+//!
+//! Save/resume: lane-mode `"save": true` relays through; the worker's
+//! `resume_token` is re-mapped into a coordinator-scoped token pinned
+//! to that worker (worker-assigned tokens are not unique across the
+//! fleet). Pipeline mode rejects save/resume-by-token; inline
+//! `"resume_state"` works on both paths. Pipeline mode does not emit
+//! client-facing `snapshot` frames.
+//!
+//! Admin commands beyond the standard set: `{"cmd": "shard_workers"}`
+//! lists the fleet with liveness, `{"cmd": "shard_attach",
+//! "addr": "..."}` registers a replacement worker at runtime.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cache::MemSnapshot;
+use crate::config::{ExecMode, ModelConfig};
+use crate::coordinator::engine::{ExitAction, GenDriver};
+use crate::coordinator::{EngineStats, Event, GenerateRequest, Response, ResumeFrom};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::scheduler::{segment_tokens, RunStats};
+use crate::server::{parse_request, render_done, render_event};
+use crate::tensor::Tensor;
+
+use super::plan::ShardPlan;
+use super::worker::{bits_value, floats_from_bits};
+
+/// Idle-poll slice while relaying a lane stream (bounds how late a
+/// deadline/shutdown check can fire).
+const POLL: Duration = Duration::from_millis(100);
+/// Per-call reply budget for pipeline stage commands; an elapse is
+/// treated as a dead worker.
+const STAGE_TIMEOUT: Duration = Duration::from_secs(10);
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+/// Failover checkpoints retained per in-flight lane request. The
+/// newest usable one is at most two behind the newest received (a
+/// boundary snapshot precedes its segment's `segment`/`token` frames),
+/// so three always suffice.
+const KEEP_SNAPSHOTS: usize = 3;
+
+/// Knobs for [`ShardCoordinator::start`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Contiguous layer ranges per chain; 1 = pure lane sharding.
+    pub layer_split: usize,
+    /// Slack past a request's own `deadline_ms` before a silent worker
+    /// is declared over-deadline (stall, not death: the request is
+    /// cancelled, not failed over).
+    pub deadline_grace: Duration,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        Self { layer_split: 1, deadline_grace: Duration::from_secs(2) }
+    }
+}
+
+struct WorkerSlot {
+    addr: String,
+    alive: bool,
+}
+
+#[derive(Clone)]
+enum CancelTarget {
+    /// Lane request in flight on a worker under coordinator wire id
+    /// `wid`: cancel/save relay there.
+    Worker { addr: String, wid: u64 },
+    /// Pipeline request driven by the coordinator itself.
+    Flag(Arc<AtomicBool>),
+}
+
+struct Shared {
+    cfg: ModelConfig,
+    opts: CoordinatorOptions,
+    /// Layer ranges of the pipeline axis (one whole-model range in
+    /// lane mode).
+    ranges: Vec<(usize, usize)>,
+    stats: Arc<EngineStats>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    rr: AtomicU64,
+    /// Coordinator->worker wire ids / shard sids (fleet-unique, offset
+    /// away from direct-client id ranges).
+    next_wid: AtomicU64,
+    next_client_id: AtomicU64,
+    next_token: AtomicU64,
+    /// Coordinator resume token -> (worker addr, worker token).
+    tokens: Mutex<HashMap<u64, (String, u64)>>,
+    registry: Mutex<HashMap<u64, CancelTarget>>,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn refresh_gauge(&self, workers: &[WorkerSlot]) {
+        self.stats.shard_workers.set(workers.iter().filter(|w| w.alive).count() as u64);
+    }
+
+    /// Round-robin over live workers; when none are live, re-probe the
+    /// dead ones once (a restarted worker rejoins without an explicit
+    /// `shard_attach`).
+    fn pick(&self) -> Option<String> {
+        let mut ws = self.workers.lock().unwrap();
+        if !ws.iter().any(|w| w.alive) {
+            for w in ws.iter_mut() {
+                if !w.alive && ping_worker(&w.addr) {
+                    w.alive = true;
+                }
+            }
+        }
+        let alive: Vec<&WorkerSlot> = ws.iter().filter(|w| w.alive).collect();
+        self.stats.shard_workers.set(alive.len() as u64);
+        if alive.is_empty() {
+            return None;
+        }
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % alive.len();
+        Some(alive[i].addr.clone())
+    }
+
+    fn mark_dead(&self, addr: &str) {
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.iter_mut() {
+            if w.addr == addr {
+                w.alive = false;
+            }
+        }
+        self.refresh_gauge(&ws);
+    }
+
+    fn is_alive(&self, addr: &str) -> bool {
+        self.workers.lock().unwrap().iter().any(|w| w.addr == addr && w.alive)
+    }
+
+    fn attach(&self, addr: &str) -> usize {
+        let mut ws = self.workers.lock().unwrap();
+        match ws.iter_mut().find(|w| w.addr == addr) {
+            Some(w) => w.alive = true,
+            None => ws.push(WorkerSlot { addr: addr.to_string(), alive: true }),
+        }
+        self.refresh_gauge(&ws);
+        ws.len()
+    }
+
+    fn workers_json(&self) -> Value {
+        let ws = self.workers.lock().unwrap();
+        Value::obj(vec![(
+            "workers",
+            Value::Arr(
+                ws.iter()
+                    .map(|w| {
+                        Value::obj(vec![
+                            ("addr", Value::Str(w.addr.clone())),
+                            ("alive", Value::Bool(w.alive)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct ShardCoordinator {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ShardCoordinator {
+    /// Start coordinating `workers` (each a `pallas worker` address)
+    /// on `addr`. The worker count must form whole chains:
+    /// `workers.len() % opts.layer_split == 0` ([`ShardPlan::new`]).
+    pub fn start(
+        cfg: ModelConfig,
+        workers: &[String],
+        addr: &str,
+        opts: CoordinatorOptions,
+    ) -> Result<Self> {
+        let plan = ShardPlan::new(workers.len(), cfg.n_layers, opts.layer_split)?;
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stats = Arc::new(EngineStats::default());
+        stats.shard_workers.set(workers.len() as u64);
+        let shared = Arc::new(Shared {
+            cfg,
+            opts,
+            ranges: plan.ranges,
+            stats,
+            workers: Mutex::new(
+                workers
+                    .iter()
+                    .map(|a| WorkerSlot { addr: a.clone(), alive: true })
+                    .collect(),
+            ),
+            rr: AtomicU64::new(0),
+            next_wid: AtomicU64::new(10_000_000),
+            next_client_id: AtomicU64::new(1),
+            next_token: AtomicU64::new(0),
+            tokens: Mutex::new(HashMap::new()),
+            registry: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let accept_thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let sh2 = sh.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &sh2);
+                });
+            }
+        });
+        Ok(Self { addr: local, shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// Live coordinator counters (`shard_routed`, `shard_failovers`,
+    /// `shard_handoffs`, ... — the shard rows of [`EngineStats`]).
+    pub fn stats(&self) -> Arc<EngineStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Block until a `{"cmd": "shutdown"}` frame stops the coordinator
+    /// (the CLI foreground path).
+    pub fn join(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Request shutdown and join the acceptor.
+    pub fn stop(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failover checkpoint math (pure, unit-tested).
+// ---------------------------------------------------------------------------
+
+/// Token positions safely re-derivable on resume: the last *full*
+/// segment boundary at or below what was forwarded. A worker can die
+/// mid token batch; the partial tail past this point is regenerated by
+/// the survivor and deduplicated.
+pub(crate) fn resume_point(delivered: usize, seg: usize) -> usize {
+    delivered / seg * seg
+}
+
+/// The newest checkpoint the coordinator can actually resume from.
+/// `snap.segments = c` is usable iff
+///
+/// 1. every segment before `c` was already forwarded to the client
+///    (`c <= max_seg + 1`) — a boundary snapshot precedes its own
+///    `segment` frame, so the newest received may front-run the
+///    stream, and resuming from it would leave a hole; and
+/// 2. the tokens that feed segment `c` are known: still inside the
+///    prompt (`c < s_p_abs`), or delivered decode tokens below the
+///    resume point `rp`.
+pub(crate) fn usable_checkpoint<'a>(
+    snaps: &'a VecDeque<MemSnapshot>,
+    max_seg: Option<usize>,
+    s_p_abs: usize,
+    seg: usize,
+    rp: usize,
+) -> Option<&'a MemSnapshot> {
+    let next_expected = max_seg.map_or(0, |m| m + 1);
+    snaps.iter().rev().find(|s| {
+        s.segments <= next_expected
+            && (s.segments < s_p_abs || (s.segments - s_p_abs) * seg < rp)
+    })
+}
+
+/// The token stream a resumed request must re-feed after checkpoint
+/// `c`: the unconsumed prompt tail (`c` inside the prompt) or the
+/// delivered decode tokens from segment `c` on. `known` must be the
+/// resume-point-truncated delivered list.
+pub(crate) fn tail_tokens(
+    c: usize,
+    base_seg: usize,
+    s_p_abs: usize,
+    seg: usize,
+    prompt: &[u32],
+    known: &[u32],
+) -> Vec<u32> {
+    if c < s_p_abs {
+        let mut t = prompt[(c - base_seg) * seg..].to_vec();
+        t.extend_from_slice(known);
+        t
+    } else {
+        known[(c - s_p_abs) * seg..].to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker plumbing.
+// ---------------------------------------------------------------------------
+
+struct WorkerConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+fn worker_connect(addr: &str, read_timeout: Duration) -> Result<WorkerConn> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| Error::Request(format!("worker addr '{addr}' does not resolve")))?;
+    let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let writer = stream.try_clone()?;
+    Ok(WorkerConn { reader: BufReader::new(stream), writer })
+}
+
+/// One request frame out, one reply line in (shard commands and control
+/// relays). Returns the reply plus the total bytes moved.
+fn wc_roundtrip(conn: &mut WorkerConn, text: &str) -> Result<(Value, usize)> {
+    conn.writer.write_all(text.as_bytes())?;
+    conn.writer.write_all(b"\n")?;
+    let mut line = String::new();
+    conn.reader.read_line(&mut line)?;
+    if line.is_empty() {
+        return Err(Error::Request("worker closed connection".into()));
+    }
+    let n = text.len() + 1 + line.len();
+    Ok((Value::parse(&line)?, n))
+}
+
+fn ping_worker(addr: &str) -> bool {
+    let Ok(mut conn) = worker_connect(addr, Duration::from_secs(1)) else {
+        return false;
+    };
+    let ping = Value::obj(vec![("cmd", Value::Str("ping".into()))]).to_json();
+    matches!(
+        wc_roundtrip(&mut conn, &ping),
+        Ok((reply, _)) if reply.get("ok").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false)
+    )
+}
+
+/// Best-effort control relay (`cancel` / `save`) to a worker.
+fn relay_cmd(addr: &str, cmd: &str, wid: u64) -> Result<Value> {
+    let mut conn = worker_connect(addr, Duration::from_secs(1))?;
+    let text = Value::obj(vec![
+        ("cmd", Value::Str(cmd.into())),
+        ("id", Value::Num(wid as f64)),
+    ])
+    .to_json();
+    Ok(wc_roundtrip(&mut conn, &text)?.0)
+}
+
+fn error_frame(id: u64, msg: &str) -> String {
+    Value::obj(vec![
+        ("id", Value::Num(id as f64)),
+        ("event", Value::Str("error".into())),
+        ("error", Value::Str(msg.into())),
+    ])
+    .to_json()
+}
+
+fn frame_map(v: &Value) -> BTreeMap<String, Value> {
+    v.as_obj().cloned().unwrap_or_default()
+}
+
+/// Clone a worker frame with the wire id rewritten to the client's.
+fn rewritten(frame: &Value, client_id: u64) -> Value {
+    let mut m = frame_map(frame);
+    m.insert("id".into(), Value::Num(client_id as f64));
+    Value::Obj(m)
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling.
+// ---------------------------------------------------------------------------
+
+fn handle_conn(stream: TcpStream, sh: &Shared) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = match Value::parse(&line) {
+            Err(e) => {
+                writeln!(writer, "{}", error_frame(0, &format!("bad frame: {e}")))?;
+                continue;
+            }
+            Ok(v) => v,
+        };
+        if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str().ok().map(String::from)) {
+            if !handle_cmd(sh, &mut writer, &cmd, &v)? {
+                break;
+            }
+            continue;
+        }
+        if !serve_request(sh, &mut writer, &v)? {
+            break; // client gone mid-stream
+        }
+    }
+    Ok(())
+}
+
+/// Control commands; returns false when the connection should close
+/// (shutdown).
+fn handle_cmd(sh: &Shared, writer: &mut TcpStream, cmd: &str, v: &Value) -> Result<bool> {
+    match cmd {
+        "shutdown" => {
+            sh.shutdown.store(true, Ordering::SeqCst);
+            writeln!(writer, "{}", Value::obj(vec![("ok", Value::Bool(true))]).to_json())?;
+            // Unblock the acceptor (it only re-checks the flag per
+            // connection); this conn's local addr IS the listen addr.
+            if let Ok(local) = writer.local_addr() {
+                let _ = TcpStream::connect(local);
+            }
+            return Ok(false);
+        }
+        "ping" => {
+            writeln!(writer, "{}", Value::obj(vec![("ok", Value::Bool(true))]).to_json())?;
+        }
+        "stats" => writeln!(writer, "{}", sh.stats.to_json().to_json())?,
+        "shard_workers" => writeln!(writer, "{}", sh.workers_json().to_json())?,
+        "shard_attach" => match v.req("addr").and_then(Value::as_str) {
+            Ok(addr) => {
+                let n = sh.attach(addr);
+                writeln!(
+                    writer,
+                    "{}",
+                    Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("workers", Value::Num(n as f64)),
+                    ])
+                    .to_json()
+                )?;
+            }
+            Err(e) => writeln!(writer, "{}", error_frame(0, &e.to_string()))?,
+        },
+        "cancel" | "save" => {
+            let id = match v.get("id").map(Value::as_u64).transpose() {
+                Ok(Some(id)) => id,
+                _ => {
+                    writeln!(writer, "{}", error_frame(0, &format!("{cmd} needs a numeric id")))?;
+                    return Ok(true);
+                }
+            };
+            let target = sh.registry.lock().unwrap().get(&id).cloned();
+            let reply = match target {
+                None => Value::obj(vec![
+                    ("ok", Value::Bool(false)),
+                    ("id", Value::Num(id as f64)),
+                ])
+                .to_json(),
+                Some(CancelTarget::Flag(flag)) => {
+                    if cmd == "cancel" {
+                        flag.store(true, Ordering::SeqCst);
+                        sh.stats.cancelled.inc();
+                        Value::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("id", Value::Num(id as f64)),
+                        ])
+                        .to_json()
+                    } else {
+                        error_frame(
+                            id,
+                            "save is not supported for layer-sharded (pipeline) requests",
+                        )
+                    }
+                }
+                Some(CancelTarget::Worker { addr, wid }) => match relay_cmd(&addr, cmd, wid) {
+                    Ok(reply) => {
+                        if cmd == "cancel" {
+                            sh.stats.cancelled.inc();
+                        }
+                        rewritten(&reply, id).to_json()
+                    }
+                    Err(e) => error_frame(id, &format!("worker relay failed: {e}")),
+                },
+            };
+            writeln!(writer, "{reply}")?;
+        }
+        other => {
+            writeln!(writer, "{}", error_frame(0, &format!("unknown cmd '{other}'")))?;
+        }
+    }
+    Ok(true)
+}
+
+/// Admit one inference request; returns false when the client
+/// disconnected mid-stream.
+fn serve_request(sh: &Shared, writer: &mut TcpStream, v: &Value) -> Result<bool> {
+    let next_auto = || sh.next_client_id.fetch_add(1, Ordering::Relaxed);
+    let req = match parse_request(v, next_auto) {
+        Err(e) => {
+            writeln!(writer, "{}", error_frame(0, &e.to_string()))?;
+            return Ok(true);
+        }
+        Ok(req) => req,
+    };
+    let flag = Arc::new(AtomicBool::new(false));
+    {
+        let mut reg = sh.registry.lock().unwrap();
+        if reg.contains_key(&req.id) {
+            drop(reg);
+            writeln!(
+                writer,
+                "{}",
+                error_frame(req.id, &format!("id {} already in flight", req.id))
+            )?;
+            return Ok(true);
+        }
+        reg.insert(req.id, CancelTarget::Flag(flag.clone()));
+    }
+    let keep = if sh.opts.layer_split == 1 {
+        serve_lane(sh, writer, v, &req, &flag)
+    } else {
+        serve_pipeline(sh, writer, &req, &flag)
+    };
+    sh.registry.lock().unwrap().remove(&req.id);
+    keep
+}
+
+// ---------------------------------------------------------------------------
+// Lane sharding: whole-request relay with snapshot failover.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct LaneState {
+    /// Generated tokens forwarded to the client, in position order.
+    delivered: Vec<u32>,
+    /// Highest segment index forwarded.
+    max_seg: Option<usize>,
+    /// Last few boundary checkpoints ([`KEEP_SNAPSHOTS`]).
+    snaps: VecDeque<MemSnapshot>,
+    /// Worker deaths survived so far. While zero, terminal frames
+    /// relay with only the id rewritten — byte-identical to a direct
+    /// connection. After a failover the final attempt only saw the
+    /// tail, so the `done` frame's `generated`/`tokens` are rebuilt
+    /// from coordinator-side accounting.
+    failovers: usize,
+}
+
+enum AttemptOutcome {
+    /// A terminal frame (done / worker-reported error) was forwarded.
+    Finished,
+    /// The client's socket broke; the worker request was cancelled.
+    ClientGone,
+    /// The worker connection severed before a terminal frame.
+    WorkerDied,
+    /// The request's hard deadline passed with the worker silent.
+    Deadline,
+    /// Coordinator shutdown requested.
+    Stopped,
+}
+
+fn serve_lane(
+    sh: &Shared,
+    writer: &mut TcpStream,
+    original: &Value,
+    req: &GenerateRequest,
+    flag: &AtomicBool,
+) -> Result<bool> {
+    let client_id = req.id;
+    let seg = sh.cfg.seg;
+    let greedy = req.sampling.is_greedy();
+    let started = Instant::now();
+    let hard_deadline = req.deadline.map(|d| started + d + sh.opts.deadline_grace);
+    let forward_snapshots = req.checkpoint;
+
+    // Token-resume requests are pinned: the conversation lives on one
+    // worker, under that worker's own token.
+    let pinned: Option<(String, u64)> = match &req.resume {
+        Some(ResumeFrom::Token(tok)) => match sh.tokens.lock().unwrap().get(tok) {
+            Some(p) => Some(p.clone()),
+            None => {
+                writeln!(writer, "{}", error_frame(client_id, "unknown resume token"))?;
+                return Ok(true);
+            }
+        },
+        _ => None,
+    };
+    let base_seg = match &req.resume {
+        Some(ResumeFrom::Snapshot(s)) => s.segments,
+        _ => 0,
+    };
+    let s_p_abs =
+        base_seg + segment_tokens(&sh.cfg, &req.prompt).map(|b| b.len()).unwrap_or(0);
+    // Checkpoint-based failover needs a deterministic replay of the
+    // tail, which greedy decode gives and seeded sampling does not
+    // (the sampler's RNG state is not part of the snapshot) — sampled
+    // requests fail over by full replay under the same seed instead.
+    let checkpoint = greedy && pinned.is_none();
+
+    sh.stats.requests.inc();
+    sh.stats.tokens.add(req.prompt.len() as u64);
+
+    let mut lane = LaneState::default();
+    let max_attempts = sh.workers.lock().unwrap().len() * 2 + 4;
+    for _attempt in 0..max_attempts {
+        if flag.load(Ordering::SeqCst) {
+            writeln!(writer, "{}", error_frame(client_id, "request cancelled"))?;
+            return Ok(true);
+        }
+        let worker = match &pinned {
+            Some((addr, _)) if sh.is_alive(addr) => addr.clone(),
+            Some((addr, _)) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_frame(
+                        client_id,
+                        &format!("worker {addr} holding this conversation is gone"),
+                    )
+                )?;
+                return Ok(true);
+            }
+            None => match sh.pick() {
+                Some(a) => a,
+                None => {
+                    writeln!(writer, "{}", error_frame(client_id, "no live shard workers"))?;
+                    return Ok(true);
+                }
+            },
+        };
+        let wid = sh.next_wid.fetch_add(1, Ordering::Relaxed);
+
+        // Build this attempt's frame: the original with the wire id
+        // rewritten, plus checkpointing and (on failover) the resume
+        // seed. With no usable checkpoint — or for sampled requests —
+        // the original replays whole and duplicates are suppressed.
+        let mut m = frame_map(original);
+        m.insert("id".into(), Value::Num(wid as f64));
+        if checkpoint {
+            m.insert("checkpoint".into(), Value::Bool(true));
+        }
+        if let Some((_, wtok)) = &pinned {
+            m.insert("resume".into(), Value::Num(*wtok as f64));
+        }
+        let mut base = 0usize;
+        if checkpoint && !lane.snaps.is_empty() {
+            let rp = resume_point(lane.delivered.len(), seg);
+            if let Some(snap) = usable_checkpoint(&lane.snaps, lane.max_seg, s_p_abs, seg, rp)
+            {
+                let tail = tail_tokens(
+                    snap.segments,
+                    base_seg,
+                    s_p_abs,
+                    seg,
+                    &req.prompt,
+                    &lane.delivered[..rp],
+                );
+                m.insert("tokens".into(), Value::arr_u32(&tail));
+                m.insert(
+                    "max_new_tokens".into(),
+                    Value::Num(req.max_new_tokens.saturating_sub(rp) as f64),
+                );
+                let state = snap.to_json();
+                sh.stats.shard_handoffs.inc();
+                sh.stats.shard_handoff_bytes.add(state.to_json().len() as u64);
+                m.insert("resume_state".into(), state);
+                base = rp;
+            }
+        }
+
+        sh.registry
+            .lock()
+            .unwrap()
+            .insert(client_id, CancelTarget::Worker { addr: worker.clone(), wid });
+        sh.stats.shard_routed.inc();
+
+        let mut conn = match worker_connect(&worker, POLL) {
+            Ok(c) => c,
+            Err(_) => {
+                sh.mark_dead(&worker);
+                continue; // never started: not a failover
+            }
+        };
+        let text = Value::Obj(m).to_json();
+        if conn
+            .writer
+            .write_all(text.as_bytes())
+            .and_then(|()| conn.writer.write_all(b"\n"))
+            .is_err()
+        {
+            sh.mark_dead(&worker);
+            continue;
+        }
+
+        match relay_stream(
+            sh,
+            &mut conn,
+            writer,
+            client_id,
+            base,
+            hard_deadline,
+            forward_snapshots,
+            &worker,
+            (s_p_abs - base_seg) * seg,
+            &mut lane,
+        ) {
+            AttemptOutcome::Finished => return Ok(true),
+            AttemptOutcome::ClientGone => {
+                let _ = relay_cmd(&worker, "cancel", wid);
+                return Ok(false);
+            }
+            AttemptOutcome::WorkerDied => {
+                lane.failovers += 1;
+                if pinned.is_some() {
+                    sh.mark_dead(&worker);
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_frame(
+                            client_id,
+                            &format!("worker {worker} holding this conversation died"),
+                        )
+                    )?;
+                    return Ok(true);
+                }
+                sh.mark_dead(&worker);
+                sh.stats.shard_failovers.inc();
+                continue;
+            }
+            AttemptOutcome::Deadline => {
+                let _ = relay_cmd(&worker, "cancel", wid);
+                writeln!(
+                    writer,
+                    "{}",
+                    error_frame(client_id, "deadline exceeded (worker stalled)")
+                )?;
+                return Ok(true);
+            }
+            AttemptOutcome::Stopped => {
+                let _ = relay_cmd(&worker, "cancel", wid);
+                writeln!(writer, "{}", error_frame(client_id, "coordinator shutting down"))?;
+                return Ok(true);
+            }
+        }
+    }
+    writeln!(writer, "{}", error_frame(client_id, "failover attempts exhausted"))?;
+    Ok(true)
+}
+
+/// Relay one worker attempt's event stream to the client, absorbing
+/// checkpoints and suppressing frames already forwarded by an earlier
+/// attempt.
+#[allow(clippy::too_many_arguments)]
+fn relay_stream(
+    sh: &Shared,
+    conn: &mut WorkerConn,
+    writer: &mut TcpStream,
+    client_id: u64,
+    base: usize,
+    hard_deadline: Option<Instant>,
+    forward_snapshots: bool,
+    worker_addr: &str,
+    prompt_tokens: usize,
+    lane: &mut LaneState,
+) -> AttemptOutcome {
+    let mut line = String::new();
+    loop {
+        match conn.reader.read_line(&mut line) {
+            Ok(0) => return AttemptOutcome::WorkerDied,
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return AttemptOutcome::WorkerDied; // severed mid-frame
+                }
+                match relay_frame(
+                    sh,
+                    &line,
+                    writer,
+                    client_id,
+                    base,
+                    forward_snapshots,
+                    worker_addr,
+                    prompt_tokens,
+                    lane,
+                ) {
+                    Ok(Some(outcome)) => return outcome,
+                    Ok(None) => {}
+                    Err(_) => return AttemptOutcome::WorkerDied, // corrupt frame
+                }
+                line.clear();
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // Idle poll tick: `line` may hold a partial frame — keep
+                // it and continue reading.
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return AttemptOutcome::Stopped;
+                }
+                if let Some(hd) = hard_deadline {
+                    if Instant::now() >= hd {
+                        return AttemptOutcome::Deadline;
+                    }
+                }
+            }
+            Err(_) => return AttemptOutcome::WorkerDied,
+        }
+    }
+}
+
+/// Process one worker frame. `Ok(Some(..))` ends the attempt.
+#[allow(clippy::too_many_arguments)]
+fn relay_frame(
+    sh: &Shared,
+    line: &str,
+    writer: &mut TcpStream,
+    client_id: u64,
+    base: usize,
+    forward_snapshots: bool,
+    worker_addr: &str,
+    prompt_tokens: usize,
+    lane: &mut LaneState,
+) -> Result<Option<AttemptOutcome>> {
+    let frame = Value::parse(line)?;
+    let ev = frame.get("event").and_then(|e| e.as_str().ok()).unwrap_or("");
+    let forward = |writer: &mut TcpStream, v: &Value| -> Option<AttemptOutcome> {
+        if writeln!(writer, "{}", v.to_json()).is_err() {
+            Some(AttemptOutcome::ClientGone)
+        } else {
+            None
+        }
+    };
+    match ev {
+        "snapshot" => {
+            // Failover checkpoint: absorb (and count the hand-off).
+            sh.stats.shard_handoffs.inc();
+            sh.stats.shard_handoff_bytes.add(line.len() as u64);
+            if let Ok(snap) = MemSnapshot::from_json(frame.req("state")?) {
+                lane.snaps.push_back(snap);
+                while lane.snaps.len() > KEEP_SNAPSHOTS {
+                    lane.snaps.pop_front();
+                }
+            }
+            if forward_snapshots {
+                return Ok(forward(writer, &rewritten(&frame, client_id)));
+            }
+            Ok(None)
+        }
+        "segment" => {
+            let index = frame.req("index")?.as_usize()?;
+            if lane.max_seg.is_some_and(|m| index <= m) {
+                return Ok(None); // replayed by a failover attempt
+            }
+            lane.max_seg = Some(index);
+            Ok(forward(writer, &rewritten(&frame, client_id)))
+        }
+        "token" => {
+            let pos = base + frame.req("pos")?.as_usize()?;
+            let token = frame.req("token")?.as_u32()?;
+            if pos < lane.delivered.len() {
+                return Ok(None); // already delivered before the failover
+            }
+            lane.delivered.push(token);
+            let mut m = frame_map(&frame);
+            m.insert("id".into(), Value::Num(client_id as f64));
+            m.insert("pos".into(), Value::Num(pos as f64));
+            Ok(forward(writer, &Value::Obj(m)))
+        }
+        "done" => {
+            let mut m = frame_map(&frame);
+            m.insert("id".into(), Value::Num(client_id as f64));
+            if let Ok(gen) = frame.req("generated").and_then(Value::as_u32_vec) {
+                // The attempt's `done` carries its full output; fold in
+                // anything not individually streamed as `token` frames
+                // so coordinator accounting is complete either way.
+                for (i, t) in gen.iter().enumerate() {
+                    if base + i >= lane.delivered.len() {
+                        lane.delivered.push(*t);
+                    }
+                }
+            }
+            if lane.failovers > 0 {
+                // The final attempt only generated the tail; restore
+                // whole-request accounting.
+                m.insert("generated".into(), Value::arr_u32(&lane.delivered));
+                m.insert("tokens".into(), Value::Num(prompt_tokens as f64));
+            }
+            if let Some(wtok) = frame.get("resume_token").map(Value::as_u64).transpose()? {
+                // Worker tokens are not fleet-unique: re-map into the
+                // coordinator's namespace, pinned to this worker.
+                let ct = sh.next_token.fetch_add(1, Ordering::Relaxed) + 1;
+                sh.tokens
+                    .lock()
+                    .unwrap()
+                    .insert(ct, (worker_addr.to_string(), wtok));
+                m.insert("resume_token".into(), Value::Num(ct as f64));
+            }
+            sh.stats.generated_tokens.add(lane.delivered.len() as u64);
+            Ok(Some(
+                forward(writer, &Value::Obj(m)).unwrap_or(AttemptOutcome::Finished),
+            ))
+        }
+        "error" => Ok(Some(
+            forward(writer, &rewritten(&frame, client_id))
+                .unwrap_or(AttemptOutcome::Finished),
+        )),
+        _ => Ok(forward(writer, &rewritten(&frame, client_id))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer-range sharding: the coordinator drives the pipeline itself.
+// ---------------------------------------------------------------------------
+
+struct Stage {
+    lo: usize,
+    hi: usize,
+    sid: u64,
+    addr: String,
+    conn: Option<WorkerConn>,
+    /// Last known range state (shard_load seed after a stage death).
+    state: Option<Value>,
+}
+
+fn serve_pipeline(
+    sh: &Shared,
+    writer: &mut TcpStream,
+    req: &GenerateRequest,
+    flag: &AtomicBool,
+) -> Result<bool> {
+    let client_id = req.id;
+    let cfg = &sh.cfg;
+    let started = Instant::now();
+
+    if req.save_requested() || matches!(req.resume, Some(ResumeFrom::Token(_))) {
+        writeln!(
+            writer,
+            "{}",
+            error_frame(
+                client_id,
+                "save/resume tokens are not supported with layer sharding \
+                 (use \"resume_state\")",
+            )
+        )?;
+        return Ok(true);
+    }
+    let resume = match &req.resume {
+        Some(ResumeFrom::Snapshot(s)) => {
+            if s.n_layers != cfg.n_layers || s.d_model != cfg.d_model || s.seg != cfg.seg {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_frame(client_id, "resume_state does not match the served model"),
+                )?;
+                return Ok(true);
+            }
+            Some(s.as_ref().clone())
+        }
+        _ => None,
+    };
+    let blocks = match segment_tokens(cfg, &req.prompt) {
+        Ok(b) => b,
+        Err(e) => {
+            writeln!(writer, "{}", error_frame(client_id, &e.to_string()))?;
+            return Ok(true);
+        }
+    };
+    let base_seg = resume.as_ref().map_or(0, |s| s.segments);
+    let s_p_abs = base_seg + blocks.len();
+
+    sh.stats.requests.inc();
+    sh.stats.shard_routed.inc();
+    sh.stats.sequential_runs.inc();
+    sh.stats.tokens.add(req.prompt.len() as u64);
+
+    // One lane per layer range; sids are fleet-unique so ranges of one
+    // request can share a worker without colliding.
+    let mut stages: Vec<Stage> = sh
+        .ranges
+        .iter()
+        .map(|&(lo, hi)| Stage {
+            lo,
+            hi,
+            sid: sh.next_wid.fetch_add(1, Ordering::Relaxed),
+            addr: String::new(),
+            conn: None,
+            state: resume.as_ref().map(|s| slice_snapshot(s, lo, hi).to_json()),
+        })
+        .collect();
+
+    let mut driver = GenDriver::new(req, s_p_abs);
+    let mut queue: VecDeque<Vec<u32>> = blocks.into();
+    let mut idx = base_seg;
+    let mut kept_logits: Vec<Tensor> = Vec::new();
+    let mut finished = false;
+    let mut client_gone = false;
+
+    'segments: while let Some(seg_tokens) = queue.pop_front() {
+        if flag.load(Ordering::SeqCst) {
+            writeln!(writer, "{}", error_frame(client_id, "request cancelled"))?;
+            drop_stages(&mut stages);
+            return Ok(true);
+        }
+        if let Some(d) = req.deadline {
+            if started.elapsed() > d {
+                writeln!(writer, "{}", error_frame(client_id, "deadline exceeded"))?;
+                drop_stages(&mut stages);
+                return Ok(true);
+            }
+        }
+        // Hand the segment through every range in order.
+        let mut carry: Option<(Value, Value)> = None; // (x_bits, x_shape)
+        let mut logits: Option<Tensor> = None;
+        for r in 0..stages.len() {
+            let payload = match &carry {
+                None => vec![("tokens", Value::arr_u32(&seg_tokens))],
+                Some((bits, shape)) => {
+                    vec![("x_bits", bits.clone()), ("x_shape", shape.clone())]
+                }
+            };
+            let reply = match stage_exec(sh, &mut stages[r], payload) {
+                Ok(reply) => reply,
+                Err(e) => {
+                    writeln!(writer, "{}", error_frame(client_id, &e.to_string()))?;
+                    drop_stages(&mut stages);
+                    return Ok(true);
+                }
+            };
+            if stages[r].hi == cfg.n_layers {
+                let floats = floats_from_bits(reply.req("logits_bits")?)?;
+                logits = Some(Tensor::new(&[cfg.seg, cfg.vocab], floats)?);
+            } else {
+                carry = Some((
+                    reply.req("x_bits")?.clone(),
+                    reply.req("x_shape")?.clone(),
+                ));
+            }
+        }
+        let logits = logits.ok_or_else(|| {
+            Error::Schedule("pipeline ended without a final-range stage".into())
+        })?;
+        if req.want_logits {
+            kept_logits.push(logits.clone());
+        }
+
+        // The engine's own decode state machine, driven across
+        // processes: emits SegmentDone/Token, decides the next feed.
+        let mut emit = |ev: Event| {
+            if client_gone {
+                return;
+            }
+            if writeln!(writer, "{}", render_event(client_id, &ev).to_json()).is_err() {
+                client_gone = true;
+            }
+        };
+        let action = driver.on_exit(idx, &logits, &mut emit);
+        idx += 1;
+        if client_gone {
+            drop_stages(&mut stages);
+            return Ok(false);
+        }
+        match action {
+            ExitAction::Wait => {}
+            ExitAction::Feed(next) => queue.push_back(next),
+            ExitAction::Finish => {
+                finished = true;
+                break 'segments;
+            }
+        }
+    }
+    let _ = finished; // prefill-only requests drain the queue instead
+
+    let segments_run = idx - base_seg;
+    let launches = (segments_run * stages.len()) as u64;
+    let cells = (segments_run * cfg.n_layers) as u64;
+    let resp = Response {
+        id: client_id,
+        greedy_tail: driver.last_greedy.clone(),
+        generated: driver.generated.clone(),
+        logits: None,
+        reused_segments: base_seg,
+        resume_token: None,
+        final_state: None,
+        mode_used: ExecMode::Sequential,
+        stats: RunStats {
+            mode_diagonal: false,
+            segments: segments_run,
+            launches,
+            cells,
+            slot_steps: cells,
+            padded_cells: 0,
+            wall: started.elapsed(),
+            tokens: req.prompt.len(),
+        },
+        latency: started.elapsed(),
+    };
+    sh.stats.generated_tokens.add(resp.generated.len() as u64);
+    let mut done = frame_map(&render_done(&resp));
+    if req.want_logits {
+        // Raw bit patterns per computed segment — the parity gate's
+        // strongest signal (norms alone can mask bit drift).
+        done.insert(
+            "logits_bits".into(),
+            Value::Arr(kept_logits.iter().map(|t| bits_value(t.data())).collect()),
+        );
+    }
+    drop_stages(&mut stages);
+    if writeln!(writer, "{}", Value::Obj(done).to_json()).is_err() {
+        return Ok(false);
+    }
+    Ok(true)
+}
+
+/// Run one `shard_segment` call on a stage, reconnecting (and
+/// reloading the range state onto a survivor) when its worker dies.
+fn stage_exec(
+    sh: &Shared,
+    stage: &mut Stage,
+    payload: Vec<(&str, Value)>,
+) -> Result<Value> {
+    let mut m: BTreeMap<String, Value> =
+        payload.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    m.insert("cmd".into(), Value::Str("shard_segment".into()));
+    m.insert("sid".into(), Value::Num(stage.sid as f64));
+    let text = Value::Obj(m).to_json();
+
+    let max_attempts = sh.workers.lock().unwrap().len() * 2 + 4;
+    for _ in 0..max_attempts {
+        if stage.conn.is_none() {
+            let Some(addr) = sh.pick() else {
+                return Err(Error::Request("no live shard workers".into()));
+            };
+            let Ok(mut conn) = worker_connect(&addr, STAGE_TIMEOUT) else {
+                sh.mark_dead(&addr);
+                continue;
+            };
+            // (Re)create the range lane — fresh, or seeded with the
+            // last state this stage reported (the failover hand-off).
+            let init = match &stage.state {
+                Some(state) => Value::obj(vec![
+                    ("cmd", Value::Str("shard_load".into())),
+                    ("sid", Value::Num(stage.sid as f64)),
+                    ("lo", Value::Num(stage.lo as f64)),
+                    ("hi", Value::Num(stage.hi as f64)),
+                    ("state", state.clone()),
+                ]),
+                None => Value::obj(vec![
+                    ("cmd", Value::Str("shard_init".into())),
+                    ("sid", Value::Num(stage.sid as f64)),
+                    ("lo", Value::Num(stage.lo as f64)),
+                    ("hi", Value::Num(stage.hi as f64)),
+                ]),
+            };
+            match wc_roundtrip(&mut conn, &init.to_json()) {
+                Ok((reply, n)) => {
+                    if let Some(msg) = reply.get("error") {
+                        return Err(Error::Request(format!(
+                            "worker refused the range lane: {}",
+                            msg.as_str().unwrap_or("?")
+                        )));
+                    }
+                    if stage.state.is_some() {
+                        sh.stats.shard_handoffs.inc();
+                        sh.stats.shard_handoff_bytes.add(n as u64);
+                    }
+                    stage.addr = addr;
+                    stage.conn = Some(conn);
+                }
+                Err(_) => {
+                    sh.mark_dead(&addr);
+                    sh.stats.shard_failovers.inc();
+                    continue;
+                }
+            }
+        }
+        let conn = stage.conn.as_mut().expect("just ensured");
+        match wc_roundtrip(conn, &text) {
+            Ok((reply, n)) => {
+                if let Some(msg) = reply.get("error") {
+                    return Err(Error::Request(format!(
+                        "shard stage [{}, {}) failed: {}",
+                        stage.lo,
+                        stage.hi,
+                        msg.as_str().unwrap_or("?")
+                    )));
+                }
+                sh.stats.shard_handoffs.inc();
+                sh.stats.shard_handoff_bytes.add(n as u64);
+                if let Some(st) = reply.get("state") {
+                    stage.state = Some(st.clone());
+                }
+                return Ok(reply);
+            }
+            Err(_) => {
+                let addr = stage.addr.clone();
+                sh.mark_dead(&addr);
+                sh.stats.shard_failovers.inc();
+                stage.conn = None;
+            }
+        }
+    }
+    Err(Error::Request("shard stage failover attempts exhausted".into()))
+}
+
+fn drop_stages(stages: &mut [Stage]) {
+    for stage in stages {
+        if let Some(conn) = stage.conn.as_mut() {
+            let drop = Value::obj(vec![
+                ("cmd", Value::Str("shard_drop".into())),
+                ("sid", Value::Num(stage.sid as f64)),
+            ]);
+            let _ = wc_roundtrip(conn, &drop.to_json());
+        }
+    }
+}
+
+/// A contiguous layer slice of a full snapshot, in the range-snapshot
+/// convention (`n_layers = hi - lo`) the workers load.
+fn slice_snapshot(full: &MemSnapshot, lo: usize, hi: usize) -> MemSnapshot {
+    MemSnapshot {
+        model: full.model.clone(),
+        n_layers: hi - lo,
+        d_model: full.d_model,
+        phi_dim: full.phi_dim,
+        seg: full.seg,
+        segments: full.segments,
+        a: full.a[lo..hi].to_vec(),
+        z: full.z[lo..hi].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferenceEngine;
+    use crate::model::{NativeBackend, Params};
+    use crate::scheduler::StepBackend;
+    use crate::server::{Client, Server, ServerOptions};
+
+    fn snap(segments: usize) -> MemSnapshot {
+        MemSnapshot {
+            model: "m".into(),
+            n_layers: 1,
+            d_model: 1,
+            phi_dim: 1,
+            seg: 4,
+            segments,
+            a: vec![Tensor::zeros(&[1, 1])],
+            z: vec![Tensor::zeros(&[1])],
+        }
+    }
+
+    #[test]
+    fn checkpoint_usability_rules() {
+        let seg = 4;
+        let s_p = 2; // 2 prompt segments
+        let snaps: VecDeque<MemSnapshot> = [1, 2, 3].into_iter().map(snap).collect();
+
+        // Nothing forwarded yet: no checkpoint is usable (resuming
+        // would skip SegmentDone frames the client never saw).
+        assert!(usable_checkpoint(&snaps, None, s_p, seg, 0).is_none());
+        // SegmentDone(0) forwarded, no tokens: only c=1 is usable.
+        let got = usable_checkpoint(&snaps, Some(0), s_p, seg, 0).unwrap();
+        assert_eq!(got.segments, 1);
+        // Both prompt segments forwarded, 4 decode tokens delivered:
+        // c=3 needs (3-2)*4=4 < 4 — not yet; c=2 wins.
+        let got = usable_checkpoint(&snaps, Some(2), s_p, seg, 4).unwrap();
+        assert_eq!(got.segments, 2);
+        // 8 tokens delivered and SegmentDone(2) forwarded: c=3 usable.
+        let got = usable_checkpoint(&snaps, Some(2), s_p, seg, 8).unwrap();
+        assert_eq!(got.segments, 3);
+    }
+
+    #[test]
+    fn tail_reconstruction() {
+        let seg = 4;
+        let prompt: Vec<u32> = (0..7).collect(); // 2 segments, last padded
+        let s_p = 2;
+        // Checkpoint inside the prompt: remaining raw prompt tail.
+        assert_eq!(tail_tokens(1, 0, s_p, seg, &prompt, &[]), vec![4, 5, 6]);
+        // Checkpoint at the prompt/decode boundary: delivered tokens.
+        let known = [10, 11, 12, 13, 14, 15, 16, 17];
+        assert_eq!(tail_tokens(2, 0, s_p, seg, &prompt, &known), known.to_vec());
+        // One decode segment consumed: its successor's tokens.
+        assert_eq!(
+            tail_tokens(3, 0, s_p, seg, &prompt, &known),
+            vec![14, 15, 16, 17]
+        );
+        assert_eq!(resume_point(9, seg), 8);
+        assert_eq!(resume_point(8, seg), 8);
+        assert_eq!(resume_point(3, seg), 0);
+    }
+
+    fn lane_worker(seed: u64) -> Server {
+        let cfg = crate::model::tests::test_config();
+        let params = Params::random(&cfg, seed);
+        let engine =
+            InferenceEngine::new(NativeBackend::new(cfg, params), ExecMode::Diagonal);
+        Server::start(engine, "127.0.0.1:0", 8).unwrap()
+    }
+
+    fn shard_worker(seed: u64) -> Server {
+        let cfg = ModelConfig::synthetic();
+        let params = Params::random(&cfg, seed);
+        let engine = InferenceEngine::new(
+            NativeBackend::new(cfg.clone(), params.clone()),
+            ExecMode::Diagonal,
+        );
+        let backend: Box<dyn StepBackend + Send> =
+            Box::new(NativeBackend::new(cfg, params));
+        Server::start_with(
+            engine,
+            "127.0.0.1:0",
+            8,
+            ServerOptions { shard_backend: Some(backend), fault: None },
+        )
+        .unwrap()
+    }
+
+    /// Collect a full stream as rendered frames, with the `done`
+    /// frame's nondeterministic latency field removed.
+    fn streamed(addr: &str, frame: &Value) -> (Vec<String>, Value) {
+        let mut client = Client::connect(addr).unwrap();
+        let mut events = Vec::new();
+        let done = client
+            .request_stream(frame, |ev| events.push(ev.to_json()))
+            .unwrap();
+        let mut m = frame_map(&done);
+        m.remove("latency_ms");
+        (events, Value::Obj(m))
+    }
+
+    #[test]
+    fn lane_stream_is_bit_identical_to_direct_worker() {
+        let w1 = lane_worker(21);
+        let w2 = lane_worker(21);
+        let coord = ShardCoordinator::start(
+            crate::model::tests::test_config(),
+            &[w1.addr.to_string(), w2.addr.to_string()],
+            "127.0.0.1:0",
+            CoordinatorOptions::default(),
+        )
+        .unwrap();
+
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 5 + 1) % 60).collect();
+        let frame = Value::obj(vec![
+            ("id", Value::Num(7.0)),
+            ("tokens", Value::arr_u32(&tokens)),
+            ("max_new_tokens", Value::Num(12.0)),
+        ]);
+        let (direct_events, direct_done) = streamed(&w1.addr.to_string(), &frame);
+        let (coord_events, coord_done) = streamed(&coord.addr.to_string(), &frame);
+        // The relayed stream is frame-for-frame identical — checkpoints
+        // were injected and absorbed without the client seeing them.
+        assert_eq!(coord_events, direct_events);
+        assert_eq!(coord_done, direct_done);
+
+        let stats = coord.stats();
+        assert_eq!(stats.shard_routed.get(), 1);
+        assert!(stats.shard_handoffs.get() >= 2, "boundary checkpoints absorbed");
+        assert_eq!(stats.shard_failovers.get(), 0);
+
+        coord.stop();
+        w1.stop();
+        w2.stop();
+    }
+
+    #[test]
+    fn pipeline_matches_single_process_oracle() {
+        let cfg = ModelConfig::synthetic();
+        let w1 = shard_worker(9);
+        let w2 = shard_worker(9);
+        let coord = ShardCoordinator::start(
+            cfg.clone(),
+            &[w1.addr.to_string(), w2.addr.to_string()],
+            "127.0.0.1:0",
+            CoordinatorOptions { layer_split: 2, ..CoordinatorOptions::default() },
+        )
+        .unwrap();
+
+        for (max_new, temperature, seed) in [(10, 0.0f32, 0u64), (10, 0.8, 7)] {
+            let mut oracle =
+                InferenceEngine::new(NativeBackend::new(cfg.clone(), Params::random(&cfg, 9)), ExecMode::Sequential);
+            let tokens: Vec<u32> = (0..2 * cfg.seg as u32).map(|i| (i * 3 + 2) % 64).collect();
+            let mut req = GenerateRequest::new(5, tokens.clone()).generate(max_new);
+            req.sampling.temperature = temperature;
+            req.sampling.seed = seed;
+            let want = oracle.process(&req).unwrap();
+
+            let frame = Value::obj(vec![
+                ("tokens", Value::arr_u32(&tokens)),
+                ("max_new_tokens", Value::Num(max_new as f64)),
+                ("temperature", Value::Num(temperature as f64)),
+                ("seed", Value::Num(seed as f64)),
+            ]);
+            let (_events, done) = streamed(&coord.addr.to_string(), &frame);
+            assert_eq!(
+                done.req("generated").unwrap().as_u32_vec().unwrap(),
+                want.generated,
+                "temperature {temperature}"
+            );
+            let tail: Vec<usize> = done
+                .req("greedy_tail")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            assert_eq!(tail, want.greedy_tail);
+            assert_eq!(done.req("mode").unwrap().as_str().unwrap(), "sequential");
+        }
+        let stats = coord.stats();
+        assert!(stats.shard_handoffs.get() > 0);
+        assert!(stats.shard_handoff_bytes.get() > 0);
+
+        coord.stop();
+        w1.stop();
+        w2.stop();
+    }
+
+    #[test]
+    fn admin_cmds_and_attach() {
+        let w1 = lane_worker(3);
+        let coord = ShardCoordinator::start(
+            crate::model::tests::test_config(),
+            &[w1.addr.to_string()],
+            "127.0.0.1:0",
+            CoordinatorOptions::default(),
+        )
+        .unwrap();
+        let mut client = Client::connect(&coord.addr.to_string()).unwrap();
+        assert!(client.ping().unwrap());
+
+        let ws = client
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("shard_workers".into()))]))
+            .unwrap();
+        assert_eq!(ws.req("workers").unwrap().as_arr().unwrap().len(), 1);
+
+        let w2 = lane_worker(3);
+        let reply = client
+            .roundtrip(&Value::obj(vec![
+                ("cmd", Value::Str("shard_attach".into())),
+                ("addr", Value::Str(w2.addr.to_string())),
+            ]))
+            .unwrap();
+        assert!(reply.req("ok").unwrap().as_bool().unwrap());
+        assert_eq!(reply.req("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(coord.stats().shard_workers.get(), 2);
+
+        // Unknown-id cancel mirrors the server's found=false reply.
+        assert!(!client.cancel(999).unwrap());
+        let stats = client
+            .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.req("shard_workers").unwrap().as_usize().unwrap(), 2);
+
+        coord.stop();
+        w1.stop();
+        w2.stop();
+    }
+
+    #[test]
+    fn save_and_resume_roundtrip_through_coordinator() {
+        let w1 = lane_worker(5);
+        let coord = ShardCoordinator::start(
+            crate::model::tests::test_config(),
+            &[w1.addr.to_string()],
+            "127.0.0.1:0",
+            CoordinatorOptions::default(),
+        )
+        .unwrap();
+        let addr = coord.addr.to_string();
+        let tokens: Vec<u32> = (0..24).map(|i| (i * 7 + 3) % 60).collect();
+        let frame = Value::obj(vec![
+            ("tokens", Value::arr_u32(&tokens)),
+            ("save", Value::Bool(true)),
+        ]);
+        let (_ev, done) = streamed(&addr, &frame);
+        let token = done.req("resume_token").unwrap().as_u64().unwrap();
+
+        let more: Vec<u32> = (0..8).map(|i| i + 2).collect();
+        let resume = Value::obj(vec![
+            ("tokens", Value::arr_u32(&more)),
+            ("resume", Value::Num(token as f64)),
+        ]);
+        let (_ev, done2) = streamed(&addr, &resume);
+        assert_eq!(done2.req("reused_segments").unwrap().as_usize().unwrap(), 3);
+
+        // An unknown token errors cleanly.
+        let mut client = Client::connect(&addr).unwrap();
+        let bad = Value::obj(vec![
+            ("tokens", Value::arr_u32(&more)),
+            ("resume", Value::Num(token as f64 + 50.0)),
+        ]);
+        let err = client.request_stream(&bad, |_| {}).unwrap_err();
+        assert!(err.to_string().contains("resume token"), "{err}");
+
+        coord.stop();
+        w1.stop();
+    }
+}

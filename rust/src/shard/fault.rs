@@ -1,0 +1,173 @@
+//! Fault injection for shard workers — the test hook that makes the
+//! failover paths provable.
+//!
+//! A plan counts *protocol frames* a worker writes on request streams
+//! and shard replies (`ping`/`stats` replies don't count, so health
+//! probes never consume the budget) and triggers at a deterministic
+//! frame. The three faults cover the three distinct failure modes the
+//! coordinator must survive:
+//!
+//! * **die** — the whole process goes silent: every connection severs
+//!   without a terminal frame and new connections are accepted-then-
+//!   dropped, so health probes see EOF. The coordinator must fail the
+//!   lane over to a survivor.
+//! * **stall** — frames keep flowing but each one takes `ms` longer.
+//!   Not a death: the coordinator must NOT fail over (the request is
+//!   still making progress) but must also not wedge — the engine's
+//!   slow-consumer / deadline eviction bounds the damage.
+//! * **drop** — one connection severs once, the worker stays healthy.
+//!   Distinguishes "a socket died" from "the worker died".
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// What to inject, parsed from `--fault` (see [`FaultPlan::parse`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// Permanently die when the K-th frame is about to be written.
+    DieAfterFrames(u64),
+    /// From the K-th frame on, sleep `ms` before every write.
+    StallAfterFrames { frames: u64, ms: u64 },
+    /// Sever the connection writing the K-th frame, once; the worker
+    /// stays alive.
+    DropAfterFrames(u64),
+}
+
+impl FaultPlan {
+    /// Parse the `--fault` CLI syntax: `die_after=K`,
+    /// `stall_after=K:MS`, `drop_after=K`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = || Error::Config(format!(
+            "bad fault '{s}' (want die_after=K, stall_after=K:MS or drop_after=K)"
+        ));
+        let (kind, arg) = s.split_once('=').ok_or_else(bad)?;
+        let num = |t: &str| t.parse::<u64>().map_err(|_| bad());
+        match kind {
+            "die_after" => Ok(FaultPlan::DieAfterFrames(num(arg)?)),
+            "drop_after" => Ok(FaultPlan::DropAfterFrames(num(arg)?)),
+            "stall_after" => {
+                let (frames, ms) = arg.split_once(':').ok_or_else(bad)?;
+                Ok(FaultPlan::StallAfterFrames { frames: num(frames)?, ms: num(ms)? })
+            }
+            _ => Err(bad()),
+        }
+    }
+}
+
+/// Shared per-server fault state ([`ServerOptions::fault`]); with no
+/// plan the write-path hook is a single atomic load.
+///
+/// [`ServerOptions::fault`]: crate::server::ServerOptions
+pub struct FaultState {
+    plan: Option<FaultPlan>,
+    frames: AtomicU64,
+    dead: AtomicBool,
+    dropped: AtomicBool,
+}
+
+impl FaultState {
+    pub fn new(plan: Option<FaultPlan>) -> Self {
+        Self {
+            plan,
+            frames: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+            dropped: AtomicBool::new(false),
+        }
+    }
+
+    /// An injected death happened (all connections must go silent).
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Called immediately before each counted protocol frame write.
+    /// Returns `false` if the connection must sever instead of
+    /// writing (and, for a die plan, flips the whole worker dead).
+    pub fn before_frame(&self) -> bool {
+        let Some(plan) = self.plan else { return true };
+        if self.is_dead() {
+            return false;
+        }
+        let n = self.frames.fetch_add(1, Ordering::SeqCst) + 1;
+        match plan {
+            FaultPlan::DieAfterFrames(k) => {
+                if n >= k {
+                    self.dead.store(true, Ordering::SeqCst);
+                    return false;
+                }
+                true
+            }
+            FaultPlan::StallAfterFrames { frames, ms } => {
+                if n >= frames {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                true
+            }
+            FaultPlan::DropAfterFrames(k) => {
+                // One-shot: exactly the K-th frame severs its
+                // connection; everything before and after flows.
+                !(n == k && !self.dropped.swap(true, Ordering::SeqCst))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_syntax() {
+        assert_eq!(FaultPlan::parse("die_after=5").unwrap(), FaultPlan::DieAfterFrames(5));
+        assert_eq!(FaultPlan::parse("drop_after=7").unwrap(), FaultPlan::DropAfterFrames(7));
+        assert_eq!(
+            FaultPlan::parse("stall_after=3:250").unwrap(),
+            FaultPlan::StallAfterFrames { frames: 3, ms: 250 }
+        );
+        for bad in ["die_after", "die_after=x", "stall_after=3", "explode=1", ""] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn none_never_triggers() {
+        let f = FaultState::new(None);
+        for _ in 0..100 {
+            assert!(f.before_frame());
+        }
+        assert!(!f.is_dead());
+    }
+
+    #[test]
+    fn die_is_permanent() {
+        let f = FaultState::new(Some(FaultPlan::DieAfterFrames(3)));
+        assert!(f.before_frame());
+        assert!(f.before_frame());
+        assert!(!f.before_frame(), "third frame dies");
+        assert!(f.is_dead());
+        assert!(!f.before_frame(), "stays dead");
+    }
+
+    #[test]
+    fn drop_severs_exactly_once() {
+        let f = FaultState::new(Some(FaultPlan::DropAfterFrames(2)));
+        assert!(f.before_frame());
+        assert!(!f.before_frame(), "second frame severs");
+        assert!(!f.is_dead(), "the worker itself survives a drop");
+        for _ in 0..10 {
+            assert!(f.before_frame(), "later frames flow normally");
+        }
+    }
+
+    #[test]
+    fn stall_keeps_delivering() {
+        let f = FaultState::new(Some(FaultPlan::StallAfterFrames { frames: 2, ms: 1 }));
+        let t0 = std::time::Instant::now();
+        for _ in 0..5 {
+            assert!(f.before_frame());
+        }
+        assert!(!f.is_dead());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(4), "frames 2..=5 stall");
+    }
+}

@@ -1,0 +1,44 @@
+//! Sharded wavefront serving: one coordinator, N worker processes.
+//!
+//! Diagonal batching makes every `(segment, layer)` cell independent
+//! within a wavefront step; this module promotes that independence to
+//! *process* granularity. Because ARMT's per-layer recurrent state is
+//! constant-size (`A [d, p]` + `z [p]` per layer — kilobytes, not a
+//! paged KV cache), a lane's complete inference state crosses a socket
+//! as one bit-exact [`MemSnapshot`](crate::cache::MemSnapshot) JSON
+//! frame, which makes both sharding axes and failover cheap:
+//!
+//! * **Lane sharding** (request parallelism): the coordinator routes
+//!   each admitted request to a worker over the ordinary line protocol
+//!   and merges the event stream back to the client. Requests are
+//!   forwarded with `"checkpoint": true`, so every segment boundary
+//!   streams a `snapshot` frame the coordinator holds as a failover
+//!   checkpoint (never forwarded to the client).
+//! * **Layer-range sharding** (pipeline parallelism): contiguous layer
+//!   ranges `[lo, hi)` per worker ([`ShardPlan`]); the coordinator
+//!   drives one `shard_segment` call per (segment, range), handing the
+//!   activations `x [T, d]` and receiving each range's post-segment
+//!   state. Sampling runs in the coordinator via the engine's own
+//!   decode state machine, so the pipeline is the sequential oracle
+//!   executed across processes — bit-identical by construction.
+//! * **Failover**: when a worker dies mid-request (EOF / connection
+//!   error before a terminal frame), the coordinator re-admits the
+//!   request on a survivor, seeding it from the latest checkpoint via
+//!   `"resume_state"` (greedy decode) or replaying it from segment 0
+//!   with duplicate suppression (seeded sampling, whose RNG state is
+//!   not part of the snapshot). Either way the merged client stream is
+//!   byte-identical to an uninterrupted run.
+//!
+//! [`FaultPlan`] is the test hook that makes the failover paths
+//! provable: a worker can be told to die, stall, or sever a connection
+//! after K protocol frames (`rust/tests/shard_failover.rs`).
+
+mod coordinator;
+mod fault;
+mod plan;
+mod worker;
+
+pub use coordinator::{CoordinatorOptions, ShardCoordinator};
+pub use fault::{FaultPlan, FaultState};
+pub use plan::ShardPlan;
+pub use worker::ShardService;

@@ -1,0 +1,110 @@
+//! How N workers split the model: contiguous layer ranges × chains.
+
+use crate::error::{Error, Result};
+
+/// A sharding of the `[L, B]` wavefront across workers. The layer axis
+/// splits into `ranges.len()` contiguous `[lo, hi)` ranges; workers
+/// group into *chains*, each chain hosting every range once. One chain
+/// serves one request end to end (`layer_split == 1` degenerates to
+/// pure lane sharding: every chain is a single worker running whole
+/// requests).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub n_layers: usize,
+    /// Contiguous `[lo, hi)` layer ranges, covering `0..n_layers` in
+    /// order.
+    pub ranges: Vec<(usize, usize)>,
+    /// `chains[c][r]` = index (into the worker list) of the worker
+    /// serving `ranges[r]` for chain `c`.
+    pub chains: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Split `n_layers` across `n_workers` workers in chains of
+    /// `layer_split` ranges. `n_workers` must be a multiple of
+    /// `layer_split` (every chain needs a full set of ranges).
+    pub fn new(n_workers: usize, n_layers: usize, layer_split: usize) -> Result<Self> {
+        if n_workers == 0 {
+            return Err(Error::Config("shard plan needs at least one worker".into()));
+        }
+        if layer_split == 0 || layer_split > n_layers {
+            return Err(Error::Config(format!(
+                "layer split {layer_split} must be in 1..={n_layers} (the layer count)"
+            )));
+        }
+        if n_workers % layer_split != 0 {
+            return Err(Error::Config(format!(
+                "{n_workers} workers cannot form chains of {layer_split} layer ranges"
+            )));
+        }
+        let ranges = split_layers(n_layers, layer_split);
+        let chains = (0..n_workers / layer_split)
+            .map(|c| (0..layer_split).map(|r| c * layer_split + r).collect())
+            .collect();
+        Ok(Self { n_layers, ranges, chains })
+    }
+
+    /// Whole-model ranges: requests route to one worker each.
+    pub fn lane_mode(&self) -> bool {
+        self.ranges.len() == 1
+    }
+}
+
+/// Ceil-split `n_layers` into `k` contiguous ranges — sizes differ by
+/// at most one, earlier ranges take the remainder.
+pub fn split_layers(n_layers: usize, k: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let hi = lo + (n_layers - lo).div_ceil(k - i);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_contiguously() {
+        for n_layers in 1..=12 {
+            for k in 1..=n_layers {
+                let ranges = split_layers(n_layers, k);
+                assert_eq!(ranges.len(), k);
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges[k - 1].1, n_layers);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                }
+                let sizes: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "unbalanced split {sizes:?}");
+                assert!(*min >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_chains_partition_workers() {
+        let p = ShardPlan::new(6, 4, 2).unwrap();
+        assert_eq!(p.ranges, vec![(0, 2), (2, 4)]);
+        assert_eq!(p.chains, vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+        assert!(!p.lane_mode());
+
+        let lanes = ShardPlan::new(3, 4, 1).unwrap();
+        assert_eq!(lanes.ranges, vec![(0, 4)]);
+        assert_eq!(lanes.chains, vec![vec![0], vec![1], vec![2]]);
+        assert!(lanes.lane_mode());
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        assert!(ShardPlan::new(0, 4, 1).is_err());
+        assert!(ShardPlan::new(2, 4, 0).is_err());
+        assert!(ShardPlan::new(2, 4, 5).is_err(), "more ranges than layers");
+        assert!(ShardPlan::new(3, 4, 2).is_err(), "3 workers, chains of 2");
+    }
+}

@@ -1,0 +1,404 @@
+//! Worker-side layer-range service: the `shard_*` command handler.
+//!
+//! A worker hosts *range lanes*: per-`sid` recurrent state for a
+//! contiguous layer range `[lo, hi)`. The coordinator drives one
+//! `shard_segment` call per (segment, range) — the worker runs
+//! `embed` (first range only) + `single_step` over its layers +
+//! `lm_head` (last range only) and returns the activations or logits
+//! plus its post-segment range state. This is exactly the sequential
+//! oracle's per-segment recurrence, split at range boundaries; the
+//! existing schedule-invariance properties (P4/P7/P10) are what make
+//! it bit-identical to the wavefront.
+//!
+//! The service is a pure `(cmd, json) -> json` function behind a
+//! mutex, so tests drive it in-process and the server exposes it over
+//! TCP unchanged.
+
+use std::collections::HashMap;
+
+use crate::cache::MemSnapshot;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::scheduler::StepBackend;
+use crate::tensor::Tensor;
+
+/// Serialize a float slice as raw `u32` bit patterns (the same
+/// bit-exact convention as [`MemSnapshot::to_json`]).
+pub(crate) fn bits_value(data: &[f32]) -> Value {
+    Value::Arr(data.iter().map(|f| Value::Num(f.to_bits() as f64)).collect())
+}
+
+/// Inverse of [`bits_value`].
+pub(crate) fn floats_from_bits(v: &Value) -> Result<Vec<f32>> {
+    v.as_arr()?
+        .iter()
+        .map(|b| {
+            let bits = b.as_u64()?;
+            let bits = u32::try_from(bits)
+                .map_err(|_| Error::Json(format!("f32 bit pattern {bits} > u32")))?;
+            Ok(f32::from_bits(bits))
+        })
+        .collect()
+}
+
+/// One request's recurrent state for layers `[lo, hi)`.
+struct RangeLane {
+    lo: usize,
+    hi: usize,
+    /// Segments consumed by this lane so far.
+    segments: usize,
+    /// Per-layer `A [d, p]`, indexed by `layer - lo`.
+    a: Vec<Tensor>,
+    /// Per-layer `z [p]`, indexed by `layer - lo`.
+    z: Vec<Tensor>,
+}
+
+/// The worker-side shard command handler ([`ServerOptions::shard_backend`]).
+///
+/// [`ServerOptions::shard_backend`]: crate::server::ServerOptions
+pub struct ShardService {
+    backend: Box<dyn StepBackend + Send>,
+    lanes: HashMap<u64, RangeLane>,
+}
+
+impl ShardService {
+    pub fn new(backend: Box<dyn StepBackend + Send>) -> Self {
+        Self { backend, lanes: HashMap::new() }
+    }
+
+    /// Dispatch one `shard_*` command. Every reply is a single JSON
+    /// object; errors surface as `Err` (the server renders the error
+    /// frame).
+    pub fn handle(&mut self, cmd: &str, v: &Value) -> Result<Value> {
+        let sid = v.req("sid")?.as_u64()?;
+        match cmd {
+            "shard_init" => {
+                let (lo, hi) = self.parse_range(v)?;
+                let cfg = self.backend.config();
+                let n = hi - lo;
+                let lane = RangeLane {
+                    lo,
+                    hi,
+                    segments: 0,
+                    a: (0..n).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect(),
+                    z: (0..n).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect(),
+                };
+                self.lanes.insert(sid, lane);
+                Ok(ok_reply(sid))
+            }
+            "shard_load" => {
+                let (lo, hi) = self.parse_range(v)?;
+                let state = MemSnapshot::from_json(v.req("state")?)?;
+                let cfg = self.backend.config();
+                if state.model != cfg.name
+                    || state.n_layers != hi - lo
+                    || state.d_model != cfg.d_model
+                    || state.phi_dim != cfg.phi_dim
+                    || state.seg != cfg.seg
+                {
+                    return Err(Error::Config(format!(
+                        "shard_load state (model '{}', {} layers) does not fit \
+                         range [{lo}, {hi}) of model '{}'",
+                        state.model, state.n_layers, cfg.name
+                    )));
+                }
+                let lane =
+                    RangeLane { lo, hi, segments: state.segments, a: state.a, z: state.z };
+                self.lanes.insert(sid, lane);
+                Ok(ok_reply(sid))
+            }
+            "shard_segment" => self.segment(sid, v),
+            "shard_state" => {
+                let lane = self.lane(sid)?;
+                let state = range_snapshot(self.backend.config(), lane);
+                Ok(Value::obj(vec![
+                    ("sid", Value::Num(sid as f64)),
+                    ("segments", Value::Num(state.segments as f64)),
+                    ("state", state.to_json()),
+                ]))
+            }
+            "shard_drop" => {
+                let found = self.lanes.remove(&sid).is_some();
+                Ok(Value::obj(vec![
+                    ("ok", Value::Bool(found)),
+                    ("sid", Value::Num(sid as f64)),
+                ]))
+            }
+            other => Err(Error::Request(format!("unknown shard cmd '{other}'"))),
+        }
+    }
+
+    /// One (segment, range) step: input tokens (first range) or
+    /// activations, output activations (inner ranges) or logits (last
+    /// range), always with the post-segment range state.
+    fn segment(&mut self, sid: u64, v: &Value) -> Result<Value> {
+        let lane = self
+            .lanes
+            .get(&sid)
+            .ok_or_else(|| Error::Request(format!("unknown shard lane {sid}")))?;
+        let (lo, hi) = (lane.lo, lane.hi);
+        let cfg = self.backend.config();
+        let (seg, n_layers) = (cfg.seg, cfg.n_layers);
+
+        let mut x = if let Some(t) = v.get("tokens") {
+            if lo != 0 {
+                return Err(Error::Request(format!(
+                    "tokens are embedded by the first range only (lane {sid} starts at \
+                     layer {lo})"
+                )));
+            }
+            let tokens = t.as_u32_vec()?;
+            if tokens.len() != seg {
+                return Err(Error::Request(format!(
+                    "shard_segment wants exactly {seg} tokens (a padded segment), got {}",
+                    tokens.len()
+                )));
+            }
+            self.backend.embed(&tokens)?
+        } else {
+            let shape = v
+                .req("x_shape")?
+                .as_arr()?
+                .iter()
+                .map(Value::as_usize)
+                .collect::<Result<Vec<usize>>>()?;
+            Tensor::new(&shape, floats_from_bits(v.req("x_bits")?)?)?
+        };
+
+        let lane = self.lanes.get_mut(&sid).expect("checked above");
+        for l in lo..hi {
+            let i = l - lo;
+            let (y, a2, z2) = self.backend.single_step(l, &x, &lane.a[i], &lane.z[i])?;
+            x = y;
+            lane.a[i] = a2;
+            lane.z[i] = z2;
+        }
+        lane.segments += 1;
+
+        let mut fields = vec![
+            ("sid", Value::Num(sid as f64)),
+            ("segments", Value::Num(lane.segments as f64)),
+        ];
+        if hi == n_layers {
+            let logits = self.backend.lm_head(&x)?;
+            fields.push(("logits_bits", bits_value(logits.data())));
+        } else {
+            fields.push(("x_bits", bits_value(x.data())));
+            fields.push(("x_shape", Value::arr_usize(x.shape())));
+        }
+        let lane = self.lanes.get(&sid).expect("still present");
+        fields.push(("state", range_snapshot(self.backend.config(), lane).to_json()));
+        Ok(Value::obj(fields))
+    }
+
+    fn lane(&self, sid: u64) -> Result<&RangeLane> {
+        self.lanes
+            .get(&sid)
+            .ok_or_else(|| Error::Request(format!("unknown shard lane {sid}")))
+    }
+
+    fn parse_range(&self, v: &Value) -> Result<(usize, usize)> {
+        let lo = v.req("lo")?.as_usize()?;
+        let hi = v.req("hi")?.as_usize()?;
+        let n = self.backend.config().n_layers;
+        if lo >= hi || hi > n {
+            return Err(Error::Config(format!(
+                "layer range [{lo}, {hi}) invalid for a {n}-layer model"
+            )));
+        }
+        Ok((lo, hi))
+    }
+}
+
+/// A lane's state as a snapshot with `n_layers = hi - lo` — the range
+/// slice convention the coordinator stitches full checkpoints from.
+fn range_snapshot(cfg: &crate::config::ModelConfig, lane: &RangeLane) -> MemSnapshot {
+    MemSnapshot {
+        model: cfg.name.clone(),
+        n_layers: lane.hi - lane.lo,
+        d_model: cfg.d_model,
+        phi_dim: cfg.phi_dim,
+        seg: cfg.seg,
+        segments: lane.segments,
+        a: lane.a.clone(),
+        z: lane.z.clone(),
+    }
+}
+
+fn ok_reply(sid: u64) -> Value {
+    Value::obj(vec![("ok", Value::Bool(true)), ("sid", Value::Num(sid as f64))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{NativeBackend, Params};
+    use crate::scheduler::segment_tokens;
+
+    fn backend(seed: u64) -> Box<dyn StepBackend + Send> {
+        let cfg = ModelConfig::synthetic();
+        Box::new(NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)))
+    }
+
+    fn seg_cmd(sid: u64, tokens: &[u32]) -> Value {
+        Value::obj(vec![
+            ("sid", Value::Num(sid as f64)),
+            ("tokens", Value::arr_u32(tokens)),
+        ])
+    }
+
+    /// The in-process sequential oracle: embed -> single_step chain ->
+    /// lm_head, per segment.
+    fn oracle_logits(seed: u64, segments: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        let cfg = ModelConfig::synthetic();
+        let mut b = backend(seed);
+        let mut a: Vec<Tensor> =
+            (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.d_model, cfg.phi_dim])).collect();
+        let mut z: Vec<Tensor> =
+            (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.phi_dim])).collect();
+        let mut out = Vec::new();
+        for seg in segments {
+            let mut x = b.embed(seg).unwrap();
+            for l in 0..cfg.n_layers {
+                let (y, a2, z2) = b.single_step(l, &x, &a[l], &z[l]).unwrap();
+                x = y;
+                a[l] = a2;
+                z[l] = z2;
+            }
+            let logits = b.lm_head(&x).unwrap();
+            out.push(logits.data().iter().map(|f| f.to_bits()).collect());
+        }
+        out
+    }
+
+    fn range_init(svc: &mut ShardService, sid: u64, lo: usize, hi: usize) {
+        let cmd = Value::obj(vec![
+            ("sid", Value::Num(sid as f64)),
+            ("lo", Value::Num(lo as f64)),
+            ("hi", Value::Num(hi as f64)),
+        ]);
+        assert!(svc.handle("shard_init", &cmd).unwrap().req("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn full_range_matches_sequential_oracle_bitwise() {
+        let cfg = ModelConfig::synthetic();
+        let tokens: Vec<u32> = (0..3 * cfg.seg as u32).map(|i| (i * 7 + 3) % 64).collect();
+        let segments = segment_tokens(&cfg, &tokens).unwrap();
+        let want = oracle_logits(5, &segments);
+
+        let mut svc = ShardService::new(backend(5));
+        range_init(&mut svc, 1, 0, cfg.n_layers);
+        for (i, seg) in segments.iter().enumerate() {
+            let reply = svc.handle("shard_segment", &seg_cmd(1, seg)).unwrap();
+            assert_eq!(reply.req("segments").unwrap().as_usize().unwrap(), i + 1);
+            let got: Vec<u32> = floats_from_bits(reply.req("logits_bits").unwrap())
+                .unwrap()
+                .iter()
+                .map(|f| f.to_bits())
+                .collect();
+            assert_eq!(got, want[i], "segment {i} logits diverge");
+        }
+    }
+
+    #[test]
+    fn two_range_pipeline_matches_oracle_bitwise() {
+        let cfg = ModelConfig::synthetic();
+        let tokens: Vec<u32> = (0..2 * cfg.seg as u32).map(|i| (i * 11 + 1) % 64).collect();
+        let segments = segment_tokens(&cfg, &tokens).unwrap();
+        let want = oracle_logits(9, &segments);
+        let split = cfg.n_layers / 2 + 1; // uneven on purpose
+
+        // Two services = two worker processes sharing the weights.
+        let mut first = ShardService::new(backend(9));
+        let mut last = ShardService::new(backend(9));
+        range_init(&mut first, 7, 0, split);
+        range_init(&mut last, 7, split, cfg.n_layers);
+
+        for (i, seg) in segments.iter().enumerate() {
+            let mid = first.handle("shard_segment", &seg_cmd(7, seg)).unwrap();
+            // The inner range hands off activations, never logits.
+            assert!(mid.get("logits_bits").is_none());
+            let hand_off = Value::obj(vec![
+                ("sid", Value::Num(7.0)),
+                ("x_bits", mid.req("x_bits").unwrap().clone()),
+                ("x_shape", mid.req("x_shape").unwrap().clone()),
+            ]);
+            let reply = last.handle("shard_segment", &hand_off).unwrap();
+            let got: Vec<u32> = floats_from_bits(reply.req("logits_bits").unwrap())
+                .unwrap()
+                .iter()
+                .map(|f| f.to_bits())
+                .collect();
+            assert_eq!(got, want[i], "segment {i} logits diverge across the pipeline");
+        }
+    }
+
+    #[test]
+    fn state_roundtrips_through_load() {
+        let cfg = ModelConfig::synthetic();
+        let seg: Vec<u32> = (0..cfg.seg as u32).collect();
+        let mut svc = ShardService::new(backend(3));
+        range_init(&mut svc, 1, 0, cfg.n_layers);
+        let reply = svc.handle("shard_segment", &seg_cmd(1, &seg)).unwrap();
+        let state = reply.req("state").unwrap().clone();
+
+        // Load the captured state into a fresh lane on a fresh service:
+        // the next segment must continue bit-identically.
+        let mut fresh = ShardService::new(backend(3));
+        let load = Value::obj(vec![
+            ("sid", Value::Num(2.0)),
+            ("lo", Value::Num(0.0)),
+            ("hi", Value::Num(cfg.n_layers as f64)),
+            ("state", state),
+        ]);
+        assert!(fresh.handle("shard_load", &load).unwrap().req("ok").unwrap().as_bool().unwrap());
+        let seg2: Vec<u32> = (0..cfg.seg as u32).map(|i| i + 8).collect();
+        let a = svc.handle("shard_segment", &seg_cmd(1, &seg2)).unwrap();
+        let b = fresh.handle("shard_segment", &seg_cmd(2, &seg2)).unwrap();
+        assert_eq!(
+            a.req("logits_bits").unwrap().to_json(),
+            b.req("logits_bits").unwrap().to_json()
+        );
+        assert_eq!(b.req("segments").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_inputs_are_refused() {
+        let cfg = ModelConfig::synthetic();
+        let mut svc = ShardService::new(backend(1));
+        let seg: Vec<u32> = (0..cfg.seg as u32).collect();
+        // Unknown lane.
+        assert!(svc.handle("shard_segment", &seg_cmd(9, &seg)).is_err());
+        // Bad ranges.
+        for (lo, hi) in [(2, 2), (3, 1), (0, cfg.n_layers + 1)] {
+            let cmd = Value::obj(vec![
+                ("sid", Value::Num(1.0)),
+                ("lo", Value::Num(lo as f64)),
+                ("hi", Value::Num(hi as f64)),
+            ]);
+            assert!(svc.handle("shard_init", &cmd).is_err(), "range [{lo}, {hi})");
+        }
+        // Tokens into a non-first range.
+        range_init(&mut svc, 1, 1, cfg.n_layers);
+        assert!(svc.handle("shard_segment", &seg_cmd(1, &seg)).is_err());
+        // Wrong token count.
+        range_init(&mut svc, 2, 0, cfg.n_layers);
+        assert!(svc.handle("shard_segment", &seg_cmd(2, &seg[..2])).is_err());
+        // Mismatched shard_load state.
+        let mut other = ShardService::new(backend(1));
+        range_init(&mut other, 3, 0, 1);
+        let one_layer =
+            other.handle("shard_state", &Value::obj(vec![("sid", Value::Num(3.0))])).unwrap();
+        let load = Value::obj(vec![
+            ("sid", Value::Num(4.0)),
+            ("lo", Value::Num(0.0)),
+            ("hi", Value::Num(cfg.n_layers as f64)),
+            ("state", one_layer.req("state").unwrap().clone()),
+        ]);
+        assert!(svc.handle("shard_load", &load).is_err(), "1-layer state into a full range");
+        // Unknown subcommand.
+        assert!(svc.handle("shard_warp", &seg_cmd(1, &seg)).is_err());
+    }
+}

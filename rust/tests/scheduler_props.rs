@@ -341,6 +341,136 @@ fn p10_results_invariant_to_thread_count_and_scheduling_jitter() {
 }
 
 #[test]
+fn p12_shard_plan_parity_over_random_workloads() {
+    // For random model shapes, worker counts and layer splits, a shard
+    // coordinator in front of in-process workers must produce outputs
+    // identical to the one-process oracle: generated tokens and greedy
+    // tails always, and in layer-split mode the raw per-segment logits
+    // compared as f32 bit patterns over the wire (`logits_bits`).
+    use diagonal_batching::config::ExecMode;
+    use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
+    use diagonal_batching::json::Value;
+    use diagonal_batching::scheduler::StepBackend;
+    use diagonal_batching::server::{Client, Server, ServerOptions};
+    use diagonal_batching::shard::{CoordinatorOptions, ShardCoordinator};
+
+    let mut rng = Rng::new(0x512D);
+    for case in 0..5 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        // split ∈ 1..=L; worker count a random multiple of it (whole
+        // chains). split == 1 exercises lane routing, > 1 the pipeline.
+        let split = 1 + rng.below(cfg.n_layers);
+        let n_workers = split * (1 + rng.below(2));
+
+        let workers: Vec<Server> = (0..n_workers)
+            .map(|_| {
+                let engine = InferenceEngine::new(
+                    NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+                    ExecMode::Diagonal,
+                );
+                let backend: Box<dyn StepBackend + Send> =
+                    Box::new(NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)));
+                Server::start_with(
+                    engine,
+                    "127.0.0.1:0",
+                    8,
+                    ServerOptions { shard_backend: Some(backend), fault: None },
+                )
+                .unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr.to_string()).collect();
+        let coord = ShardCoordinator::start(
+            cfg.clone(),
+            &addrs,
+            "127.0.0.1:0",
+            CoordinatorOptions { layer_split: split, ..CoordinatorOptions::default() },
+        )
+        .unwrap();
+        let coord_addr = coord.addr.to_string();
+
+        let n_requests = 1 + rng.below(3);
+        for r in 0..n_requests {
+            let s = 1 + rng.below(3);
+            let n_tokens = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+            let prompt: Vec<u32> =
+                (0..n_tokens).map(|_| rng.below(cfg.vocab) as u32).collect();
+            let max_new = cfg.seg * (1 + rng.below(2));
+            let sampled = rng.below(2) == 1;
+            let want_logits = split > 1;
+
+            let mut fields = vec![
+                ("tokens", Value::arr_u32(&prompt)),
+                ("max_new_tokens", Value::Num(max_new as f64)),
+            ];
+            if sampled {
+                fields.push(("temperature", Value::Num(0.8)));
+                fields.push(("seed", Value::Num((seed % 1000) as f64)));
+            }
+            if want_logits {
+                fields.push(("want_logits", Value::Bool(true)));
+            }
+            let mut client = Client::connect(&coord_addr).unwrap();
+            let done = client.request_stream(&Value::obj(fields), |_| {}).unwrap();
+
+            let mut oracle = InferenceEngine::new(
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+                ExecMode::Sequential,
+            );
+            let mut req = GenerateRequest::new(1, prompt.clone()).generate(max_new);
+            if sampled {
+                req.sampling.temperature = 0.8;
+                req.sampling.seed = seed % 1000;
+            }
+            req.want_logits = want_logits;
+            let want = oracle.process(&req).unwrap();
+
+            let ctx = format!(
+                "case {case} req {r} split {split} workers {n_workers} sampled {sampled} cfg {cfg:?}"
+            );
+            assert_eq!(
+                done.req("generated").unwrap().as_u32_vec().unwrap(),
+                want.generated,
+                "{ctx}"
+            );
+            let tail: Vec<usize> = done
+                .req("greedy_tail")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            assert_eq!(tail, want.greedy_tail, "{ctx}");
+
+            if want_logits {
+                // Bit-level gate: every computed segment's logits moved
+                // through the pipeline as raw u32 patterns.
+                let bits = done.req("logits_bits").unwrap().as_arr().unwrap();
+                let oracle_logits = want.logits.as_ref().unwrap();
+                assert_eq!(bits.len(), oracle_logits.len(), "segment count: {ctx}");
+                for (s_i, (seg_bits, t)) in bits.iter().zip(oracle_logits).enumerate() {
+                    let got: Vec<u32> = seg_bits.as_u32_vec().unwrap();
+                    let expect: Vec<u32> =
+                        t.data().iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, expect, "segment {s_i} logits bits: {ctx}");
+                }
+            }
+        }
+
+        let stats = coord.stats();
+        assert_eq!(stats.shard_failovers.get(), 0, "case {case}: phantom failover");
+        assert!(stats.shard_routed.get() + stats.shard_handoffs.get() > 0, "case {case}");
+        coord.stop();
+        for w in workers {
+            w.stop();
+        }
+    }
+}
+
+#[test]
 fn p6_minibatch_and_ideal_cover_all_cells() {
     let mut rng = Rng::new(0x3AD);
     for _ in 0..50 {

@@ -16,12 +16,15 @@
 //!   cells never exceed active cells.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use diagonal_batching::config::{ExecMode, ModelConfig};
 use diagonal_batching::coordinator::{Event, GenerateRequest, InferenceEngine, RequestQueue};
+use diagonal_batching::json::Value;
 use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::server::{Client, Server, ServerOptions};
+use diagonal_batching::shard::{CoordinatorOptions, FaultPlan, ShardCoordinator};
 
 const PRODUCERS: usize = 4;
 const PER_PRODUCER: usize = 12;
@@ -197,4 +200,222 @@ fn serve_queue_pooled_concurrent_stress() {
     assert!(stats.pool_cells.get() <= active, "pool executed phantom cells");
     let (busy, cap) = stats.worker_busy.parts();
     assert!(busy <= cap);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded serving stress: a coordinator over in-process workers under
+// mixed generate / cancel / save traffic, with a scripted worker death
+// mid-burst and a replacement attached live via `shard_attach`.
+//
+// Asserted invariants:
+// * liveness under its own watchdog — a wedged coordinator aborts with
+//   a distinct exit code;
+// * exactly-once completion: every request gets exactly one terminal
+//   frame (checked by pinging the same connection right after it), and
+//   every non-cancelled request completes despite the worker death;
+// * conserved accounting: the coordinator's `generated_tokens` counter
+//   equals the sum of tokens actually delivered in `done` frames, and
+//   the worker gauge tracks dead + attached workers.
+
+const SHARD_PRODUCERS: usize = 3;
+const SHARD_PER_PRODUCER: usize = 6;
+const SHARD_SEED: u64 = 0x99;
+
+fn shard_worker_server(fault: Option<FaultPlan>) -> Server {
+    let c = ModelConfig::synthetic();
+    let engine = InferenceEngine::new(
+        NativeBackend::new(c.clone(), Params::random(&c, SHARD_SEED)),
+        ExecMode::Diagonal,
+    );
+    Server::start_with(engine, "127.0.0.1:0", 16, ServerOptions { shard_backend: None, fault })
+        .unwrap()
+}
+
+#[test]
+fn shard_coordinator_mixed_traffic_with_scripted_death_and_attach() {
+    let cfg = ModelConfig::synthetic();
+    let w1 = shard_worker_server(None);
+    // Dies after 60 protocol frames — mid-burst, with several requests
+    // in flight on it.
+    let w2 = shard_worker_server(Some(FaultPlan::DieAfterFrames(60)));
+    let coord = ShardCoordinator::start(
+        cfg.clone(),
+        &[w1.addr.to_string(), w2.addr.to_string()],
+        "127.0.0.1:0",
+        CoordinatorOptions::default(),
+    )
+    .unwrap();
+    let addr = coord.addr.to_string();
+    let stats = coord.stats();
+
+    // Watchdog: fault handling must be bounded.
+    let done_flag = Arc::new(AtomicBool::new(false));
+    {
+        let done_flag = Arc::clone(&done_flag);
+        std::thread::spawn(move || {
+            for _ in 0..1800 {
+                std::thread::sleep(Duration::from_millis(100));
+                if done_flag.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            eprintln!("serve_stress: watchdog fired — shard coordinator wedged");
+            std::process::exit(103);
+        });
+    }
+
+    // Control thread: once the scripted death has caused a failover,
+    // attach a fresh replacement worker (the "restart").
+    let replacement: Arc<Mutex<Option<Server>>> = Arc::new(Mutex::new(None));
+    let control = {
+        let addr = addr.clone();
+        let stats = Arc::clone(&stats);
+        let replacement = Arc::clone(&replacement);
+        let done_flag = Arc::clone(&done_flag);
+        std::thread::spawn(move || {
+            while stats.shard_failovers.get() == 0 {
+                if done_flag.load(Ordering::SeqCst) {
+                    return false; // burst finished before the fault fired
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let w3 = shard_worker_server(None);
+            let mut c = Client::connect(&addr).unwrap();
+            let reply = c
+                .roundtrip(&Value::obj(vec![
+                    ("cmd", Value::Str("shard_attach".into())),
+                    ("addr", Value::Str(w3.addr.to_string())),
+                ]))
+                .unwrap();
+            assert!(reply.req("ok").unwrap().as_bool().unwrap());
+            *replacement.lock().unwrap() = Some(w3);
+            true
+        })
+    };
+
+    // Producers: mixed prompt lengths and decode budgets, every third
+    // request asks for a `save` resume token.
+    let completions: Arc<Mutex<Vec<(u64, usize, Option<u64>)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let producers: Vec<_> = (0..SHARD_PRODUCERS)
+        .map(|p| {
+            let addr = addr.clone();
+            let completions = Arc::clone(&completions);
+            let seg = cfg.seg;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..SHARD_PER_PRODUCER {
+                    let id = (p * 100 + i) as u64;
+                    let n_segs = 1 + (p + i) % 3;
+                    let prompt: Vec<u32> =
+                        (0..n_segs * seg).map(|t| ((t as u32) * 11 + id as u32) % 64).collect();
+                    let max_new = [0usize, 4, 8][(p + 2 * i) % 3];
+                    let mut fields = vec![
+                        ("id", Value::Num(id as f64)),
+                        ("tokens", Value::arr_u32(&prompt)),
+                        ("max_new_tokens", Value::Num(max_new as f64)),
+                    ];
+                    if i % 3 == 0 {
+                        fields.push(("save", Value::Bool(true)));
+                    }
+                    let done = client
+                        .request_stream(&Value::obj(fields), |_| {})
+                        .unwrap_or_else(|e| panic!("request {id} failed: {e}"));
+                    // Exactly-once: a duplicated terminal frame would be
+                    // consumed as this ping's reply and fail it.
+                    assert!(client.ping().unwrap(), "stray frame after done for {id}");
+                    let generated =
+                        done.req("generated").unwrap().as_u32_vec().unwrap().len();
+                    assert_eq!(generated, max_new, "request {id} token budget");
+                    let token = done.get("resume_token").map(|v| v.as_u64().unwrap());
+                    assert_eq!(token.is_some(), i % 3 == 0, "request {id} save handling");
+                    completions.lock().unwrap().push((id, generated, token));
+                }
+            })
+        })
+        .collect();
+
+    // Cancel traffic: a long-running request cancelled from a second
+    // connection. Depending on timing it terminates with a cancel
+    // error or races to a clean `done`; both are exactly-once.
+    let canceller = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut victim = Client::connect(&addr).unwrap();
+            let frame = Value::obj(vec![
+                ("id", Value::Num(999.0)),
+                ("tokens", Value::arr_u32(&(0..8).collect::<Vec<u32>>())),
+                ("max_new_tokens", Value::Num(4096.0)),
+            ]);
+            let killer = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                let mut c = Client::connect(&addr).unwrap();
+                c.cancel(999).unwrap()
+            });
+            let outcome = victim.request_stream(&frame, |_| {});
+            let _found = killer.join().unwrap();
+            match outcome {
+                Ok(done) => done.req("generated").unwrap().as_u32_vec().unwrap().len(),
+                Err(_) => 0, // cancelled before completion: no done frame
+            }
+        })
+    };
+
+    for h in producers {
+        h.join().expect("producer panicked");
+    }
+    let cancel_generated = canceller.join().expect("canceller panicked");
+    done_flag.store(true, Ordering::SeqCst);
+    let attached = control.join().expect("control thread panicked");
+
+    // Exactly-once across the burst: all ids, no losses, no duplicates.
+    let mut got = completions.lock().unwrap().clone();
+    got.sort_unstable_by_key(|(id, _, _)| *id);
+    let ids: Vec<u64> = got.iter().map(|(id, _, _)| *id).collect();
+    let want: Vec<u64> = (0..SHARD_PRODUCERS)
+        .flat_map(|p| (0..SHARD_PER_PRODUCER).map(move |i| (p * 100 + i) as u64))
+        .collect();
+    assert_eq!(ids, want, "lost or duplicated completions");
+
+    // Resume tokens are coordinator-scoped and unique.
+    let mut tokens: Vec<u64> = got.iter().filter_map(|(_, _, t)| *t).collect();
+    let n_saved = tokens.len();
+    tokens.sort_unstable();
+    tokens.dedup();
+    assert_eq!(tokens.len(), n_saved, "duplicate resume tokens handed out");
+
+    // Conserved accounting: the coordinator counted exactly the tokens
+    // it delivered in `done` frames — across failovers too.
+    let delivered: u64 =
+        got.iter().map(|(_, n, _)| *n as u64).sum::<u64>() + cancel_generated as u64;
+    assert_eq!(stats.generated_tokens.get(), delivered, "token accounting drifted");
+    assert!(
+        stats.shard_routed.get() >= (SHARD_PRODUCERS * SHARD_PER_PRODUCER) as u64,
+        "routing undercounted"
+    );
+
+    if attached {
+        // The scripted death fired: the dead worker left the gauge and
+        // the replacement joined it (1 survivor + 1 attached).
+        assert!(stats.shard_failovers.get() >= 1);
+        assert_eq!(stats.shard_workers.get(), 2, "worker gauge drifted");
+        // The replacement actually serves: one more request through the
+        // coordinator after the burst.
+        let mut c = Client::connect(&addr).unwrap();
+        let frame = Value::obj(vec![
+            ("tokens", Value::arr_u32(&(0..16).collect::<Vec<u32>>())),
+            ("max_new_tokens", Value::Num(4.0)),
+        ]);
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let done = c.request_stream(&frame, |_| {}).unwrap();
+        assert_eq!(done.req("generated").unwrap().as_u32_vec().unwrap().len(), 4);
+        assert!(Instant::now() < deadline);
+    }
+
+    coord.stop();
+    w1.stop();
+    w2.stop();
+    if let Some(w3) = replacement.lock().unwrap().take() {
+        w3.stop();
+    }
 }

@@ -1,0 +1,357 @@
+//! Fault-injection failover tests for the shard coordinator: workers
+//! armed with deterministic [`FaultPlan`]s (die / stall / sever after K
+//! protocol frames) must never corrupt a client stream.
+//!
+//! The sharded parity gate proven here:
+//! * a worker killed mid-request fails over to a survivor and the
+//!   merged client stream stays FRAME-FOR-FRAME identical to the same
+//!   request served by a fault-free shard — greedy requests resume
+//!   from the latest usable boundary checkpoint, sampled requests
+//!   replay under their seed, and the coordinator's dedup suppresses
+//!   every already-forwarded frame;
+//! * exactly one terminal frame per request, even across failovers
+//!   (checked by pinging on the same connection right after `done` —
+//!   a stray duplicate would surface as the ping reply);
+//! * a stalled worker trips a bounded `deadline exceeded` error
+//!   instead of wedging the coordinator, which keeps serving;
+//! * a severed connection is a single failover, not a dead worker:
+//!   the process stays healthy and reachable;
+//! * in layer-sharded pipelines, a dead stage reloads its range state
+//!   onto a survivor and the output stays bit-equal to the
+//!   single-process oracle.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use diagonal_batching::config::{ExecMode, ModelConfig};
+use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
+use diagonal_batching::json::Value;
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::scheduler::StepBackend;
+use diagonal_batching::server::{Client, Server, ServerOptions};
+use diagonal_batching::shard::{CoordinatorOptions, FaultPlan, ShardCoordinator};
+
+const SEED: u64 = 0xFA11;
+
+fn cfg() -> ModelConfig {
+    ModelConfig::synthetic()
+}
+
+fn engine() -> InferenceEngine<NativeBackend> {
+    let c = cfg();
+    InferenceEngine::new(NativeBackend::new(c.clone(), Params::random(&c, SEED)), ExecMode::Diagonal)
+}
+
+/// A lane worker (whole requests) with optional fault injection.
+fn worker(fault: Option<FaultPlan>) -> Server {
+    Server::start_with(engine(), "127.0.0.1:0", 8, ServerOptions { shard_backend: None, fault })
+        .unwrap()
+}
+
+/// A layer-range worker (hosts the `shard_*` service too).
+fn shard_worker(fault: Option<FaultPlan>) -> Server {
+    let c = cfg();
+    let backend: Box<dyn StepBackend + Send> =
+        Box::new(NativeBackend::new(c.clone(), Params::random(&c, SEED)));
+    Server::start_with(
+        engine(),
+        "127.0.0.1:0",
+        8,
+        ServerOptions { shard_backend: Some(backend), fault },
+    )
+    .unwrap()
+}
+
+fn coordinator(workers: &[&Server], layer_split: usize) -> ShardCoordinator {
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.to_string()).collect();
+    ShardCoordinator::start(
+        cfg(),
+        &addrs,
+        "127.0.0.1:0",
+        CoordinatorOptions { layer_split, ..CoordinatorOptions::default() },
+    )
+    .unwrap()
+}
+
+fn prompt(n: usize) -> Vec<u32> {
+    (0..n as u32).map(|i| (i * 7 + 3) % 64).collect()
+}
+
+/// Stream one request; returns the pre-terminal event frames as
+/// canonical JSON plus the `done` frame with the nondeterministic
+/// latency removed. Pings on the same connection afterwards: exactly
+/// one terminal frame must have been written (a duplicated `done`
+/// would be consumed as the ping reply and fail it).
+fn streamed(addr: &str, frame: &Value) -> (Vec<String>, Value) {
+    let mut client = Client::connect(addr).unwrap();
+    let mut events = Vec::new();
+    let done = client.request_stream(frame, |ev| events.push(ev.to_json())).unwrap();
+    assert!(client.ping().unwrap(), "stray frame after the terminal `done`");
+    let mut m = done.as_obj().cloned().unwrap_or_default();
+    m.remove("latency_ms");
+    (events, Value::Obj(m))
+}
+
+/// Abort the whole test binary if `f` wedges: fault handling must be
+/// bounded, and a hung coordinator should fail CI loudly, not time out.
+fn under_watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let done = Arc::new(AtomicBool::new(false));
+    let d2 = Arc::clone(&done);
+    std::thread::spawn(move || {
+        for _ in 0..secs * 10 {
+            std::thread::sleep(Duration::from_millis(100));
+            if d2.load(Ordering::SeqCst) {
+                return;
+            }
+        }
+        eprintln!("shard_failover: watchdog fired — coordinator wedged");
+        std::process::exit(102);
+    });
+    let out = f();
+    done.store(true, Ordering::SeqCst);
+    out
+}
+
+#[test]
+fn greedy_failover_stream_is_identical_to_fault_free_shard() {
+    under_watchdog(120, || {
+        // 3 prompt segments + 2 decode segments of frames; the faulty
+        // worker (listed first, so round-robin routes request 1 to it)
+        // dies mid-stream after 7 frames — past several boundary
+        // checkpoints, inside a token batch.
+        let frame = Value::obj(vec![
+            ("id", Value::Num(42.0)),
+            ("tokens", Value::arr_u32(&prompt(24))),
+            ("max_new_tokens", Value::Num(10.0)),
+        ]);
+
+        let c1 = worker(None);
+        let c2 = worker(None);
+        let clean = coordinator(&[&c1, &c2], 1);
+        let (want_events, want_done) = streamed(&clean.addr.to_string(), &frame);
+
+        let f1 = worker(Some(FaultPlan::DieAfterFrames(7)));
+        let f2 = worker(None);
+        let faulted = coordinator(&[&f1, &f2], 1);
+        let (got_events, got_done) = streamed(&faulted.addr.to_string(), &frame);
+
+        let stats = faulted.stats();
+        assert!(stats.shard_failovers.get() >= 1, "the fault never fired");
+        // Frame-for-frame: segment and token events survive the
+        // failover without gaps, duplicates or reordering.
+        assert_eq!(got_events, want_events, "event stream diverged across a failover");
+        // The rewritten `done` restores whole-request accounting.
+        for field in ["generated", "tokens", "greedy_tail"] {
+            assert_eq!(
+                got_done.req(field).unwrap(),
+                want_done.req(field).unwrap(),
+                "done.{field} diverged across a failover"
+            );
+        }
+
+        clean.stop();
+        faulted.stop();
+        for w in [c1, c2, f2] {
+            w.stop();
+        }
+        // f1 is fault-dead; its engine thread still drains normally.
+        f1.stop();
+    });
+}
+
+#[test]
+fn sampled_failover_replays_identically_under_the_seed() {
+    under_watchdog(120, || {
+        // Sampled requests have no greedy checkpoint policy: failover is
+        // a full seeded replay, and dedup must absorb the replayed
+        // prefix frames.
+        let frame = Value::obj(vec![
+            ("id", Value::Num(43.0)),
+            ("tokens", Value::arr_u32(&prompt(16))),
+            ("max_new_tokens", Value::Num(10.0)),
+            ("temperature", Value::Num(0.85)),
+            ("seed", Value::Num(11.0)),
+        ]);
+
+        let c1 = worker(None);
+        let c2 = worker(None);
+        let clean = coordinator(&[&c1, &c2], 1);
+        let (want_events, want_done) = streamed(&clean.addr.to_string(), &frame);
+
+        let f1 = worker(Some(FaultPlan::DieAfterFrames(5)));
+        let f2 = worker(None);
+        let faulted = coordinator(&[&f1, &f2], 1);
+        let (got_events, got_done) = streamed(&faulted.addr.to_string(), &frame);
+
+        assert!(faulted.stats().shard_failovers.get() >= 1, "the fault never fired");
+        assert_eq!(got_events, want_events, "seeded replay diverged");
+        for field in ["generated", "tokens"] {
+            assert_eq!(got_done.req(field).unwrap(), want_done.req(field).unwrap());
+        }
+
+        clean.stop();
+        faulted.stop();
+        for w in [c1, c2, f1, f2] {
+            w.stop();
+        }
+    });
+}
+
+#[test]
+fn stalled_worker_trips_bounded_deadline_error_not_a_wedge() {
+    under_watchdog(120, || {
+        // Worker 1 stalls 1.5 s before every frame from frame 2 on; the
+        // request carries a 200 ms deadline and the coordinator grants
+        // 200 ms of grace. The client must get a deadline error in
+        // bounded time, and the coordinator must keep serving.
+        let f1 = worker(Some(FaultPlan::StallAfterFrames { frames: 2, ms: 1500 }));
+        let f2 = worker(None);
+        let addrs = [f1.addr.to_string(), f2.addr.to_string()];
+        let coord = ShardCoordinator::start(
+            cfg(),
+            &addrs,
+            "127.0.0.1:0",
+            CoordinatorOptions {
+                layer_split: 1,
+                deadline_grace: Duration::from_millis(200),
+            },
+        )
+        .unwrap();
+
+        let mut client = Client::connect(&coord.addr.to_string()).unwrap();
+        let frame = Value::obj(vec![
+            ("id", Value::Num(44.0)),
+            ("tokens", Value::arr_u32(&prompt(24))),
+            ("max_new_tokens", Value::Num(8.0)),
+            ("deadline_ms", Value::Num(200.0)),
+        ]);
+        let started = Instant::now();
+        let err = client
+            .request_stream(&frame, |_| {})
+            .expect_err("a stalled worker must not produce a clean done");
+        assert!(
+            err.to_string().contains("deadline"),
+            "expected a deadline error, got: {err}"
+        );
+        // Bounded: deadline + grace + one best-effort cancel relay,
+        // nowhere near the 1.5 s-per-frame stall schedule.
+        assert!(
+            started.elapsed() < Duration::from_secs(30),
+            "deadline error was not bounded: {:?}",
+            started.elapsed()
+        );
+
+        // Not a wedge: the next request round-robins onto the healthy
+        // worker and completes normally.
+        let frame2 = Value::obj(vec![
+            ("id", Value::Num(45.0)),
+            ("tokens", Value::arr_u32(&prompt(16))),
+            ("max_new_tokens", Value::Num(4.0)),
+        ]);
+        let (_events, done) = streamed(&coord.addr.to_string(), &frame2);
+        assert_eq!(
+            done.req("generated").unwrap().as_u32_vec().unwrap().len(),
+            4,
+            "coordinator stopped serving after a stalled worker"
+        );
+
+        coord.stop();
+        f2.stop();
+        f1.stop();
+    });
+}
+
+#[test]
+fn dropped_connection_fails_over_once_and_worker_stays_alive() {
+    under_watchdog(120, || {
+        let frame = Value::obj(vec![
+            ("id", Value::Num(46.0)),
+            ("tokens", Value::arr_u32(&prompt(24))),
+            ("max_new_tokens", Value::Num(8.0)),
+        ]);
+
+        let c1 = worker(None);
+        let c2 = worker(None);
+        let clean = coordinator(&[&c1, &c2], 1);
+        let (want_events, want_done) = streamed(&clean.addr.to_string(), &frame);
+
+        // drop_after severs exactly one connection mid-stream; unlike
+        // die_after the process keeps accepting afterwards.
+        let f1 = worker(Some(FaultPlan::DropAfterFrames(4)));
+        let f2 = worker(None);
+        let faulted = coordinator(&[&f1, &f2], 1);
+        let (got_events, got_done) = streamed(&faulted.addr.to_string(), &frame);
+
+        let stats = faulted.stats();
+        assert_eq!(stats.shard_failovers.get(), 1, "one severed conn = one failover");
+        assert_eq!(got_events, want_events, "stream diverged across a severed conn");
+        for field in ["generated", "tokens", "greedy_tail"] {
+            assert_eq!(got_done.req(field).unwrap(), want_done.req(field).unwrap());
+        }
+
+        // The dropped worker is a healthy process, not a corpse: it
+        // still answers pings directly.
+        let mut direct = Client::connect(&f1.addr.to_string()).unwrap();
+        assert!(direct.ping().unwrap(), "a severed conn must not kill the worker");
+
+        clean.stop();
+        faulted.stop();
+        for w in [c1, c2, f1, f2] {
+            w.stop();
+        }
+    });
+}
+
+#[test]
+fn pipeline_stage_death_reloads_range_state_bit_equal() {
+    under_watchdog(120, || {
+        let c = cfg();
+        // One chain of two layer ranges; the stage-0 worker dies after
+        // its init reply + two segment replies, mid-request. The stage
+        // must reload its last reported range state onto the survivor.
+        let f1 = shard_worker(Some(FaultPlan::DieAfterFrames(3)));
+        let f2 = shard_worker(None);
+        let coord = coordinator(&[&f1, &f2], 2);
+
+        let tokens = prompt(3 * c.seg);
+        let max_new = c.seg;
+        let frame = Value::obj(vec![
+            ("id", Value::Num(47.0)),
+            ("tokens", Value::arr_u32(&tokens)),
+            ("max_new_tokens", Value::Num(max_new as f64)),
+        ]);
+        let (_events, done) = streamed(&coord.addr.to_string(), &frame);
+
+        let stats = coord.stats();
+        assert!(stats.shard_failovers.get() >= 1, "the stage death never fired");
+        assert!(stats.shard_handoffs.get() >= 1, "failover must hand the range state off");
+
+        // Bit-equal to the single-process oracle with the same weights.
+        let mut oracle = InferenceEngine::new(
+            NativeBackend::new(c.clone(), Params::random(&c, SEED)),
+            ExecMode::Sequential,
+        );
+        let want = oracle
+            .process(&GenerateRequest::new(1, tokens.clone()).generate(max_new))
+            .unwrap();
+        assert_eq!(
+            done.req("generated").unwrap().as_u32_vec().unwrap(),
+            want.generated,
+            "pipeline output diverged after a stage failover"
+        );
+        let tail: Vec<usize> = done
+            .req("greedy_tail")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(tail, want.greedy_tail);
+
+        coord.stop();
+        f2.stop();
+        f1.stop();
+    });
+}
