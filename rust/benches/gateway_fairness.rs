@@ -1,0 +1,13 @@
+//! Gateway admission fairness: weighted-fair scheduling vs FIFO under
+//! a batch-tenant flood, plus token-bucket and API-key gates.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `gateway_fairness`; this binary is the legacy `cargo bench`
+//! entry point and is equivalent to
+//! `diagonal-batching bench --suite gateway_fairness`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("gateway_fairness")
+}

@@ -386,6 +386,23 @@ impl CompareOutcome {
 /// different simulated device models are refused (`incomparable`).
 pub fn compare(baseline: &BenchReport, current: &BenchReport, max_ratio: f64) -> CompareOutcome {
     let mut out = CompareOutcome::default();
+    // An unseeded placeholder baseline (no suites, or the seed's
+    // sentinel git_sha) would compare zero quantities and "pass" every
+    // run. That gate gates nothing — refuse it loudly instead.
+    if baseline.suites.is_empty() || baseline.meta.git_sha == "unseeded-refresh-me" {
+        let why = if baseline.suites.is_empty() {
+            "it contains no suites"
+        } else {
+            "its git_sha is the unseeded sentinel"
+        };
+        out.meta_mismatches.push(format!(
+            "baseline is an unseeded placeholder ({why}); gating against it would pass \
+             vacuously — refresh it with `bench --json BENCH_baseline.json` on a \
+             known-good commit"
+        ));
+        out.incomparable = true;
+        return out;
+    }
     if baseline.meta.device != current.meta.device {
         out.meta_mismatches.push(format!(
             "device: baseline '{}' vs current '{}' — roofline numbers are incomparable; \
@@ -616,6 +633,31 @@ mod tests {
         let out = compare(&baseline, &lanes, 1.15);
         assert!(out.passed());
         assert_eq!(out.meta_mismatches.len(), 2);
+    }
+
+    #[test]
+    fn placeholder_baseline_refuses_to_gate() {
+        // The seed ships an empty report with a sentinel git_sha; a
+        // `--compare` against it compares nothing and must fail
+        // loudly, not pass vacuously.
+        let current = report(0.100, 2.7);
+        let mut empty = report(0.100, 2.7);
+        empty.suites.clear();
+        let out = compare(&empty, &current, 1.15);
+        assert!(out.incomparable);
+        assert!(!out.passed());
+        assert_eq!(out.compared, 0);
+        assert!(out.meta_mismatches[0].contains("placeholder"), "{:?}", out.meta_mismatches);
+
+        let mut sentinel = report(0.100, 2.7);
+        sentinel.meta.git_sha = "unseeded-refresh-me".into();
+        let out = compare(&sentinel, &current, 1.15);
+        assert!(out.incomparable);
+        assert!(!out.passed());
+        assert!(out.meta_mismatches[0].contains("unseeded"), "{:?}", out.meta_mismatches);
+
+        // A real baseline still gates normally.
+        assert!(compare(&report(0.100, 2.7), &current, 1.15).passed());
     }
 
     #[test]

@@ -134,6 +134,15 @@ pub struct RuntimeConfig {
     /// 1 = whole requests per worker (lane sharding). The worker count
     /// must be a multiple of this.
     pub layer_split: usize,
+    /// HTTP/SSE gateway bind address (`--http ADDR`, the `gateway`
+    /// subcommand). Empty = TCP line protocol only.
+    pub http: String,
+    /// Gateway tenant specs, `name:key:class[:rate[:burst]]` each
+    /// (`--tenants` CSV; parsed by
+    /// [`TenantSpec::parse_list`](crate::gateway::TenantSpec::parse_list)
+    /// at server start). Empty = open gateway, everything admits as the
+    /// built-in `local` tenant.
+    pub tenants: Vec<String>,
 }
 
 impl Default for RuntimeConfig {
@@ -154,6 +163,8 @@ impl Default for RuntimeConfig {
             precision: crate::tensor::env_precision(),
             workers: Vec::new(),
             layer_split: 1,
+            http: String::new(),
+            tenants: Vec::new(),
         }
     }
 }
@@ -208,6 +219,13 @@ impl RuntimeConfig {
         if let Some(x) = v.get("layer_split") {
             c.layer_split = x.as_usize()?.max(1);
         }
+        if let Some(x) = v.get("http") {
+            c.http = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("tenants") {
+            c.tenants =
+                x.as_arr()?.iter().map(|t| Ok(t.as_str()?.to_string())).collect::<Result<_>>()?;
+        }
         Ok(c)
     }
 
@@ -250,6 +268,11 @@ impl RuntimeConfig {
                 Value::Arr(self.workers.iter().map(|w| Value::Str(w.clone())).collect()),
             ),
             ("layer_split", Value::Num(self.layer_split as f64)),
+            ("http", Value::Str(self.http.clone())),
+            (
+                "tenants",
+                Value::Arr(self.tenants.iter().map(|t| Value::Str(t.clone())).collect()),
+            ),
         ])
     }
 }
@@ -355,6 +378,27 @@ mod tests {
         assert_eq!(RuntimeConfig::from_json(&v).unwrap().layer_split, 1);
         // Non-string worker entries are rejected.
         let v = Value::parse(r#"{"workers": [7]}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn gateway_fields_roundtrip() {
+        let v = Value::parse(
+            r#"{"http": "127.0.0.1:8080", "tenants": ["alice:sk-a:interactive:5:10", "bob:sk-b:batch"]}"#,
+        )
+        .unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.http, "127.0.0.1:8080");
+        assert_eq!(c.tenants.len(), 2);
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.http, c.http);
+        assert_eq!(back.tenants, c.tenants);
+        // Defaults: gateway off, open admission.
+        let d = RuntimeConfig::default();
+        assert!(d.http.is_empty());
+        assert!(d.tenants.is_empty());
+        // Non-string tenant entries are rejected.
+        let v = Value::parse(r#"{"tenants": [3]}"#).unwrap();
         assert!(RuntimeConfig::from_json(&v).is_err());
     }
 

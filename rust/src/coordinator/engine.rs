@@ -1239,6 +1239,12 @@ impl<B: StepBackend> InferenceEngine<B> {
     /// when the wavefront is empty. Returns when the queue is closed and
     /// everything in flight has completed.
     ///
+    /// `queue` is any [`JobSource`](crate::coordinator::JobSource) —
+    /// the FIFO [`RequestQueue`] or the gateway's weighted-fair
+    /// [`FairScheduler`](crate::gateway::FairScheduler). Admission
+    /// *order* is the source's policy; each admitted request's event
+    /// stream stays bit-exact regardless (the P7/P12/P13 invariant).
+    ///
     /// Generation requests always pack into the wavefront (decode is
     /// diagonal-native; `Auto` routes them there regardless of prompt
     /// length). An *explicit* sequential/full-attention override with a
@@ -1283,12 +1289,9 @@ impl<B: StepBackend> InferenceEngine<B> {
     /// let stats = engine.stats_handle();
     /// println!("p99 {:?}", stats.latency.quantile(0.99));
     /// ```
-    pub fn serve_queue<T, F>(
-        &mut self,
-        queue: &RequestQueue<(GenerateRequest, T)>,
-        mut emit: F,
-    ) -> Result<()>
+    pub fn serve_queue<T, Q, F>(&mut self, queue: &Q, mut emit: F) -> Result<()>
     where
+        Q: crate::coordinator::queue::JobSource<(GenerateRequest, T)>,
         F: FnMut(&T, Event),
     {
         let mut session = WavefrontSession::new(self.backend.config().clone(), self.lanes);
@@ -1305,7 +1308,7 @@ impl<B: StepBackend> InferenceEngine<B> {
             // Admission. Block only when the wavefront is empty; keep
             // the backlog shallow so queue backpressure stays honest.
             if session.is_idle() {
-                match queue.pop() {
+                match queue.pop_job() {
                     None => break, // closed and drained
                     Some(job) => {
                         self.admit(job, &mut session, &mut tickets, &mut next_key, &mut emit);
@@ -1313,7 +1316,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                 }
             }
             while session.backlog() < session.lanes() {
-                match queue.try_pop() {
+                match queue.try_pop_job() {
                     Some(job) => {
                         let packed = self.admit(
                             job,

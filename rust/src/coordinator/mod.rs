@@ -23,7 +23,9 @@
 //! * [`queue`] — bounded FIFO request queue with backpressure. Admission
 //!   into the wavefront happens between iterations (`try_pop`), so a
 //!   deep backlog applies queue-full backpressure instead of unbounded
-//!   latency.
+//!   latency. The drain loop consumes any [`queue::JobSource`], so the
+//!   gateway's weighted-fair scheduler
+//!   ([`crate::gateway::FairScheduler`]) slots into the same seam.
 
 pub mod engine;
 pub mod fallback;
@@ -34,5 +36,5 @@ pub use engine::{
     EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, Response, ResumeFrom,
 };
 pub use fallback::FallbackPolicy;
-pub use queue::RequestQueue;
+pub use queue::{JobSource, RequestQueue};
 pub use sampling::SamplingParams;

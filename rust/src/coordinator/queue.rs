@@ -3,17 +3,57 @@
 //! The paper's deployment note (§1 contributions) is that diagonal
 //! batching saturates the device with ONE long-context request, so the
 //! serving topology is simple: a depth-limited queue feeding a single
-//! executor loop. Producers get `QueueFull` instead of unbounded latency.
+//! executor loop. Producers get `QueueFull` instead of unbounded latency
+//! — or block with a bound via [`RequestQueue::push_timeout`] instead
+//! of spinning.
+//!
+//! The drain loop ([`InferenceEngine::serve_queue`]
+//! (crate::coordinator::InferenceEngine::serve_queue)) consumes any
+//! [`JobSource`], so this FIFO and the weighted-fair
+//! [`FairScheduler`](crate::gateway::FairScheduler) are interchangeable
+//! behind the same admission seam.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+
+/// Anything the continuous-batching drain loop can pull jobs from: a
+/// blocking pop (idle engine waiting for work) and a non-blocking pop
+/// (topping up the wavefront between iterations). Implemented by the
+/// FIFO [`RequestQueue`], by `Arc`s of any source, and by the gateway's
+/// [`FairScheduler`](crate::gateway::FairScheduler).
+pub trait JobSource<J> {
+    /// Blocking pop; `None` once the source is closed AND drained.
+    fn pop_job(&self) -> Option<J>;
+    /// Non-blocking pop; `None` when currently empty.
+    fn try_pop_job(&self) -> Option<J>;
+}
+
+impl<J> JobSource<J> for RequestQueue<J> {
+    fn pop_job(&self) -> Option<J> {
+        self.pop()
+    }
+    fn try_pop_job(&self) -> Option<J> {
+        self.try_pop()
+    }
+}
+
+impl<J, Q: JobSource<J>> JobSource<J> for std::sync::Arc<Q> {
+    fn pop_job(&self) -> Option<J> {
+        (**self).pop_job()
+    }
+    fn try_pop_job(&self) -> Option<J> {
+        (**self).try_pop_job()
+    }
+}
 
 /// Thread-safe bounded FIFO.
 pub struct RequestQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
+    not_full: Condvar,
     capacity: usize,
 }
 
@@ -27,6 +67,7 @@ impl<T> RequestQueue<T> {
         Self {
             inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
+            not_full: Condvar::new(),
             capacity: capacity.max(1),
         }
     }
@@ -47,12 +88,46 @@ impl<T> RequestQueue<T> {
         Ok(())
     }
 
+    /// Bounded blocking push: wait for a slot up to `timeout` instead
+    /// of busy-retrying `push`. On failure the item comes back to the
+    /// caller (for re-use or an error reply) together with the reason —
+    /// `"queue full"` after the timeout, `"queue closed"` immediately.
+    pub fn push_timeout(
+        &self,
+        item: T,
+        timeout: Duration,
+    ) -> std::result::Result<(), (T, Error)> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((item, Error::Request("queue closed".into())));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err((item, Error::Request("queue full".into())));
+            }
+            let (guard, _res) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = guard; // loop re-checks closed / space / deadline
+        }
+    }
+
     /// Non-blocking pop; `None` when the queue is currently empty. Used
     /// by the continuous-batching drain loop to admit work *between*
     /// wavefront iterations without ever stalling the in-flight
     /// requests.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().items.pop_front()
+        let item = self.inner.lock().unwrap().items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
     }
 
     /// Blocking pop; `None` once the queue is closed AND drained.
@@ -60,6 +135,8 @@ impl<T> RequestQueue<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
                 return Some(item);
             }
             if g.closed {
@@ -73,6 +150,7 @@ impl<T> RequestQueue<T> {
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.not_empty.notify_all();
+        self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
@@ -80,7 +158,7 @@ impl<T> RequestQueue<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().items.is_empty()
     }
 }
 
@@ -141,12 +219,76 @@ mod tests {
             got
         });
         for i in 0..20 {
-            while q.push(i).is_err() {
-                std::thread::yield_now();
+            // Bounded blocking push: the consumer frees a slot and the
+            // not_full condvar wakes us — no busy-spin.
+            let mut item = i;
+            loop {
+                match q.push_timeout(item, Duration::from_millis(200)) {
+                    Ok(()) => break,
+                    Err((back, _)) => item = back,
+                }
             }
         }
         q.close();
         let got = consumer.join().unwrap();
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn push_timeout_waits_for_a_slot() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.pop()
+        });
+        // Blocks until the drainer frees the slot, well under 5s.
+        q.push_timeout(2, Duration::from_secs(5)).unwrap();
+        assert_eq!(drainer.join().unwrap(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn push_timeout_times_out_and_returns_item() {
+        let q: RequestQueue<u32> = RequestQueue::new(1);
+        q.push(1).unwrap();
+        let t0 = Instant::now();
+        let (item, err) = q.push_timeout(2, Duration::from_millis(40)).unwrap_err();
+        assert_eq!(item, 2);
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn push_timeout_wakes_on_close() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.close();
+        });
+        let (item, err) = q.push_timeout(2, Duration::from_secs(30)).unwrap_err();
+        assert_eq!(item, 2);
+        assert!(err.to_string().contains("queue closed"), "{err}");
+        closer.join().unwrap();
+    }
+
+    #[test]
+    fn job_source_through_arc() {
+        fn drain<J, Q: JobSource<J>>(q: &Q) -> Vec<J> {
+            let mut out = Vec::new();
+            while let Some(j) = q.try_pop_job() {
+                out.push(j);
+            }
+            out
+        }
+        let q = Arc::new(RequestQueue::new(4));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(drain(&q), vec![1, 2]); // Arc impl
+        q.push(3).unwrap();
+        assert_eq!(drain(&*q), vec![3]); // direct impl
     }
 }

@@ -1,0 +1,496 @@
+//! Hand-rolled HTTP/1.1 + SSE front end (std-only, like the rest of
+//! the crate — no hyper/tokio, the `json.rs` idiom applied to HTTP).
+//!
+//! Routes:
+//!
+//! ```text
+//! POST /v1/generate      body = the TCP request object (same fields)
+//!   -> 200 text/event-stream; each engine Event is one SSE frame:
+//!      event: token\n data: {"id":1,"event":"token","pos":0,...}\n\n
+//!      The `data:` payload is byte-identical to the TCP line protocol's
+//!      frame for the same request (both come from `render_event`).
+//!   -> 401 unknown/missing API key (when tenants are configured)
+//!   -> 429 token bucket tripped, or tenant queue full (load shed)
+//!   -> 400 malformed JSON / request
+//! GET  /metrics          Prometheus text: every EngineStats field +
+//!                        gateway admission counters
+//! GET  /healthz          200 "ok"
+//! POST /admin/shutdown   initiate engine shutdown (drains in-flight)
+//! ```
+//!
+//! Authentication: `Authorization: Bearer <key>` or `X-Api-Key: <key>`,
+//! resolved against the configured [`TenantSpec`](super::TenantSpec)s;
+//! with none configured the gateway is open and everything admits as
+//! the built-in `local` tenant. Each connection serves one request and
+//! closes (`Connection: close`) — SSE streams hold the socket for the
+//! request lifetime anyway.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::EngineStats;
+use crate::error::{Error, Result};
+use crate::gateway::metrics::render_prometheus;
+use crate::gateway::FairScheduler;
+use crate::json::Value;
+use crate::server::{
+    error_json, parse_request, render_event, CancelRegistry, ConnTicket, Job, WaitGroup,
+    EVENT_BUFFER,
+};
+
+/// Cap on request bodies (a 1M-token prompt in JSON is ~7 MB; leave
+/// generous headroom without letting one socket balloon memory).
+const MAX_BODY: usize = 64 << 20;
+const MAX_HEADERS: usize = 100;
+
+/// Everything one HTTP connection needs, shared with the TCP server
+/// (same scheduler, same cancel registry, same wire-id namespace — a
+/// request admitted over HTTP can be cancelled over TCP and vice
+/// versa).
+pub(crate) struct HttpShared {
+    pub(crate) sched: Arc<FairScheduler<Job>>,
+    pub(crate) registry: CancelRegistry,
+    pub(crate) stats: Arc<EngineStats>,
+    pub(crate) shutdown: Arc<AtomicBool>,
+    pub(crate) next_id: Arc<AtomicU64>,
+    /// Streaming sections register here so `Server::stop`/`join` wait
+    /// for in-flight SSE streams to flush their terminal frame.
+    pub(crate) streams: WaitGroup,
+}
+
+/// A parsed HTTP/1.1 request (header names lowercased).
+pub(crate) struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The presented API key: `Authorization: Bearer <key>` wins, then
+    /// `X-Api-Key: <key>`.
+    pub fn api_key(&self) -> Option<&str> {
+        if let Some(auth) = self.header("authorization") {
+            if let Some(rest) = auth.strip_prefix("Bearer ").or_else(|| {
+                auth.strip_prefix("bearer ")
+            }) {
+                let key = rest.trim();
+                if !key.is_empty() {
+                    return Some(key);
+                }
+            }
+        }
+        self.header("x-api-key").map(str::trim).filter(|k| !k.is_empty())
+    }
+}
+
+/// Read one request off the stream. `Ok(None)` = clean EOF before a
+/// request line (client connected and left).
+pub(crate) fn read_http_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let line = line.trim_end();
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(Error::Request(format!("malformed request line '{line}'")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::Request(format!("unsupported protocol '{version}'")));
+    }
+    // Route on the path alone; a query string is tolerated and ignored.
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut headers = Vec::new();
+    loop {
+        if headers.len() > MAX_HEADERS {
+            return Err(Error::Request("too many headers".into()));
+        }
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(Error::Request("connection closed mid-headers".into()));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            return Err(Error::Request(format!("malformed header '{h}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let len = match headers.iter().find(|(n, _)| n == "content-length") {
+        None => 0,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| Error::Request(format!("bad content-length '{v}'")))?,
+    };
+    if len > MAX_BODY {
+        return Err(Error::Request(format!("body of {len} bytes exceeds {MAX_BODY}")));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| Error::Request("request body is not UTF-8".into()))?;
+    Ok(Some(HttpRequest { method: method.to_string(), path, headers, body }))
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    }
+}
+
+fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    extra: &[(&str, &str)],
+) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        body.len()
+    )?;
+    for (name, value) in extra {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "\r\n{body}")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Error reply: the SAME error object the TCP protocol uses, as the
+/// HTTP body, with the status carrying the HTTP-level semantics.
+fn write_error(
+    w: &mut impl Write,
+    status: u16,
+    id: Option<u64>,
+    e: &Error,
+    extra: &[(&str, &str)],
+) -> Result<()> {
+    let mut body = error_json(id, e);
+    body.push('\n');
+    write_response(w, status, "application/json", &body, extra)
+}
+
+/// Serve one HTTP connection (one request, then close).
+pub(crate) fn handle_http_conn(stream: TcpStream, sh: &HttpShared) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let Some(req) = read_http_request(&mut reader)? else {
+        return Ok(());
+    };
+    sh.sched.stats.http_requests.inc();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            write_response(&mut writer, 200, "text/plain; charset=utf-8", "ok\n", &[])
+        }
+        ("GET", "/metrics") => {
+            let body = render_prometheus(&sh.stats, Some(&sh.sched.stats));
+            write_response(
+                &mut writer,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+                &[],
+            )
+        }
+        ("POST", "/admin/shutdown") => {
+            sh.shutdown.store(true, Ordering::SeqCst);
+            sh.sched.close();
+            write_response(
+                &mut writer,
+                200,
+                "application/json",
+                "{\"ok\": true}\n",
+                &[],
+            )
+        }
+        ("POST", "/v1/generate") => stream_generate(&req, &mut writer, sh),
+        (_, "/healthz" | "/metrics" | "/admin/shutdown" | "/v1/generate") => write_error(
+            &mut writer,
+            405,
+            None,
+            &Error::Request(format!("method {} not allowed here", req.method)),
+            &[],
+        ),
+        (_, path) => write_error(
+            &mut writer,
+            404,
+            None,
+            &Error::Request(format!("no route '{path}'")),
+            &[],
+        ),
+    }
+}
+
+/// Minimal metrics-only HTTP listener: `GET /metrics` and `GET
+/// /healthz` over a shared stats block. This is the shard
+/// coordinator's observability endpoint (`shard --http ADDR`) — the
+/// coordinator speaks the TCP protocol for traffic, so only the
+/// scrape/probe routes exist here. The accept thread is detached and
+/// lives for the process (the coordinator has no drain phase for it to
+/// join).
+pub fn serve_metrics(
+    addr: &str,
+    stats: Arc<EngineStats>,
+) -> Result<std::net::SocketAddr> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                let Ok(mut writer) = stream.try_clone() else { return };
+                let mut reader = BufReader::new(stream);
+                let Ok(Some(req)) = read_http_request(&mut reader) else { return };
+                let _ = match (req.method.as_str(), req.path.as_str()) {
+                    ("GET", "/healthz") => write_response(
+                        &mut writer,
+                        200,
+                        "text/plain; charset=utf-8",
+                        "ok\n",
+                        &[],
+                    ),
+                    ("GET", "/metrics") => {
+                        let body = render_prometheus(&stats, None);
+                        write_response(
+                            &mut writer,
+                            200,
+                            "text/plain; version=0.0.4; charset=utf-8",
+                            &body,
+                            &[],
+                        )
+                    }
+                    (_, path) => write_error(
+                        &mut writer,
+                        404,
+                        None,
+                        &Error::Request(format!("no route '{path}'")),
+                        &[],
+                    ),
+                };
+            });
+        }
+    });
+    Ok(bound)
+}
+
+/// `POST /v1/generate`: authenticate, rate-limit, admit into the
+/// weighted-fair scheduler, stream the event frames back as SSE.
+fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Result<()> {
+    // Per-tenant API key -> tenant lane.
+    let tenant = match sh.sched.authenticate(req.api_key()) {
+        Ok(t) => t,
+        Err(e) => {
+            sh.sched.stats.unauthorized.inc();
+            return write_error(w, 401, None, &e, &[]);
+        }
+    };
+    // Token bucket: over-rate tenants shed HERE, before touching the
+    // queue — backpressure turns into a clean 429, not producer spin.
+    if !sh.sched.try_acquire(tenant) {
+        sh.sched.stats.rate_limited.inc();
+        return write_error(
+            w,
+            429,
+            None,
+            &Error::Request("rate limited".into()),
+            &[("Retry-After", "1")],
+        );
+    }
+    let v = match Value::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => return write_error(w, 400, None, &e, &[]),
+    };
+    // Same wire-id namespace as the TCP acceptor: auto ids skip over
+    // anything currently active on either front end.
+    let next_auto_id = || loop {
+        let candidate = sh.next_id.fetch_add(1, Ordering::Relaxed);
+        if !sh.registry.lock().unwrap().contains_key(&candidate) {
+            return candidate;
+        }
+    };
+    let greq = match parse_request(&v, next_auto_id) {
+        Ok(r) => r,
+        Err(e) => return write_error(w, 400, None, &e, &[]),
+    };
+    let wire_id = greq.id;
+    let handle = greq.handle();
+    {
+        let mut reg = sh.registry.lock().unwrap();
+        if reg.contains_key(&wire_id) {
+            drop(reg);
+            return write_error(
+                w,
+                409,
+                Some(wire_id),
+                &Error::Request(format!("id {wire_id} already in flight")),
+                &[],
+            );
+        }
+        reg.insert(wire_id, handle.clone());
+    }
+    // Fair-share cost = the work the request buys: prompt + decode
+    // budget, in tokens. A 1M-token burst debits its tenant
+    // accordingly; small interactive requests stay cheap.
+    let cost = (greq.prompt.len() + greq.max_new_tokens) as f64;
+    let (tx, rx) = mpsc::sync_channel(EVENT_BUFFER);
+    // Guard from admission to terminal-frame flush: server shutdown
+    // waits on it so an admitted SSE stream always gets its terminal
+    // frame onto the wire.
+    let _stream_guard = sh.streams.enter();
+    if let Err(e) = sh.sched.push(tenant, cost, (greq, ConnTicket { tx, handle: handle.clone() }))
+    {
+        sh.registry.lock().unwrap().remove(&wire_id);
+        // Queue-full load shed (or closed during shutdown): 429 with
+        // the standard error object, mirroring the TCP queue-full
+        // frame.
+        return write_error(w, 429, Some(wire_id), &e, &[("Retry-After", "1")]);
+    }
+    sh.sched.stats.sse_streams.inc();
+
+    // SSE header; frames follow unframed (no Content-Length, the
+    // stream ends when the socket closes after the terminal frame).
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut client_gone = false;
+    loop {
+        match rx.recv() {
+            Ok(ev) => {
+                let terminal = ev.is_terminal();
+                if !client_gone {
+                    let frame = render_event(wire_id, &ev);
+                    let name = frame
+                        .get("event")
+                        .and_then(|e| e.as_str().ok())
+                        .unwrap_or("message")
+                        .to_string();
+                    let data = frame.to_json();
+                    if write!(w, "event: {name}\ndata: {data}\n\n")
+                        .and_then(|_| w.flush())
+                        .is_err()
+                    {
+                        // Client went away mid-stream: free the lane.
+                        client_gone = true;
+                        handle.cancel();
+                    }
+                }
+                if terminal {
+                    break;
+                }
+            }
+            Err(_) => {
+                // Channel closed without a terminal frame (engine died
+                // or slow-consumer eviction): tell the client if it
+                // still listens.
+                if !client_gone {
+                    let msg = error_json(
+                        Some(wire_id),
+                        &Error::Request(
+                            "request stream closed (engine stopped or evicted)".into(),
+                        ),
+                    );
+                    let _ = write!(w, "event: error\ndata: {msg}\n\n");
+                    let _ = w.flush();
+                }
+                break;
+            }
+        }
+    }
+    sh.registry.lock().unwrap().remove(&wire_id);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<HttpRequest>> {
+        read_http_request(&mut Cursor::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = "POST /v1/generate HTTP/1.1\r\nHost: x\r\nAuthorization: Bearer sk-1\r\nContent-Length: 13\r\n\r\n{\"tokens\":[]}";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, "{\"tokens\":[]}");
+        assert_eq!(req.api_key(), Some("sk-1"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+    }
+
+    #[test]
+    fn parses_get_without_body_and_strips_query() {
+        let raw = "GET /metrics?debug=1 HTTP/1.0\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.body, "");
+        assert_eq!(req.api_key(), None);
+    }
+
+    #[test]
+    fn x_api_key_is_a_fallback() {
+        let raw = "GET / HTTP/1.1\r\nX-Api-Key: sk-2\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.api_key(), Some("sk-2"));
+        // Bearer wins when both are present.
+        let raw = "GET / HTTP/1.1\r\nAuthorization: Bearer a\r\nX-Api-Key: b\r\n\r\n";
+        assert_eq!(parse(raw).unwrap().unwrap().api_key(), Some("a"));
+        // A non-bearer Authorization falls through to X-Api-Key.
+        let raw = "GET / HTTP/1.1\r\nAuthorization: Basic xyz\r\nX-Api-Key: b\r\n\r\n";
+        assert_eq!(parse(raw).unwrap().unwrap().api_key(), Some("b"));
+    }
+
+    #[test]
+    fn eof_and_malformed_inputs() {
+        assert!(parse("").unwrap().is_none());
+        assert!(parse("GARBAGE\r\n\r\n").is_err());
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: frog\r\n\r\n").is_err());
+        // Body shorter than content-length -> read_exact EOF error.
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn response_writer_formats_status_and_headers() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 429, "application/json", "{}", &[("Retry-After", "1")])
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Prometheus text exposition (`GET /metrics`) over
+//! [`EngineStats`](crate::coordinator::EngineStats) and
+//! [`GatewayStats`](crate::gateway::GatewayStats).
+//!
+//! The export iterates `EngineStats::to_json()` generically, so every
+//! stats field — present and future — appears in `/metrics` without a
+//! second hand-maintained list (the completeness test below enforces
+//! it). Monotone fields get the Prometheus `_total` suffix and
+//! `counter` type; instantaneous fields are `gauge`s. The per-kernel
+//! breakdown becomes `kernel`-labelled series, and the active GEMM
+//! policy an info-style gauge.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::EngineStats;
+use crate::gateway::GatewayStats;
+use crate::json::Value;
+
+/// Engine fields that only ever increase (exported as counters with
+/// the `_total` suffix). Everything else numeric is a gauge.
+const MONOTONE: &[&str] = &[
+    "requests",
+    "rejected",
+    "cancelled",
+    "diagonal_runs",
+    "sequential_runs",
+    "full_attn_runs",
+    "packed_requests",
+    "tokens",
+    "generated_tokens",
+    "launches",
+    "active_cells",
+    "slot_steps",
+    "padded_cells",
+    "cache_hits",
+    "cache_hit_segments",
+    "evictions",
+    "pool_cells",
+    "pool_busy_ms",
+    "kernel_flops",
+    "kernel_time_ms",
+    "shard_routed",
+    "shard_failovers",
+    "shard_handoffs",
+    "shard_handoff_bytes",
+];
+
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn series(out: &mut String, name: &str, kind: &str, help: &str, body: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    out.push_str(body);
+}
+
+/// Render the full `/metrics` payload: every engine stats field, plus
+/// the gateway admission counters when the HTTP front end is running.
+pub fn render_prometheus(engine: &EngineStats, gateway: Option<&GatewayStats>) -> String {
+    let mut out = String::new();
+    let Value::Obj(fields) = engine.to_json() else {
+        unreachable!("EngineStats::to_json() is an object");
+    };
+    for (key, val) in &fields {
+        match (key.as_str(), val) {
+            ("kernels", Value::Obj(kernels)) => {
+                // Per-kernel breakdown -> kernel-labelled series.
+                for (stat, kind, help) in [
+                    ("calls", "counter", "Invocations of this GEMM kernel."),
+                    ("flops", "counter", "Floating-point ops executed by this kernel."),
+                    ("time_ms", "counter", "Milliseconds spent in this kernel."),
+                    ("gflops", "gauge", "Achieved GFLOP/s of this kernel."),
+                ] {
+                    let mut body = String::new();
+                    for (kname, kval) in kernels {
+                        let Some(v) = kval.get(stat).and_then(|v| v.as_f64().ok()) else {
+                            continue;
+                        };
+                        let suffix = if kind == "counter" { "_total" } else { "" };
+                        let _ = writeln!(
+                            body,
+                            "pallas_kernel_{stat}{suffix}{{kernel=\"{}\"}} {}",
+                            escape_label(kname),
+                            fmt_num(v)
+                        );
+                    }
+                    if !body.is_empty() {
+                        let suffix = if kind == "counter" { "_total" } else { "" };
+                        series(
+                            &mut out,
+                            &format!("pallas_kernel_{stat}{suffix}"),
+                            kind,
+                            help,
+                            &body,
+                        );
+                    }
+                }
+            }
+            ("kernel_policy", Value::Str(policy)) => {
+                series(
+                    &mut out,
+                    "pallas_kernel_policy",
+                    "gauge",
+                    "Active GEMM kernel policy (info-style; value is always 1).",
+                    &format!(
+                        "pallas_kernel_policy{{policy=\"{}\"}} 1\n",
+                        escape_label(policy)
+                    ),
+                );
+            }
+            (k, Value::Num(v)) => {
+                let monotone = MONOTONE.contains(&k);
+                let (name, kind) = if monotone {
+                    (format!("pallas_{k}_total"), "counter")
+                } else {
+                    (format!("pallas_{k}"), "gauge")
+                };
+                series(
+                    &mut out,
+                    &name,
+                    kind,
+                    &format!("Engine stats field `{k}`."),
+                    &format!("{name} {}\n", fmt_num(*v)),
+                );
+            }
+            // Non-numeric additions surface as info gauges so the
+            // export stays complete even for field types this module
+            // doesn't know yet.
+            (k, other) => {
+                let name = format!("pallas_{k}");
+                series(
+                    &mut out,
+                    &name,
+                    "gauge",
+                    &format!("Engine stats field `{k}` (non-numeric)."),
+                    &format!(
+                        "{name}{{value=\"{}\"}} 1\n",
+                        escape_label(&other.to_json())
+                    ),
+                );
+            }
+        }
+    }
+    if let Some(gw) = gateway {
+        let Value::Obj(fields) = gw.to_json() else {
+            unreachable!("GatewayStats::to_json() is an object");
+        };
+        for (key, val) in &fields {
+            let Value::Num(v) = val else { continue };
+            let name = format!("pallas_gateway_{key}_total");
+            series(
+                &mut out,
+                &name,
+                "counter",
+                &format!("Gateway admission counter `{key}`."),
+                &format!("{name} {}\n", fmt_num(*v)),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_engine_stats_field_is_exported() {
+        let stats = EngineStats::default();
+        stats.requests.add(7);
+        stats.cache_bytes.set(4096);
+        stats.occupancy.add(3, 4);
+        let out = render_prometheus(&stats, None);
+        let Value::Obj(fields) = stats.to_json() else { unreachable!() };
+        for key in fields.keys() {
+            let probe = if key == "kernels" {
+                // Per-kernel series may be empty in a fresh process;
+                // the aggregate kernel counters always export.
+                "pallas_kernel_flops".to_string()
+            } else {
+                format!("pallas_{key}")
+            };
+            assert!(out.contains(&probe), "stats field '{key}' missing from /metrics");
+        }
+        assert!(out.contains("pallas_requests_total 7"));
+        assert!(out.contains("# TYPE pallas_requests_total counter"));
+        assert!(out.contains("pallas_cache_bytes 4096"));
+        assert!(out.contains("# TYPE pallas_cache_bytes gauge"));
+        assert!(out.contains("pallas_occupancy 0.75"));
+        assert!(out.contains("pallas_kernel_policy{policy="));
+    }
+
+    #[test]
+    fn gateway_counters_ride_along() {
+        let stats = EngineStats::default();
+        let gw = GatewayStats::default();
+        gw.http_requests.add(3);
+        gw.rate_limited.inc();
+        let out = render_prometheus(&stats, Some(&gw));
+        assert!(out.contains("pallas_gateway_http_requests_total 3"));
+        assert!(out.contains("pallas_gateway_rate_limited_total 1"));
+        assert!(out.contains("pallas_gateway_shed_total 0"));
+        assert!(out.contains("# TYPE pallas_gateway_admitted_total counter"));
+    }
+
+    #[test]
+    fn number_formatting_is_prometheus_friendly() {
+        assert_eq!(fmt_num(0.0), "0");
+        assert_eq!(fmt_num(42.0), "42");
+        assert_eq!(fmt_num(0.75), "0.75");
+        assert_eq!(escape_label("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

@@ -1,0 +1,40 @@
+//! Production gateway: multi-tenant admission, fairness, and
+//! observability over the serving engine.
+//!
+//! The TCP line protocol ([`crate::server`]) gives one process
+//! streaming, cancel, deadlines and save/resume — this module wraps it
+//! in what a service at scale needs at the front door:
+//!
+//! * [`sched`] — [`FairScheduler`]: per-tenant bounded queues under a
+//!   virtual-time weighted-fair scheduler with SLA
+//!   [`PriorityClass`]es and token-bucket rate limits. It replaces the
+//!   FIFO [`RequestQueue`](crate::coordinator::RequestQueue) at the
+//!   `serve_queue` admission seam (both are
+//!   [`JobSource`](crate::coordinator::JobSource)s); with no tenants
+//!   configured it degenerates to exactly the old FIFO behaviour.
+//! * [`http`] — a std-only HTTP/1.1 + SSE front end: `POST
+//!   /v1/generate` streams the engine's event frames as SSE with
+//!   `data:` payloads byte-identical to the TCP protocol's lines,
+//!   authenticated by per-tenant API keys; overload is shed as clean
+//!   `429`s instead of producer spin or unbounded latency.
+//! * [`metrics`] — `GET /metrics` Prometheus text exposition of every
+//!   [`EngineStats`](crate::coordinator::EngineStats) field plus the
+//!   gateway's own admission counters ([`GatewayStats`]).
+//!
+//! Fairness only reorders *admission*. Each admitted request runs on
+//! the same wavefront machinery and its event stream stays bit-exact
+//! vs. a solo run (proptest P13 — the standing P7/P12 invariant).
+//!
+//! Wiring: [`Server`](crate::server::Server) owns the scheduler; pass
+//! [`ServerOptions::http`](crate::server::ServerOptions) (the `serve
+//! --http` flag or the `gateway` subcommand) to bind the HTTP front
+//! end alongside the TCP listener, sharing one engine, one scheduler,
+//! one cancel registry and one stats block.
+
+pub mod http;
+pub mod metrics;
+pub mod sched;
+
+pub use http::serve_metrics;
+pub use metrics::render_prometheus;
+pub use sched::{FairScheduler, GatewayStats, PriorityClass, TenantSpec, LOCAL_TENANT};

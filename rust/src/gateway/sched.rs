@@ -1,0 +1,705 @@
+//! Weighted-fair admission: per-tenant queues under a virtual-time
+//! scheduler, plus token-bucket rate limiting.
+//!
+//! [`FairScheduler`] replaces the FIFO
+//! [`RequestQueue`](crate::coordinator::RequestQueue) at the
+//! `serve_queue` admission seam (it implements
+//! [`JobSource`](crate::coordinator::JobSource)). Each tenant owns a
+//! bounded FIFO; dequeue picks the backlogged tenant with the smallest
+//! *virtual time* and advances it by `cost / weight` (self-clocked fair
+//! queueing). A tenant that goes idle has its virtual time clamped up
+//! to the global virtual time on its next arrival, so returning tenants
+//! neither burst on stale credit nor starve on stale debt — every
+//! backlogged tenant is served within a bounded number of dequeues of
+//! its weighted share.
+//!
+//! Fairness only reorders ADMISSION. Each admitted request's event
+//! stream is produced by the same wavefront machinery and stays
+//! bit-exact vs. a solo run (proptest P13), exactly as FIFO admission
+//! does (P7/P12).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::JobSource;
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::metrics::Counter;
+
+/// SLA priority class; maps to a weighted-fair share multiplier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorityClass {
+    /// Latency-sensitive traffic: 4x the standard share.
+    Interactive,
+    /// The default share.
+    Standard,
+    /// Throughput traffic that yields to everyone else: 1/4 share.
+    Batch,
+}
+
+impl PriorityClass {
+    /// The fair-share weight this class resolves to when the tenant
+    /// spec doesn't carry an explicit weight.
+    pub fn weight(self) -> f64 {
+        match self {
+            PriorityClass::Interactive => 4.0,
+            PriorityClass::Standard => 1.0,
+            PriorityClass::Batch => 0.25,
+        }
+    }
+}
+
+impl std::str::FromStr for PriorityClass {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "interactive" => Ok(PriorityClass::Interactive),
+            "standard" | "" => Ok(PriorityClass::Standard),
+            "batch" => Ok(PriorityClass::Batch),
+            other => Err(Error::Config(format!("unknown priority class '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for PriorityClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PriorityClass::Interactive => "interactive",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Batch => "batch",
+        })
+    }
+}
+
+/// One tenant of the gateway: API key, fair-share class, rate limit.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Bearer key presented in `Authorization` / `X-Api-Key`. `None`
+    /// means the tenant is open (no authentication) — only the built-in
+    /// local tenant is.
+    pub key: Option<String>,
+    pub class: PriorityClass,
+    /// Explicit fair-share weight; `0.0` derives it from `class`.
+    pub weight: f64,
+    /// Token-bucket refill in requests/second. `0.0` with `burst == 0`
+    /// = unlimited; `0.0` with `burst > 0` = a hard total of `burst`
+    /// requests (never refills — deterministic, used by tests and CI).
+    pub rate: f64,
+    /// Token-bucket capacity (burst size).
+    pub burst: f64,
+}
+
+impl TenantSpec {
+    /// An open tenant with the standard share and no rate limit.
+    pub fn open(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            key: None,
+            class: PriorityClass::Standard,
+            weight: 0.0,
+            rate: 0.0,
+            burst: 0.0,
+        }
+    }
+
+    /// Parse a CLI/config spec: `name:key:class[:rate[:burst]]`, e.g.
+    /// `alice:sk-alice:interactive:5:10` (5 req/s, burst 10) or
+    /// `bob:sk-bob:batch`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 2 || parts.len() > 5 {
+            return Err(Error::Config(format!(
+                "tenant spec '{spec}' must be name:key:class[:rate[:burst]]"
+            )));
+        }
+        let bad = |what: &str, v: &str| {
+            Error::Config(format!("tenant spec '{spec}': bad {what} '{v}'"))
+        };
+        if parts[0].is_empty() || parts[1].is_empty() {
+            return Err(Error::Config(format!(
+                "tenant spec '{spec}' needs a non-empty name and key"
+            )));
+        }
+        let class: PriorityClass =
+            parts.get(2).copied().unwrap_or("standard").parse()?;
+        let rate = match parts.get(3) {
+            None => 0.0,
+            Some(v) => v.parse::<f64>().map_err(|_| bad("rate", v))?,
+        };
+        let burst = match parts.get(4) {
+            None => {
+                if rate > 0.0 {
+                    rate.ceil()
+                } else {
+                    0.0
+                }
+            }
+            Some(v) => v.parse::<f64>().map_err(|_| bad("burst", v))?,
+        };
+        if rate < 0.0 || burst < 0.0 {
+            return Err(Error::Config(format!(
+                "tenant spec '{spec}': rate/burst must be >= 0"
+            )));
+        }
+        Ok(Self {
+            name: parts[0].to_string(),
+            key: Some(parts[1].to_string()),
+            class,
+            weight: 0.0,
+            rate,
+            burst,
+        })
+    }
+
+    /// Parse a list of spec strings (config file / `--tenants` CSV).
+    pub fn parse_list(specs: &[String]) -> Result<Vec<Self>> {
+        let parsed: Vec<Self> =
+            specs.iter().map(|s| Self::parse(s)).collect::<Result<_>>()?;
+        for (i, a) in parsed.iter().enumerate() {
+            for b in &parsed[i + 1..] {
+                if a.name == b.name {
+                    return Err(Error::Config(format!("duplicate tenant '{}'", a.name)));
+                }
+                if a.key.is_some() && a.key == b.key {
+                    return Err(Error::Config(format!(
+                        "tenants '{}' and '{}' share an API key",
+                        a.name, b.name
+                    )));
+                }
+            }
+        }
+        Ok(parsed)
+    }
+
+    fn resolved_weight(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.weight
+        } else {
+            self.class.weight()
+        }
+    }
+}
+
+/// Gateway-side counters (admission edge; engine work lives in
+/// [`EngineStats`](crate::coordinator::EngineStats)). All monotone.
+#[derive(Default)]
+pub struct GatewayStats {
+    /// HTTP requests accepted by the front end (any route).
+    pub http_requests: Counter,
+    /// SSE generation streams opened.
+    pub sse_streams: Counter,
+    /// Requests refused for a missing/unknown API key (HTTP 401).
+    pub unauthorized: Counter,
+    /// Requests refused by a tenant's token bucket (HTTP 429).
+    pub rate_limited: Counter,
+    /// Requests shed on a full queue (HTTP 429 / queue-full frame).
+    pub shed: Counter,
+    /// Requests admitted into the scheduler.
+    pub admitted: Counter,
+}
+
+impl GatewayStats {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("http_requests", Value::Num(self.http_requests.get() as f64)),
+            ("sse_streams", Value::Num(self.sse_streams.get() as f64)),
+            ("unauthorized", Value::Num(self.unauthorized.get() as f64)),
+            ("rate_limited", Value::Num(self.rate_limited.get() as f64)),
+            ("shed", Value::Num(self.shed.get() as f64)),
+            ("admitted", Value::Num(self.admitted.get() as f64)),
+        ])
+    }
+}
+
+struct Tenant {
+    spec: TenantSpec,
+    weight: f64,
+}
+
+struct Entry<J> {
+    cost: f64,
+    job: J,
+}
+
+struct Sched<J> {
+    queues: Vec<VecDeque<Entry<J>>>,
+    /// Per-tenant virtual finish time.
+    vtime: Vec<f64>,
+    /// Virtual time of the last dequeue (arrival clamp for idle tenants).
+    global_v: f64,
+    len: usize,
+    closed: bool,
+    buckets: Vec<Bucket>,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Weighted-fair, multi-tenant job scheduler (see module docs).
+///
+/// Tenant `0` is always the built-in open `local` tenant (the TCP line
+/// protocol and an unauthenticated gateway admit through it); configured
+/// tenants follow at `1..`. Each tenant's queue is bounded by `depth`,
+/// so one tenant's flood sheds *its own* traffic while other tenants
+/// keep admitting.
+pub struct FairScheduler<J> {
+    inner: Mutex<Sched<J>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Per-tenant queue bound.
+    depth: usize,
+    tenants: Vec<Tenant>,
+    /// Admission-edge counters, shared with the HTTP front end.
+    pub stats: GatewayStats,
+}
+
+/// Index of the built-in open tenant.
+pub const LOCAL_TENANT: usize = 0;
+
+impl<J> FairScheduler<J> {
+    /// Build over the configured tenants (empty = local tenant only,
+    /// which makes the scheduler FIFO-equivalent). `depth` bounds each
+    /// tenant's queue, matching `RequestQueue::new(depth)` semantics in
+    /// the single-tenant case.
+    pub fn new(specs: Vec<TenantSpec>, depth: usize) -> Self {
+        let now = Instant::now();
+        let mut tenants = vec![Tenant { spec: TenantSpec::open("local"), weight: 1.0 }];
+        tenants.extend(specs.into_iter().map(|spec| {
+            let weight = spec.resolved_weight();
+            Tenant { spec, weight }
+        }));
+        let n = tenants.len();
+        let buckets = tenants
+            .iter()
+            .map(|t| Bucket { tokens: t.spec.burst, last: now })
+            .collect();
+        Self {
+            inner: Mutex::new(Sched {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                vtime: vec![0.0; n],
+                global_v: 0.0,
+                len: 0,
+                closed: false,
+                buckets,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+            tenants,
+            stats: GatewayStats::default(),
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn tenant_name(&self, tenant: usize) -> &str {
+        &self.tenants[tenant].spec.name
+    }
+
+    /// Resolve an API key to a tenant index. With no configured tenants
+    /// the gateway is open: any (or no) key admits as the local tenant.
+    /// With tenants configured, a missing or unknown key is refused.
+    pub fn authenticate(&self, key: Option<&str>) -> Result<usize> {
+        if self.tenants.len() == 1 {
+            return Ok(LOCAL_TENANT);
+        }
+        match key {
+            None => Err(Error::Request("missing API key".into())),
+            Some(k) => self
+                .tenants
+                .iter()
+                .position(|t| t.spec.key.as_deref() == Some(k))
+                .ok_or_else(|| Error::Request("unknown API key".into())),
+        }
+    }
+
+    /// Token-bucket check for one admission. `true` = within rate.
+    /// Unlimited tenants (`rate == 0 && burst == 0`) always pass;
+    /// `rate == 0 && burst > 0` is a deterministic hard cap of `burst`
+    /// admissions (never refills).
+    pub fn try_acquire(&self, tenant: usize) -> bool {
+        let spec = &self.tenants[tenant].spec;
+        if spec.rate == 0.0 && spec.burst == 0.0 {
+            return true;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let b = &mut g.buckets[tenant];
+        if spec.rate > 0.0 {
+            let now = Instant::now();
+            let dt = now.duration_since(b.last).as_secs_f64();
+            b.last = now;
+            b.tokens = (b.tokens + dt * spec.rate).min(spec.burst.max(1.0));
+        }
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Non-blocking push for `tenant`, with `cost` in the tenant's
+    /// fair-share currency (the server uses prompt + decode tokens, so
+    /// a 1M-token burst debits its tenant 1M tokens of share).
+    /// `Err(Request("queue full"))` when the tenant's queue is at
+    /// depth — the gateway's 429 / the TCP path's queue-full frame.
+    pub fn push(&self, tenant: usize, cost: f64, job: J) -> Result<()> {
+        match self.push_inner(tenant, cost, job, None) {
+            Ok(()) => Ok(()),
+            Err((_job, e)) => Err(e),
+        }
+    }
+
+    /// Bounded blocking push: wait up to `timeout` for the tenant's
+    /// queue to drain below depth. On failure the job comes back to the
+    /// caller with the reason (mirrors
+    /// [`RequestQueue::push_timeout`](crate::coordinator::RequestQueue::push_timeout)).
+    pub fn push_timeout(
+        &self,
+        tenant: usize,
+        cost: f64,
+        job: J,
+        timeout: Duration,
+    ) -> std::result::Result<(), (J, Error)> {
+        self.push_inner(tenant, cost, job, Some(timeout))
+    }
+
+    fn push_inner(
+        &self,
+        tenant: usize,
+        cost: f64,
+        job: J,
+        timeout: Option<Duration>,
+    ) -> std::result::Result<(), (J, Error)> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((job, Error::Request("queue closed".into())));
+            }
+            if g.queues[tenant].len() < self.depth {
+                let was_empty = g.queues[tenant].is_empty();
+                if was_empty {
+                    // Arrival clamp: an idle tenant rejoins at the
+                    // current global virtual time (no stale credit, no
+                    // stale debt).
+                    g.vtime[tenant] = g.vtime[tenant].max(g.global_v);
+                }
+                g.queues[tenant].push_back(Entry { cost: cost.max(1.0), job });
+                g.len += 1;
+                drop(g);
+                self.stats.admitted.inc();
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            let Some(deadline) = deadline else {
+                self.stats.shed.inc();
+                return Err((job, Error::Request("queue full".into())));
+            };
+            if now >= deadline {
+                self.stats.shed.inc();
+                return Err((job, Error::Request("queue full".into())));
+            }
+            let (guard, _res) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = guard; // loop re-checks closed / space / deadline
+        }
+    }
+
+    /// Pick the backlogged tenant with the smallest virtual time (ties
+    /// go to the lowest index — deterministic) and advance the clock.
+    fn pop_locked(&self, g: &mut Sched<J>) -> Option<J> {
+        let mut best: Option<usize> = None;
+        for t in 0..g.queues.len() {
+            if g.queues[t].is_empty() {
+                continue;
+            }
+            if best.is_none_or(|b| g.vtime[t] < g.vtime[b]) {
+                best = Some(t);
+            }
+        }
+        let t = best?;
+        let e = g.queues[t].pop_front().expect("non-empty by selection");
+        g.len -= 1;
+        g.global_v = g.vtime[t];
+        g.vtime[t] += e.cost / self.tenants[t].weight;
+        Some(e.job)
+    }
+
+    /// Non-blocking weighted-fair pop.
+    pub fn try_pop(&self) -> Option<J> {
+        let mut g = self.inner.lock().unwrap();
+        let job = self.pop_locked(&mut g);
+        drop(g);
+        if job.is_some() {
+            self.not_full.notify_all();
+        }
+        job
+    }
+
+    /// Blocking weighted-fair pop; `None` once closed AND drained.
+    pub fn pop(&self) -> Option<J> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = self.pop_locked(&mut g) {
+                drop(g);
+                self.not_full.notify_all();
+                return Some(job);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: producers fail fast, the drain loop drains then stops.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().len == 0
+    }
+}
+
+impl<J> JobSource<J> for FairScheduler<J> {
+    fn pop_job(&self) -> Option<J> {
+        self.pop()
+    }
+    fn try_pop_job(&self) -> Option<J> {
+        self.try_pop()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, class: PriorityClass) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            key: Some(format!("key-{name}")),
+            class,
+            weight: 0.0,
+            rate: 0.0,
+            burst: 0.0,
+        }
+    }
+
+    #[test]
+    fn parse_tenant_specs() {
+        let t = TenantSpec::parse("alice:sk-a:interactive:5:10").unwrap();
+        assert_eq!(t.name, "alice");
+        assert_eq!(t.key.as_deref(), Some("sk-a"));
+        assert_eq!(t.class, PriorityClass::Interactive);
+        assert_eq!(t.rate, 5.0);
+        assert_eq!(t.burst, 10.0);
+        // class/rate/burst optional; rate implies a default burst.
+        let t = TenantSpec::parse("bob:sk-b").unwrap();
+        assert_eq!(t.class, PriorityClass::Standard);
+        assert_eq!((t.rate, t.burst), (0.0, 0.0));
+        let t = TenantSpec::parse("carol:sk-c:batch:2.5").unwrap();
+        assert_eq!(t.burst, 3.0);
+        assert!(TenantSpec::parse("nokey").is_err());
+        assert!(TenantSpec::parse("x:k:warp9").is_err());
+        assert!(TenantSpec::parse("x:k:standard:fast").is_err());
+        // Duplicate names / shared keys are config errors.
+        assert!(TenantSpec::parse_list(&["a:k1".into(), "a:k2".into()]).is_err());
+        assert!(TenantSpec::parse_list(&["a:k:standard".into(), "b:k".into()]).is_err());
+        assert_eq!(
+            TenantSpec::parse_list(&["a:k1".into(), "b:k2:batch".into()]).unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn single_tenant_is_fifo() {
+        let s: FairScheduler<u32> = FairScheduler::new(vec![], 8);
+        for i in 0..6 {
+            s.push(LOCAL_TENANT, 1.0, i).unwrap();
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| s.try_pop()).collect();
+        assert_eq!(order, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backpressure_is_per_tenant() {
+        let s: FairScheduler<u32> =
+            FairScheduler::new(vec![spec("a", PriorityClass::Standard)], 2);
+        s.push(1, 1.0, 10).unwrap();
+        s.push(1, 1.0, 11).unwrap();
+        let err = s.push(1, 1.0, 12).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert_eq!(s.stats.shed.get(), 1);
+        // The flood sheds tenant a's traffic; local still admits.
+        s.push(LOCAL_TENANT, 1.0, 0).unwrap();
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn weighted_share_over_a_backlog() {
+        // A (weight 3) vs B (weight 1), both saturated with cost-1 jobs:
+        // every prefix of the dequeue order gives A its 3/4 share within
+        // a constant.
+        let a = TenantSpec { weight: 3.0, ..spec("a", PriorityClass::Standard) };
+        let b = spec("b", PriorityClass::Standard);
+        let s: FairScheduler<(usize, u32)> = FairScheduler::new(vec![a, b], 64);
+        for i in 0..40u32 {
+            s.push(1, 1.0, (1, i)).unwrap();
+            s.push(2, 1.0, (2, i)).unwrap();
+        }
+        let order: Vec<(usize, u32)> = std::iter::from_fn(|| s.try_pop()).collect();
+        assert_eq!(order.len(), 80);
+        let mut served_a = 0usize;
+        for (n, &(tenant, _)) in order.iter().enumerate() {
+            if tenant == 1 {
+                served_a += 1;
+            }
+            let expect = (n + 1) as f64 * 0.75;
+            // Both stay backlogged through the first 53 dequeues (A's 40
+            // jobs last until ~n=53 at share 3/4).
+            if n < 50 {
+                assert!(
+                    (served_a as f64 - expect).abs() <= 2.0,
+                    "prefix {}: A served {served_a}, expected ~{expect:.1}",
+                    n + 1
+                );
+            }
+        }
+        // Per-tenant FIFO order is preserved.
+        let a_jobs: Vec<u32> =
+            order.iter().filter(|(t, _)| *t == 1).map(|&(_, i)| i).collect();
+        assert_eq!(a_jobs, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn returning_tenant_is_not_starved() {
+        // Batch tenant floods; an interactive job arriving late must be
+        // served within a couple of dequeues (arrival clamp).
+        let s: FairScheduler<&'static str> = FairScheduler::new(
+            vec![spec("batch", PriorityClass::Batch), spec("live", PriorityClass::Interactive)],
+            128,
+        );
+        for _ in 0..100 {
+            s.push(1, 1.0, "batch").unwrap();
+        }
+        for _ in 0..20 {
+            s.try_pop().unwrap();
+        }
+        s.push(2, 1.0, "live").unwrap();
+        let next = s.try_pop().unwrap();
+        assert_eq!(next, "live", "interactive arrival preempts the backlog");
+    }
+
+    #[test]
+    fn cost_weights_the_share() {
+        // Equal weights, but A's jobs cost 10x: B gets ~10 dequeues per
+        // A dequeue once both are backlogged.
+        let s: FairScheduler<usize> = FairScheduler::new(
+            vec![spec("a", PriorityClass::Standard), spec("b", PriorityClass::Standard)],
+            64,
+        );
+        for i in 0..5 {
+            s.push(1, 10.0, 100 + i).unwrap();
+        }
+        for i in 0..50 {
+            s.push(2, 1.0, i).unwrap();
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| s.try_pop()).collect();
+        let first_20 = &order[..20];
+        let a_in_first_20 = first_20.iter().filter(|&&j| j >= 100).count();
+        assert!(a_in_first_20 <= 3, "heavy jobs took {a_in_first_20}/20 early slots");
+    }
+
+    #[test]
+    fn token_bucket_hard_cap_and_refill() {
+        let mut capped = spec("capped", PriorityClass::Standard);
+        capped.burst = 2.0; // rate 0: never refills — deterministic cap
+        let mut limited = spec("limited", PriorityClass::Standard);
+        limited.rate = 200.0;
+        limited.burst = 1.0;
+        let s: FairScheduler<u32> = FairScheduler::new(vec![capped, limited], 8);
+        assert!(s.try_acquire(1));
+        assert!(s.try_acquire(1));
+        assert!(!s.try_acquire(1), "hard cap of 2");
+        assert!(s.try_acquire(2));
+        assert!(!s.try_acquire(2), "burst 1 spent");
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(s.try_acquire(2), "refilled at 200/s");
+        // Unlimited local tenant never trips.
+        for _ in 0..1000 {
+            assert!(s.try_acquire(LOCAL_TENANT));
+        }
+    }
+
+    #[test]
+    fn authenticate_resolves_keys() {
+        let open: FairScheduler<u32> = FairScheduler::new(vec![], 8);
+        assert_eq!(open.authenticate(None).unwrap(), LOCAL_TENANT);
+        assert_eq!(open.authenticate(Some("anything")).unwrap(), LOCAL_TENANT);
+
+        let s: FairScheduler<u32> = FairScheduler::new(
+            vec![spec("a", PriorityClass::Standard), spec("b", PriorityClass::Batch)],
+            8,
+        );
+        assert_eq!(s.authenticate(Some("key-a")).unwrap(), 1);
+        assert_eq!(s.authenticate(Some("key-b")).unwrap(), 2);
+        assert!(s.authenticate(Some("nope")).is_err());
+        assert!(s.authenticate(None).is_err());
+        assert_eq!(s.tenant_name(0), "local");
+        assert_eq!(s.tenant_name(2), "b");
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let s: FairScheduler<u32> = FairScheduler::new(vec![], 8);
+        s.push(0, 1.0, 1).unwrap();
+        s.close();
+        assert!(s.push(0, 1.0, 2).is_err());
+        assert_eq!(s.pop(), Some(1));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        use std::sync::Arc;
+        let s: Arc<FairScheduler<u32>> = Arc::new(FairScheduler::new(vec![], 8));
+        let s2 = s.clone();
+        let consumer = std::thread::spawn(move || s2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        s.push(LOCAL_TENANT, 1.0, 42).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn push_timeout_blocks_until_drained() {
+        use std::sync::Arc;
+        let s: Arc<FairScheduler<u32>> = Arc::new(FairScheduler::new(vec![], 1));
+        s.push(LOCAL_TENANT, 1.0, 1).unwrap();
+        let s2 = s.clone();
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            s2.try_pop()
+        });
+        s.push_timeout(LOCAL_TENANT, 1.0, 2, Duration::from_secs(5)).unwrap();
+        assert_eq!(drainer.join().unwrap(), Some(1));
+        let (job, err) =
+            s.push_timeout(LOCAL_TENANT, 1.0, 3, Duration::from_millis(30)).unwrap_err();
+        assert_eq!(job, 3);
+        assert!(err.to_string().contains("queue full"), "{err}");
+    }
+}

@@ -100,6 +100,19 @@
 //! `latency_ms_{mean,p50,p90,p99}` (see [`server`] for the exact frame
 //! shapes).
 //!
+//! ## Production gateway
+//!
+//! `diagonal-batching gateway --synthetic 42 --http 127.0.0.1:8080
+//! --tenants alice:sk-a:interactive:5:10,bob:sk-b:batch` (or `serve
+//! --http ADDR`) additionally binds the [`gateway`]: an HTTP/1.1 + SSE
+//! front end over the same engine with per-tenant API keys,
+//! token-bucket rate limiting (`429`), weighted-fair lane scheduling
+//! with SLA priority classes replacing FIFO admission, queue-depth
+//! load-shedding, and a Prometheus-text `GET /metrics` endpoint
+//! exporting every [`coordinator::EngineStats`] field. SSE `data:`
+//! payloads are byte-identical to the TCP frames for the same request.
+//! See ARCHITECTURE.md "Production gateway".
+//!
 //! ## Memory-state cache
 //!
 //! `--cache-bytes N` enables the [`cache`] subsystem: because ARMT's
@@ -142,6 +155,7 @@ pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod gateway;
 pub mod json;
 pub mod bench;
 pub mod metrics;

@@ -4,6 +4,9 @@
 //! diagonal-batching serve    [--model tiny] [--mode diagonal] [--addr HOST:PORT]
 //!                            [--lanes N] [--threads N] [--synthetic SEED]
 //!                            [--cache-bytes N]      # memory-state prefix cache
+//!                            [--http HOST:PORT] [--tenants SPEC,SPEC]
+//! diagonal-batching gateway  [serve flags]          # serve with the HTTP/SSE
+//!                            gateway on (default --http 127.0.0.1:8080)
 //! diagonal-batching worker   [serve flags] [--fault die_after=K|stall_after=K:MS
 //!                            |drop_after=K]         # serve + shard_* range service
 //! diagonal-batching shard    --workers A:P,B:P [--layer-split K] [--addr HOST:PORT]
@@ -122,6 +125,13 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(k) = flags.get("layer-split") {
         cfg.layer_split = k.parse::<usize>()?.max(1);
     }
+    if let Some(h) = flags.get("http") {
+        cfg.http = h.clone();
+    }
+    if let Some(t) = flags.get("tenants") {
+        cfg.tenants =
+            t.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    }
     // One global switch: the tensor entry points dispatch on it and the
     // config default already honors PALLAS_KERNEL, so an explicit flag
     // or config file wins over the env var here.
@@ -129,6 +139,14 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
 
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg, &flags),
+        // `gateway` is `serve` with the HTTP/SSE front end on by
+        // default; an explicit --http still picks the bind address.
+        "gateway" => {
+            if cfg.http.is_empty() {
+                cfg.http = "127.0.0.1:8080".to_string();
+            }
+            cmd_serve(&cfg, &flags)
+        }
         "worker" => cmd_worker(&cfg, &flags),
         "shard" => cmd_shard(&cfg, &flags),
         "generate" => cmd_generate(&cfg, &flags),
@@ -151,7 +169,7 @@ fn print_usage() {
         "diagonal-batching — Diagonal Batching for Recurrent Memory Transformers
 
 USAGE:
-  diagonal-batching <serve|worker|shard|generate|ctl|run|bench|tables|babilong|info> [--flags]
+  diagonal-batching <serve|gateway|worker|shard|generate|ctl|run|bench|tables|babilong|info> [--flags]
 
 COMMON FLAGS:
   --manifest PATH   artifacts/manifest.json
@@ -189,6 +207,21 @@ SUBCOMMANDS:
                                              prompt prefixes skip their prefill
                                              (bit-exactly) and conversations can
                                              be saved/resumed; 0 = off (default)
+            --http HOST:PORT                 also bind the HTTP/SSE gateway:
+                                             POST /v1/generate streams SSE
+                                             frames byte-identical to the TCP
+                                             protocol; GET /metrics exports
+                                             every engine counter as Prometheus
+                                             text; 429s shed overload cleanly
+            --tenants SPEC[,SPEC...]         multi-tenant admission, one spec
+                                             per tenant: name:key:class[:rate
+                                             [:burst]] with class interactive|
+                                             standard|batch — weighted-fair
+                                             scheduling with per-tenant API
+                                             keys and token-bucket rate limits
+  gateway   [serve flags]                    serve with the gateway on by
+                                             default (--http 127.0.0.1:8080
+                                             unless overridden)
   worker    [serve flags]                    a serve process that additionally
                                              hosts the shard_* layer-range
                                              service, so a coordinator can lane-
@@ -207,6 +240,9 @@ SUBCOMMANDS:
                                              1 = whole requests per worker
             --synthetic SEED                 coordinate the built-in synthetic
                                              model (workers must match)
+            --http HOST:PORT                 metrics-only listener over the
+                                             coordinator's stats (GET /metrics,
+                                             GET /healthz)
   generate  --tokens N                       synthesize an N-token prompt and
             --max-new-tokens M               stream M generated tokens to stdout
             --temperature T --top-k K        sampling (default greedy)
@@ -321,7 +357,13 @@ fn cmd_serve(
         (true, _) | (false, BackendKind::Native) => cfg.resolved_threads(),
         (false, BackendKind::Hlo) => 1,
     };
-    let server = Server::start(engine, &cfg.addr, cfg.queue_depth)?;
+    let tenants = diagonal_batching::gateway::TenantSpec::parse_list(&cfg.tenants)?;
+    let opts = ServerOptions {
+        http: (!cfg.http.is_empty()).then(|| cfg.http.clone()),
+        tenants,
+        ..Default::default()
+    };
+    let server = Server::start_with(engine, &cfg.addr, cfg.queue_depth, opts)?;
     let cache = if cfg.cache_bytes == 0 {
         "off".to_string()
     } else {
@@ -337,6 +379,17 @@ fn cmd_serve(
         threads,
         if threads == 1 { "" } else { "s" }
     );
+    if let Some(http) = server.http_addr {
+        println!(
+            "gateway on http://{http} — POST /v1/generate (SSE), GET /metrics, \
+             GET /healthz, POST /admin/shutdown{}",
+            if cfg.tenants.is_empty() {
+                " (open: no tenants configured)".to_string()
+            } else {
+                format!(" ({} tenants, API keys required)", cfg.tenants.len())
+            }
+        );
+    }
     // Blocks until a protocol shutdown drains the engine, then exits
     // cleanly (the CI smoke test watchdogs this path).
     server.join();
@@ -368,7 +421,7 @@ fn cmd_worker(
         engine,
         &cfg.addr,
         cfg.queue_depth,
-        ServerOptions { shard_backend: Some(shard_backend), fault },
+        ServerOptions { shard_backend: Some(shard_backend), fault, ..Default::default() },
     )?;
     println!(
         "shard worker on {} (mode {}) — {{\"cmd\": \"shutdown\"}} or Ctrl-C to stop",
@@ -409,6 +462,12 @@ fn cmd_shard(
         if cfg.workers.len() == 1 { "" } else { "s" },
         cfg.layer_split
     );
+    // Observability pass-through: the coordinator's stats block (shard
+    // routing/failover counters included) on a metrics-only listener.
+    if !cfg.http.is_empty() {
+        let bound = diagonal_batching::gateway::serve_metrics(&cfg.http, coord.stats())?;
+        println!("metrics on http://{bound}/metrics");
+    }
     coord.join();
     println!("coordinator stopped cleanly");
     Ok(())

@@ -107,6 +107,19 @@
 //! that disconnects mid-stream is detected on the next failed frame
 //! write; its request is cancelled and evicted from the wavefront,
 //! leaving every other in-flight request bit-exact.
+//!
+//! Admission runs through the gateway's weighted-fair scheduler
+//! ([`crate::gateway::FairScheduler`]) rather than a plain FIFO: the
+//! TCP path admits as the built-in open `local` tenant (with no
+//! configured tenants that is exactly FIFO), and
+//! [`ServerOptions::http`] binds the HTTP/1.1 + SSE front end
+//! ([`crate::gateway::http`]) on the same scheduler, cancel registry,
+//! wire-id namespace and stats — per-tenant API keys, token buckets and
+//! `GET /metrics` included. Shutdown (protocol `{"cmd": "shutdown"}`,
+//! `POST /admin/shutdown`, or [`Server::stop`]) drains: every request
+//! already admitted still streams its terminal `done`/`error` frame,
+//! and [`Server::join`]/[`Server::stop`] wait (bounded) for in-flight
+//! streams to finish flushing before returning.
 
 mod protocol;
 
@@ -116,14 +129,17 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::config::ExecMode;
 use crate::coordinator::{
-    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle, RequestQueue,
+    EngineStats, Event, GenerateRequest, InferenceEngine, RequestHandle,
 };
 use crate::error::{Error, Result};
+use crate::gateway::http::{handle_http_conn, HttpShared};
+use crate::gateway::{FairScheduler, TenantSpec, LOCAL_TENANT};
 use crate::json::Value;
 use crate::scheduler::StepBackend;
 use crate::shard::{FaultPlan, FaultState, ShardService};
@@ -132,23 +148,78 @@ use crate::shard::{FaultPlan, FaultState, ShardService};
 /// eviction kicks in. Bounds server memory: a stalled client can hold
 /// at most this many events (pre-streaming, each request buffered
 /// exactly one response; tokens stream now, so give decode some slack).
-const EVENT_BUFFER: usize = 1024;
+pub(crate) const EVENT_BUFFER: usize = 1024;
 
 /// Per-connection reply route: a BOUNDED event channel plus the
 /// request's cancel handle. The engine thread only ever `try_send`s —
 /// if the buffer is full (the client stalled far beyond it), the
 /// request is cancelled instead of buffering without bound, and the
 /// ticket drop closes the channel to wake the connection thread.
-struct ConnTicket {
-    tx: mpsc::SyncSender<Event>,
-    handle: RequestHandle,
+pub(crate) struct ConnTicket {
+    pub(crate) tx: mpsc::SyncSender<Event>,
+    pub(crate) handle: RequestHandle,
 }
 
-type Job = (GenerateRequest, ConnTicket);
+pub(crate) type Job = (GenerateRequest, ConnTicket);
 
 /// Active-request cancellation handles, keyed by wire id (so
 /// `{"cmd": "cancel", "id": N}` works from any connection).
-type CancelRegistry = Arc<Mutex<HashMap<u64, RequestHandle>>>;
+pub(crate) type CancelRegistry = Arc<Mutex<HashMap<u64, RequestHandle>>>;
+
+/// Admission cost of a request under weighted-fair scheduling: total
+/// tokens it will occupy the wavefront with (prompt + decode budget).
+pub(crate) fn job_cost(req: &GenerateRequest) -> f64 {
+    (req.prompt.len() + req.max_new_tokens) as f64
+}
+
+/// How long `stop`/`join` wait for in-flight streams to flush their
+/// terminal frame after the engine and acceptors have exited. Bounded
+/// so one client that never drains its socket can't wedge shutdown.
+const STREAM_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Counts connection threads that are inside a request's streaming
+/// section (between admission and the terminal frame's flush).
+/// `stop`/`join` wait for the count to reach zero so every admitted
+/// request's `done`/`error` frame is on the wire before they return —
+/// threads idle at the read loop (no request in flight) are not
+/// counted and simply die with the process.
+#[derive(Clone, Default)]
+pub(crate) struct WaitGroup(Arc<(Mutex<usize>, Condvar)>);
+
+impl WaitGroup {
+    /// Enter the guarded section; the returned guard exits it on drop.
+    pub(crate) fn enter(&self) -> WaitGuard {
+        *self.0 .0.lock().unwrap() += 1;
+        WaitGuard(self.0.clone())
+    }
+
+    /// Wait (bounded) for the count to reach zero. Returns whether it
+    /// drained in time.
+    fn wait_drained(&self, timeout: Duration) -> bool {
+        let (lock, cv) = &*self.0;
+        let deadline = Instant::now() + timeout;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = cv.wait_timeout(n, deadline - now).unwrap();
+            n = guard;
+        }
+        true
+    }
+}
+
+pub(crate) struct WaitGuard(Arc<(Mutex<usize>, Condvar)>);
+
+impl Drop for WaitGuard {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.0;
+        *lock.lock().unwrap() -= 1;
+        cv.notify_all();
+    }
+}
 
 /// Optional server capabilities beyond plain serving
 /// ([`Server::start_with`]).
@@ -163,15 +234,28 @@ pub struct ServerOptions {
     /// frames (`--fault`, [`FaultPlan`]). `None` = no faults, zero
     /// overhead on the write path beyond one atomic load.
     pub fault: Option<FaultPlan>,
+    /// Bind the HTTP/1.1 + SSE gateway ([`crate::gateway::http`]) on
+    /// this address alongside the TCP listener (`--http`, the `gateway`
+    /// subcommand). Both front ends share one engine, one weighted-fair
+    /// scheduler, one cancel registry and one wire-id namespace.
+    pub http: Option<String>,
+    /// Gateway tenants ([`TenantSpec`], the `--tenants` flag). The
+    /// built-in open `local` tenant (used by the TCP path and by
+    /// unauthenticated HTTP when this is empty) is always added first.
+    pub tenants: Vec<TenantSpec>,
 }
 
 /// Handle to a running server.
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// Bound address of the HTTP/SSE gateway ([`ServerOptions::http`]).
+    pub http_addr: Option<std::net::SocketAddr>,
     accept_thread: Option<JoinHandle<()>>,
+    http_thread: Option<JoinHandle<()>>,
     engine_thread: Option<JoinHandle<()>>,
-    queue: Arc<RequestQueue<Job>>,
+    queue: Arc<FairScheduler<Job>>,
     shutdown: Arc<AtomicBool>,
+    streams: WaitGroup,
     /// Live engine counters (readable after `stop` too).
     pub stats: Arc<EngineStats>,
 }
@@ -197,9 +281,13 @@ impl Server {
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let queue = Arc::new(RequestQueue::<Job>::new(queue_depth));
+        let queue = Arc::new(FairScheduler::<Job>::new(opts.tenants, queue_depth));
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = engine.stats_handle();
+        let streams = WaitGroup::default();
+        // Auto-assigned wire ids share one namespace across the TCP and
+        // HTTP front ends (cancel-by-id must be unambiguous).
+        let next_id = Arc::new(AtomicU64::new(1));
         // Mid-flight {"cmd": "save"} only works when the engine arms
         // snapshot capture for every packed request (cache enabled);
         // the reply must say so instead of acknowledging a no-op.
@@ -244,8 +332,9 @@ impl Server {
         let sd = shutdown.clone();
         let st = stats.clone();
         let reg = registry.clone();
+        let ids_tcp = next_id.clone();
+        let wg = streams.clone();
         let accept_thread = std::thread::spawn(move || {
-            let next_id = Arc::new(AtomicU64::new(1));
             for stream in listener.incoming() {
                 if sd.load(Ordering::SeqCst) {
                     break;
@@ -258,11 +347,12 @@ impl Server {
                 }
                 let q = q3.clone();
                 let sd2 = sd.clone();
-                let ids = next_id.clone();
+                let ids = ids_tcp.clone();
                 let stats = st.clone();
                 let registry = reg.clone();
                 let shard = shard.clone();
                 let fault = fault.clone();
+                let wg = wg.clone();
                 std::thread::spawn(move || {
                     let _ = handle_conn(
                         stream,
@@ -274,47 +364,102 @@ impl Server {
                         mid_flight_save,
                         shard.as_deref(),
                         &fault,
+                        &wg,
                     );
                 });
             }
         });
 
+        // Optional HTTP/SSE gateway on the same scheduler + registry.
+        let (http_addr, http_thread) = match opts.http {
+            None => (None, None),
+            Some(http) => {
+                let http_listener = TcpListener::bind(http.as_str())?;
+                let bound = http_listener.local_addr()?;
+                let shared = Arc::new(HttpShared {
+                    sched: queue.clone(),
+                    registry: registry.clone(),
+                    stats: stats.clone(),
+                    shutdown: shutdown.clone(),
+                    next_id: next_id.clone(),
+                    streams: streams.clone(),
+                });
+                let sd = shutdown.clone();
+                let thread = std::thread::spawn(move || {
+                    for stream in http_listener.incoming() {
+                        if sd.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let shared = shared.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_http_conn(stream, &shared);
+                        });
+                    }
+                });
+                (Some(bound), Some(thread))
+            }
+        };
+
         Ok(Self {
             addr: local,
+            http_addr,
             accept_thread: Some(accept_thread),
+            http_thread,
             engine_thread: Some(engine_thread),
             queue,
             shutdown,
+            streams,
             stats,
         })
     }
 
-    /// Request shutdown and join the worker threads. The acceptor is
-    /// unblocked by a self-connection.
+    /// Request shutdown and join the worker threads. The acceptors are
+    /// unblocked by self-connections; requests already admitted still
+    /// stream their terminal frame (bounded wait) before this returns.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr); // unblock accept()
         self.queue.close();
         if let Some(t) = self.engine_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.teardown_front_ends();
     }
 
-    /// Run in the foreground until a protocol `{"cmd": "shutdown"}`
-    /// (or an engine abort) terminates the engine thread, then tear
-    /// down the acceptor and return — the clean-exit path the `serve`
-    /// subcommand blocks on.
+    /// Run in the foreground until a protocol `{"cmd": "shutdown"}` /
+    /// `POST /admin/shutdown` (or an engine abort) terminates the
+    /// engine thread, then tear down the acceptors and return — the
+    /// clean-exit path the `serve` subcommand blocks on. In-flight
+    /// streams flush their terminal frame first (bounded wait).
     pub fn join(mut self) {
         if let Some(t) = self.engine_thread.take() {
             let _ = t.join();
         }
         self.shutdown.store(true, Ordering::SeqCst);
+        self.teardown_front_ends();
+    }
+
+    /// Join both acceptors (self-connect to unblock `accept()`), then
+    /// wait — bounded — for connection threads still inside a streaming
+    /// section to flush their terminal `done`/`error` frame. Called
+    /// only after the engine thread has exited, so every in-flight
+    /// stream already has its terminal event queued.
+    fn teardown_front_ends(&mut self) {
         let _ = TcpStream::connect(self.addr); // unblock accept()
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        if let Some(addr) = self.http_addr {
+            let _ = TcpStream::connect(addr);
+        }
+        if let Some(t) = self.http_thread.take() {
+            let _ = t.join();
+        }
+        if !self.streams.wait_drained(STREAM_DRAIN_TIMEOUT) {
+            eprintln!(
+                "shutdown: gave up waiting for stalled client streams after {:?}",
+                STREAM_DRAIN_TIMEOUT
+            );
         }
     }
 }
@@ -322,7 +467,7 @@ impl Server {
 #[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
-    queue: &RequestQueue<Job>,
+    queue: &FairScheduler<Job>,
     shutdown: &AtomicBool,
     ids: &AtomicU64,
     stats: &EngineStats,
@@ -330,6 +475,7 @@ fn handle_conn(
     mid_flight_save: bool,
     shard: Option<&Mutex<ShardService>>,
     fault: &FaultState,
+    streams: &WaitGroup,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -487,7 +633,14 @@ fn handle_conn(
             reg.insert(wire_id, handle.clone());
         }
         let (tx, rx) = mpsc::sync_channel::<Event>(EVENT_BUFFER);
-        if let Err(e) = queue.push((req, ConnTicket { tx, handle: handle.clone() })) {
+        // Hold a stream guard from admission to terminal-frame flush:
+        // `stop`/`join` wait on it so shutdown never strands an
+        // admitted request without its `done`/`error` frame.
+        let _stream_guard = streams.enter();
+        let cost = job_cost(&req);
+        if let Err(e) =
+            queue.push(LOCAL_TENANT, cost, (req, ConnTicket { tx, handle: handle.clone() }))
+        {
             registry.lock().unwrap().remove(&wire_id);
             writeln!(writer, "{}", error_json(Some(wire_id), &e))?;
             continue;
@@ -549,7 +702,9 @@ fn handle_conn(
     Ok(())
 }
 
-fn error_json(id: Option<u64>, e: &Error) -> String {
+/// Render a protocol error frame (shared with the HTTP front end,
+/// whose error bodies are the same JSON objects).
+pub(crate) fn error_json(id: Option<u64>, e: &Error) -> String {
     let mut fields = vec![
         ("event", Value::Str("error".into())),
         ("error", Value::Str(e.to_string())),
@@ -989,7 +1144,7 @@ mod tests {
                 cfg.clone(),
                 Params::random(&cfg, 21),
             ))),
-            fault: None,
+            ..Default::default()
         };
         let server = Server::start_with(test_engine(), "127.0.0.1:0", 8, opts).unwrap();
         let mut c = Client::connect(&server.addr.to_string()).unwrap();
@@ -1033,8 +1188,10 @@ mod tests {
 
     #[test]
     fn injected_death_severs_streams_and_probes() {
-        let opts =
-            ServerOptions { shard_backend: None, fault: Some(FaultPlan::DieAfterFrames(3)) };
+        let opts = ServerOptions {
+            fault: Some(FaultPlan::DieAfterFrames(3)),
+            ..Default::default()
+        };
         let server = Server::start_with(test_engine(), "127.0.0.1:0", 8, opts).unwrap();
         let addr = server.addr.to_string();
         let mut c = Client::connect(&addr).unwrap();
@@ -1066,5 +1223,210 @@ mod tests {
             assert_eq!(h.join().unwrap(), 3);
         }
         server.stop();
+    }
+
+    /// Send one raw HTTP/1.1 request and read the whole response (the
+    /// gateway closes every connection after one request, so EOF
+    /// delimits the body — SSE streams included).
+    fn http_roundtrip(addr: &std::net::SocketAddr, raw: &str) -> String {
+        use std::io::Read as _;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn http_post(
+        addr: &std::net::SocketAddr,
+        path: &str,
+        key: Option<&str>,
+        body: &str,
+    ) -> String {
+        let auth = key
+            .map(|k| format!("Authorization: Bearer {k}\r\n"))
+            .unwrap_or_default();
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\n{auth}Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        http_roundtrip(addr, &raw)
+    }
+
+    /// The `data:` payloads of an SSE response, in order.
+    fn sse_payloads(response: &str) -> Vec<String> {
+        response
+            .lines()
+            .filter_map(|l| l.strip_prefix("data: "))
+            .map(String::from)
+            .collect()
+    }
+
+    #[test]
+    fn http_gateway_end_to_end() {
+        use crate::gateway::TenantSpec;
+        let opts = ServerOptions {
+            http: Some("127.0.0.1:0".into()),
+            tenants: TenantSpec::parse_list(&[
+                "alice:sk-a:interactive".into(),
+                // rate 0 + burst 2: a deterministic hard cap of 2
+                // admissions — lets the test trip the bucket reliably.
+                "capped:sk-c:standard:0:2".into(),
+            ])
+            .unwrap(),
+            ..Default::default()
+        };
+        let server = Server::start_with(test_engine(), "127.0.0.1:0", 8, opts).unwrap();
+        let http = server.http_addr.expect("gateway bound");
+        let tcp = server.addr.to_string();
+
+        // Liveness.
+        let health = http_roundtrip(&http, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        // Tenants are configured, so a missing key is refused.
+        let resp = http_post(&http, "/v1/generate", None, "{\"tokens\": [1, 2, 3]}");
+        assert!(resp.starts_with("HTTP/1.1 401 "), "{resp}");
+        assert!(resp.contains("missing API key"), "{resp}");
+
+        // Unknown routes / wrong methods are clean errors.
+        let resp = http_roundtrip(&http, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404 "), "{resp}");
+        let resp = http_roundtrip(&http, "GET /v1/generate HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 405 "), "{resp}");
+
+        // The SAME request object over TCP and over HTTP/SSE: the SSE
+        // `data:` payloads must be byte-identical to the TCP frame
+        // lines (both render through `render_event`). Run TCP first —
+        // ids only clash while active.
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+        let body = Value::obj(vec![
+            ("id", Value::Num(41.0)),
+            ("tokens", Value::arr_u32(&tokens)),
+            ("max_new_tokens", Value::Num(6.0)),
+        ])
+        .to_json();
+        let mut tcp_frames: Vec<String> = Vec::new();
+        {
+            let mut s = TcpStream::connect(&tcp).unwrap();
+            writeln!(s, "{body}").unwrap();
+            let mut lines = BufReader::new(s).lines();
+            loop {
+                let line = lines.next().unwrap().unwrap();
+                let done = Value::parse(&line)
+                    .unwrap()
+                    .req("event")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    == "done";
+                tcp_frames.push(line);
+                if done {
+                    break;
+                }
+            }
+        }
+        let resp = http_post(&http, "/v1/generate", Some("sk-a"), &body);
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: text/event-stream\r\n"), "{resp}");
+        assert!(resp.contains("event: token\n"), "{resp}");
+        let sse_frames = sse_payloads(&resp);
+        assert_eq!(sse_frames.len(), tcp_frames.len());
+        // Every non-terminal frame is byte-identical; the terminal
+        // `done` frames carry timings, so compare their payload fields.
+        for (sse, tcp) in sse_frames.iter().zip(&tcp_frames).take(tcp_frames.len() - 1) {
+            assert_eq!(sse, tcp, "SSE payload diverged from the TCP frame");
+        }
+        let sse_done = Value::parse(sse_frames.last().unwrap()).unwrap();
+        let tcp_done = Value::parse(tcp_frames.last().unwrap()).unwrap();
+        for field in ["generated", "greedy_tail", "segments", "tokens"] {
+            assert_eq!(
+                sse_done.req(field).unwrap().to_json(),
+                tcp_done.req(field).unwrap().to_json(),
+                "done frame field {field} diverged"
+            );
+        }
+
+        // Trip the capped tenant's bucket: 2 admissions, then 429.
+        let small = "{\"tokens\": [1, 2, 3, 4, 5, 6, 7, 8]}";
+        for _ in 0..2 {
+            let resp = http_post(&http, "/v1/generate", Some("sk-c"), small);
+            assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        }
+        let resp = http_post(&http, "/v1/generate", Some("sk-c"), small);
+        assert!(resp.starts_with("HTTP/1.1 429 "), "{resp}");
+        assert!(resp.contains("Retry-After: 1\r\n"), "{resp}");
+        assert!(resp.contains("rate limited"), "{resp}");
+
+        // /metrics: engine counters AND gateway counters, text format.
+        let resp = http_roundtrip(&http, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("# TYPE pallas_requests_total counter"), "{resp}");
+        assert!(resp.contains("pallas_requests_total 4"), "{resp}");
+        assert!(resp.contains("pallas_gateway_sse_streams_total 3"), "{resp}");
+        assert!(resp.contains("pallas_gateway_rate_limited_total 1"), "{resp}");
+        assert!(resp.contains("pallas_gateway_unauthorized_total 1"), "{resp}");
+
+        // Clean shutdown over HTTP; join() returns once drained.
+        let resp = http_post(&http, "/admin/shutdown", None, "");
+        assert!(resp.contains("\"ok\": true"), "{resp}");
+        server.join();
+    }
+
+    #[test]
+    fn shutdown_flushes_inflight_streams_before_join_returns() {
+        // Regression (drain-loop audit): a stream admitted before
+        // shutdown must have its terminal frame ON THE WIRE by the time
+        // `join` returns — connection threads used to be detached, so
+        // teardown could beat the final flush.
+        let server = Server::start(test_engine(), "127.0.0.1:0", 8).unwrap();
+        let addr = server.addr.to_string();
+        let stats = server.stats.clone();
+
+        // A slow client: submits a generation and reads NOTHING yet.
+        let tokens: Vec<u32> = (0..16).map(|i| i % 60).collect();
+        let mut slow = TcpStream::connect(&addr).unwrap();
+        writeln!(
+            slow,
+            "{}",
+            Value::obj(vec![
+                ("id", Value::Num(9.0)),
+                ("tokens", Value::arr_u32(&tokens)),
+                ("max_new_tokens", Value::Num(4.0)),
+            ])
+            .to_json()
+        )
+        .unwrap();
+
+        // Wait until the engine has finished the request...
+        for _ in 0..1000 {
+            if stats.generated_tokens.get() >= 4 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(stats.generated_tokens.get() >= 4, "generation never finished");
+
+        // ...then shut down from a second connection and join.
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        server.join();
+
+        // join() has returned: the slow client's whole stream must
+        // already be buffered on its socket. A read timeout converts a
+        // missing flush into a loud failure instead of a hang.
+        slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut lines = BufReader::new(slow).lines();
+        let mut saw_done = false;
+        for line in &mut lines {
+            let line = line.expect("terminal frame was flushed before join returned");
+            let v = Value::parse(&line).unwrap();
+            if v.req("event").unwrap().as_str().unwrap() == "done" {
+                saw_done = true;
+                break;
+            }
+        }
+        assert!(saw_done, "stream ended without a terminal done frame");
     }
 }

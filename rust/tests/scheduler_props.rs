@@ -24,6 +24,13 @@
 //!    to the worker-pool thread count AND to worker scheduling jitter
 //!    (randomized per-cell sleeps injected via the pool's test hook) —
 //!    logits bit-identical, deterministic stats fields identical.
+//!  * P13: weighted-fair admission is starvation-free (a late light
+//!    tenant is served within two pops of a flooding heavy one; every
+//!    prefix of the pop order tracks the weight shares within one
+//!    job), overload sheds as a clean queue-full error, and for random
+//!    tenant mixes every ADMITTED request's output is bit-identical to
+//!    a solo sequential run at every thread count — fairness reorders
+//!    admission, never arithmetic.
 
 use diagonal_batching::config::ModelConfig;
 use diagonal_batching::model::{NativeBackend, Params};
@@ -376,7 +383,7 @@ fn p12_shard_plan_parity_over_random_workloads() {
                     engine,
                     "127.0.0.1:0",
                     8,
-                    ServerOptions { shard_backend: Some(backend), fault: None },
+                    ServerOptions { shard_backend: Some(backend), ..ServerOptions::default() },
                 )
                 .unwrap()
             })
@@ -466,6 +473,186 @@ fn p12_shard_plan_parity_over_random_workloads() {
         coord.stop();
         for w in workers {
             w.stop();
+        }
+    }
+}
+
+#[test]
+fn p13_weighted_fair_admission_is_starvation_free_and_bitexact() {
+    use diagonal_batching::config::ExecMode;
+    use diagonal_batching::coordinator::{Event, GenerateRequest, InferenceEngine, Response};
+    use diagonal_batching::gateway::{FairScheduler, TenantSpec};
+    use std::collections::HashMap;
+
+    // Part 1a — no starvation across a flood. A batch-class tenant
+    // (weight 0.25) backlogs 32 expensive jobs and the clock advances;
+    // a late interactive job must be clamped to the current virtual
+    // time and served within the next two pops, not after the flood.
+    {
+        let specs = vec![
+            TenantSpec::parse("bulk:sk-b:batch").unwrap(),
+            TenantSpec::parse("live:sk-l:interactive").unwrap(),
+        ];
+        let sched: FairScheduler<u64> = FairScheduler::new(specs, 64);
+        for i in 0..32u64 {
+            sched.push(1, 10.0, i).unwrap(); // tenant 1 = bulk (0 is local)
+        }
+        for _ in 0..5 {
+            sched.try_pop().unwrap();
+        }
+        sched.push(2, 10.0, 100).unwrap();
+        let next = [sched.try_pop().unwrap(), sched.try_pop().unwrap()];
+        assert!(next.contains(&100), "late interactive job starved: popped {next:?}");
+    }
+
+    // Part 1b — weighted shares. Interactive (w=4) vs standard (w=1),
+    // equal cost, both fully backlogged: every prefix of the pop order
+    // must track the 4:1 ideal within one job (the SCFQ service bound).
+    {
+        let specs = vec![
+            TenantSpec::parse("fast:sk-f:interactive").unwrap(),
+            TenantSpec::parse("slow:sk-s:standard").unwrap(),
+        ];
+        let sched: FairScheduler<usize> = FairScheduler::new(specs, 64);
+        for i in 0..40 {
+            sched.push(1, 8.0, 1000 + i).unwrap();
+            sched.push(2, 8.0, 2000 + i).unwrap();
+        }
+        let mut fast = 0usize;
+        for k in 0..40usize {
+            if sched.try_pop().unwrap() < 2000 {
+                fast += 1;
+            }
+            let ideal = (k + 1) as f64 * 4.0 / 5.0;
+            assert!(
+                (fast as f64 - ideal).abs() <= 1.0 + 1e-9,
+                "after {} pops: fast served {fast}, ideal {ideal}",
+                k + 1
+            );
+        }
+    }
+
+    // Part 2 — random tenant mixes through `serve_queue`. One tenant is
+    // deliberately flooded past its queue depth so some pushes shed
+    // (clean "queue full" error, never a spin or a hang); every
+    // ADMITTED request's response must be bit-identical to a solo
+    // sequential run of the same request, at every worker-pool thread
+    // count. Fair admission reorders requests, never arithmetic.
+    let mut rng = Rng::new(0x13FA);
+    for case in 0..4 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let classes = ["interactive", "standard", "batch"];
+        let n_tenants = 1 + rng.below(3);
+        let specs: Vec<TenantSpec> = (0..n_tenants)
+            .map(|t| {
+                let class = classes[rng.below(3)];
+                TenantSpec::parse(&format!("t{t}:sk-{t}:{class}")).unwrap()
+            })
+            .collect();
+        let depth = 2 + rng.below(3);
+
+        // Random mix over all tenants (index 0 is the open local
+        // tenant), then a flood: depth+2 one-segment jobs on one tenant
+        // guarantees at least two deterministic sheds.
+        let n_jobs = 3 + rng.below(4);
+        let flood_tenant = rng.below(n_tenants + 1);
+        let mut jobs: Vec<(usize, GenerateRequest)> = Vec::new();
+        for i in 0..n_jobs + depth + 2 {
+            let (tenant, s) = if i < n_jobs {
+                (rng.below(n_tenants + 1), 1 + rng.below(3))
+            } else {
+                (flood_tenant, 1)
+            };
+            let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+            let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+            let mut req = GenerateRequest::new(i as u64, prompt);
+            if rng.below(2) == 1 {
+                req = req.generate(cfg.seg);
+            }
+            req.want_logits = true;
+            jobs.push((tenant, req));
+        }
+
+        let run = |threads: usize| -> (Vec<u64>, HashMap<u64, Response>) {
+            let sched: FairScheduler<(GenerateRequest, u64)> =
+                FairScheduler::new(specs.clone(), depth);
+            let mut shed = Vec::new();
+            for (tenant, req) in &jobs {
+                let cost = (req.prompt.len() + req.max_new_tokens) as f64;
+                let id = req.id;
+                if let Err(e) = sched.push(*tenant, cost, (req.clone(), id)) {
+                    assert!(e.to_string().contains("queue full"), "case {case}: {e}");
+                    shed.push(id);
+                }
+            }
+            assert_eq!(sched.stats.shed.get(), shed.len() as u64, "case {case}");
+            sched.close();
+
+            let backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed))
+                .with_threads(threads);
+            let mut e = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
+            let mut done: HashMap<u64, Response> = HashMap::new();
+            e.serve_queue(&sched, |t, ev| match ev {
+                Event::Done { stats } => {
+                    done.insert(*t, *stats);
+                }
+                Event::Error { error } => panic!("case {case}: request {t} failed: {error}"),
+                _ => {}
+            })
+            .unwrap();
+            (shed, done)
+        };
+
+        let (shed_ref, done_ref) = run(1);
+        assert!(!shed_ref.is_empty(), "case {case}: flood must shed");
+        assert_eq!(
+            shed_ref.len() + done_ref.len(),
+            jobs.len(),
+            "case {case}: every job either sheds at push or completes"
+        );
+
+        // Solo oracle: each admitted request alone on a fresh
+        // sequential engine with the same weights.
+        let mut oracle = InferenceEngine::new(
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+            ExecMode::Sequential,
+        );
+        for (_, req) in &jobs {
+            let Some(got) = done_ref.get(&req.id) else { continue };
+            let want = oracle.process(req).unwrap();
+            let ctx = format!("case {case} req {} depth {depth} cfg {cfg:?}", req.id);
+            assert_eq!(got.generated, want.generated, "{ctx}");
+            assert_eq!(got.greedy_tail, want.greedy_tail, "{ctx}");
+            let (a, b) = (got.logits.as_ref().unwrap(), want.logits.as_ref().unwrap());
+            assert_eq!(a.len(), b.len(), "{ctx}");
+            for (s_i, (x, y)) in a.iter().zip(b).enumerate() {
+                let xb: Vec<u32> = x.data().iter().map(|v| v.to_bits()).collect();
+                let yb: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(xb, yb, "segment {s_i}: {ctx}");
+            }
+        }
+
+        // Thread-count invariance: identical shed set, identical
+        // responses, bit for bit.
+        for threads in [2usize, 4] {
+            let (shed, done) = run(threads);
+            assert_eq!(shed, shed_ref, "case {case} threads {threads}: shed set drifted");
+            assert_eq!(done.len(), done_ref.len(), "case {case} threads {threads}");
+            for (id, got) in &done {
+                let want = &done_ref[id];
+                let ctx = format!("case {case} req {id} threads {threads}");
+                assert_eq!(got.generated, want.generated, "{ctx}");
+                assert_eq!(got.greedy_tail, want.greedy_tail, "{ctx}");
+                let (a, b) = (got.logits.as_ref().unwrap(), want.logits.as_ref().unwrap());
+                assert_eq!(a.len(), b.len(), "{ctx}");
+                for (s_i, (x, y)) in a.iter().zip(b).enumerate() {
+                    let xb: Vec<u32> = x.data().iter().map(|v| v.to_bits()).collect();
+                    let yb: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(xb, yb, "segment {s_i}: {ctx}");
+                }
+            }
         }
     }
 }

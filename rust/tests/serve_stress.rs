@@ -101,17 +101,14 @@ fn serve_queue_pooled_concurrent_stress() {
             std::thread::spawn(move || {
                 for i in 0..PER_PRODUCER {
                     let id = (p * PER_PRODUCER + i) as u64;
-                    let req = GenerateRequest::new(id, tokens_for(id, seg));
-                    let mut job = (req, id);
+                    let mut job = (GenerateRequest::new(id, tokens_for(id, seg)), id);
+                    // Bounded blocking push: sleeps on the queue's
+                    // condvar until the drain loop frees a slot (no
+                    // busy-spin); a failed attempt hands the job back.
                     loop {
-                        match queue.push(job) {
+                        match queue.push_timeout(job, Duration::from_millis(50)) {
                             Ok(()) => break,
-                            Err(_) => {
-                                // Queue full: victims of our own load
-                                // test. Back off briefly and retry.
-                                std::thread::sleep(Duration::from_micros(200));
-                                job = (GenerateRequest::new(id, tokens_for(id, seg)), id);
-                            }
+                            Err((j, _)) => job = j,
                         }
                     }
                 }
@@ -227,7 +224,7 @@ fn shard_worker_server(fault: Option<FaultPlan>) -> Server {
         NativeBackend::new(c.clone(), Params::random(&c, SHARD_SEED)),
         ExecMode::Diagonal,
     );
-    Server::start_with(engine, "127.0.0.1:0", 16, ServerOptions { shard_backend: None, fault })
+    Server::start_with(engine, "127.0.0.1:0", 16, ServerOptions { fault, ..Default::default() })
         .unwrap()
 }
 
