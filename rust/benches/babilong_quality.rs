@@ -1,0 +1,14 @@
+//! Long-context quality tier: BABILong QA1/QA2 accuracy vs context
+//! length under the `overflow` policies (off / select / chunked), plus
+//! the policy-off bit-exactness and observability gates.
+//!
+//! The suite body lives in `diagonal_batching::bench::suites` under the
+//! name `babilong_quality`; this binary is the legacy `cargo bench`
+//! entry point and is equivalent to
+//! `diagonal-batching bench --suite babilong_quality`.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    diagonal_batching::bench::run_suite_main("babilong_quality")
+}

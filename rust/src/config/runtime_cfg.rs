@@ -143,6 +143,13 @@ pub struct RuntimeConfig {
     /// at server start). Empty = open gateway, everything admits as the
     /// built-in `local` tenant.
     pub tenants: Vec<String>,
+    /// Memory-overflow policy for long prompts (`--overflow
+    /// off|select|chunked`, [`crate::quality`]): `select` gates
+    /// low-value segments out of the recurrent memory write, `chunked`
+    /// reroutes saturating prompts through a scored segment window.
+    /// `off` (the default) is bit-exact with builds that predate the
+    /// quality tier.
+    pub overflow: crate::quality::OverflowPolicy,
 }
 
 impl Default for RuntimeConfig {
@@ -165,6 +172,7 @@ impl Default for RuntimeConfig {
             layer_split: 1,
             http: String::new(),
             tenants: Vec::new(),
+            overflow: crate::quality::OverflowPolicy::Off,
         }
     }
 }
@@ -226,6 +234,9 @@ impl RuntimeConfig {
             c.tenants =
                 x.as_arr()?.iter().map(|t| Ok(t.as_str()?.to_string())).collect::<Result<_>>()?;
         }
+        if let Some(x) = v.get("overflow") {
+            c.overflow = x.as_str()?.parse()?;
+        }
         Ok(c)
     }
 
@@ -273,6 +284,7 @@ impl RuntimeConfig {
                 "tenants",
                 Value::Arr(self.tenants.iter().map(|t| Value::Str(t.clone())).collect()),
             ),
+            ("overflow", Value::Str(self.overflow.to_string())),
         ])
     }
 }
@@ -399,6 +411,22 @@ mod tests {
         assert!(d.tenants.is_empty());
         // Non-string tenant entries are rejected.
         let v = Value::parse(r#"{"tenants": [3]}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn overflow_roundtrip() {
+        use crate::quality::OverflowPolicy;
+        // Default: policy off — bit-exact with pre-quality builds.
+        assert_eq!(RuntimeConfig::default().overflow, OverflowPolicy::Off);
+        let v = Value::parse(r#"{"overflow": "select"}"#).unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.overflow, OverflowPolicy::Select);
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.overflow, OverflowPolicy::Select);
+        let v = Value::parse(r#"{"overflow": "chunked"}"#).unwrap();
+        assert_eq!(RuntimeConfig::from_json(&v).unwrap().overflow, OverflowPolicy::Chunked);
+        let v = Value::parse(r#"{"overflow": "warp"}"#).unwrap();
         assert!(RuntimeConfig::from_json(&v).is_err());
     }
 

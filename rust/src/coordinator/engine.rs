@@ -28,7 +28,7 @@
 //!   to a solo run (decode is just more segments of the same exact
 //!   recurrence).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,6 +41,7 @@ use crate::coordinator::sampling::{Sampler, SamplingParams};
 use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::metrics::{Counter, Gauge, Histogram, Ratio};
+use crate::quality::{self, MemoryMonitor, OverflowPolicy, SegmentSignals};
 use crate::scheduler::{
     segment_tokens, RunStats, StepBackend, WavefrontSession,
 };
@@ -104,6 +105,11 @@ pub struct GenerateRequest {
     /// failover checkpoints. Off by default: checkpoint capture costs a
     /// state clone per boundary.
     pub checkpoint: bool,
+    /// Memory-overflow handling for long contexts (wire field
+    /// `overflow`, CLI `--overflow`; see the [`quality`](crate::quality)
+    /// module). `Off` (the default) never consults the quality tier for
+    /// control flow, so output is bit-identical to a build without it.
+    pub overflow: OverflowPolicy,
     /// Shared with every [`RequestHandle`] cloned off this request —
     /// cancellation plus the save-on-completion flag
     /// ([`with_save`](Self::with_save) / [`RequestHandle::request_save`]).
@@ -122,6 +128,7 @@ impl GenerateRequest {
             want_logits: false,
             resume: None,
             checkpoint: false,
+            overflow: OverflowPolicy::Off,
             flags: Arc::new(ReqFlags::default()),
         }
     }
@@ -169,6 +176,13 @@ impl GenerateRequest {
     /// serving path (see the field docs).
     pub fn with_checkpoint(mut self) -> Self {
         self.checkpoint = true;
+        self
+    }
+
+    /// Builder: set the memory-overflow policy (`overflow: "select"` /
+    /// `"chunked"` on the wire, `--overflow` on the CLI).
+    pub fn with_overflow(mut self, overflow: OverflowPolicy) -> Self {
+        self.overflow = overflow;
         self
     }
 
@@ -240,7 +254,9 @@ impl RequestHandle {
 pub enum Event {
     /// Segment `index` (prompt or decode) exited the last layer;
     /// `greedy` is its per-position argmax — streamed partial results.
-    SegmentDone { index: usize, greedy: Vec<u32> },
+    /// `saturation` is the request's memory-saturation estimate after
+    /// this segment's write ([`quality::MemoryMonitor`]).
+    SegmentDone { index: usize, greedy: Vec<u32>, saturation: f64 },
     /// One generated token; `pos` counts new tokens from 0.
     Token { pos: usize, token: u32 },
     /// Non-terminal: the post-segment memory state of segment `index`
@@ -283,6 +299,17 @@ pub struct Response {
     /// Prefill segments skipped via a prefix-cache hit or a resumed
     /// conversation (their memory came from a [`MemSnapshot`]).
     pub reused_segments: usize,
+    /// Prompt segments whose recurrent memory write was gated by
+    /// segment selection (`overflow: "select"`; attention still saw
+    /// them).
+    pub segments_skipped: usize,
+    /// The request was re-routed to chunked windowed processing
+    /// (`overflow: "chunked"` with saturation over the threshold).
+    pub overflow_routed: bool,
+    /// Final memory-saturation estimate in `[0, 1]`
+    /// ([`quality::MemoryMonitor`]; 0.0 for full-attention runs, which
+    /// have no recurrent memory).
+    pub saturation: f64,
     /// Set when the conversation was saved at completion: pass as the
     /// wire field `"resume": token` (or [`GenerateRequest::resume_token`])
     /// to continue it with only new tokens. Engine-assigned and unique
@@ -371,6 +398,16 @@ pub struct EngineStats {
     pub shard_handoff_bytes: Counter,
     /// Workers the coordinator currently believes are alive.
     pub shard_workers: Gauge,
+    /// Latest observed memory saturation across served requests, in
+    /// thousandths (gauges are integral; the stats JSON and `/metrics`
+    /// divide back into `[0, 1]`).
+    pub saturation_milli: Gauge,
+    /// Prompt segments whose memory write was gated by segment
+    /// selection (`overflow: "select"`).
+    pub segments_skipped: Counter,
+    /// Requests re-routed to chunked windowed processing
+    /// (`overflow: "chunked"`).
+    pub overflow_routed: Counter,
 }
 
 impl EngineStats {
@@ -450,6 +487,9 @@ impl EngineStats {
             ("shard_handoffs", Value::Num(self.shard_handoffs.get() as f64)),
             ("shard_handoff_bytes", Value::Num(self.shard_handoff_bytes.get() as f64)),
             ("shard_workers", Value::Num(self.shard_workers.get() as f64)),
+            ("saturation", Value::Num(self.saturation_milli.get() as f64 / 1e3)),
+            ("segments_skipped", Value::Num(self.segments_skipped.get() as f64)),
+            ("overflow_routed", Value::Num(self.overflow_routed.get() as f64)),
             // Per-kernel breakdown, process-global since process start
             // (the engine-window deltas above cover "this engine"; the
             // breakdown tells you WHICH kernels are doing the work).
@@ -526,12 +566,14 @@ impl GenDriver {
         &mut self,
         index: usize,
         logits: &Tensor,
+        saturation: f64,
         emit: &mut F,
     ) -> ExitAction {
         let greedy = logits.argmax_rows();
         emit(Event::SegmentDone {
             index,
             greedy: greedy.iter().map(|&t| t as u32).collect(),
+            saturation,
         });
         self.last_greedy = greedy;
         if index + 1 != self.fed {
@@ -588,6 +630,13 @@ struct ServeTicket<T> {
     driver: GenDriver,
     /// Emit boundary [`Event::Snapshot`]s (shard failover checkpoints).
     checkpoint: bool,
+    /// Per-request saturation estimator (always on; observation only).
+    monitor: MemoryMonitor,
+    /// Absolute prompt segment indices whose memory write is gated
+    /// (`overflow: "select"`).
+    gated: HashSet<usize>,
+    /// Admission re-routed this request to a chunked context window.
+    routed: bool,
 }
 
 /// How a request's prefill will run: which segments still need
@@ -1000,6 +1049,9 @@ impl<B: StepBackend> InferenceEngine<B> {
                     generated: Vec::new(),
                     logits: req.want_logits.then(|| vec![out]),
                     reused_segments: 0,
+                    segments_skipped: 0,
+                    overflow_routed: false,
+                    saturation: 0.0,
                     resume_token: None,
                     final_state: None,
                     mode_used: ExecMode::FullAttention,
@@ -1036,14 +1088,45 @@ impl<B: StepBackend> InferenceEngine<B> {
         started: Instant,
     ) -> Result<Response> {
         let cfg = self.backend.config().clone();
+        let chunk_eligible =
+            req.overflow == OverflowPolicy::Chunked && req.resume.is_none();
+        // Chunked routing, predicted: a prompt whose fill alone pins the
+        // eventual saturation over the threshold never starts the full
+        // run.
+        if chunk_eligible
+            && quality::predicted_saturation(&cfg, req.prompt.len()) > quality::CHUNK_THRESHOLD
+        {
+            return self.chunked_rerun(req, emit, started, ExecMode::Diagonal);
+        }
         let plan = self.plan_prefill(req)?;
         let (total_prompt, reused, blocks) = (plan.total_prompt, plan.reused, plan.blocks);
-        let mut session = WavefrontSession::new(cfg, 1);
+        // Segment selection: gate the memory write for low-scoring
+        // prompt segments. Decided up front from token ids alone, so
+        // the decision is deterministic across schedules and threads.
+        let gates: HashSet<usize> = if req.overflow == OverflowPolicy::Select {
+            quality::plan_selection(&plan.segments)
+                .iter()
+                .enumerate()
+                .filter(|(_, &skip)| skip)
+                .map(|(i, _)| reused + i)
+                .collect()
+        } else {
+            HashSet::new()
+        };
+        // Gated runs must never feed the shared prefix store: their
+        // boundary states embody this request's selection policy and
+        // would leak into policy-off requests with the same prefix.
+        let blocks = if gates.is_empty() { blocks } else { None };
+        let mut session = WavefrontSession::new(cfg.clone(), 1);
         match plan.snapshot {
             Some(snap) => {
                 session.submit_stream_resumed(0, snap, plan.segments, req.want_logits)?
             }
             None => session.submit_stream(0, plan.segments, req.want_logits)?,
+        }
+        if !gates.is_empty() {
+            self.stats.segments_skipped.add(gates.len() as u64);
+            session.set_memory_gates(0, gates.clone())?;
         }
         let handle = req.handle();
         // Snapshot capture: prompt-boundary states feed the prefix
@@ -1058,6 +1141,11 @@ impl<B: StepBackend> InferenceEngine<B> {
         }
         if req.max_new_tokens == 0 {
             session.finish_stream(0)?;
+        }
+        let mut monitor = MemoryMonitor::new(&cfg);
+        if reused > 0 {
+            // Resumed / prefix-hit history already occupies memory.
+            monitor.observe(reused * cfg.seg, None);
         }
         let mut driver = GenDriver::new(req, total_prompt);
         let deadline = req.deadline.map(|d| started + d);
@@ -1077,7 +1165,21 @@ impl<B: StepBackend> InferenceEngine<B> {
                 if let Some(snap) = exit.snapshot {
                     self.insert_prefix(&blocks, exit.index, snap);
                 }
-                match driver.on_exit(exit.index, &exit.logits, emit) {
+                let written = if gates.contains(&exit.index) { 0 } else { cfg.seg };
+                monitor.observe(written, Some(&exit.signals));
+                let sat = monitor.saturation();
+                self.stats.saturation_milli.set((sat * 1e3).round() as u64);
+                // Chunked routing, observed: the energy signals crossed
+                // the threshold mid-prefill — abandon the overflowing
+                // run and answer from the best capacity-sized window.
+                if chunk_eligible
+                    && exit.index + 1 < total_prompt
+                    && sat > quality::CHUNK_THRESHOLD
+                {
+                    session.cancel(0);
+                    return self.chunked_rerun(req, emit, started, ExecMode::Diagonal);
+                }
+                match driver.on_exit(exit.index, &exit.logits, sat, emit) {
                     ExitAction::Wait => {}
                     ExitAction::Feed(seg) => session.append_segment(0, seg)?,
                     ExitAction::Finish => session.finish_stream(0)?,
@@ -1099,6 +1201,9 @@ impl<B: StepBackend> InferenceEngine<B> {
                     generated: driver.generated,
                     logits: req.want_logits.then_some(out.logits),
                     reused_segments: reused,
+                    segments_skipped: gates.len(),
+                    overflow_routed: false,
+                    saturation: monitor.saturation(),
                     resume_token,
                     final_state,
                     mode_used: ExecMode::Diagonal,
@@ -1126,9 +1231,33 @@ impl<B: StepBackend> InferenceEngine<B> {
         let cfg = self.backend.config().clone();
         let l_total = cfg.n_layers;
         let calls0 = self.backend.step_calls();
+        let chunk_eligible =
+            req.overflow == OverflowPolicy::Chunked && req.resume.is_none();
+        if chunk_eligible
+            && quality::predicted_saturation(&cfg, req.prompt.len()) > quality::CHUNK_THRESHOLD
+        {
+            return self.chunked_rerun(req, emit, started, ExecMode::Sequential);
+        }
         let plan = self.plan_prefill(req)?;
         let (total_prompt, reused, blocks) = (plan.total_prompt, plan.reused, plan.blocks);
         let mut segments = plan.segments;
+        // Segment selection: same decision rule and gate set as the
+        // wavefront path — the skipped writeback below is the
+        // sequential mirror of the session's gate save/restore.
+        let gates: HashSet<usize> = if req.overflow == OverflowPolicy::Select {
+            quality::plan_selection(&segments)
+                .iter()
+                .enumerate()
+                .filter(|(_, &skip)| skip)
+                .map(|(i, _)| reused + i)
+                .collect()
+        } else {
+            HashSet::new()
+        };
+        if !gates.is_empty() {
+            self.stats.segments_skipped.add(gates.len() as u64);
+        }
+        let blocks = if gates.is_empty() { blocks } else { None };
         let mut driver = GenDriver::new(req, total_prompt);
         let handle = req.handle();
         let deadline = req.deadline.map(|d| started + d);
@@ -1152,6 +1281,16 @@ impl<B: StepBackend> InferenceEngine<B> {
             .ok()
         };
 
+        let mut monitor = MemoryMonitor::new(&cfg);
+        if reused > 0 {
+            monitor.observe(reused * cfg.seg, None);
+        }
+        // Per-layer `‖A‖²`, updated only on real writebacks — the same
+        // energy accounting the wavefront session keeps per slot.
+        let mut layer_energy: Vec<f64> = a
+            .iter()
+            .map(|t| t.data().iter().map(|&v| (v as f64) * (v as f64)).sum())
+            .collect();
         let mut logits_acc = Vec::new();
         let mut idx = 0;
         while idx < segments.len() {
@@ -1163,15 +1302,23 @@ impl<B: StepBackend> InferenceEngine<B> {
                 self.stats.cancelled.inc();
                 return Err(Error::Request("deadline exceeded".into()));
             }
+            let abs = reused + idx;
+            let gated = gates.contains(&abs);
             let mut x = self.backend.embed(&segments[idx])?;
+            let mut update_energy = 0.0f64;
             for l in 0..l_total {
                 let (y, a2, z2) = self.backend.single_step(l, &x, &a[l], &z[l])?;
                 x = y;
-                a[l] = a2;
-                z[l] = z2;
+                if !gated {
+                    let e: f64 =
+                        a2.data().iter().map(|&v| (v as f64) * (v as f64)).sum();
+                    update_energy += (e - layer_energy[l]).abs();
+                    layer_energy[l] = e;
+                    a[l] = a2;
+                    z[l] = z2;
+                }
             }
             let logits = self.backend.lm_head(&x)?;
-            let abs = reused + idx;
             // Prompt-boundary snapshot into the prefix store (same
             // policy as the wavefront path's targeted captures).
             if self.cache.is_some() && blocks.is_some() && abs < total_prompt {
@@ -1179,7 +1326,17 @@ impl<B: StepBackend> InferenceEngine<B> {
                     self.insert_prefix(&blocks, abs, snap);
                 }
             }
-            match driver.on_exit(abs, &logits, emit) {
+            let state_energy: f64 = layer_energy.iter().sum();
+            monitor.observe(
+                if gated { 0 } else { cfg.seg },
+                Some(&SegmentSignals { update_energy, state_energy }),
+            );
+            let sat = monitor.saturation();
+            self.stats.saturation_milli.set((sat * 1e3).round() as u64);
+            if chunk_eligible && abs + 1 < total_prompt && sat > quality::CHUNK_THRESHOLD {
+                return self.chunked_rerun(req, emit, started, ExecMode::Sequential);
+            }
+            match driver.on_exit(abs, &logits, sat, emit) {
                 ExitAction::Wait | ExitAction::Finish => {}
                 ExitAction::Feed(seg) => segments.push(seg),
             }
@@ -1213,12 +1370,52 @@ impl<B: StepBackend> InferenceEngine<B> {
             generated: driver.generated,
             logits: req.want_logits.then_some(logits_acc),
             reused_segments: reused,
+            segments_skipped: gates.len(),
+            overflow_routed: false,
+            saturation: monitor.saturation(),
             resume_token,
             final_state,
             mode_used: ExecMode::Sequential,
             stats,
             latency: started.elapsed(),
         })
+    }
+
+    /// Chunked fallback (`overflow: "chunked"`): re-run the request over
+    /// the best capacity-sized window of its context plus the final
+    /// (query-carrying) segment, instead of letting the full prompt
+    /// overflow the associative memory. The sub-run executes with the
+    /// policy off — no recursive re-routing — and its event stream
+    /// restarts over the reduced context (segment indices count from 0
+    /// within the window).
+    fn chunked_rerun<F: FnMut(Event)>(
+        &mut self,
+        req: &GenerateRequest,
+        emit: &mut F,
+        started: Instant,
+        mode: ExecMode,
+    ) -> Result<Response> {
+        let (seg, window_segs) = {
+            let cfg = self.backend.config();
+            (cfg.seg, (cfg.phi_dim / cfg.seg).max(1))
+        };
+        let blocks = quality::segment_tokens(&req.prompt, seg);
+        let (lo, hi) = quality::choose_window(&blocks, window_segs);
+        let mut prompt: Vec<u32> =
+            blocks[lo..hi].iter().flat_map(|b| b.iter().copied()).collect();
+        // The query segment is excluded from the window search and
+        // always rides along (validate() guarantees a nonempty prompt).
+        prompt.extend_from_slice(blocks.last().expect("validated: nonempty prompt"));
+        let mut sub = req.clone();
+        sub.prompt = prompt;
+        sub.overflow = OverflowPolicy::Off;
+        self.stats.overflow_routed.inc();
+        let mut resp = match mode {
+            ExecMode::Sequential => self.run_sequential_streaming(&sub, emit, started)?,
+            _ => self.run_diagonal_streaming(&sub, emit, started)?,
+        };
+        resp.overflow_routed = true;
+        Ok(resp)
     }
 
     /// Continuous-batching drain loop (the serving path).
@@ -1295,6 +1492,7 @@ impl<B: StepBackend> InferenceEngine<B> {
         F: FnMut(&T, Event),
     {
         let mut session = WavefrontSession::new(self.backend.config().clone(), self.lanes);
+        let seg_len = self.backend.config().seg;
         let mut tickets: HashMap<u64, ServeTicket<T>> = HashMap::new();
         // Session keys are engine-local: wire ids may collide across
         // connections, in-flight keys must not.
@@ -1425,8 +1623,13 @@ impl<B: StepBackend> InferenceEngine<B> {
                     }
                     self.insert_prefix(&t.blocks, exit.index, snap);
                 }
+                let written = if t.gated.contains(&exit.index) { 0 } else { seg_len };
+                t.monitor.observe(written, Some(&exit.signals));
+                let sat = t.monitor.saturation();
+                self.stats.saturation_milli.set((sat * 1e3).round() as u64);
                 let (driver, ticket) = (&mut t.driver, &t.ticket);
-                let action = driver.on_exit(exit.index, &exit.logits, &mut |ev| emit(ticket, ev));
+                let action =
+                    driver.on_exit(exit.index, &exit.logits, sat, &mut |ev| emit(ticket, ev));
                 let hand_off = match action {
                     ExitAction::Wait => Ok(()),
                     ExitAction::Feed(seg) => {
@@ -1472,6 +1675,9 @@ impl<B: StepBackend> InferenceEngine<B> {
                     generated: t.driver.generated,
                     logits: t.want_logits.then_some(out.logits),
                     reused_segments: t.reused,
+                    segments_skipped: t.gated.len(),
+                    overflow_routed: t.routed,
+                    saturation: t.monitor.saturation(),
                     resume_token,
                     final_state,
                     mode_used: ExecMode::Diagonal,
@@ -1502,6 +1708,34 @@ impl<B: StepBackend> InferenceEngine<B> {
             emit(&ticket, Event::Error { error: e });
             return false;
         }
+        // Chunked routing happens at admission on the serving path — a
+        // mid-flight re-route would throw away packed wavefront work
+        // the single-shot path can afford to waste. The fill predictor
+        // has no energy signal, so only clearly overflowing prompts
+        // (over 1.5x capacity) are rewritten to their best window.
+        let mut req = req;
+        let mut routed = false;
+        if req.overflow == OverflowPolicy::Chunked
+            && req.resume.is_none()
+            && quality::predicted_saturation(self.backend.config(), req.prompt.len())
+                > quality::CHUNK_THRESHOLD
+        {
+            let (seg, window_segs) = {
+                let cfg = self.backend.config();
+                (cfg.seg, (cfg.phi_dim / cfg.seg).max(1))
+            };
+            let chunks = quality::segment_tokens(&req.prompt, seg);
+            let (lo, hi) = quality::choose_window(&chunks, window_segs);
+            let mut prompt: Vec<u32> =
+                chunks[lo..hi].iter().flat_map(|b| b.iter().copied()).collect();
+            prompt.extend_from_slice(chunks.last().expect("validated: nonempty prompt"));
+            req.prompt = prompt;
+            // The window is already capacity-sized: clear the policy so
+            // no downstream path re-routes the rewritten prompt.
+            req.overflow = OverflowPolicy::Off;
+            routed = true;
+            self.stats.overflow_routed.inc();
+        }
         let n_segments = req.prompt.len().div_ceil(self.backend.config().seg);
         // Generation always packs into the wavefront (decode is
         // diagonal-native; Auto's prefill-length heuristic does not
@@ -1522,6 +1756,21 @@ impl<B: StepBackend> InferenceEngine<B> {
                         return false;
                     }
                 };
+                // Selection gates, decided before submission from token
+                // ids alone (deterministic across schedules/threads).
+                let gates: HashSet<usize> = if req.overflow == OverflowPolicy::Select {
+                    quality::plan_selection(&plan.segments)
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &skip)| skip)
+                        .map(|(i, _)| plan.reused + i)
+                        .collect()
+                } else {
+                    HashSet::new()
+                };
+                // Gated boundary states never enter the shared prefix
+                // store (they embody this request's policy).
+                let blocks = if gates.is_empty() { plan.blocks } else { None };
                 let key = *next_key;
                 *next_key += 1;
                 let handle = req.handle();
@@ -1533,6 +1782,10 @@ impl<B: StepBackend> InferenceEngine<B> {
                 };
                 match submitted {
                     Ok(()) => {
+                        if !gates.is_empty() {
+                            self.stats.segments_skipped.add(gates.len() as u64);
+                            let _ = session.set_memory_gates(key, gates.clone());
+                        }
                         // Snapshot capture (infallible right after a
                         // successful submit): prompt-boundary states
                         // feed the prefix store, the final state feeds
@@ -1541,7 +1794,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                         if handle.save_requested() || self.cache.is_some() {
                             let _ = session.capture_final(key);
                         }
-                        if self.cache.is_some() && plan.blocks.is_some() {
+                        if self.cache.is_some() && blocks.is_some() {
                             for idx in plan.reused..plan.total_prompt {
                                 let _ = session.capture_after(key, idx);
                             }
@@ -1564,6 +1817,12 @@ impl<B: StepBackend> InferenceEngine<B> {
                             let _ = session.finish_stream(key);
                         }
                         let pulled = Instant::now();
+                        let mut monitor = MemoryMonitor::new(self.backend.config());
+                        if plan.reused > 0 {
+                            // History reused from a prefix hit / resume
+                            // already occupies memory.
+                            monitor.observe(plan.reused * self.backend.config().seg, None);
+                        }
                         tickets.insert(
                             key,
                             ServeTicket {
@@ -1573,12 +1832,15 @@ impl<B: StepBackend> InferenceEngine<B> {
                                 wire_id: req.id,
                                 prompt_tokens: req.prompt.len(),
                                 want_logits: req.want_logits,
-                                blocks: plan.blocks,
+                                blocks,
                                 total_prompt: plan.total_prompt,
                                 reused: plan.reused,
                                 pulled,
                                 ticket,
                                 checkpoint: req.checkpoint,
+                                monitor,
+                                gated: gates,
+                                routed,
                             },
                         );
                         true
@@ -2139,5 +2401,137 @@ mod tests {
         assert_eq!(e.stats.cache_evictions.get(), 1);
         assert!(e.process(&GenerateRequest::new(3, toks(8)).resume_token(t1)).is_err());
         assert!(e.process(&GenerateRequest::new(4, toks(8)).resume_token(t2)).is_ok());
+    }
+
+    #[test]
+    fn saturation_is_monitored_and_reported() {
+        let mut e = engine(ExecMode::Diagonal);
+        let resp = e.process(&GenerateRequest::new(1, toks(8 * 4))).unwrap();
+        assert!(resp.saturation > 0.0 && resp.saturation <= 1.0, "{}", resp.saturation);
+        assert_eq!(resp.segments_skipped, 0);
+        assert!(!resp.overflow_routed);
+        assert!(e.stats.saturation_milli.get() > 0);
+        let js = e.stats.to_json().to_json();
+        assert!(js.contains("\"saturation\":"), "{js}");
+        assert!(js.contains("\"segments_skipped\":0"), "{js}");
+        assert!(js.contains("\"overflow_routed\":0"), "{js}");
+    }
+
+    #[test]
+    fn segment_done_events_carry_saturation() {
+        let mut e = engine(ExecMode::Diagonal);
+        let mut sats = Vec::new();
+        e.generate(&GenerateRequest::new(2, toks(8 * 3)), |ev| {
+            if let Event::SegmentDone { saturation, .. } = ev {
+                sats.push(saturation);
+            }
+        })
+        .unwrap();
+        assert_eq!(sats.len(), 3);
+        assert!(sats.iter().all(|&s| s > 0.0 && s <= 1.0), "{sats:?}");
+    }
+
+    /// A prompt whose middle is repeated filler and whose final (query)
+    /// segment repeats the head: selection must gate filler only.
+    fn selective_prompt() -> Vec<u32> {
+        let head = toks(8);
+        let mut prompt = head.clone();
+        for _ in 0..3 {
+            prompt.extend(std::iter::repeat(60u32).take(8));
+        }
+        prompt.extend(head);
+        prompt
+    }
+
+    #[test]
+    fn selection_gates_memory_and_reports_counts() {
+        let mut e = engine(ExecMode::Diagonal);
+        let req = GenerateRequest::new(1, selective_prompt())
+            .with_overflow(OverflowPolicy::Select);
+        let resp = e.process(&req).unwrap();
+        assert!(resp.segments_skipped > 0, "repeated filler must be gated");
+        assert_eq!(e.stats.segments_skipped.get(), resp.segments_skipped as u64);
+
+        let mut off = engine(ExecMode::Diagonal);
+        let resp_off = off.process(&GenerateRequest::new(1, selective_prompt())).unwrap();
+        assert_eq!(resp_off.segments_skipped, 0);
+        assert_eq!(off.stats.segments_skipped.get(), 0);
+    }
+
+    #[test]
+    fn selection_is_schedule_invariant() {
+        // The gated recurrence is one definition with two
+        // implementations: the session's save/restore around the
+        // grouped step, and the sequential loop's skipped writeback.
+        // Same gates, bit-identical logits.
+        let mk = |mode| {
+            let mut req = GenerateRequest::new(5, selective_prompt())
+                .with_overflow(OverflowPolicy::Select)
+                .with_mode(mode);
+            req.want_logits = true;
+            req
+        };
+        let a = engine(ExecMode::Auto).process(&mk(ExecMode::Diagonal)).unwrap();
+        let b = engine(ExecMode::Auto).process(&mk(ExecMode::Sequential)).unwrap();
+        assert!(a.segments_skipped > 0);
+        assert_eq!(a.segments_skipped, b.segments_skipped);
+        assert_eq!(bits(&a.logits.unwrap()), bits(&b.logits.unwrap()));
+    }
+
+    #[test]
+    fn chunked_policy_reroutes_overflowing_prompts() {
+        // phi_dim = 48 in the test config: a 64-segment prompt (512
+        // tokens) is >> 1.5x capacity, so the fill predictor alone
+        // routes it to a capacity-sized window (6 segments + query).
+        let mut e = engine(ExecMode::Diagonal);
+        let req =
+            GenerateRequest::new(6, toks(8 * 64)).with_overflow(OverflowPolicy::Chunked);
+        let resp = e.process(&req).unwrap();
+        assert!(resp.overflow_routed);
+        assert_eq!(e.stats.overflow_routed.get(), 1);
+        assert!(
+            resp.stats.segments < 64,
+            "routed run must execute a reduced window, got {}",
+            resp.stats.segments
+        );
+
+        let full = engine(ExecMode::Diagonal)
+            .process(&GenerateRequest::new(6, toks(8 * 64)))
+            .unwrap();
+        assert!(!full.overflow_routed);
+        assert_eq!(full.stats.segments, 64);
+    }
+
+    #[test]
+    fn serve_queue_applies_overflow_policies() {
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(8);
+        queue
+            .push((
+                GenerateRequest::new(0, selective_prompt())
+                    .with_overflow(OverflowPolicy::Select),
+                0,
+            ))
+            .unwrap();
+        queue
+            .push((
+                GenerateRequest::new(1, toks(8 * 64)).with_overflow(OverflowPolicy::Chunked),
+                1,
+            ))
+            .unwrap();
+        queue.close();
+        let mut e = engine(ExecMode::Diagonal).with_lanes(2);
+        let mut got: Vec<(u64, Result<Response>)> = Vec::new();
+        e.serve_queue(&queue, |t, ev| collect_terminal(&mut got, *t, ev)).unwrap();
+        got.sort_by_key(|(t, _)| *t);
+        let select = got[0].1.as_ref().unwrap();
+        assert!(select.segments_skipped > 0);
+        assert!(!select.overflow_routed);
+        let chunked = got[1].1.as_ref().unwrap();
+        assert!(chunked.overflow_routed);
+        assert!(chunked.saturation > 0.0);
+        assert_eq!(chunked.stats.segments, 7, "6-segment window + query segment");
+        assert!(e.stats.segments_skipped.get() > 0);
+        assert_eq!(e.stats.overflow_routed.get(), 1);
+        assert!(e.stats.saturation_milli.get() > 0);
     }
 }

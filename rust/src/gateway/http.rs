@@ -32,7 +32,7 @@ use std::sync::{mpsc, Arc};
 
 use crate::coordinator::EngineStats;
 use crate::error::{Error, Result};
-use crate::gateway::metrics::render_prometheus;
+use crate::gateway::metrics::{append_tenant_series, render_prometheus};
 use crate::gateway::FairScheduler;
 use crate::json::Value;
 use crate::server::{
@@ -207,7 +207,8 @@ pub(crate) fn handle_http_conn(stream: TcpStream, sh: &HttpShared) -> Result<()>
             write_response(&mut writer, 200, "text/plain; charset=utf-8", "ok\n", &[])
         }
         ("GET", "/metrics") => {
-            let body = render_prometheus(&sh.stats, Some(&sh.sched.stats));
+            let mut body = render_prometheus(&sh.stats, Some(&sh.sched.stats));
+            append_tenant_series(&sh.sched, &mut body);
             write_response(
                 &mut writer,
                 200,
@@ -313,6 +314,7 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
     // queue — backpressure turns into a clean 429, not producer spin.
     if !sh.sched.try_acquire(tenant) {
         sh.sched.stats.rate_limited.inc();
+        sh.sched.tenant_stats[tenant].rate_limited.inc();
         return write_error(
             w,
             429,
@@ -357,13 +359,14 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
     // budget, in tokens. A 1M-token burst debits its tenant
     // accordingly; small interactive requests stay cheap.
     let cost = (greq.prompt.len() + greq.max_new_tokens) as f64;
+    let budget = greq.max_new_tokens;
     let (tx, rx) = mpsc::sync_channel(EVENT_BUFFER);
     // Guard from admission to terminal-frame flush: server shutdown
     // waits on it so an admitted SSE stream always gets its terminal
     // frame onto the wire.
     let _stream_guard = sh.streams.enter();
-    if let Err(e) = sh.sched.push(tenant, cost, (greq, ConnTicket { tx, handle: handle.clone() }))
-    {
+    let ticket = ConnTicket { tx, handle: handle.clone(), tenant, budget };
+    if let Err(e) = sh.sched.push(tenant, cost, (greq, ticket)) {
         sh.registry.lock().unwrap().remove(&wire_id);
         // Queue-full load shed (or closed during shutdown): 429 with
         // the standard error object, mirroring the TCP queue-full
@@ -371,6 +374,7 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
         return write_error(w, 429, Some(wire_id), &e, &[("Retry-After", "1")]);
     }
     sh.sched.stats.sse_streams.inc();
+    sh.sched.tenant_stats[tenant].sse_streams.inc();
 
     // SSE header; frames follow unframed (no Content-Length, the
     // stream ends when the socket closes after the terminal frame).

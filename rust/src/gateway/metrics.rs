@@ -13,7 +13,7 @@
 use std::fmt::Write as _;
 
 use crate::coordinator::EngineStats;
-use crate::gateway::GatewayStats;
+use crate::gateway::{FairScheduler, GatewayStats, TenantCounters};
 use crate::json::Value;
 
 /// Engine fields that only ever increase (exported as counters with
@@ -43,6 +43,8 @@ const MONOTONE: &[&str] = &[
     "shard_failovers",
     "shard_handoffs",
     "shard_handoff_bytes",
+    "segments_skipped",
+    "overflow_routed",
 ];
 
 fn fmt_num(x: f64) -> String {
@@ -169,6 +171,33 @@ pub fn render_prometheus(engine: &EngineStats, gateway: Option<&GatewayStats>) -
     out
 }
 
+/// Append the per-tenant `tenant`-labelled admission series
+/// ([`TenantCounters`]) to a rendered `/metrics` payload. The
+/// unlabelled aggregates written by [`render_prometheus`] stay
+/// byte-identical (existing scrape contracts and the CI smoke grep
+/// match on them); the labelled samples follow as a trailing block and
+/// always sum to those aggregates (both are incremented at the same
+/// admission sites).
+pub fn append_tenant_series<J>(sched: &FairScheduler<J>, out: &mut String) {
+    type Get = fn(&TenantCounters) -> u64;
+    let stats: [(&str, Get); 4] = [
+        ("admitted", |c| c.admitted.get()),
+        ("shed", |c| c.shed.get()),
+        ("rate_limited", |c| c.rate_limited.get()),
+        ("sse_streams", |c| c.sse_streams.get()),
+    ];
+    for (stat, get) in stats {
+        for t in 0..sched.n_tenants() {
+            let _ = writeln!(
+                out,
+                "pallas_gateway_{stat}_total{{tenant=\"{}\"}} {}",
+                escape_label(sched.tenant_name(t)),
+                get(&sched.tenant_stats[t])
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +226,11 @@ mod tests {
         assert!(out.contains("# TYPE pallas_cache_bytes gauge"));
         assert!(out.contains("pallas_occupancy 0.75"));
         assert!(out.contains("pallas_kernel_policy{policy="));
+        // Quality-tier fields: skip/route counts are counters, the
+        // calibrated saturation level is a gauge.
+        assert!(out.contains("# TYPE pallas_segments_skipped_total counter"));
+        assert!(out.contains("# TYPE pallas_overflow_routed_total counter"));
+        assert!(out.contains("# TYPE pallas_saturation gauge"));
     }
 
     #[test]
@@ -210,6 +244,24 @@ mod tests {
         assert!(out.contains("pallas_gateway_rate_limited_total 1"));
         assert!(out.contains("pallas_gateway_shed_total 0"));
         assert!(out.contains("# TYPE pallas_gateway_admitted_total counter"));
+    }
+
+    #[test]
+    fn tenant_labelled_series_follow_the_aggregates() {
+        use crate::gateway::TenantSpec;
+        let s: FairScheduler<u32> =
+            FairScheduler::new(vec![TenantSpec::parse("acme:sk-a:standard").unwrap()], 4);
+        s.push(1, 1.0, 0).unwrap();
+        let stats = EngineStats::default();
+        let mut out = render_prometheus(&stats, Some(&s.stats));
+        let agg = "pallas_gateway_admitted_total 1";
+        assert!(out.contains(agg), "{out}");
+        append_tenant_series(&s, &mut out);
+        assert!(out.contains("pallas_gateway_admitted_total{tenant=\"acme\"} 1"), "{out}");
+        assert!(out.contains("pallas_gateway_admitted_total{tenant=\"local\"} 0"), "{out}");
+        assert!(out.contains("pallas_gateway_sse_streams_total{tenant=\"acme\"} 0"));
+        // The aggregate line is untouched and precedes the labels.
+        assert!(out.find(agg).unwrap() < out.find("tenant=\"acme\"").unwrap());
     }
 
     #[test]

@@ -37,4 +37,6 @@ pub mod sched;
 
 pub use http::serve_metrics;
 pub use metrics::render_prometheus;
-pub use sched::{FairScheduler, GatewayStats, PriorityClass, TenantSpec, LOCAL_TENANT};
+pub use sched::{
+    FairScheduler, GatewayStats, PriorityClass, TenantCounters, TenantSpec, LOCAL_TENANT,
+};

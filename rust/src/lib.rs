@@ -141,6 +141,23 @@
 //! stall and connection-drop faults). See ARCHITECTURE.md "Sharded
 //! serving".
 //!
+//! ## Quality tier
+//!
+//! ARMT memory is constant-size, so very long contexts *overflow* it:
+//! past a few multiples of `phi_dim` written tokens, new associations
+//! interfere with old ones and recall decays even though throughput is
+//! fine. The [`quality`] module guards this: a per-request
+//! `MemoryMonitor` computes a calibrated `saturation ∈ [0, 1]` at every
+//! segment boundary (surfaced in `segment`/`done` frames, `stats`, and
+//! `/metrics`), `overflow: "select"` scores prompt segments
+//! (query-similarity + novelty) and skips the memory *write* for low
+//! scorers (attention still sees every token), and `overflow:
+//! "chunked"` re-routes saturating requests to the best
+//! capacity-sized window of the context. With the policy off, behavior
+//! is bit-identical to a monitor-free build. The `babilong_quality`
+//! bench suite pins accuracy-vs-context curves with the policy on and
+//! off. See ARCHITECTURE.md "Quality tier".
+//!
 //! ## Benchmarks
 //!
 //! Every paper figure/table reproduction is a registered suite in
@@ -160,6 +177,7 @@ pub mod json;
 pub mod bench;
 pub mod metrics;
 pub mod model;
+pub mod quality;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

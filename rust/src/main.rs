@@ -13,6 +13,7 @@
 //!                            [--synthetic SEED]     # coordinator over workers
 //! diagonal-batching generate [--tokens N] [--max-new-tokens M] [--temperature T]
 //!                            [--top-k K] [--seed S] [--connect HOST:PORT]
+//!                            [--overflow off|select|chunked]  # quality tier
 //!                            [--cancel-after K]     # stream tokens to stdout
 //!                            [--save true | --resume TOKEN]       # with --connect
 //!                            [--save-file P | --resume-file P]    # local engine
@@ -24,6 +25,7 @@
 //!                            [--max-regression 1.15] [--fast true] [--list true]
 //! diagonal-batching tables   [--device a100|h100]   # regenerate paper tables
 //! diagonal-batching babilong [--task qa1|qa2] [--len N] [--episodes N]
+//!                            [--overflow off|select|chunked]
 //! diagonal-batching info     [--model tiny]         # artifact inventory
 //! ```
 //!
@@ -132,6 +134,9 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
         cfg.tenants =
             t.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
     }
+    if let Some(o) = flags.get("overflow") {
+        cfg.overflow = o.parse()?;
+    }
     // One global switch: the tensor entry points dispatch on it and the
     // config default already honors PALLAS_KERNEL, so an explicit flag
     // or config file wins over the env var here.
@@ -180,6 +185,13 @@ COMMON FLAGS:
                     (default, bit-identical) or the reference loops
   --precision P     f32 | f16 | bf16 | int8 — native-backend weight
                     storage (sub-f32 trades bounded error for speed)
+  --overflow P      off | select | chunked — long-context memory-overflow
+                    policy applied to the requests this CLI builds
+                    (generate, babilong): select gates low-value segments
+                    out of the recurrent memory write, chunked reroutes
+                    saturating prompts through a scored segment window;
+                    servers take the policy per request as the wire
+                    field \"overflow\" instead
   --config PATH     RuntimeConfig JSON
 
 SUBCOMMANDS:
@@ -498,7 +510,10 @@ fn cmd_generate(
     let prompt: Vec<u32> = (0..n_tokens as u32).map(|i| (i * 31 + 7) % vocab).collect();
     let mut engine =
         InferenceEngine::new(backend, cfg.mode).with_cache_bytes(cfg.cache_bytes);
-    let mut req = GenerateRequest::new(1, prompt).generate(max_new).with_sampling(sampling);
+    let mut req = GenerateRequest::new(1, prompt)
+        .generate(max_new)
+        .with_sampling(sampling)
+        .with_overflow(cfg.overflow);
     // Conversation suspend/resume to disk: --resume-file seeds the
     // recurrence from a saved snapshot (the prompt is then only the NEW
     // tokens), --save-file writes the final state back out.
@@ -518,11 +533,15 @@ fn cmd_generate(
         Event::Token { token, .. } => produced.push(token),
         Event::Done { stats } => {
             eprintln!(
-                "done: {} segments ({} reused), {} launches, mean group {:.2}, {:?}",
+                "done: {} segments ({} reused, {} skipped), {} launches, mean group {:.2}, \
+                 saturation {:.2}{}, {:?}",
                 stats.stats.segments,
                 stats.reused_segments,
+                stats.segments_skipped,
                 stats.stats.launches,
                 stats.stats.mean_group(),
+                stats.saturation,
+                if stats.overflow_routed { ", overflow-routed" } else { "" },
                 stats.latency
             );
             final_state = stats.final_state.clone();
@@ -575,6 +594,11 @@ fn generate_remote(
     }
     if let Some(token) = flags.get("resume") {
         fields.push(("resume", Value::Num(token.parse::<u64>()? as f64)));
+    }
+    // Quality tier: ship the overflow policy as the wire field; the
+    // server validates the value at parse time.
+    if let Some(policy) = flags.get("overflow") {
+        fields.push(("overflow", Value::Str(policy.clone())));
     }
 
     let mut client = Client::connect(addr)?;
@@ -864,7 +888,8 @@ fn cmd_babilong(
     let mut preds = Vec::new();
     let t0 = std::time::Instant::now();
     for (i, e) in eps.iter().enumerate() {
-        let mut req = GenerateRequest::new(i as u64, e.tokens.clone());
+        let mut req =
+            GenerateRequest::new(i as u64, e.tokens.clone()).with_overflow(cfg.overflow);
         req.want_logits = true;
         let resp = engine.process(&req)?;
         // the answer is predicted at the query position of the last segment
@@ -875,8 +900,9 @@ fn cmd_babilong(
     }
     let acc = babilong::accuracy(&eps, &preds);
     println!(
-        "{task} len={len} episodes={episodes} mode={} acc={:.1}% total={:?} trained={}",
+        "{task} len={len} episodes={episodes} mode={} overflow={} acc={:.1}% total={:?} trained={}",
         cfg.mode,
+        cfg.overflow,
         acc * 100.0,
         t0.elapsed(),
         entry.trained

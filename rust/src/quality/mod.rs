@@ -1,0 +1,387 @@
+//! Quality tier: memory-overflow detection, segment selection and chunked
+//! fallback for long contexts.
+//!
+//! ARMT's associative memory is constant-size (`phi_dim` feature slots per
+//! layer, see `simulator::memory::armt_state_bytes`), so past a few
+//! multiples of `phi_dim` written tokens new associations interfere with
+//! old ones and recall degrades — the overflow regime of Ben-Kish et al.
+//! This module supplies the three production countermeasures:
+//!
+//! * [`MemoryMonitor`] — cheap online saturation signals at every segment
+//!   boundary: token fill vs the capacity model, plus the update/state
+//!   energy ratio of the associative matrices (fresh memory absorbs
+//!   updates; saturated memory barely moves relative to its own norm).
+//!   The calibrated `saturation ∈ [0, 1]` is surfaced in `SegmentDone`
+//!   events, the done frame, `EngineStats` and `/metrics`.
+//! * segment **selection** ([`plan_selection`]) — when a request opts in
+//!   (`overflow: "select"`), score prompt segments by query similarity and
+//!   novelty and *skip the recurrent memory write* for low scorers.
+//!   Attention still sees every segment; only the `(A, z)` update is
+//!   gated, so the schedule and all other arithmetic are untouched.
+//! * **chunked fallback** ([`choose_window`]) — when saturation crosses
+//!   [`CHUNK_THRESHOLD`] (`overflow: "chunked"`), re-route the request to
+//!   a capacity-sized window of the context chosen by query similarity,
+//!   answering from the best window instead of an overflowed memory.
+//!
+//! Everything here is pure, integer/float arithmetic over token ids and
+//! scalar energies — deterministic across thread counts by construction.
+//! With the policy off the engine never consults this module for control
+//! flow, preserving bit-exactness (monitoring is observation-only).
+
+use std::collections::HashSet;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+
+/// Per-request overflow handling policy (wire field `overflow`, CLI
+/// `--overflow`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OverflowPolicy {
+    /// No intervention: memory is written for every segment (bit-exact
+    /// with all pre-quality-tier behavior). Saturation is still measured.
+    #[default]
+    Off,
+    /// Score prompt segments and skip the memory write for low scorers.
+    Select,
+    /// Route to chunked processing when (predicted or observed)
+    /// saturation crosses [`CHUNK_THRESHOLD`].
+    Chunked,
+}
+
+impl OverflowPolicy {
+    /// Parse the wire/CLI spelling. Empty string means `Off`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "" | "off" => Ok(OverflowPolicy::Off),
+            "select" => Ok(OverflowPolicy::Select),
+            "chunked" => Ok(OverflowPolicy::Chunked),
+            other => Err(Error::Config(format!(
+                "unknown overflow policy {other:?} (expected off|select|chunked)"
+            ))),
+        }
+    }
+
+    /// The wire/CLI spelling (inverse of [`OverflowPolicy::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OverflowPolicy::Off => "off",
+            OverflowPolicy::Select => "select",
+            OverflowPolicy::Chunked => "chunked",
+        }
+    }
+}
+
+impl std::str::FromStr for OverflowPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        OverflowPolicy::parse(s)
+    }
+}
+
+impl std::fmt::Display for OverflowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Observation-only energy signals for one exited segment, computed on
+/// the engine thread in a fixed slot order (deterministic across worker
+/// thread counts).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SegmentSignals {
+    /// Sum over the request's live cells of `|‖A‖² after − ‖A‖² before|`
+    /// accumulated since the previous segment exit: how much the
+    /// associative matrices actually moved.
+    pub update_energy: f64,
+    /// Sum of `‖A‖²` over the request's live cells after the exit step:
+    /// how much is already stored.
+    pub state_energy: f64,
+}
+
+/// Saturation above which `overflow: "chunked"` re-routes a request to
+/// windowed processing.
+pub const CHUNK_THRESHOLD: f64 = 0.6;
+
+/// Per-request saturation estimator, fed once per exited segment.
+///
+/// Two blended signals, each mapped into `[0, 1)`:
+///
+/// * **fill** — tokens written into memory vs the capacity model.  An
+///   ARMT layer stores at most ~`phi_dim` roughly-orthogonal
+///   associations (the DPFP feature dimension — the same quantity that
+///   sizes `simulator::memory::armt_state_bytes`), so capacity is
+///   `phi_dim` tokens and `fill/(1+fill)` maps unbounded fill smoothly
+///   into `[0, 1)`.
+/// * **energy** — `1 − update/state`: fresh memory moves as much as it
+///   holds (ratio ≈ 1 → 0 saturation); saturated memory barely moves
+///   relative to its own norm (ratio → 0 → saturation → 1).
+#[derive(Clone, Debug)]
+pub struct MemoryMonitor {
+    capacity_tokens: f64,
+    consumed_tokens: f64,
+    update_energy: f64,
+    state_energy: f64,
+    segments_seen: u64,
+}
+
+impl MemoryMonitor {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        MemoryMonitor {
+            capacity_tokens: cfg.phi_dim.max(1) as f64,
+            consumed_tokens: 0.0,
+            update_energy: 0.0,
+            state_energy: 0.0,
+            segments_seen: 0,
+        }
+    }
+
+    /// Record one segment boundary: `tokens` entered memory (0 for a
+    /// gated segment), with optional energy signals from the session.
+    pub fn observe(&mut self, tokens: usize, signals: Option<&SegmentSignals>) {
+        self.consumed_tokens += tokens as f64;
+        if let Some(s) = signals {
+            self.update_energy = s.update_energy;
+            self.state_energy = s.state_energy;
+        }
+        self.segments_seen += 1;
+    }
+
+    pub fn segments_seen(&self) -> u64 {
+        self.segments_seen
+    }
+
+    /// Calibrated saturation in `[0, 1]`. Strictly positive once at
+    /// least one segment has been written (fill is already nonzero).
+    pub fn saturation(&self) -> f64 {
+        if self.segments_seen == 0 {
+            return 0.0;
+        }
+        let fill = self.consumed_tokens / self.capacity_tokens;
+        let s_fill = fill / (1.0 + fill);
+        let s_energy = if self.state_energy > 0.0 {
+            (1.0 - (self.update_energy / self.state_energy).clamp(0.0, 1.0)).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        (0.6 * s_fill + 0.4 * s_energy).clamp(0.0, 1.0)
+    }
+}
+
+/// Predicted saturation of an `n_tokens`-token prompt, used at
+/// admission time before any segment has run. Only the fill signal is
+/// available up front; late in prefill the energy ratio of a memory
+/// filled this far tracks the fill curve, so the predictor assumes
+/// `s_energy ≈ s_fill` — both blend weights collapse and the
+/// prediction is the fill curve itself. Crossing [`CHUNK_THRESHOLD`]
+/// therefore means the prompt exceeds `1.5 × phi_dim` tokens.
+pub fn predicted_saturation(cfg: &ModelConfig, n_tokens: usize) -> f64 {
+    let fill = n_tokens as f64 / cfg.phi_dim.max(1) as f64;
+    fill / (1.0 + fill)
+}
+
+/// Score prompt segments for memory admission. The final segment is the
+/// query carrier (BABILong places the question last; chat places the
+/// newest turn last) and is the reference:
+///
+/// * **similarity** — fraction of the segment's distinct tokens that
+///   also appear in the query segment;
+/// * **novelty** — fraction of the segment's distinct tokens not seen
+///   in any earlier segment (repeated filler scores low).
+///
+/// Returns one score per segment; the final segment always scores
+/// `f64::INFINITY` (it is never a skip candidate).
+pub fn score_segments(segments: &[Vec<u32>]) -> Vec<f64> {
+    if segments.is_empty() {
+        return Vec::new();
+    }
+    let query: HashSet<u32> = segments[segments.len() - 1].iter().copied().collect();
+    let mut seen: HashSet<u32> = HashSet::new();
+    let mut scores = Vec::with_capacity(segments.len());
+    for (i, seg) in segments.iter().enumerate() {
+        if i == segments.len() - 1 {
+            scores.push(f64::INFINITY);
+            break;
+        }
+        let distinct: HashSet<u32> = seg.iter().copied().collect();
+        let n = distinct.len().max(1) as f64;
+        let sim = distinct.iter().filter(|t| query.contains(t)).count() as f64 / n;
+        let novel = distinct.iter().filter(|t| !seen.contains(t)).count() as f64 / n;
+        scores.push(2.0 * sim + 0.25 * novel);
+        seen.extend(distinct);
+    }
+    scores
+}
+
+/// Decide which prompt segments skip the memory write under
+/// `overflow: "select"`: a segment is skipped when its score falls
+/// below half the mean score of the skip candidates. Returns
+/// `skip[i] == true` for gated segments; the final (query) segment and
+/// single-segment prompts are never skipped.
+pub fn plan_selection(segments: &[Vec<u32>]) -> Vec<bool> {
+    let scores = score_segments(segments);
+    let n = scores.len();
+    if n <= 1 {
+        return vec![false; n];
+    }
+    let candidates = &scores[..n - 1];
+    let mean = candidates.iter().sum::<f64>() / candidates.len() as f64;
+    let threshold = 0.5 * mean;
+    let mut skip: Vec<bool> = candidates.iter().map(|&s| s < threshold).collect();
+    skip.push(false);
+    skip
+}
+
+/// Pick the best `window_segs`-segment window of the pre-query context
+/// for chunked fallback: the window whose distinct tokens overlap the
+/// query segment the most (ties broken toward the earliest window, so
+/// the choice is deterministic). Returns the `[start, end)` segment
+/// range; the query segment (`segments.len() - 1`) is excluded from the
+/// window and must be re-appended by the caller.
+pub fn choose_window(segments: &[Vec<u32>], window_segs: usize) -> (usize, usize) {
+    let n_ctx = segments.len().saturating_sub(1);
+    let w = window_segs.clamp(1, n_ctx.max(1));
+    if n_ctx <= w {
+        return (0, n_ctx);
+    }
+    let query: HashSet<u32> = segments[segments.len() - 1].iter().copied().collect();
+    let seg_score: Vec<usize> = segments[..n_ctx]
+        .iter()
+        .map(|seg| {
+            let distinct: HashSet<u32> = seg.iter().copied().collect();
+            distinct.iter().filter(|t| query.contains(t)).count()
+        })
+        .collect();
+    let mut best = (0usize, 0usize);
+    let mut best_score = usize::MAX; // sentinel: replaced on first window
+    for start in 0..=n_ctx - w {
+        let s: usize = seg_score[start..start + w].iter().sum();
+        if best_score == usize::MAX || s > best_score {
+            best = (start, start + w);
+            best_score = s;
+        }
+    }
+    best
+}
+
+/// Split a flat prompt into `seg`-sized segments (ragged tail kept), the
+/// same cut the scheduler makes — selection and windowing must see the
+/// exact segment boundaries the wavefront will use.
+pub fn segment_tokens(tokens: &[u32], seg: usize) -> Vec<Vec<u32>> {
+    tokens.chunks(seg.max(1)).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        crate::model::tests::test_config()
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [OverflowPolicy::Off, OverflowPolicy::Select, OverflowPolicy::Chunked] {
+            assert_eq!(OverflowPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(OverflowPolicy::parse("").unwrap(), OverflowPolicy::Off);
+        assert!(OverflowPolicy::parse("sideways").is_err());
+    }
+
+    #[test]
+    fn saturation_starts_at_zero_grows_monotone_and_stays_bounded() {
+        let cfg = cfg();
+        let mut m = MemoryMonitor::new(&cfg);
+        assert_eq!(m.saturation(), 0.0);
+        let mut last = 0.0;
+        for _ in 0..64 {
+            m.observe(cfg.seg, None);
+            let s = m.saturation();
+            assert!(s > 0.0 && s <= 1.0, "saturation {s} out of range");
+            assert!(s >= last, "fill-only saturation must be monotone");
+            last = s;
+        }
+        // 64 segments x 8 tokens >> phi_dim: deep in the overflow regime.
+        assert!(last > 0.5, "deeply overflowed but saturation only {last}");
+    }
+
+    #[test]
+    fn energy_ratio_moves_saturation() {
+        let cfg = cfg();
+        let mut fresh = MemoryMonitor::new(&cfg);
+        fresh.observe(cfg.seg, Some(&SegmentSignals { update_energy: 5.0, state_energy: 5.0 }));
+        let mut stale = MemoryMonitor::new(&cfg);
+        stale.observe(cfg.seg, Some(&SegmentSignals { update_energy: 0.05, state_energy: 5.0 }));
+        assert!(
+            stale.saturation() > fresh.saturation(),
+            "small updates against a large state must read as more saturated"
+        );
+    }
+
+    #[test]
+    fn predicted_matches_fill_only_observation() {
+        let cfg = cfg();
+        let n = 10 * cfg.seg;
+        let mut m = MemoryMonitor::new(&cfg);
+        for chunk in segment_tokens(&vec![0u32; n], cfg.seg) {
+            m.observe(chunk.len(), None);
+        }
+        // Signal-free observation carries only the fill term (weight
+        // 0.6); the predictor assumes the energy term tracks fill.
+        assert!((m.saturation() - 0.6 * predicted_saturation(&cfg, n)).abs() < 1e-12);
+        // A prompt 1.5x capacity is exactly the routing threshold.
+        let at = (3 * cfg.phi_dim) / 2;
+        assert!(predicted_saturation(&cfg, at + 1) > CHUNK_THRESHOLD);
+        assert!(predicted_saturation(&cfg, at - 1) < CHUNK_THRESHOLD);
+    }
+
+    #[test]
+    fn selection_keeps_query_and_query_relevant_segments() {
+        // Segment layout: [query-overlapping fact] [junk] [junk] [query].
+        let segments = vec![
+            vec![10, 24, 3, 10],       // shares tokens 10, 24 with the query
+            vec![60, 61, 62, 63],      // filler, novel
+            vec![60, 61, 62, 63],      // filler, repeated: low novelty too
+            vec![2, 10, 24],           // query segment
+        ];
+        let skip = plan_selection(&segments);
+        assert_eq!(skip.len(), 4);
+        assert!(!skip[0], "query-relevant segment must be kept");
+        assert!(!skip[3], "query segment must never be skipped");
+        assert!(skip[2], "repeated filler must be gated");
+        let scores = score_segments(&segments);
+        assert_eq!(scores[3], f64::INFINITY);
+        assert!(scores[0] > scores[2]);
+    }
+
+    #[test]
+    fn selection_never_skips_trivial_prompts() {
+        assert_eq!(plan_selection(&[vec![1, 2, 3]]), vec![false]);
+        assert!(plan_selection(&[]).is_empty());
+    }
+
+    #[test]
+    fn window_choice_is_deterministic_and_query_driven() {
+        let segments = vec![
+            vec![50, 51, 52], // no overlap
+            vec![7, 8, 9],    // full overlap with the query
+            vec![7, 60, 61],  // partial
+            vec![7, 8, 9],    // query segment
+        ];
+        assert_eq!(choose_window(&segments, 1), (1, 2));
+        // Window of 2: [1,3) scores 3+1=4, beats [0,2)=3 and ties none.
+        assert_eq!(choose_window(&segments, 2), (1, 3));
+        // Window covering everything degenerates to the full context.
+        assert_eq!(choose_window(&segments, 16), (0, 3));
+        // All-equal scores: earliest window wins (tie-break).
+        let flat = vec![vec![1], vec![1], vec![1], vec![9]];
+        assert_eq!(choose_window(&flat, 1), (0, 1));
+    }
+
+    #[test]
+    fn segmentation_matches_scheduler_cut() {
+        let toks: Vec<u32> = (0..19).collect();
+        let segs = segment_tokens(&toks, 8);
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[2], vec![16, 17, 18]);
+    }
+}

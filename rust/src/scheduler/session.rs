@@ -97,6 +97,7 @@ use std::time::Instant;
 use crate::cache::MemSnapshot;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
+use crate::quality::SegmentSignals;
 use crate::scheduler::executor::{segment_tokens, RunStats, StepBackend};
 use crate::tensor::Tensor;
 
@@ -165,6 +166,14 @@ struct Inflight {
     keep_logits: bool,
     /// Completed per-segment logits, in segment order (`keep_logits`).
     logits: Vec<Tensor>,
+    /// Absolute segment indices whose recurrent memory write is gated
+    /// (quality tier, `overflow: "select"`): the cell still runs and
+    /// its attention output feeds the next layer, but the `(A, z)`
+    /// state it would have written is restored after the launch.
+    gated: HashSet<usize>,
+    /// Quality-tier observation: `|Δ‖A‖²|` accumulated over this
+    /// request's cells since its previous segment exit.
+    energy_update_acc: f64,
     submitted: Instant,
     /// Iteration counter value when segment 0 was injected.
     first_iter: Option<u64>,
@@ -204,6 +213,12 @@ pub struct SegmentExit {
     /// The post-segment memory state, when this segment was requested
     /// via [`WavefrontSession::capture_after`].
     pub snapshot: Option<MemSnapshot>,
+    /// Quality-tier saturation signals: how much the request's
+    /// associative memory moved for this segment vs how much it already
+    /// holds. Observation only — computed on the engine thread in fixed
+    /// slot order, so they are deterministic across worker thread
+    /// counts and never influence the arithmetic.
+    pub signals: SegmentSignals,
 }
 
 /// A completed request: per-segment logits plus its slice of the
@@ -264,6 +279,10 @@ pub struct WavefrontSession {
     z: Tensor,
     /// Cell occupancy, row-major `[L * B]`; `None` = masked slot.
     tags: Vec<Option<CellTag>>,
+    /// Quality-tier observation: `‖A‖²` per `(layer, lane)` slot after
+    /// the most recent launch (f64, accumulated in fixed order on the
+    /// engine thread — deterministic across worker thread counts).
+    a_energy: Vec<f64>,
     /// Per-lane request currently streaming segments into slot 0.
     streams: Vec<Option<u64>>,
     /// Admitted requests waiting for a free lane (FIFO).
@@ -291,6 +310,7 @@ impl WavefrontSession {
             a: Tensor::zeros(&[l, lanes, cfg.d_model, cfg.phi_dim]),
             z: Tensor::zeros(&[l, lanes, cfg.phi_dim]),
             tags: vec![None; l * lanes],
+            a_energy: vec![0.0; l * lanes],
             streams: vec![None; lanes],
             pending: VecDeque::new(),
             inflight: HashMap::new(),
@@ -413,6 +433,8 @@ impl WavefrontSession {
                 events,
                 keep_logits,
                 logits: Vec::new(),
+                gated: HashSet::new(),
+                energy_update_acc: 0.0,
                 submitted: Instant::now(),
                 first_iter: None,
                 active0: 0,
@@ -463,6 +485,25 @@ impl WavefrontSession {
             None => Err(Error::Request(format!("request id {id} not in flight"))),
             Some(fl) => {
                 fl.capture.get_or_insert_with(|| Capture::new(l_total)).capture_final = true;
+                Ok(())
+            }
+        }
+    }
+
+    /// Gate the recurrent memory write for the given ABSOLUTE segment
+    /// indices of an in-flight request (quality tier,
+    /// `overflow: "select"`). A gated segment still runs — its
+    /// attention output feeds the next layer and its logits exit
+    /// normally — but the `(A, z)` state its cells would have written
+    /// is restored to the pre-segment value, as if the segment had
+    /// never entered memory. Call before the gated segments enter the
+    /// wavefront (right after submission); an empty set (the default)
+    /// is bit-identical to a build without this mechanism.
+    pub fn set_memory_gates(&mut self, id: u64, gates: HashSet<usize>) -> Result<()> {
+        match self.inflight.get_mut(&id) {
+            None => Err(Error::Request(format!("request id {id} not in flight"))),
+            Some(fl) => {
+                fl.gated = gates;
                 Ok(())
             }
         }
@@ -673,17 +714,34 @@ impl WavefrontSession {
                     mask[l * b_total + lane] = 1.0;
                     let fl = self.inflight.get(&t.req).expect("tagged request in flight");
                     if t.seg == fl.seg_offset {
-                        match &fl.resume {
+                        self.a_energy[l * b_total + lane] = match &fl.resume {
                             Some(snap) => {
                                 self.a.set_index01(l, lane, &snap.a[l]);
                                 self.z.set_index01(l, lane, &snap.z[l]);
+                                snap.a[l].data().iter().map(|&v| (v as f64) * (v as f64)).sum()
                             }
                             None => {
                                 self.a.zero_index01(l, lane);
                                 self.z.zero_index01(l, lane);
+                                0.0
                             }
-                        }
+                        };
                     }
+                }
+            }
+        }
+
+        // (3b) Memory gates (`overflow: "select"`): clone the (A, z)
+        // each gated cell is about to overwrite, to restore after the
+        // launch. The clone happens AFTER the boundary reset so a gated
+        // first segment restores the fresh (zero / snapshot) state.
+        let mut gate_saves: Vec<(usize, usize, Tensor, Tensor)> = Vec::new();
+        for l in 0..l_total {
+            for lane in 0..b_total {
+                let Some(t) = self.tags[l * b_total + lane] else { continue };
+                let fl = self.inflight.get(&t.req).expect("tagged request in flight");
+                if fl.gated.contains(&t.seg) {
+                    gate_saves.push((l, lane, self.a.index01(l, lane), self.z.index01(l, lane)));
                 }
             }
         }
@@ -692,6 +750,33 @@ impl WavefrontSession {
         let (y, a2, z2) = backend.grouped_step(&self.x_slots, &self.a, &self.z, &mask)?;
         self.a = a2;
         self.z = z2;
+
+        // (4a) Undo gated cells' memory writes: attention output `y`
+        // keeps flowing to the next layer; the recurrent state reverts.
+        for (l, lane, a_prev, z_prev) in gate_saves {
+            self.a.set_index01(l, lane, &a_prev);
+            self.z.set_index01(l, lane, &z_prev);
+        }
+
+        // (4a') Quality-tier observation (always on; pure): per-cell
+        // ‖A‖² after the launch, accumulated in fixed slot order on the
+        // engine thread so the signals are deterministic across worker
+        // thread counts. |Δ| flows into the owning request's
+        // update-energy until its next segment exit. A gated cell's
+        // state was just restored, so its delta is exactly zero.
+        {
+            let cell_floats = self.cfg.d_model * self.cfg.phi_dim;
+            let a_data = self.a.data();
+            for idx in 0..l_total * b_total {
+                let Some(t) = self.tags[idx] else { continue };
+                let slice = &a_data[idx * cell_floats..(idx + 1) * cell_floats];
+                let e: f64 = slice.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                let delta = (e - self.a_energy[idx]).abs();
+                self.a_energy[idx] = e;
+                let fl = self.inflight.get_mut(&t.req).expect("tagged request in flight");
+                fl.energy_update_acc += delta;
+            }
+        }
 
         // (4b) Snapshot capture: clone post-cell memory for
         // capture-enabled requests. Runs before (5) so a targeted
@@ -734,28 +819,45 @@ impl WavefrontSession {
         for lane in 0..b_total {
             if let Some(t) = self.tags[(l_total - 1) * b_total + lane] {
                 let logits = backend.lm_head(&y.index01(l_total - 1, lane))?;
+                // Quality-tier signals for this exit: state energy =
+                // Σ‖A‖² over the request's live cells (post-launch).
+                let state_energy: f64 = self
+                    .tags
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, tag)| matches!(tag, Some(x) if x.req == t.req))
+                    .map(|(idx, _)| self.a_energy[idx])
+                    .sum();
                 // The tensor is cloned only when BOTH the per-request
                 // accumulator and the exit-event queue need it; the
                 // common single-consumer cases move it.
-                let (event_logits, snapshot) = {
+                let (event_logits, snapshot, update_energy) = {
                     let fl = self.inflight.get_mut(&t.req).expect("exiting request in flight");
                     debug_assert_eq!(fl.seg_offset + fl.exited, t.seg, "segments exit in order");
                     fl.exited += 1;
                     let snapshot = fl.take_ready_snapshot(&self.cfg, t.seg);
+                    let update_energy = fl.energy_update_acc;
+                    fl.energy_update_acc = 0.0;
                     if fl.events {
                         if fl.keep_logits {
                             fl.logits.push(logits.clone());
                         }
-                        (Some(logits), snapshot)
+                        (Some(logits), snapshot, update_energy)
                     } else {
                         if fl.keep_logits {
                             fl.logits.push(logits);
                         }
-                        (None, snapshot)
+                        (None, snapshot, update_energy)
                     }
                 };
                 if let Some(logits) = event_logits {
-                    self.exits.push_back(SegmentExit { id: t.req, index: t.seg, logits, snapshot });
+                    self.exits.push_back(SegmentExit {
+                        id: t.req,
+                        index: t.seg,
+                        logits,
+                        snapshot,
+                        signals: SegmentSignals { update_energy, state_energy },
+                    });
                 }
                 self.try_complete(t.req);
             }
@@ -1335,6 +1437,59 @@ mod tests {
         assert!(session
             .submit_stream_resumed(3, bad, vec![tokens(8, 0)], false)
             .is_err());
+    }
+
+    #[test]
+    fn gated_segment_leaves_memory_untouched() {
+        // Gate segment 0's memory write: segment 0's own logits are
+        // unchanged (the gate only undoes the recurrent update), and
+        // segment 1 then sees EMPTY memory — bit-identical to running
+        // its tokens as a fresh request's first segment.
+        let mut b = backend(66);
+        let t1 = tokens(8, 3);
+        let t2 = tokens(8, 21);
+        let mut both = t1.clone();
+        both.extend_from_slice(&t2);
+
+        let mut session = WavefrontSession::new(cfg(), 1);
+        session.submit(1, &both).unwrap();
+        session.set_memory_gates(1, [0usize].into_iter().collect()).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        let out = session.pop_completed().unwrap();
+        assert_eq!(out.logits.len(), 2);
+        assert_eq!(out.logits[0], sequential_reference(66, &t1)[0]);
+        assert_eq!(out.logits[1], sequential_reference(66, &t2)[0]);
+
+        // No gates => the plain packed result (the off-policy identity).
+        let mut session = WavefrontSession::new(cfg(), 1);
+        session.submit(2, &both).unwrap();
+        session.set_memory_gates(2, HashSet::new()).unwrap();
+        session.run_to_completion(&mut b).unwrap();
+        let out = session.pop_completed().unwrap();
+        assert_eq!(out.logits, sequential_reference(66, &both));
+        assert!(session.set_memory_gates(2, HashSet::new()).is_err(), "completed id");
+    }
+
+    #[test]
+    fn exits_carry_energy_signals() {
+        let mut b = backend(67);
+        let mut session = WavefrontSession::new(cfg(), 1);
+        let segs = crate::scheduler::segment_tokens(&cfg(), &tokens(8 * 3, 5)).unwrap();
+        session.submit_stream(1, segs, false).unwrap();
+        session.finish_stream(1).unwrap();
+        let mut seen = 0;
+        while session.step(&mut b).unwrap() {
+            while let Some(exit) = session.pop_exited() {
+                assert!(
+                    exit.signals.state_energy > 0.0,
+                    "segment {} carries no state energy",
+                    exit.index
+                );
+                assert!(exit.signals.update_energy > 0.0);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 3);
     }
 
     #[test]

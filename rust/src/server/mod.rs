@@ -7,14 +7,17 @@
 //! ```text
 //! -> {"id": 1, "tokens": [3, 17, ...], "max_new_tokens": 64,
 //!     "temperature": 0.8?, "top_k": 40?, "seed": 7?, "deadline_ms": 5000?,
-//!     "mode": "diagonal"?, "want_logits": true?, "save": true?, "resume": 9?}
-//! <- {"id": 1, "event": "segment", "index": 0, "greedy": [...]}
+//!     "mode": "diagonal"?, "want_logits": true?, "save": true?, "resume": 9?,
+//!     "overflow": "select"?}
+//! <- {"id": 1, "event": "segment", "index": 0, "greedy": [...],
+//!     "saturation": 0.38}
 //! <- {"id": 1, "event": "token", "pos": 0, "token": 17}
 //! <- {"id": 1, "event": "token", "pos": 1, "token": 3}
 //! <- {"id": 1, "event": "done", "greedy_tail": [...], "generated": [...],
 //!     "mode": "diagonal", "latency_ms": 12.3, "segments": 4, "launches": 7,
 //!     "tokens": 128, "mean_group": 2.4, "cells": 12, "padded_cells": 6,
-//!     "occupancy": 0.83, "reused_segments": 0, "resume_token": 1?}
+//!     "occupancy": 0.83, "reused_segments": 0, "segments_skipped": 0,
+//!     "overflow_routed": false, "saturation": 0.61, "resume_token": 1?}
 //! <- {"id": 1, "event": "error", "error": "cancelled"}      # terminal, instead of done
 //! -> {"cmd": "cancel", "id": 1}                             # from ANY connection
 //! <- {"ok": true, "id": 1}
@@ -30,7 +33,8 @@
 //!     "evictions": 2, "workers": 4, "pool_cells": 148,
 //!     "pool_busy_ms": 310.2, "worker_utilization": 0.71,
 //!     "latency_ms_mean": 10.5, "latency_ms_p50": 8.2,
-//!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8}
+//!     "latency_ms_p90": 16.4, "latency_ms_p99": 32.8,
+//!     "saturation": 0.61, "segments_skipped": 3, "overflow_routed": 1}
 //! -> {"cmd": "ping"}
 //! <- {"ok": true}
 //! -> {"cmd": "shutdown"}
@@ -158,6 +162,12 @@ pub(crate) const EVENT_BUFFER: usize = 1024;
 pub(crate) struct ConnTicket {
     pub(crate) tx: mpsc::SyncSender<Event>,
     pub(crate) handle: RequestHandle,
+    /// Tenant the request was admitted under (for the completion-time
+    /// fair-share re-credit).
+    pub(crate) tenant: usize,
+    /// Decode budget (`max_new_tokens`) the admission cost charged for;
+    /// the unspent part is re-credited on the `done` frame.
+    pub(crate) budget: usize,
 }
 
 pub(crate) type Job = (GenerateRequest, ConnTicket);
@@ -303,6 +313,15 @@ impl Server {
         let q2 = queue.clone();
         let engine_thread = std::thread::spawn(move || {
             if let Err(e) = engine.serve_queue(&q2, |t: &ConnTicket, ev| {
+                if let Event::Done { stats } = &ev {
+                    // Decode-aware re-credit: admission charged the full
+                    // prompt + max_new_tokens budget; give the tenant's
+                    // fair-share clock back whatever the request didn't
+                    // actually generate (EOS, deadline, cancel-free
+                    // early stop).
+                    let excess = t.budget.saturating_sub(stats.generated.len());
+                    q2.recredit(t.tenant, excess as f64);
+                }
                 if t.tx.try_send(ev).is_err() {
                     // Slow consumer: the connection thread is stalled in
                     // a socket write and the bounded buffer is full.
@@ -638,9 +657,10 @@ fn handle_conn(
         // admitted request without its `done`/`error` frame.
         let _stream_guard = streams.enter();
         let cost = job_cost(&req);
-        if let Err(e) =
-            queue.push(LOCAL_TENANT, cost, (req, ConnTicket { tx, handle: handle.clone() }))
-        {
+        let budget = req.max_new_tokens;
+        let ticket =
+            ConnTicket { tx, handle: handle.clone(), tenant: LOCAL_TENANT, budget };
+        if let Err(e) = queue.push(LOCAL_TENANT, cost, (req, ticket)) {
             registry.lock().unwrap().remove(&wire_id);
             writeln!(writer, "{}", error_json(Some(wire_id), &e))?;
             continue;

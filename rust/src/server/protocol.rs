@@ -19,10 +19,12 @@ use crate::json::Value;
 /// returned token — `tokens` then holds only the NEW tokens, the
 /// saved history is never re-prefilled), `resume_state` (an inline
 /// [`MemSnapshot`] object — the shard coordinator's failover path;
-/// takes precedence over `resume`) and `checkpoint` (emit boundary
-/// `snapshot` frames on the serving path). Ids parse through the full
-/// `u64` path so large client-chosen ids (up to 2^53, the exact-f64
-/// range) round-trip.
+/// takes precedence over `resume`), `checkpoint` (emit boundary
+/// `snapshot` frames on the serving path) and `overflow`
+/// (`"off" | "select" | "chunked"` — the long-context memory-overflow
+/// policy; see [`crate::quality`]). Ids parse through the full `u64`
+/// path so large client-chosen ids (up to 2^53, the exact-f64 range)
+/// round-trip.
 pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<GenerateRequest> {
     let tokens = v.req("tokens")?.as_u32_vec()?;
     let id = match v.get("id") {
@@ -66,6 +68,9 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
     if v.get("checkpoint").map(Value::as_bool).transpose()?.unwrap_or(false) {
         req = req.with_checkpoint();
     }
+    if let Some(policy) = v.get("overflow") {
+        req = req.with_overflow(crate::quality::OverflowPolicy::parse(policy.as_str()?)?);
+    }
     req.mode = mode;
     req.want_logits = want_logits;
     Ok(req)
@@ -80,11 +85,12 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
 /// end clients.
 pub fn render_event(id: u64, ev: &Event) -> Value {
     match ev {
-        Event::SegmentDone { index, greedy } => Value::obj(vec![
+        Event::SegmentDone { index, greedy, saturation } => Value::obj(vec![
             ("id", Value::Num(id as f64)),
             ("event", Value::Str("segment".into())),
             ("index", Value::Num(*index as f64)),
             ("greedy", Value::arr_u32(greedy)),
+            ("saturation", Value::Num(*saturation)),
         ]),
         Event::Snapshot { index, state } => Value::obj(vec![
             ("id", Value::Num(id as f64)),
@@ -129,6 +135,9 @@ pub fn render_done(resp: &Response) -> Value {
         ("padded_cells", Value::Num(resp.stats.padded_cells as f64)),
         ("occupancy", Value::Num(resp.stats.occupancy())),
         ("reused_segments", Value::Num(resp.reused_segments as f64)),
+        ("segments_skipped", Value::Num(resp.segments_skipped as f64)),
+        ("overflow_routed", Value::Bool(resp.overflow_routed)),
+        ("saturation", Value::Num(resp.saturation)),
     ];
     if let Some(token) = resp.resume_token {
         fields.push(("resume_token", Value::Num(token as f64)));
@@ -163,11 +172,12 @@ mod tests {
         let v = Value::parse(
             r#"{"id": 7, "tokens": [5], "mode": "seq", "want_logits": true,
                 "max_new_tokens": 64, "temperature": 0.75, "top_k": 40,
-                "seed": 123, "deadline_ms": 1500}"#,
+                "seed": 123, "deadline_ms": 1500, "overflow": "select"}"#,
         )
         .unwrap();
         let r = parse_request(&v, || 0).unwrap();
         assert_eq!(r.id, 7);
+        assert_eq!(r.overflow, crate::quality::OverflowPolicy::Select);
         assert_eq!(r.mode, Some(ExecMode::Sequential));
         assert!(r.want_logits);
         assert_eq!(r.max_new_tokens, 64);
@@ -190,10 +200,12 @@ mod tests {
 
     #[test]
     fn event_frames() {
-        let seg = render_event(4, &Event::SegmentDone { index: 2, greedy: vec![7, 8] });
+        let seg =
+            render_event(4, &Event::SegmentDone { index: 2, greedy: vec![7, 8], saturation: 0.5 });
         assert_eq!(seg.req("event").unwrap().as_str().unwrap(), "segment");
         assert_eq!(seg.req("index").unwrap().as_usize().unwrap(), 2);
         assert_eq!(seg.req("greedy").unwrap().as_u32_vec().unwrap(), vec![7, 8]);
+        assert_eq!(seg.req("saturation").unwrap().as_f64().unwrap(), 0.5);
 
         let tok = render_event(4, &Event::Token { pos: 5, token: 17 });
         assert_eq!(tok.req("event").unwrap().as_str().unwrap(), "token");
@@ -217,6 +229,9 @@ mod tests {
             generated: vec![9, 10, 11],
             logits: None,
             reused_segments: 2,
+            segments_skipped: 1,
+            overflow_routed: false,
+            saturation: 0.25,
             resume_token: Some(3),
             final_state: None,
             mode_used: ExecMode::Diagonal,
@@ -235,6 +250,9 @@ mod tests {
         let v = render_done(&resp);
         assert_eq!(v.req("event").unwrap().as_str().unwrap(), "done");
         assert_eq!(v.req("reused_segments").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.req("segments_skipped").unwrap().as_usize().unwrap(), 1);
+        assert!(!v.req("overflow_routed").unwrap().as_bool().unwrap());
+        assert_eq!(v.req("saturation").unwrap().as_f64().unwrap(), 0.25);
         assert_eq!(v.req("resume_token").unwrap().as_u64().unwrap(), 3);
         assert_eq!(v.req("cells").unwrap().as_usize().unwrap(), 12);
         assert_eq!(v.req("padded_cells").unwrap().as_usize().unwrap(), 6);
@@ -345,6 +363,8 @@ mod tests {
             r#"{"tokens": [1], "id": -3}"#,              // negative id
             r#"{"tokens": [1], "max_new_tokens": 1.5}"#, // fractional budget
             r#"{"tokens": [1], "deadline_ms": "soon"}"#, // wrong type
+            r#"{"tokens": [1], "overflow": "warp"}"#,    // unknown policy
+            r#"{"tokens": [1], "overflow": 1}"#,         // wrong type
         ] {
             let v = Value::parse(bad).unwrap();
             assert!(parse_request(&v, || 0).is_err(), "{bad}");

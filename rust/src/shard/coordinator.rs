@@ -1021,6 +1021,13 @@ fn serve_pipeline(
     let mut kept_logits: Vec<Tensor> = Vec::new();
     let mut finished = false;
     let mut client_gone = false;
+    // Saturation across processes is fill-only: the per-cell energy
+    // signals live inside the workers' sessions and are not shipped
+    // over the hand-off protocol.
+    let mut monitor = crate::quality::MemoryMonitor::new(cfg);
+    if base_seg > 0 {
+        monitor.observe(base_seg * cfg.seg, None);
+    }
 
     'segments: while let Some(seg_tokens) = queue.pop_front() {
         if flag.load(Ordering::SeqCst) {
@@ -1080,7 +1087,8 @@ fn serve_pipeline(
                 client_gone = true;
             }
         };
-        let action = driver.on_exit(idx, &logits, &mut emit);
+        monitor.observe(cfg.seg, None);
+        let action = driver.on_exit(idx, &logits, monitor.saturation(), &mut emit);
         idx += 1;
         if client_gone {
             drop_stages(&mut stages);
@@ -1106,6 +1114,9 @@ fn serve_pipeline(
         generated: driver.generated.clone(),
         logits: None,
         reused_segments: base_seg,
+        segments_skipped: 0,
+        overflow_routed: false,
+        saturation: monitor.saturation(),
         resume_token: None,
         final_state: None,
         mode_used: ExecMode::Sequential,

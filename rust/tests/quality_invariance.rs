@@ -1,0 +1,195 @@
+//! Off-policy invariance of the quality tier.
+//!
+//! The memory-saturation monitor runs on every request — there is no
+//! way to turn it off. These tests pin the tier's core contract: with
+//! `overflow` unset (the default `off` policy) the monitor is
+//! observation-only, so every output byte is identical to the
+//! pre-quality-tier engine — across worker thread counts, across packed
+//! wavefront lanes, and against the sequential oracle. The saturation
+//! *measurement* itself must also be deterministic: the energy signals
+//! are accumulated in fixed slot order on the engine thread, so the
+//! reported value is bit-identical at every thread count.
+
+use diagonal_batching::config::{ExecMode, ModelConfig};
+use diagonal_batching::coordinator::{
+    Event, GenerateRequest, InferenceEngine, RequestQueue, Response,
+};
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::quality::OverflowPolicy;
+use diagonal_batching::tensor::Rng;
+
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(3);
+    let head_dim = [4usize, 8][rng.below(2)];
+    let d_model = n_heads * head_dim;
+    let k_assoc = [4usize, 8][rng.below(2)];
+    let nu = 1 + rng.below(3);
+    let seg = 4 + rng.below(8);
+    let mem = 1 + rng.below(4);
+    let n_layers = 1 + rng.below(4);
+    ModelConfig {
+        name: "quality-prop".into(),
+        vocab: 32 + rng.below(64),
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff: d_model * 2,
+        seg,
+        mem,
+        k_assoc,
+        dpfp_nu: nu,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim,
+        phi_dim: 2 * nu * k_assoc,
+        seg_total: seg + mem,
+    }
+}
+
+fn logit_bits(r: &Response) -> Vec<Vec<u32>> {
+    r.logits
+        .as_ref()
+        .expect("want_logits was set")
+        .iter()
+        .map(|t| t.data().iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// Policy off, single request: the diagonal engine with the always-on
+/// monitor is bit-identical to the sequential oracle at worker thread
+/// counts 1 and 3, the quality fields stay at their neutral values, and
+/// the measured saturation is thread-count-invariant bit for bit.
+#[test]
+fn off_policy_single_request_matches_sequential_oracle_at_every_thread_count() {
+    let mut rng = Rng::new(0x0FF1);
+    for case in 0..6 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let s = 1 + rng.below(6);
+        let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+        let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut req = GenerateRequest::new(1, prompt);
+        if rng.below(2) == 1 {
+            req = req.generate(cfg.seg);
+        }
+        req.want_logits = true;
+        // Half the cases spell the default out, proving `Off` and
+        // "unset" are the same request.
+        if rng.below(2) == 1 {
+            req = req.with_overflow(OverflowPolicy::Off);
+        }
+
+        let mut oracle = InferenceEngine::new(
+            NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+            ExecMode::Sequential,
+        );
+        let want = oracle.process(&req).unwrap();
+
+        let mut saturation_ref: Option<u64> = None;
+        for threads in [1usize, 3] {
+            let backend =
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)).with_threads(threads);
+            let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal);
+            let got = engine.process(&req).unwrap();
+            let ctx = format!("case {case} threads {threads} cfg {cfg:?}");
+
+            assert_eq!(logit_bits(&got), logit_bits(&want), "logits drifted: {ctx}");
+            assert_eq!(got.generated, want.generated, "{ctx}");
+            assert_eq!(got.greedy_tail, want.greedy_tail, "{ctx}");
+            assert_eq!(got.segments_skipped, 0, "{ctx}");
+            assert!(!got.overflow_routed, "{ctx}");
+            assert_eq!(engine.stats_handle().segments_skipped.get(), 0, "{ctx}");
+            assert_eq!(engine.stats_handle().overflow_routed.get(), 0, "{ctx}");
+
+            assert!(
+                got.saturation > 0.0 && got.saturation <= 1.0,
+                "saturation {} out of range: {ctx}",
+                got.saturation
+            );
+            match saturation_ref {
+                None => saturation_ref = Some(got.saturation.to_bits()),
+                Some(bits) => assert_eq!(
+                    got.saturation.to_bits(),
+                    bits,
+                    "saturation measurement drifted with thread count: {ctx}"
+                ),
+            }
+        }
+    }
+}
+
+/// Policy off, packed lanes: requests served through a multi-lane
+/// wavefront emit the same bytes — and the same per-request saturation
+/// — as solo sequential runs. Packing shares compute, never memory or
+/// monitor state.
+#[test]
+fn off_policy_packed_lanes_match_solo_runs() {
+    let mut rng = Rng::new(0x0FF2);
+    for case in 0..4 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let n_requests = 3 + rng.below(3);
+        let requests: Vec<GenerateRequest> = (0..n_requests)
+            .map(|i| {
+                let s = 1 + rng.below(5);
+                let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+                let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+                let mut req = GenerateRequest::new(i as u64, prompt);
+                req.want_logits = true;
+                req
+            })
+            .collect();
+
+        let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(n_requests);
+        for req in &requests {
+            queue.push((req.clone(), req.id)).unwrap();
+        }
+        queue.close();
+        let backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, seed));
+        let mut engine = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
+        let mut done: Vec<(u64, Response)> = Vec::new();
+        engine
+            .serve_queue(&queue, |t, ev| match ev {
+                Event::Done { stats } => done.push((*t, *stats)),
+                Event::Error { error } => panic!("case {case}: request {t} failed: {error}"),
+                _ => {}
+            })
+            .unwrap();
+        assert_eq!(done.len(), n_requests, "case {case}");
+        assert_eq!(engine.stats_handle().segments_skipped.get(), 0, "case {case}");
+        assert_eq!(engine.stats_handle().overflow_routed.get(), 0, "case {case}");
+        done.sort_by_key(|(id, _)| *id);
+
+        for (id, got) in &done {
+            let req = &requests[*id as usize];
+            let ctx = format!("case {case} req {id} cfg {cfg:?}");
+            let mut seq_oracle = InferenceEngine::new(
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+                ExecMode::Sequential,
+            );
+            let want = seq_oracle.process(req).unwrap();
+            assert_eq!(logit_bits(got), logit_bits(&want), "packed logits drifted: {ctx}");
+            assert_eq!(got.greedy_tail, want.greedy_tail, "{ctx}");
+            assert_eq!(got.segments_skipped, 0, "{ctx}");
+            assert!(!got.overflow_routed, "{ctx}");
+            // The saturation measurement is schedule-shaped (the energy
+            // deltas between exits cover different cell sets under
+            // sequential vs diagonal execution), so the bit-equality
+            // oracle for a packed lane is a SOLO DIAGONAL run — packing
+            // must not leak other lanes into the signals.
+            let mut diag_solo = InferenceEngine::new(
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)),
+                ExecMode::Diagonal,
+            );
+            let solo = diag_solo.process(req).unwrap();
+            assert_eq!(
+                got.saturation.to_bits(),
+                solo.saturation.to_bits(),
+                "packed saturation drifted from the solo diagonal run: {ctx}"
+            );
+        }
+    }
+}

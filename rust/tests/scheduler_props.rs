@@ -31,6 +31,12 @@
 //!    tenant mixes every ADMITTED request's output is bit-identical to
 //!    a solo sequential run at every thread count — fairness reorders
 //!    admission, never arithmetic.
+//!  * P14: segment selection (`overflow: "select"`) gates exactly the
+//!    segments the pure token-level plan (`quality::plan_selection`)
+//!    names — no more, no fewer — and the gated run's logits,
+//!    skip count and saturation are bit-identical across worker thread
+//!    counts; when the plan names nothing, the run is bit-identical to
+//!    policy-off.
 
 use diagonal_batching::config::ModelConfig;
 use diagonal_batching::model::{NativeBackend, Params};
@@ -655,6 +661,80 @@ fn p13_weighted_fair_admission_is_starvation_free_and_bitexact() {
             }
         }
     }
+}
+
+#[test]
+fn p14_selection_gates_exactly_the_planned_segments_at_every_thread_count() {
+    use diagonal_batching::config::ExecMode;
+    use diagonal_batching::coordinator::{GenerateRequest, InferenceEngine};
+    use diagonal_batching::quality::{self, OverflowPolicy};
+
+    let mut rng = Rng::new(0x145E);
+    let mut saw_skips = false;
+    for case in 0..10 {
+        let cfg = random_config(&mut rng);
+        cfg.validate().unwrap();
+        let seed = rng.next_u64();
+        let s = 2 + rng.below(8);
+        let n = s * cfg.seg - rng.below(cfg.seg.min(3)); // ragged tails too
+        let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+
+        // The oracle plan: pure arithmetic over token ids, independent
+        // of any engine or schedule.
+        let planned =
+            quality::plan_selection(&quality::segment_tokens(&prompt, cfg.seg))
+                .iter()
+                .filter(|&&skip| skip)
+                .count();
+        saw_skips |= planned > 0;
+
+        let run = |threads: usize, policy: OverflowPolicy| {
+            let backend =
+                NativeBackend::new(cfg.clone(), Params::random(&cfg, seed)).with_threads(threads);
+            let mut e = InferenceEngine::new(backend, ExecMode::Diagonal);
+            let mut req = GenerateRequest::new(1, prompt.clone()).with_overflow(policy);
+            req.want_logits = true;
+            e.process(&req).unwrap()
+        };
+        let bits = |r: &diagonal_batching::coordinator::Response| -> Vec<Vec<u32>> {
+            r.logits
+                .as_ref()
+                .unwrap()
+                .iter()
+                .map(|t| t.data().iter().map(|x| x.to_bits()).collect())
+                .collect()
+        };
+
+        let reference = run(1, OverflowPolicy::Select);
+        assert_eq!(
+            reference.segments_skipped, planned,
+            "case {case}: engine gated {} segments, plan names {planned} (cfg {cfg:?})",
+            reference.segments_skipped
+        );
+        assert!(!reference.overflow_routed, "case {case}: select must never re-route");
+
+        for threads in [2usize, 4] {
+            let got = run(threads, OverflowPolicy::Select);
+            let ctx = format!("case {case} threads {threads} cfg {cfg:?}");
+            assert_eq!(got.segments_skipped, planned, "{ctx}");
+            assert_eq!(bits(&got), bits(&reference), "gated logits drifted: {ctx}");
+            assert_eq!(
+                got.saturation.to_bits(),
+                reference.saturation.to_bits(),
+                "saturation drifted: {ctx}"
+            );
+        }
+
+        // A plan that names nothing means selection is a no-op: the run
+        // must be bit-identical to policy-off.
+        if planned == 0 {
+            let off = run(1, OverflowPolicy::Off);
+            assert_eq!(bits(&reference), bits(&off), "case {case}: empty plan must be a no-op");
+        }
+    }
+    // The generator must actually exercise the gating path, not only
+    // empty plans — otherwise the property above is vacuous.
+    assert!(saw_skips, "no random case produced a non-empty selection plan");
 }
 
 #[test]
