@@ -150,6 +150,16 @@ pub struct RuntimeConfig {
     /// `off` (the default) is bit-exact with builds that predate the
     /// quality tier.
     pub overflow: crate::quality::OverflowPolicy,
+    /// Chrome-trace output path (`--trace-file PATH`): non-empty turns
+    /// the [`trace`](crate::trace) ring on at startup and flushes the
+    /// wavefront timeline there on exit. Empty (the default) keeps
+    /// tracing off — the hot path records nothing and allocates
+    /// nothing.
+    pub trace_file: String,
+    /// Structured-log threshold (`--log-level error|warn|info|debug|trace`,
+    /// or `off`). Empty defers to the `PALLAS_LOG` env var (default
+    /// `warn`).
+    pub log_level: String,
 }
 
 impl Default for RuntimeConfig {
@@ -173,6 +183,8 @@ impl Default for RuntimeConfig {
             http: String::new(),
             tenants: Vec::new(),
             overflow: crate::quality::OverflowPolicy::Off,
+            trace_file: String::new(),
+            log_level: String::new(),
         }
     }
 }
@@ -237,6 +249,15 @@ impl RuntimeConfig {
         if let Some(x) = v.get("overflow") {
             c.overflow = x.as_str()?.parse()?;
         }
+        if let Some(x) = v.get("trace_file") {
+            c.trace_file = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("log_level") {
+            let s = x.as_str()?;
+            crate::trace::log::Level::parse(s)
+                .ok_or_else(|| Error::Config(format!("unknown log level '{s}'")))?;
+            c.log_level = s.to_string();
+        }
         Ok(c)
     }
 
@@ -285,6 +306,8 @@ impl RuntimeConfig {
                 Value::Arr(self.tenants.iter().map(|t| Value::Str(t.clone())).collect()),
             ),
             ("overflow", Value::Str(self.overflow.to_string())),
+            ("trace_file", Value::Str(self.trace_file.clone())),
+            ("log_level", Value::Str(self.log_level.clone())),
         ])
     }
 }
@@ -427,6 +450,24 @@ mod tests {
         let v = Value::parse(r#"{"overflow": "chunked"}"#).unwrap();
         assert_eq!(RuntimeConfig::from_json(&v).unwrap().overflow, OverflowPolicy::Chunked);
         let v = Value::parse(r#"{"overflow": "warp"}"#).unwrap();
+        assert!(RuntimeConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn trace_fields_roundtrip() {
+        // Defaults: tracing off, log level deferred to the env.
+        let d = RuntimeConfig::default();
+        assert!(d.trace_file.is_empty());
+        assert!(d.log_level.is_empty());
+        let v = Value::parse(r#"{"trace_file": "/tmp/trace.json", "log_level": "debug"}"#).unwrap();
+        let c = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(c.trace_file, "/tmp/trace.json");
+        assert_eq!(c.log_level, "debug");
+        let back = RuntimeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.trace_file, c.trace_file);
+        assert_eq!(back.log_level, c.log_level);
+        // Bogus levels are rejected at parse time, not at startup.
+        let v = Value::parse(r#"{"log_level": "shouty"}"#).unwrap();
         assert!(RuntimeConfig::from_json(&v).is_err());
     }
 

@@ -46,6 +46,7 @@ use crate::scheduler::{
     segment_tokens, RunStats, StepBackend, WavefrontSession,
 };
 use crate::tensor::Tensor;
+use crate::trace::{self, TraceEvent, TID_CONTROL, TID_WAVEFRONT};
 
 /// Where a request's recurrent memory starts: fresh (None on
 /// [`GenerateRequest::resume`]), a conversation the engine retained
@@ -110,6 +111,16 @@ pub struct GenerateRequest {
     /// module). `Off` (the default) never consults the quality tier for
     /// control flow, so output is bit-identical to a build without it.
     pub overflow: OverflowPolicy,
+    /// Trace id correlating this request's spans across processes
+    /// (wire field `"trace"`, HTTP `X-Trace-Id` — see
+    /// [`trace`](crate::trace)). `None` and tracing enabled: the
+    /// engine assigns one at admission. A client-supplied id is echoed
+    /// in the terminal `done` frame so hops stitch into one trace.
+    pub trace: Option<u64>,
+    /// When the request entered the serving queue (stamped by the
+    /// front end at parse time); admission observes the queue-wait
+    /// histogram and span from it. `None` on direct single-shot calls.
+    pub enqueued: Option<Instant>,
     /// Shared with every [`RequestHandle`] cloned off this request —
     /// cancellation plus the save-on-completion flag
     /// ([`with_save`](Self::with_save) / [`RequestHandle::request_save`]).
@@ -129,6 +140,8 @@ impl GenerateRequest {
             resume: None,
             checkpoint: false,
             overflow: OverflowPolicy::Off,
+            trace: None,
+            enqueued: None,
             flags: Arc::new(ReqFlags::default()),
         }
     }
@@ -183,6 +196,14 @@ impl GenerateRequest {
     /// `"chunked"` on the wire, `--overflow` on the CLI).
     pub fn with_overflow(mut self, overflow: OverflowPolicy) -> Self {
         self.overflow = overflow;
+        self
+    }
+
+    /// Builder: correlate this request's spans under an existing trace
+    /// id (cross-process propagation — the shard coordinator and the
+    /// HTTP gateway's `X-Trace-Id` use this).
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -321,6 +342,11 @@ pub struct Response {
     pub mode_used: ExecMode,
     pub stats: RunStats,
     pub latency: Duration,
+    /// The client-supplied trace id, echoed verbatim (wire field
+    /// `"trace"` in the `done` frame). Engine-assigned ids are NOT
+    /// echoed — turning tracing on must not change output bytes for
+    /// clients that did not opt in.
+    pub trace: Option<u64>,
 }
 
 /// Aggregate serving counters (shared: the engine thread writes, any
@@ -344,6 +370,17 @@ pub struct EngineStats {
     /// Tokens produced by the decode phase.
     pub generated_tokens: Counter,
     pub latency: Histogram,
+    /// Time to first generated token, measured from wavefront
+    /// admission (add `queue_wait` for arrival-relative TTFT).
+    pub ttft: Histogram,
+    /// Gap between consecutive generated tokens within one request.
+    /// Decode is segment-recurrent, so tokens arrive in per-segment
+    /// bursts: intra-burst gaps are ~0, the burst boundary carries the
+    /// real segment-step latency.
+    pub inter_token: Histogram,
+    /// Front-end enqueue to engine admission (the queue-wait stage of
+    /// every request span).
+    pub queue_wait: Histogram,
     /// Grouped/step launches across all runs and sessions. Wavefront
     /// schedules only — full-attention runs execute no grouped slots
     /// and stay out of the occupancy accounting entirely.
@@ -478,6 +515,12 @@ impl EngineStats {
             ("latency_ms_p50", Value::Num(self.latency.quantile(0.5).as_secs_f64() * 1e3)),
             ("latency_ms_p90", Value::Num(self.latency.quantile(0.9).as_secs_f64() * 1e3)),
             ("latency_ms_p99", Value::Num(self.latency.quantile(0.99).as_secs_f64() * 1e3)),
+            ("ttft_ms_p50", Value::Num(self.ttft.quantile(0.5).as_secs_f64() * 1e3)),
+            ("ttft_ms_p99", Value::Num(self.ttft.quantile(0.99).as_secs_f64() * 1e3)),
+            ("inter_token_ms_p50", Value::Num(self.inter_token.quantile(0.5).as_secs_f64() * 1e3)),
+            ("inter_token_ms_p99", Value::Num(self.inter_token.quantile(0.99).as_secs_f64() * 1e3)),
+            ("queue_wait_ms_p50", Value::Num(self.queue_wait.quantile(0.5).as_secs_f64() * 1e3)),
+            ("queue_wait_ms_p99", Value::Num(self.queue_wait.quantile(0.99).as_secs_f64() * 1e3)),
             ("kernel_flops", Value::Num(self.kernel_flops.get() as f64)),
             ("kernel_time_ms", Value::Num(self.kernel_ns.get() as f64 / 1e6)),
             ("kernel_gflops", Value::Num(self.kernel_gflops())),
@@ -637,6 +680,46 @@ struct ServeTicket<T> {
     gated: HashSet<usize>,
     /// Admission re-routed this request to a chunked context window.
     routed: bool,
+    /// Trace/latency cursors (plain POD — held even with tracing off,
+    /// because the TTFT/inter-token histograms always observe).
+    tr: ReqTrace,
+    /// The client-supplied trace id to echo in the `done` frame
+    /// (None for engine-assigned ids — see [`Response::trace`]).
+    wire_trace: Option<u64>,
+}
+
+/// Per-request tracing and token-latency state.
+#[derive(Default)]
+struct ReqTrace {
+    /// Trace id stitching this request's spans; 0 = no spans (tracing
+    /// was off at admission and the client sent no id).
+    id: u64,
+    /// Request span start, us since the trace epoch.
+    started_us: u64,
+    /// End of the previous per-segment span (the next one starts here,
+    /// so a lane's segment spans tile its residency without gaps).
+    last_span_us: u64,
+    /// Last lane this request was observed streaming on (Chrome `tid`).
+    lane: u64,
+    /// When the previous generated token was emitted (None until the
+    /// first, whose gap is the TTFT observation).
+    last_token_at: Option<Instant>,
+}
+
+/// Resolve the span trace id for a request: the client-supplied id if
+/// any, a fresh engine-assigned one when tracing is on, else 0 (no
+/// spans are recorded). Called once per request at admission.
+fn span_trace_id(req: &GenerateRequest) -> u64 {
+    match req.trace {
+        Some(t) if t != 0 => t,
+        _ => {
+            if trace::enabled() {
+                trace::next_trace_id()
+            } else {
+                0
+            }
+        }
+    }
 }
 
 /// How a request's prefill will run: which segments still need
@@ -1057,6 +1140,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                     mode_used: ExecMode::FullAttention,
                     stats,
                     latency: started.elapsed(),
+                    trace: req.trace,
                 }
             }
             ExecMode::Diagonal => {
@@ -1149,21 +1233,65 @@ impl<B: StepBackend> InferenceEngine<B> {
         }
         let mut driver = GenDriver::new(req, total_prompt);
         let deadline = req.deadline.map(|d| started + d);
+        // Span bookkeeping for the single-shot path (one lane, tid 0).
+        let tr_id = span_trace_id(req);
+        let tracing = tr_id != 0 && trace::enabled();
+        let req_start_us = if tracing { trace::now_us() } else { 0 };
+        let mut last_span_us = req_start_us;
+        let mut last_token_at: Option<Instant> = None;
+        let engine_stats = self.stats.clone();
         loop {
             if req.is_cancelled() {
                 session.cancel(0);
                 self.stats.cancelled.inc();
+                if tracing {
+                    trace::complete(
+                        "request",
+                        req_start_us,
+                        0,
+                        vec![
+                            ("trace", Value::Num(tr_id as f64)),
+                            ("id", Value::Num(req.id as f64)),
+                            ("cancelled", Value::Bool(true)),
+                        ],
+                    );
+                }
                 return Err(Error::Request("cancelled".into()));
             }
             if deadline.is_some_and(|d| Instant::now() >= d) {
                 session.cancel(0);
                 self.stats.cancelled.inc();
+                if tracing {
+                    trace::complete(
+                        "request",
+                        req_start_us,
+                        0,
+                        vec![
+                            ("trace", Value::Num(tr_id as f64)),
+                            ("id", Value::Num(req.id as f64)),
+                            ("cancelled", Value::Bool(true)),
+                            ("reason", Value::Str("deadline exceeded".into())),
+                        ],
+                    );
+                }
                 return Err(Error::Request("deadline exceeded".into()));
             }
             let progressed = session.step(&mut self.backend)?;
             while let Some(exit) = session.pop_exited() {
                 if let Some(snap) = exit.snapshot {
+                    let insert_start_us = if tracing { trace::now_us() } else { 0 };
                     self.insert_prefix(&blocks, exit.index, snap);
+                    if tracing {
+                        trace::complete(
+                            "cache_insert",
+                            insert_start_us,
+                            0,
+                            vec![
+                                ("trace", Value::Num(tr_id as f64)),
+                                ("segment", Value::Num(exit.index as f64)),
+                            ],
+                        );
+                    }
                 }
                 let written = if gates.contains(&exit.index) { 0 } else { cfg.seg };
                 monitor.observe(written, Some(&exit.signals));
@@ -1179,7 +1307,51 @@ impl<B: StepBackend> InferenceEngine<B> {
                     session.cancel(0);
                     return self.chunked_rerun(req, emit, started, ExecMode::Diagonal);
                 }
-                match driver.on_exit(exit.index, &exit.logits, sat, emit) {
+                // Segment residency: previous boundary -> this exit.
+                if tracing {
+                    let name = if exit.index < total_prompt {
+                        "prefill_segment"
+                    } else {
+                        "decode_segment"
+                    };
+                    trace::complete(
+                        name,
+                        last_span_us,
+                        0,
+                        vec![
+                            ("trace", Value::Num(tr_id as f64)),
+                            ("id", Value::Num(req.id as f64)),
+                            ("segment", Value::Num(exit.index as f64)),
+                        ],
+                    );
+                    last_span_us = trace::now_us();
+                }
+                let action = driver.on_exit(exit.index, &exit.logits, sat, &mut |ev| {
+                    if let Event::Token { pos, .. } = &ev {
+                        let now = Instant::now();
+                        match last_token_at {
+                            None => engine_stats.ttft.observe(now.duration_since(started)),
+                            Some(prev) => {
+                                engine_stats.inter_token.observe(now.duration_since(prev))
+                            }
+                        }
+                        last_token_at = Some(now);
+                        if tracing {
+                            trace::record(TraceEvent {
+                                name: "decode_token",
+                                ts_us: trace::now_us(),
+                                dur_us: 0,
+                                tid: 0,
+                                args: vec![
+                                    ("trace", Value::Num(tr_id as f64)),
+                                    ("pos", Value::Num(*pos as f64)),
+                                ],
+                            });
+                        }
+                    }
+                    emit(ev)
+                });
+                match action {
                     ExitAction::Wait => {}
                     ExitAction::Feed(seg) => session.append_segment(0, seg)?,
                     ExitAction::Finish => session.finish_stream(0)?,
@@ -1188,6 +1360,20 @@ impl<B: StepBackend> InferenceEngine<B> {
             if let Some(out) = session.pop_completed() {
                 let mut stats = out.stats;
                 stats.wall = started.elapsed();
+                if tracing {
+                    trace::complete(
+                        "request",
+                        req_start_us,
+                        0,
+                        vec![
+                            ("trace", Value::Num(tr_id as f64)),
+                            ("id", Value::Num(req.id as f64)),
+                            ("prompt_tokens", Value::Num(req.prompt.len() as f64)),
+                            ("generated", Value::Num(driver.generated.len() as f64)),
+                            ("reused_segments", Value::Num(reused as f64)),
+                        ],
+                    );
+                }
                 let (resume_token, final_state) = self.retain_final(
                     &handle,
                     &blocks,
@@ -1209,6 +1395,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                     mode_used: ExecMode::Diagonal,
                     stats,
                     latency: started.elapsed(),
+                    trace: req.trace,
                 });
             }
             if !progressed {
@@ -1261,6 +1448,12 @@ impl<B: StepBackend> InferenceEngine<B> {
         let mut driver = GenDriver::new(req, total_prompt);
         let handle = req.handle();
         let deadline = req.deadline.map(|d| started + d);
+        // Span bookkeeping (the oracle path gets the same taxonomy so
+        // off/on comparisons can trace both sides).
+        let tr_id = span_trace_id(req);
+        let tracing = tr_id != 0 && trace::enabled();
+        let req_start_us = if tracing { trace::now_us() } else { 0 };
+        let mut last_span_us = req_start_us;
 
         // Per-layer recurrent state — seeded from the snapshot on a
         // prefix hit / resume (the sequential loop is the second,
@@ -1336,6 +1529,21 @@ impl<B: StepBackend> InferenceEngine<B> {
             if chunk_eligible && abs + 1 < total_prompt && sat > quality::CHUNK_THRESHOLD {
                 return self.chunked_rerun(req, emit, started, ExecMode::Sequential);
             }
+            if tracing {
+                let name =
+                    if abs < total_prompt { "prefill_segment" } else { "decode_segment" };
+                trace::complete(
+                    name,
+                    last_span_us,
+                    0,
+                    vec![
+                        ("trace", Value::Num(tr_id as f64)),
+                        ("id", Value::Num(req.id as f64)),
+                        ("segment", Value::Num(abs as f64)),
+                    ],
+                );
+                last_span_us = trace::now_us();
+            }
             match driver.on_exit(abs, &logits, sat, emit) {
                 ExitAction::Wait | ExitAction::Finish => {}
                 ExitAction::Feed(seg) => segments.push(seg),
@@ -1344,6 +1552,19 @@ impl<B: StepBackend> InferenceEngine<B> {
                 logits_acc.push(logits);
             }
             idx += 1;
+        }
+        if tracing {
+            trace::complete(
+                "request",
+                req_start_us,
+                0,
+                vec![
+                    ("trace", Value::Num(tr_id as f64)),
+                    ("id", Value::Num(req.id as f64)),
+                    ("prompt_tokens", Value::Num(req.prompt.len() as f64)),
+                    ("generated", Value::Num(driver.generated.len() as f64)),
+                ],
+            );
         }
 
         let s_total = segments.len();
@@ -1378,6 +1599,7 @@ impl<B: StepBackend> InferenceEngine<B> {
             mode_used: ExecMode::Sequential,
             stats,
             latency: started.elapsed(),
+            trace: req.trace,
         })
     }
 
@@ -1410,6 +1632,19 @@ impl<B: StepBackend> InferenceEngine<B> {
         sub.prompt = prompt;
         sub.overflow = OverflowPolicy::Off;
         self.stats.overflow_routed.inc();
+        if trace::enabled() {
+            trace::record(TraceEvent {
+                name: "overflow_route",
+                ts_us: trace::now_us(),
+                dur_us: 0,
+                tid: TID_CONTROL,
+                args: vec![
+                    ("id", Value::Num(req.id as f64)),
+                    ("window_lo", Value::Num(lo as f64)),
+                    ("window_hi", Value::Num(hi as f64)),
+                ],
+            });
+        }
         let mut resp = match mode {
             ExecMode::Sequential => self.run_sequential_streaming(&sub, emit, started)?,
             _ => self.run_diagonal_streaming(&sub, emit, started)?,
@@ -1493,6 +1728,9 @@ impl<B: StepBackend> InferenceEngine<B> {
     {
         let mut session = WavefrontSession::new(self.backend.config().clone(), self.lanes);
         let seg_len = self.backend.config().seg;
+        // Cloned handle for the token-timing closure in the exit loop
+        // (which cannot borrow `self` while the ticket is borrowed).
+        let engine_stats = self.stats.clone();
         let mut tickets: HashMap<u64, ServeTicket<T>> = HashMap::new();
         // Session keys are engine-local: wire ids may collide across
         // connections, in-flight keys must not.
@@ -1552,10 +1790,24 @@ impl<B: StepBackend> InferenceEngine<B> {
                 self.stats.cancelled.inc();
                 let why =
                     if t.handle.is_cancelled() { "cancelled" } else { "deadline exceeded" };
+                if t.tr.started_us != 0 && trace::enabled() {
+                    trace::complete(
+                        "request",
+                        t.tr.started_us,
+                        t.tr.lane,
+                        vec![
+                            ("trace", Value::Num(t.tr.id as f64)),
+                            ("id", Value::Num(t.wire_id as f64)),
+                            ("cancelled", Value::Bool(true)),
+                            ("reason", Value::Str(why.into())),
+                        ],
+                    );
+                }
                 emit(&t.ticket, Event::Error { error: Error::Request(why.into()) });
             }
 
             // One wavefront iteration.
+            let iter_start_us = if trace::enabled() { trace::now_us() } else { 0 };
             if let Err(e) = session.step(&mut self.backend) {
                 let msg = e.to_string();
                 for (_, t) in tickets.drain() {
@@ -1575,11 +1827,11 @@ impl<B: StepBackend> InferenceEngine<B> {
             // queries stats right after its reply sees its own
             // launches/occupancy included.
             let now = session.stats();
-            self.stats.launches.add(now.launches - last.launches);
-            self.stats.occupancy.add(
-                now.cells - last.cells,
-                now.slot_steps - last.slot_steps,
-            );
+            let d_launches = now.launches - last.launches;
+            let d_cells = now.cells - last.cells;
+            let d_slots = now.slot_steps - last.slot_steps;
+            self.stats.launches.add(d_launches);
+            self.stats.occupancy.add(d_cells, d_slots);
             last = now;
 
             // Worker utilization: pool busy-time delta over the worker
@@ -1600,16 +1852,40 @@ impl<B: StepBackend> InferenceEngine<B> {
             // the flops the GEMM tier retired this iteration and the
             // time it spent retiring them.
             let kt = crate::tensor::kernel_totals();
+            let d_kernel_ns = kt.1.saturating_sub(last_kernel.1);
             self.stats.kernel_flops.add(kt.0.saturating_sub(last_kernel.0));
-            self.stats.kernel_ns.add(kt.1.saturating_sub(last_kernel.1));
+            self.stats.kernel_ns.add(d_kernel_ns);
             last_kernel = kt;
+
+            // Wavefront timeline row: one complete event per iteration
+            // on the reserved profiler track, carrying this iteration's
+            // group size, padded cells and kernel time — the Perfetto
+            // view of the paper's diagonal.
+            if iter_start_us != 0 && d_slots > 0 {
+                trace::record(TraceEvent {
+                    name: "wavefront_step",
+                    ts_us: iter_start_us,
+                    dur_us: trace::now_us().saturating_sub(iter_start_us),
+                    tid: TID_WAVEFRONT,
+                    args: vec![
+                        ("group", Value::Num(d_cells as f64)),
+                        ("padded", Value::Num(d_slots.saturating_sub(d_cells) as f64)),
+                        ("launches", Value::Num(d_launches as f64)),
+                        ("kernel_ms", Value::Num(d_kernel_ns as f64 / 1e6)),
+                        ("in_flight", Value::Num(tickets.len() as f64)),
+                    ],
+                });
+            }
 
             // Segment exits: stream partial results and run the decode
             // hand-off — sample the frontier's continuation and feed it
             // back into the same live wavefront. Prompt-boundary
             // snapshots riding the exits go into the prefix store.
             while let Some(exit) = session.pop_exited() {
+                let lane = session.lane_of(exit.id).map(|l| l as u64).unwrap_or(TID_CONTROL);
                 let Some(t) = tickets.get_mut(&exit.id) else { continue };
+                let tracing = t.tr.started_us != 0 && trace::enabled();
+                t.tr.lane = lane;
                 let checkpoint = t.checkpoint;
                 if let Some(snap) = exit.snapshot {
                     if checkpoint {
@@ -1621,15 +1897,74 @@ impl<B: StepBackend> InferenceEngine<B> {
                             },
                         );
                     }
+                    let insert_start_us = if tracing { trace::now_us() } else { 0 };
                     self.insert_prefix(&t.blocks, exit.index, snap);
+                    if tracing {
+                        trace::complete(
+                            "cache_insert",
+                            insert_start_us,
+                            lane,
+                            vec![
+                                ("trace", Value::Num(t.tr.id as f64)),
+                                ("segment", Value::Num(exit.index as f64)),
+                            ],
+                        );
+                    }
                 }
                 let written = if t.gated.contains(&exit.index) { 0 } else { seg_len };
                 t.monitor.observe(written, Some(&exit.signals));
                 let sat = t.monitor.saturation();
                 self.stats.saturation_milli.set((sat * 1e3).round() as u64);
-                let (driver, ticket) = (&mut t.driver, &t.ticket);
-                let action =
-                    driver.on_exit(exit.index, &exit.logits, sat, &mut |ev| emit(ticket, ev));
+                // Segment residency span on the lane's timeline:
+                // admission / previous exit -> this exit. With packed
+                // lanes this is what draws the paper's diagonal.
+                if tracing {
+                    let name = if exit.index < t.total_prompt {
+                        "prefill_segment"
+                    } else {
+                        "decode_segment"
+                    };
+                    trace::complete(
+                        name,
+                        t.tr.last_span_us,
+                        lane,
+                        vec![
+                            ("trace", Value::Num(t.tr.id as f64)),
+                            ("id", Value::Num(t.wire_id as f64)),
+                            ("segment", Value::Num(exit.index as f64)),
+                        ],
+                    );
+                    t.tr.last_span_us = trace::now_us();
+                }
+                let pulled = t.pulled;
+                let wire_id = t.wire_id;
+                let (driver, ticket, tr) = (&mut t.driver, &t.ticket, &mut t.tr);
+                let action = driver.on_exit(exit.index, &exit.logits, sat, &mut |ev| {
+                    if let Event::Token { pos, .. } = &ev {
+                        let token_at = Instant::now();
+                        match tr.last_token_at {
+                            None => engine_stats.ttft.observe(token_at.duration_since(pulled)),
+                            Some(prev) => engine_stats
+                                .inter_token
+                                .observe(token_at.duration_since(prev)),
+                        }
+                        tr.last_token_at = Some(token_at);
+                        if tracing {
+                            trace::record(TraceEvent {
+                                name: "decode_token",
+                                ts_us: trace::now_us(),
+                                dur_us: 0,
+                                tid: lane,
+                                args: vec![
+                                    ("trace", Value::Num(tr.id as f64)),
+                                    ("id", Value::Num(wire_id as f64)),
+                                    ("pos", Value::Num(*pos as f64)),
+                                ],
+                            });
+                        }
+                    }
+                    emit(ticket, ev)
+                });
                 let hand_off = match action {
                     ExitAction::Wait => Ok(()),
                     ExitAction::Feed(seg) => {
@@ -1662,6 +1997,20 @@ impl<B: StepBackend> InferenceEngine<B> {
                 self.stats.tokens.add(t.prompt_tokens as u64);
                 self.stats.generated_tokens.add(t.driver.generated.len() as u64);
                 self.stats.latency.observe(latency);
+                if t.tr.started_us != 0 && trace::enabled() {
+                    trace::complete(
+                        "request",
+                        t.tr.started_us,
+                        t.tr.lane,
+                        vec![
+                            ("trace", Value::Num(t.tr.id as f64)),
+                            ("id", Value::Num(t.wire_id as f64)),
+                            ("prompt_tokens", Value::Num(t.prompt_tokens as f64)),
+                            ("generated", Value::Num(t.driver.generated.len() as f64)),
+                            ("reused_segments", Value::Num(t.reused as f64)),
+                        ],
+                    );
+                }
                 let (resume_token, final_state) = self.retain_final(
                     &t.handle,
                     &t.blocks,
@@ -1683,6 +2032,7 @@ impl<B: StepBackend> InferenceEngine<B> {
                     mode_used: ExecMode::Diagonal,
                     stats: out.stats,
                     latency,
+                    trace: t.wire_trace,
                 };
                 emit(&t.ticket, Event::Done { stats: Box::new(resp) });
             }
@@ -1707,6 +2057,27 @@ impl<B: StepBackend> InferenceEngine<B> {
         if let Err(e) = self.validate(&req) {
             emit(&ticket, Event::Error { error: e });
             return false;
+        }
+        // Queue wait: front-end enqueue stamp -> this admission. The
+        // histogram is always on (atomics only); the span is back-dated
+        // to the enqueue time so it abuts the admit span in the trace.
+        let tr_id = span_trace_id(&req);
+        let admit_start_us = if tr_id != 0 && trace::enabled() { trace::now_us() } else { 0 };
+        if let Some(wait) = req.enqueued.map(|e| e.elapsed()) {
+            self.stats.queue_wait.observe(wait);
+            if admit_start_us != 0 {
+                let wait_us = wait.as_micros() as u64;
+                trace::record(TraceEvent {
+                    name: "queue_wait",
+                    ts_us: admit_start_us.saturating_sub(wait_us),
+                    dur_us: wait_us,
+                    tid: TID_CONTROL,
+                    args: vec![
+                        ("trace", Value::Num(tr_id as f64)),
+                        ("id", Value::Num(req.id as f64)),
+                    ],
+                });
+            }
         }
         // Chunked routing happens at admission on the serving path — a
         // mid-flight re-route would throw away packed wavefront work
@@ -1735,6 +2106,18 @@ impl<B: StepBackend> InferenceEngine<B> {
             req.overflow = OverflowPolicy::Off;
             routed = true;
             self.stats.overflow_routed.inc();
+            if admit_start_us != 0 {
+                trace::record(TraceEvent {
+                    name: "overflow_route",
+                    ts_us: trace::now_us(),
+                    dur_us: 0,
+                    tid: TID_CONTROL,
+                    args: vec![
+                        ("trace", Value::Num(tr_id as f64)),
+                        ("id", Value::Num(req.id as f64)),
+                    ],
+                });
+            }
         }
         let n_segments = req.prompt.len().div_ceil(self.backend.config().seg);
         // Generation always packs into the wavefront (decode is
@@ -1749,6 +2132,7 @@ impl<B: StepBackend> InferenceEngine<B> {
         };
         match resolved {
             ExecMode::Diagonal => {
+                let lookup_start_us = if admit_start_us != 0 { trace::now_us() } else { 0 };
                 let plan = match self.plan_prefill(&req) {
                     Ok(p) => p,
                     Err(e) => {
@@ -1756,6 +2140,19 @@ impl<B: StepBackend> InferenceEngine<B> {
                         return false;
                     }
                 };
+                if lookup_start_us != 0 {
+                    trace::complete(
+                        "cache_lookup",
+                        lookup_start_us,
+                        TID_CONTROL,
+                        vec![
+                            ("trace", Value::Num(tr_id as f64)),
+                            ("id", Value::Num(req.id as f64)),
+                            ("hit", Value::Bool(plan.reused > 0)),
+                            ("reused_segments", Value::Num(plan.reused as f64)),
+                        ],
+                    );
+                }
                 // Selection gates, decided before submission from token
                 // ids alone (deterministic across schedules/threads).
                 let gates: HashSet<usize> = if req.overflow == OverflowPolicy::Select {
@@ -1841,8 +2238,33 @@ impl<B: StepBackend> InferenceEngine<B> {
                                 monitor,
                                 gated: gates,
                                 routed,
+                                tr: ReqTrace {
+                                    id: tr_id,
+                                    started_us: admit_start_us,
+                                    last_span_us: if admit_start_us != 0 {
+                                        trace::now_us()
+                                    } else {
+                                        0
+                                    },
+                                    lane: TID_CONTROL,
+                                    last_token_at: None,
+                                },
+                                wire_trace: req.trace,
                             },
                         );
+                        if admit_start_us != 0 {
+                            trace::complete(
+                                "admit",
+                                admit_start_us,
+                                TID_CONTROL,
+                                vec![
+                                    ("trace", Value::Num(tr_id as f64)),
+                                    ("id", Value::Num(req.id as f64)),
+                                    ("reused_segments", Value::Num(plan.reused as f64)),
+                                    ("routed", Value::Bool(routed)),
+                                ],
+                            );
+                        }
                         true
                     }
                     Err(e) => {

@@ -12,11 +12,21 @@
 //!   -> 401 unknown/missing API key (when tenants are configured)
 //!   -> 429 token bucket tripped, or tenant queue full (load shed)
 //!   -> 400 malformed JSON / request
+//! POST /v1/cancel/{id}   cancel an in-flight request (auth-checked:
+//!                        only the admitting tenant; unknown and
+//!                        foreign ids both 404, so ids can't be probed)
 //! GET  /metrics          Prometheus text: every EngineStats field +
-//!                        gateway admission counters
+//!                        latency histograms + gateway admission counters
+//! GET  /debug/trace      Chrome-trace JSON snapshot of the span ring
+//!                        (empty array when tracing is off)
 //! GET  /healthz          200 "ok"
 //! POST /admin/shutdown   initiate engine shutdown (drains in-flight)
 //! ```
+//!
+//! Trace ids: an `X-Trace-Id` header (or the body field `"trace"`,
+//! which wins) stitches the request's spans across the gateway, the
+//! engine and any shard hops; non-numeric header values are hashed to
+//! a stable 48-bit id.
 //!
 //! Authentication: `Authorization: Bearer <key>` or `X-Api-Key: <key>`,
 //! resolved against the configured [`TenantSpec`](super::TenantSpec)s;
@@ -25,10 +35,11 @@
 //! closes (`Connection: close`) — SSE streams hold the socket for the
 //! request lifetime anyway.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::coordinator::EngineStats;
 use crate::error::{Error, Result};
@@ -58,6 +69,9 @@ pub(crate) struct HttpShared {
     /// Streaming sections register here so `Server::stop`/`join` wait
     /// for in-flight SSE streams to flush their terminal frame.
     pub(crate) streams: WaitGroup,
+    /// Which tenant admitted each in-flight HTTP wire id — the
+    /// `POST /v1/cancel/{id}` ownership check.
+    pub(crate) owners: Arc<Mutex<HashMap<u64, usize>>>,
 }
 
 /// A parsed HTTP/1.1 request (header names lowercased).
@@ -229,7 +243,23 @@ pub(crate) fn handle_http_conn(stream: TcpStream, sh: &HttpShared) -> Result<()>
             )
         }
         ("POST", "/v1/generate") => stream_generate(&req, &mut writer, sh),
-        (_, "/healthz" | "/metrics" | "/admin/shutdown" | "/v1/generate") => write_error(
+        ("POST", p) if p.starts_with("/v1/cancel/") => {
+            cancel_request(&req, &mut writer, sh)
+        }
+        ("GET", "/debug/trace") => {
+            let mut body = crate::trace::export_chrome();
+            body.push('\n');
+            write_response(&mut writer, 200, "application/json", &body, &[])
+        }
+        (_, p) if p.starts_with("/v1/cancel/") => write_error(
+            &mut writer,
+            405,
+            None,
+            &Error::Request(format!("method {} not allowed here", req.method)),
+            &[],
+        ),
+        (_, "/healthz" | "/metrics" | "/admin/shutdown" | "/v1/generate"
+        | "/debug/trace") => write_error(
             &mut writer,
             405,
             None,
@@ -299,6 +329,55 @@ pub fn serve_metrics(
     Ok(bound)
 }
 
+/// `POST /v1/cancel/{id}`: fire the cancel handle of an in-flight
+/// request admitted over HTTP. Auth-checked against the admitting
+/// tenant; unknown and foreign-tenant ids are indistinguishable (404),
+/// so wire ids cannot be probed across tenants. The engine's cancel
+/// sweep then ends the request span with `cancelled: true` and the
+/// SSE stream terminates with the standard error frame — exactly the
+/// TCP `{"cmd": "cancel"}` semantics.
+fn cancel_request(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Result<()> {
+    let tenant = match sh.sched.authenticate(req.api_key()) {
+        Ok(t) => t,
+        Err(e) => {
+            sh.sched.stats.unauthorized.inc();
+            return write_error(w, 401, None, &e, &[]);
+        }
+    };
+    let id_str = req.path.strip_prefix("/v1/cancel/").unwrap_or("");
+    let Ok(id) = id_str.parse::<u64>() else {
+        return write_error(
+            w,
+            400,
+            None,
+            &Error::Request(format!("bad request id '{id_str}'")),
+            &[],
+        );
+    };
+    let owned = sh.owners.lock().unwrap().get(&id) == Some(&tenant);
+    let handle = if owned { sh.registry.lock().unwrap().get(&id).cloned() } else { None };
+    match handle {
+        Some(h) => {
+            h.cancel();
+            sh.sched.stats.http_cancels.inc();
+            write_response(
+                w,
+                200,
+                "application/json",
+                &format!("{{\"ok\": true, \"id\": {id}}}\n"),
+                &[],
+            )
+        }
+        None => write_error(
+            w,
+            404,
+            Some(id),
+            &Error::Request(format!("no in-flight request {id}")),
+            &[],
+        ),
+    }
+}
+
 /// `POST /v1/generate`: authenticate, rate-limit, admit into the
 /// weighted-fair scheduler, stream the event frames back as SSE.
 fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Result<()> {
@@ -335,10 +414,18 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
             return candidate;
         }
     };
-    let greq = match parse_request(&v, next_auto_id) {
+    let mut greq = match parse_request(&v, next_auto_id) {
         Ok(r) => r,
         Err(e) => return write_error(w, 400, None, &e, &[]),
     };
+    // Trace propagation: the body field `"trace"` wins; otherwise an
+    // `X-Trace-Id` header stitches this hop into the caller's trace
+    // (non-numeric values hash to a stable 48-bit id).
+    if greq.trace.is_none() {
+        if let Some(h) = req.header("x-trace-id") {
+            greq = greq.with_trace(crate::trace::trace_id_from_str(h));
+        }
+    }
     let wire_id = greq.id;
     let handle = greq.handle();
     {
@@ -355,6 +442,7 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
         }
         reg.insert(wire_id, handle.clone());
     }
+    sh.owners.lock().unwrap().insert(wire_id, tenant);
     // Fair-share cost = the work the request buys: prompt + decode
     // budget, in tokens. A 1M-token burst debits its tenant
     // accordingly; small interactive requests stay cheap.
@@ -368,6 +456,7 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
     let ticket = ConnTicket { tx, handle: handle.clone(), tenant, budget };
     if let Err(e) = sh.sched.push(tenant, cost, (greq, ticket)) {
         sh.registry.lock().unwrap().remove(&wire_id);
+        sh.owners.lock().unwrap().remove(&wire_id);
         // Queue-full load shed (or closed during shutdown): 429 with
         // the standard error object, mirroring the TCP queue-full
         // frame.
@@ -427,6 +516,7 @@ fn stream_generate(req: &HttpRequest, w: &mut TcpStream, sh: &HttpShared) -> Res
         }
     }
     sh.registry.lock().unwrap().remove(&wire_id);
+    sh.owners.lock().unwrap().remove(&wire_id);
     Ok(())
 }
 

@@ -15,6 +15,7 @@ use std::fmt::Write as _;
 use crate::coordinator::EngineStats;
 use crate::gateway::{FairScheduler, GatewayStats, TenantCounters};
 use crate::json::Value;
+use crate::metrics::Histogram;
 
 /// Engine fields that only ever increase (exported as counters with
 /// the `_total` suffix). Everything else numeric is a gauge.
@@ -63,6 +64,25 @@ fn series(out: &mut String, name: &str, kind: &str, help: &str, body: &str) {
     let _ = writeln!(out, "# HELP {name} {help}");
     let _ = writeln!(out, "# TYPE {name} {kind}");
     out.push_str(body);
+}
+
+/// Render one latency [`Histogram`] as a Prometheus histogram:
+/// cumulative `_bucket{le="..."}` samples (bucket edges converted from
+/// the internal log2-microsecond scale to milliseconds), `_sum` (ms)
+/// and `_count`. `+Inf` repeats the last cumulative count so the
+/// series stays monotone even against a racing observation.
+fn append_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in h.bucket_counts().iter().enumerate() {
+        cum += c;
+        let le = Histogram::bucket_edge_us(i) as f64 / 1000.0;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", fmt_num(le));
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum {}", fmt_num(h.sum_us() as f64 / 1000.0));
+    let _ = writeln!(out, "{name}_count {cum}");
 }
 
 /// Render the full `/metrics` payload: every engine stats field, plus
@@ -152,6 +172,33 @@ pub fn render_prometheus(engine: &EngineStats, gateway: Option<&GatewayStats>) -
             }
         }
     }
+    // Full latency distributions (the scalar p50/p99 gauges above come
+    // from these same histograms; the bucket series is what Prometheus
+    // quantile queries consume).
+    for (name, help, h) in [
+        (
+            "pallas_latency_ms",
+            "End-to-end request latency, milliseconds.",
+            &engine.latency,
+        ),
+        (
+            "pallas_ttft_ms",
+            "Time from wavefront admission to first generated token, milliseconds.",
+            &engine.ttft,
+        ),
+        (
+            "pallas_inter_token_ms",
+            "Gap between consecutive generated tokens, milliseconds.",
+            &engine.inter_token,
+        ),
+        (
+            "pallas_queue_wait_ms",
+            "Front-end enqueue to engine admission, milliseconds.",
+            &engine.queue_wait,
+        ),
+    ] {
+        append_histogram(&mut out, name, help, h);
+    }
     if let Some(gw) = gateway {
         let Value::Obj(fields) = gw.to_json() else {
             unreachable!("GatewayStats::to_json() is an object");
@@ -231,6 +278,32 @@ mod tests {
         assert!(out.contains("# TYPE pallas_segments_skipped_total counter"));
         assert!(out.contains("# TYPE pallas_overflow_routed_total counter"));
         assert!(out.contains("# TYPE pallas_saturation gauge"));
+    }
+
+    #[test]
+    fn latency_histograms_export_bucket_sum_count() {
+        use std::time::Duration;
+        let stats = EngineStats::default();
+        stats.ttft.observe(Duration::from_micros(1500)); // bucket le="2.048"
+        stats.queue_wait.observe(Duration::from_micros(100));
+        stats.queue_wait.observe(Duration::from_micros(100));
+        let out = render_prometheus(&stats, None);
+        for name in
+            ["pallas_latency_ms", "pallas_ttft_ms", "pallas_inter_token_ms", "pallas_queue_wait_ms"]
+        {
+            assert!(out.contains(&format!("# TYPE {name} histogram")), "{name}");
+            assert!(out.contains(&format!("{name}_bucket{{le=\"+Inf\"}}")), "{name}");
+            assert!(out.contains(&format!("{name}_sum")), "{name}");
+            assert!(out.contains(&format!("{name}_count")), "{name}");
+        }
+        assert!(out.contains("pallas_ttft_ms_count 1"), "{out}");
+        assert!(out.contains("pallas_ttft_ms_sum 1.5"), "{out}");
+        assert!(out.contains("pallas_queue_wait_ms_count 2"));
+        // Buckets are cumulative: the 1.5ms TTFT observation lands in
+        // le="2.048" (2048us edge) and stays in every later bucket.
+        assert!(out.contains("pallas_ttft_ms_bucket{le=\"2.048\"} 1"), "{out}");
+        assert!(out.contains("pallas_ttft_ms_bucket{le=\"1.024\"} 0"), "{out}");
+        assert!(out.contains("pallas_ttft_ms_bucket{le=\"+Inf\"} 1"));
     }
 
     #[test]

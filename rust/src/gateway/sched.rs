@@ -202,6 +202,8 @@ pub struct GatewayStats {
     /// Completions that returned unused decode budget to their tenant's
     /// fair-share clock ([`FairScheduler::recredit`]).
     pub recredited: Counter,
+    /// In-flight requests cancelled via `POST /v1/cancel/{id}`.
+    pub http_cancels: Counter,
 }
 
 impl GatewayStats {
@@ -214,6 +216,7 @@ impl GatewayStats {
             ("shed", Value::Num(self.shed.get() as f64)),
             ("admitted", Value::Num(self.admitted.get() as f64)),
             ("recredited", Value::Num(self.recredited.get() as f64)),
+            ("http_cancels", Value::Num(self.http_cancels.get() as f64)),
         ])
     }
 }

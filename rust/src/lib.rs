@@ -158,6 +158,23 @@
 //! bench suite pins accuracy-vs-context curves with the policy on and
 //! off. See ARCHITECTURE.md "Quality tier".
 //!
+//! ## Observability
+//!
+//! The [`trace`] module is an always-compiled, off-by-default tracing
+//! tier: per-request spans (queue wait, admission, per-segment
+//! prefill, per-token decode, cache hits, shard hand-offs) with
+//! trace-id propagation across gateway → engine → shard workers
+//! (wire field `"trace"`, HTTP `X-Trace-Id`), exported as
+//! Chrome-trace/Perfetto JSON via `--trace-file`, `{"cmd": "trace"}`
+//! or `GET /debug/trace` — `tid` is the wavefront lane, so a packed
+//! run renders the paper's diagonal. TTFT / inter-token / queue-wait
+//! latency histograms export as Prometheus `_bucket`/`_sum`/`_count`
+//! series in `/metrics`, and [`trace::log`] is the structured JSON
+//! stderr logger (`--log-level`, `PALLAS_LOG`). Tracing off is
+//! bit-identical and allocation-free; tracing on changes no output
+//! bytes (`rust/tests/trace_invariance.rs`). See ARCHITECTURE.md
+//! "Observability tier".
+//!
 //! ## Benchmarks
 //!
 //! Every paper figure/table reproduction is a registered suite in
@@ -184,5 +201,6 @@ pub mod server;
 pub mod shard;
 pub mod simulator;
 pub mod tensor;
+pub mod trace;
 
 pub use error::{Error, Result};

@@ -137,12 +137,29 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
     if let Some(o) = flags.get("overflow") {
         cfg.overflow = o.parse()?;
     }
+    if let Some(p) = flags.get("trace-file") {
+        cfg.trace_file = p.clone();
+    }
+    if let Some(l) = flags.get("log-level") {
+        cfg.log_level = l.clone();
+    }
     // One global switch: the tensor entry points dispatch on it and the
     // config default already honors PALLAS_KERNEL, so an explicit flag
     // or config file wins over the env var here.
     diagonal_batching::tensor::set_kernel_policy(cfg.kernel);
+    // Same deal for observability: an explicit --log-level wins over
+    // PALLAS_LOG, and a --trace-file turns the span ring on for the
+    // whole process (flushed on the way out, below).
+    if !cfg.log_level.is_empty() {
+        let l = diagonal_batching::trace::log::Level::parse(&cfg.log_level)
+            .ok_or_else(|| format!("unknown log level '{}'", cfg.log_level))?;
+        diagonal_batching::trace::log::set_level(l);
+    }
+    if !cfg.trace_file.is_empty() {
+        diagonal_batching::trace::enable();
+    }
 
-    match cmd.as_str() {
+    let result = match cmd.as_str() {
         "serve" => cmd_serve(&cfg, &flags),
         // `gateway` is `serve` with the HTTP/SSE front end on by
         // default; an explicit --http still picks the bind address.
@@ -166,7 +183,17 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
             Ok(())
         }
         other => Err(format!("unknown command '{other}' (try: help)").into()),
+    };
+    if !cfg.trace_file.is_empty() {
+        let n = diagonal_batching::trace::len();
+        diagonal_batching::trace::write_file(&cfg.trace_file)?;
+        eprintln!(
+            "wrote {n} trace events to {} ({} dropped) — load in chrome://tracing or ui.perfetto.dev",
+            cfg.trace_file,
+            diagonal_batching::trace::dropped()
+        );
     }
+    result
 }
 
 fn print_usage() {
@@ -192,6 +219,14 @@ COMMON FLAGS:
                     saturating prompts through a scored segment window;
                     servers take the policy per request as the wire
                     field \"overflow\" instead
+  --trace-file PATH record request spans + the wavefront timeline and
+                    write Chrome-trace JSON here on exit (load in
+                    chrome://tracing or ui.perfetto.dev; tid = lane).
+                    Off by default — and when off, the hot path records
+                    and allocates nothing
+  --log-level L     off | error | warn | info | debug | trace — JSON-lines
+                    structured logs on stderr (overrides PALLAS_LOG;
+                    default warn)
   --config PATH     RuntimeConfig JSON
 
 SUBCOMMANDS:
@@ -277,7 +312,8 @@ SUBCOMMANDS:
             --synthetic SEED                 local engine without artifacts
   ctl       --connect HOST:PORT              one control command against a
             --cmd ping|stats|shutdown|      running server (cancel and save
-                  cancel|save                take --id N)
+                  cancel|save|trace          take --id N; trace dumps the
+                                             server's span ring as JSON)
   run       --tokens N --compare true        one forward pass (+drift check)
   bench     --suite GLOB --json PATH         the pallas-bench harness: run the
             --compare BASELINE               registered suites matching GLOB
@@ -393,8 +429,8 @@ fn cmd_serve(
     );
     if let Some(http) = server.http_addr {
         println!(
-            "gateway on http://{http} — POST /v1/generate (SSE), GET /metrics, \
-             GET /healthz, POST /admin/shutdown{}",
+            "gateway on http://{http} — POST /v1/generate (SSE), POST /v1/cancel/ID, \
+             GET /metrics, GET /debug/trace, GET /healthz, POST /admin/shutdown{}",
             if cfg.tenants.is_empty() {
                 " (open: no tenants configured)".to_string()
             } else {
@@ -600,6 +636,12 @@ fn generate_remote(
     if let Some(policy) = flags.get("overflow") {
         fields.push(("overflow", Value::Str(policy.clone())));
     }
+    // Distributed tracing: a client-supplied trace id rides the wire
+    // field, stitches the server's spans to ours, and is echoed on the
+    // done frame.
+    if let Some(t) = flags.get("trace") {
+        fields.push(("trace", Value::Num(t.parse::<u64>()? as f64)));
+    }
 
     let mut client = Client::connect(addr)?;
     // The canceller rides a second connection, like a real operator.
@@ -661,7 +703,7 @@ fn generate_remote(
 /// One control command against a running server.
 fn cmd_ctl(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let addr = flags.get("connect").ok_or("ctl needs --connect HOST:PORT")?;
-    let cmd = flags.get("cmd").ok_or("ctl needs --cmd ping|stats|shutdown|cancel|save")?;
+    let cmd = flags.get("cmd").ok_or("ctl needs --cmd ping|stats|shutdown|cancel|save|trace")?;
     let mut client = Client::connect(addr)?;
     let mut fields = vec![("cmd", Value::Str(cmd.clone()))];
     if let Some(id) = flags.get("id") {

@@ -140,6 +140,27 @@ impl Histogram {
         }
     }
 
+    /// Total observed time in microseconds (the Prometheus `_sum`,
+    /// before unit conversion).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts, index i = observations in [2^i, 2^(i+1)) us
+    /// (observations clamp to >= 1us; the last bucket is open-ended).
+    /// A relaxed snapshot — pair with [`count`](Self::count) from the
+    /// same moment only loosely (scrapes tolerate small skew).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper edge of bucket `i` in microseconds (`le` label for the
+    /// Prometheus exposition): 2^(i+1) us, matching
+    /// [`quantile`](Self::quantile)'s convention.
+    pub fn bucket_edge_us(i: usize) -> u64 {
+        1u64 << (i + 1).min(63)
+    }
+
     /// Upper edge of the bucket containing quantile `q` (0..1) — a
     /// coarse (2x) but allocation-free percentile.
     pub fn quantile(&self, q: f64) -> Duration {
@@ -241,6 +262,23 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(h.mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_buckets_are_exportable() {
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(1)); // bucket 0
+        h.observe(Duration::from_micros(3)); // bucket 1
+        h.observe(Duration::from_micros(3)); // bucket 1
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), 32);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 7);
+        // Edges are the same convention quantile() reports.
+        assert_eq!(Histogram::bucket_edge_us(0), 2);
+        assert_eq!(Histogram::bucket_edge_us(4), 32);
     }
 
     #[test]

@@ -346,6 +346,14 @@ impl WavefrontSession {
         self.inflight.is_empty()
     }
 
+    /// Lane request `id` currently streams through, or `None` while it
+    /// is still backlogged (or unknown). Spans use this as their
+    /// Chrome-trace `tid`, so a packed wavefront renders one timeline
+    /// row per lane.
+    pub fn lane_of(&self, id: u64) -> Option<usize> {
+        self.streams.iter().position(|s| *s == Some(id))
+    }
+
     /// Admit a request; it starts streaming as soon as a lane frees up
     /// (possibly this very iteration). `id` must be unique among
     /// in-flight requests.

@@ -332,7 +332,11 @@ impl Server {
                     t.handle.cancel();
                 }
             }) {
-                eprintln!("engine loop aborted: {e}");
+                crate::logline!(
+                    crate::trace::log::Level::Error,
+                    "server",
+                    "engine loop aborted: {e}"
+                );
                 // Fail fast instead of stranding clients: close the
                 // queue (new pushes get "queue closed") and fail every
                 // job already enqueued so its connection thread's
@@ -402,6 +406,7 @@ impl Server {
                     shutdown: shutdown.clone(),
                     next_id: next_id.clone(),
                     streams: streams.clone(),
+                    owners: Arc::new(std::sync::Mutex::new(std::collections::HashMap::new())),
                 });
                 let sd = shutdown.clone();
                 let thread = std::thread::spawn(move || {
@@ -475,7 +480,9 @@ impl Server {
             let _ = t.join();
         }
         if !self.streams.wait_drained(STREAM_DRAIN_TIMEOUT) {
-            eprintln!(
+            crate::logline!(
+                crate::trace::log::Level::Warn,
+                "server",
                 "shutdown: gave up waiting for stalled client streams after {:?}",
                 STREAM_DRAIN_TIMEOUT
             );
@@ -535,6 +542,22 @@ fn handle_conn(
                     )?;
                 }
                 "stats" => writeln!(writer, "{}", stats.to_json().to_json())?,
+                "trace" => {
+                    // Snapshot of the in-memory span ring (Chrome-trace
+                    // events, sorted) — works with or without
+                    // --trace-file, returns [] when tracing is off.
+                    writeln!(
+                        writer,
+                        "{}",
+                        Value::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("enabled", Value::Bool(crate::trace::enabled())),
+                            ("dropped", Value::Num(crate::trace::dropped() as f64)),
+                            ("events", crate::trace::export_value()),
+                        ])
+                        .to_json()
+                    )?;
+                }
                 "cancel" | "save" => match v.get("id").map(Value::as_u64).transpose() {
                     Ok(Some(_)) if cmd == "save" && !mid_flight_save => {
                         // Without the cache, capture is only armed for

@@ -2,7 +2,7 @@
 //! out (one JSON object per line; see the module docs of
 //! [`crate::server`] for the full protocol).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cache::MemSnapshot;
 use crate::config::ExecMode;
@@ -71,8 +71,17 @@ pub fn parse_request(v: &Value, next_id: impl FnOnce() -> u64) -> Result<Generat
     if let Some(policy) = v.get("overflow") {
         req = req.with_overflow(crate::quality::OverflowPolicy::parse(policy.as_str()?)?);
     }
+    // Client-supplied trace id: spans at every hop carry it, and the
+    // terminal `done` frame echoes it (engine-assigned ids never reach
+    // the wire — see [`Response::trace`]).
+    if let Some(t) = v.get("trace").map(Value::as_u64).transpose()? {
+        req = req.with_trace(t);
+    }
     req.mode = mode;
     req.want_logits = want_logits;
+    // Queue-wait starts now: parsing is the first thing every front end
+    // (TCP, HTTP, shard) does with a request.
+    req.enqueued = Some(Instant::now());
     Ok(req)
 }
 
@@ -141,6 +150,9 @@ pub fn render_done(resp: &Response) -> Value {
     ];
     if let Some(token) = resp.resume_token {
         fields.push(("resume_token", Value::Num(token as f64)));
+    }
+    if let Some(t) = resp.trace {
+        fields.push(("trace", Value::Num(t as f64)));
     }
     if let Some(logits) = &resp.logits {
         let norms: Vec<Value> =
@@ -246,6 +258,7 @@ mod tests {
                 tokens: 32,
             },
             latency: Duration::from_millis(2),
+            trace: None,
         };
         let v = render_done(&resp);
         assert_eq!(v.req("event").unwrap().as_str().unwrap(), "done");
@@ -351,6 +364,20 @@ mod tests {
         for (a, b) in snap.z[0].data().iter().zip(back.z[0].data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn parse_and_echo_trace_id() {
+        let v = Value::parse(r#"{"tokens": [1], "trace": 909}"#).unwrap();
+        let r = parse_request(&v, || 0).unwrap();
+        assert_eq!(r.trace, Some(909));
+        assert!(r.enqueued.is_some(), "parse stamps the queue-wait clock");
+        // Absent -> None; the done frame then omits the field entirely.
+        let r2 = parse_request(&Value::parse(r#"{"tokens": [1]}"#).unwrap(), || 0).unwrap();
+        assert_eq!(r2.trace, None);
+        // Bad types are rejected.
+        let v = Value::parse(r#"{"tokens": [1], "trace": "abc"}"#).unwrap();
+        assert!(parse_request(&v, || 0).is_err());
     }
 
     #[test]

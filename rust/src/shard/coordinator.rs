@@ -55,6 +55,7 @@ use crate::json::Value;
 use crate::scheduler::{segment_tokens, RunStats};
 use crate::server::{parse_request, render_done, render_event};
 use crate::tensor::Tensor;
+use crate::trace::{self, TraceEvent, TID_CONTROL};
 
 use super::plan::ShardPlan;
 use super::worker::{bits_value, floats_from_bits};
@@ -755,6 +756,20 @@ fn serve_lane(
                 }
                 sh.mark_dead(&worker);
                 sh.stats.shard_failovers.inc();
+                if trace::enabled() {
+                    trace::record(TraceEvent {
+                        name: "failover_resume",
+                        ts_us: trace::now_us(),
+                        dur_us: 0,
+                        tid: TID_CONTROL,
+                        args: vec![
+                            ("id", Value::Num(client_id as f64)),
+                            ("dead_worker", Value::Str(worker.clone())),
+                            ("attempt", Value::Num(lane.failovers as f64)),
+                            ("resumed_tokens", Value::Num(lane.delivered.len() as f64)),
+                        ],
+                    });
+                }
                 continue;
             }
             AttemptOutcome::Deadline => {
@@ -862,6 +877,19 @@ fn relay_frame(
             // Failover checkpoint: absorb (and count the hand-off).
             sh.stats.shard_handoffs.inc();
             sh.stats.shard_handoff_bytes.add(line.len() as u64);
+            if trace::enabled() {
+                trace::record(TraceEvent {
+                    name: "snapshot_handoff",
+                    ts_us: trace::now_us(),
+                    dur_us: 0,
+                    tid: TID_CONTROL,
+                    args: vec![
+                        ("id", Value::Num(client_id as f64)),
+                        ("worker", Value::Str(worker_addr.into())),
+                        ("bytes", Value::Num(line.len() as f64)),
+                    ],
+                });
+            }
             if let Ok(snap) = MemSnapshot::from_json(frame.req("state")?) {
                 lane.snaps.push_back(snap);
                 while lane.snaps.len() > KEEP_SNAPSHOTS {
@@ -1131,6 +1159,7 @@ fn serve_pipeline(
             tokens: req.prompt.len(),
         },
         latency: started.elapsed(),
+        trace: req.trace,
     };
     sh.stats.generated_tokens.add(resp.generated.len() as u64);
     let mut done = frame_map(&render_done(&resp));

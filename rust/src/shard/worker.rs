@@ -21,6 +21,7 @@ use crate::error::{Error, Result};
 use crate::json::Value;
 use crate::scheduler::StepBackend;
 use crate::tensor::Tensor;
+use crate::trace::{self, TID_CONTROL};
 
 /// Serialize a float slice as raw `u32` bit patterns (the same
 /// bit-exact convention as [`MemSnapshot::to_json`]).
@@ -139,6 +140,7 @@ impl ShardService {
         let (lo, hi) = (lane.lo, lane.hi);
         let cfg = self.backend.config();
         let (seg, n_layers) = (cfg.seg, cfg.n_layers);
+        let span_start = if trace::enabled() { trace::now_us() } else { 0 };
 
         let mut x = if let Some(t) = v.get("tokens") {
             if lo != 0 {
@@ -188,6 +190,19 @@ impl ShardService {
         }
         let lane = self.lanes.get(&sid).expect("still present");
         fields.push(("state", range_snapshot(self.backend.config(), lane).to_json()));
+        if span_start != 0 {
+            trace::complete(
+                "shard_segment",
+                span_start,
+                TID_CONTROL,
+                vec![
+                    ("sid", Value::Num(sid as f64)),
+                    ("layer_lo", Value::Num(lo as f64)),
+                    ("layer_hi", Value::Num(hi as f64)),
+                    ("segments", Value::Num(lane.segments as f64)),
+                ],
+            );
+        }
         Ok(Value::obj(fields))
     }
 

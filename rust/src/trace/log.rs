@@ -1,0 +1,165 @@
+//! Tiny leveled structured logger: JSON lines to stderr, trace-id
+//! correlation, no dependencies.
+//!
+//! One line per record: `{"ts_us": 1234, "level": "warn", "target":
+//! "server", "msg": "...", "trace": 77}` (`trace` only when the record
+//! is correlated with a request trace id — grep a trace id across
+//! stderr and the Chrome trace to line logs up with spans).
+//!
+//! The level comes from `--log-level` ([`set_level`]) or the
+//! `PALLAS_LOG` env var (`error|warn|info|debug|trace|off`), default
+//! **warn**. The off path for a disabled level is one relaxed atomic
+//! load — the [`logline!`](crate::logline) macro checks [`enabled`]
+//! before formatting, so disabled records never allocate.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::json::Value;
+
+/// Log severity, most severe first. `Off` disables everything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    fn from_u8(n: u8) -> Level {
+        match n {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// Sentinel: level not set yet; first read resolves `PALLAS_LOG`.
+const UNSET: u8 = 0xff;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Set the level explicitly (`--log-level`; wins over `PALLAS_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current level. First call resolves `PALLAS_LOG` (default warn) and
+/// caches it; a racing first call resolves the same value, so the
+/// race is benign.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNSET => {
+            let l = std::env::var("PALLAS_LOG")
+                .ok()
+                .and_then(|s| Level::parse(&s))
+                .unwrap_or(Level::Warn);
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        n => Level::from_u8(n),
+    }
+}
+
+/// Would a record at `l` be emitted? The cheap guard — call before
+/// formatting the message.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && (l as u8) <= (level() as u8)
+}
+
+/// Emit one structured record (level-gated). `trace` correlates the
+/// line with a request's span trace id.
+pub fn write(level: Level, target: &str, msg: &str, trace: Option<u64>) {
+    if !enabled(level) {
+        return;
+    }
+    let mut fields = vec![
+        ("ts_us", Value::Num(crate::trace::now_us() as f64)),
+        ("level", Value::Str(level.name().into())),
+        ("target", Value::Str(target.into())),
+        ("msg", Value::Str(msg.into())),
+    ];
+    if let Some(t) = trace {
+        fields.push(("trace", Value::Num(t as f64)));
+    }
+    let line = Value::obj(fields).to_json();
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = writeln!(out, "{line}");
+}
+
+/// Level-gated structured log line: `logline!(Level::Warn, "server",
+/// "engine loop aborted: {e}")`. Formats nothing when the level is
+/// disabled.
+#[macro_export]
+macro_rules! logline {
+    ($lvl:expr, $target:expr, $($arg:tt)+) => {
+        if $crate::trace::log::enabled($lvl) {
+            $crate::trace::log::write($lvl, $target, &format!($($arg)+), None);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn gating_follows_level() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        // Off is never "enabled", even at level trace.
+        set_level(Level::Trace);
+        assert!(!enabled(Level::Off));
+        assert!(enabled(Level::Trace));
+        // Restore the default so concurrent tests aren't spammed.
+        set_level(Level::Warn);
+    }
+}

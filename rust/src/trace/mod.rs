@@ -1,0 +1,319 @@
+//! Zero-dependency tracing: request spans, wavefront timeline rows,
+//! Chrome-trace export.
+//!
+//! Always compiled, **off by default**. The off path is one relaxed
+//! atomic load and no allocation — every call site guards with
+//! [`enabled`] before building span names or attrs, so serving with
+//! tracing disabled is bit-identical *and* allocation-free relative to
+//! a build without this module. Turning tracing on changes no output
+//! bytes either: spans only record timing metadata around the same
+//! computation (proven in `tests/trace_invariance.rs` against the
+//! sequential oracle).
+//!
+//! Events land in a bounded in-memory ring ([`RING_CAPACITY`] newest
+//! events; older ones are overwritten and counted in [`dropped`]).
+//! Snapshots export as Chrome-trace / Perfetto JSON — an array of
+//! complete events `{"name", "ph": "X", "ts", "dur", "pid", "tid",
+//! "args"}` with `ts`/`dur` in microseconds — via:
+//!
+//! * `--trace-file PATH` (written on engine exit),
+//! * `{"cmd": "trace"}` on the TCP protocol,
+//! * `GET /debug/trace` on the HTTP gateway.
+//!
+//! `tid` is the **wavefront lane**, `pid` the worker process, so a
+//! packed run renders as the paper's Fig. 3 diagonal: staggered
+//! per-lane prefill spans overlapping in wall time. Per-iteration
+//! `wavefront_step` rows (group size, padded cells, kernel time) land
+//! on the reserved [`TID_WAVEFRONT`] track above the lanes.
+//!
+//! Trace **ids** stitch one request's spans across processes: the
+//! gateway (or client, via the wire field `"trace"` / HTTP
+//! `X-Trace-Id`) assigns an id, the engine tags every span with it,
+//! and shard hops forward it verbatim. Ids are 48-bit (exact in JSON
+//! f64 numbers) and process-salted so independent assigners do not
+//! collide.
+
+pub mod log;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::json::Value;
+
+/// Bounded ring size: newest events win, overwritten ones are counted
+/// in [`dropped`]. 64Ki complete events ≈ a few MB — enough for
+/// thousands of requests between snapshots.
+pub const RING_CAPACITY: usize = 65536;
+
+/// Reserved `tid` for per-iteration wavefront rows (`wavefront_step`),
+/// kept clear of real lane indices so the track sorts above them.
+pub const TID_WAVEFRONT: u64 = 1_000_000;
+
+/// Reserved `tid` for process-scoped control spans (admission, queue,
+/// shard hand-off bookkeeping) that do not belong to one lane.
+pub const TID_CONTROL: u64 = 1_000_001;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One complete ("X") event on the timeline.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Microseconds since the process trace epoch ([`now_us`]).
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Lane index, or one of the reserved `TID_*` tracks.
+    pub tid: u64,
+    /// Structured attributes (`args` in the Chrome JSON). Put the
+    /// trace id here under `"trace"` so Perfetto search finds it.
+    pub args: Vec<(&'static str, Value)>,
+}
+
+/// Fixed-capacity overwrite ring. `next` is the slot the next event
+/// lands in once the buffer is full.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    next: usize,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { buf: Vec::new(), next: 0 });
+
+/// Process-wide monotonic epoch all `ts` values are relative to.
+/// Initialized on first use (or at [`enable`], so spans recorded right
+/// after enabling don't pay the init).
+fn anchor() -> &'static Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now)
+}
+
+/// Is tracing on? One relaxed load — THE hot-path guard. Call sites
+/// must check this before allocating span attrs.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the collector on (idempotent). Pins the trace epoch.
+pub fn enable() {
+    let _ = anchor();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Drop every buffered event and reset the overwrite counter.
+pub fn clear() {
+    let mut r = RING.lock().unwrap();
+    r.buf.clear();
+    r.next = 0;
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Microseconds since the process trace epoch (monotonic).
+#[inline]
+pub fn now_us() -> u64 {
+    anchor().elapsed().as_micros() as u64
+}
+
+/// Events overwritten since the last [`clear`] (ring overflow).
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Buffered event count.
+pub fn len() -> usize {
+    RING.lock().unwrap().buf.len()
+}
+
+/// Record a complete span that started at `start_us` and ends now.
+/// No-op (after one atomic load) when tracing is off — but prefer
+/// guarding with [`enabled`] so `args` is never even built.
+pub fn complete(name: &'static str, start_us: u64, tid: u64, args: Vec<(&'static str, Value)>) {
+    if !enabled() {
+        return;
+    }
+    let dur_us = now_us().saturating_sub(start_us);
+    record(TraceEvent { name, ts_us: start_us, dur_us, tid, args });
+}
+
+/// Record a fully-specified event (explicit duration — the
+/// per-iteration wavefront rows use this).
+pub fn record(ev: TraceEvent) {
+    if !enabled() {
+        return;
+    }
+    let mut r = RING.lock().unwrap();
+    if r.buf.len() < RING_CAPACITY {
+        r.buf.push(ev);
+    } else {
+        let slot = r.next;
+        r.buf[slot] = ev;
+        r.next = (slot + 1) % RING_CAPACITY;
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Allocate a fresh trace id: 48 bits, low 16 of the process id salted
+/// into the top so gateway- and worker-assigned ids do not collide.
+/// 48 bits keeps ids exact as JSON numbers (f64) on the wire.
+pub fn next_trace_id() -> u64 {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed) & 0xffff_ffff;
+    (((std::process::id() as u64) & 0xffff) << 32) | n
+}
+
+/// Parse a caller-supplied trace id (the HTTP `X-Trace-Id` header):
+/// decimal ids pass through (masked to 48 bits), anything else is
+/// FNV-1a hashed so arbitrary correlation strings still stitch.
+pub fn trace_id_from_str(s: &str) -> u64 {
+    let s = s.trim();
+    if let Ok(n) = s.parse::<u64>() {
+        if n != 0 {
+            return n & 0xffff_ffff_ffff;
+        }
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let h = h & 0xffff_ffff_ffff;
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// Snapshot the ring as a Chrome-trace JSON value: an array of
+/// complete events sorted by start time, `pid` = this process.
+pub fn export_value() -> Value {
+    let pid = std::process::id();
+    let r = RING.lock().unwrap();
+    let mut evs: Vec<TraceEvent> = r.buf.clone();
+    drop(r);
+    evs.sort_by_key(|e| (e.ts_us, e.tid));
+    Value::Arr(
+        evs.into_iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("name", Value::Str(e.name.into())),
+                    ("ph", Value::Str("X".into())),
+                    ("ts", Value::Num(e.ts_us as f64)),
+                    ("dur", Value::Num(e.dur_us as f64)),
+                    ("pid", Value::Num(pid as f64)),
+                    ("tid", Value::Num(e.tid as f64)),
+                    ("args", Value::obj(e.args)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// [`export_value`] serialized — the exact bytes `--trace-file`,
+/// `{"cmd": "trace"}` and `GET /debug/trace` ship.
+pub fn export_chrome() -> String {
+    export_value().to_json()
+}
+
+/// Write the current snapshot to `path` (the `--trace-file` flush).
+pub fn write_file(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, export_chrome())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_by_default_records_nothing() {
+        // The global collector may have been enabled by a concurrent
+        // test; force-off, record, and check nothing landed with our
+        // marker name. (Events are filtered by name because the ring
+        // is process-global.)
+        disable();
+        record(TraceEvent {
+            name: "trace_test_off_marker",
+            ts_us: 0,
+            dur_us: 1,
+            tid: 0,
+            args: vec![],
+        });
+        let json = export_chrome();
+        assert!(!json.contains("trace_test_off_marker"));
+    }
+
+    #[test]
+    fn complete_events_export_chrome_schema() {
+        enable();
+        let start = now_us();
+        complete(
+            "trace_test_span",
+            start,
+            3,
+            vec![("trace", Value::Num(42.0)), ("segment", Value::Num(1.0))],
+        );
+        let v = export_value();
+        let arr = v.as_arr().unwrap();
+        let ev = arr
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str().ok()) == Some("trace_test_span")
+            })
+            .expect("span recorded");
+        assert_eq!(ev.req("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.req("tid").unwrap().as_u64().unwrap(), 3);
+        assert!(ev.req("ts").unwrap().as_u64().unwrap() >= start);
+        assert_eq!(
+            ev.req("args").unwrap().req("trace").unwrap().as_u64().unwrap(),
+            42
+        );
+        // The export is valid JSON end-to-end.
+        let reparsed = Value::parse(&export_chrome()).unwrap();
+        assert!(reparsed.as_arr().unwrap().len() >= 1);
+        disable();
+    }
+
+    #[test]
+    fn trace_ids_are_48_bit_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, b);
+        assert!(a != 0 && a < (1u64 << 48));
+        assert!(b < (1u64 << 48));
+
+        assert_eq!(trace_id_from_str("1234"), 1234);
+        assert_eq!(trace_id_from_str(" 99 "), 99);
+        let h = trace_id_from_str("req-abc-123");
+        assert!(h != 0 && h < (1u64 << 48));
+        // Deterministic and distinct from other strings.
+        assert_eq!(h, trace_id_from_str("req-abc-123"));
+        assert_ne!(h, trace_id_from_str("req-abc-124"));
+        // id 0 / empty fall back to a nonzero hash.
+        assert_ne!(trace_id_from_str("0"), 0);
+        assert_ne!(trace_id_from_str(""), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        // Can't fill 64Ki events cheaply in a unit test without
+        // swamping concurrent tests' exports; assert the invariant on
+        // the counters instead: len() never exceeds capacity.
+        enable();
+        for _ in 0..64 {
+            record(TraceEvent {
+                name: "trace_test_fill",
+                ts_us: now_us(),
+                dur_us: 0,
+                tid: TID_CONTROL,
+                args: vec![],
+            });
+        }
+        assert!(len() <= RING_CAPACITY);
+        disable();
+    }
+}

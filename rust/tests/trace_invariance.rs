@@ -1,0 +1,338 @@
+//! Observability invariance: tracing must never change what the engine
+//! computes.
+//!
+//! The trace module's contract is two-sided. OFF (the default) the hot
+//! path records nothing and every output byte matches a build that
+//! predates the module. ON, spans only record timing metadata around
+//! the same computation — logits, greedy tails and generated tokens
+//! stay bit-identical to the sequential oracle at every worker thread
+//! count, solo and packed. These tests also pin the export format
+//! (valid Chrome-trace JSON, spans nested inside their request span,
+//! one lane per tid) and the wire contract: a client-supplied `trace`
+//! id is echoed on the done frame and stitches the server's spans,
+//! while engine-assigned ids are never echoed.
+//!
+//! The collector is process-global, so every test here serializes on
+//! one lock and leaves tracing DISABLED on exit.
+
+use std::sync::Mutex;
+
+use diagonal_batching::config::{ExecMode, ModelConfig};
+use diagonal_batching::coordinator::{
+    Event, GenerateRequest, InferenceEngine, RequestQueue, Response,
+};
+use diagonal_batching::json::Value;
+use diagonal_batching::model::{NativeBackend, Params};
+use diagonal_batching::server::{Client, Server};
+use diagonal_batching::tensor::Rng;
+use diagonal_batching::trace;
+
+/// Serializes the tests in this binary: the trace ring and the
+/// enabled flag are process-global.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn test_config() -> ModelConfig {
+    ModelConfig {
+        name: "trace-inv".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 48,
+        seg: 8,
+        mem: 2,
+        k_assoc: 4,
+        dpfp_nu: 3,
+        rope_theta: 10000.0,
+        eps: 1e-6,
+        attn_buckets: vec![],
+        head_dim: 16,
+        phi_dim: 24,
+        seg_total: 10,
+    }
+}
+
+fn engine(mode: ExecMode, threads: usize) -> InferenceEngine<NativeBackend> {
+    let cfg = test_config();
+    let backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, 77)).with_threads(threads);
+    InferenceEngine::new(backend, mode)
+}
+
+fn toks(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(64) as u32).collect()
+}
+
+fn logit_bits(r: &Response) -> Vec<Vec<u32>> {
+    r.logits
+        .as_ref()
+        .expect("want_logits was set")
+        .iter()
+        .map(|t| t.data().iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// Tracing on vs off vs the sequential oracle: bit-identical logits,
+/// greedy tails and generated tokens at worker thread counts 1 and 3.
+#[test]
+fn tracing_toggle_is_bit_identical_to_sequential_oracle() {
+    let _g = lock();
+    trace::disable();
+
+    let mut req = GenerateRequest::new(1, toks(3 * 8 + 5, 11)).generate(6);
+    req.want_logits = true;
+    let want = engine(ExecMode::Sequential, 1).process(&req).unwrap();
+
+    for threads in [1usize, 3] {
+        trace::disable();
+        let off = engine(ExecMode::Diagonal, threads).process(&req).unwrap();
+
+        trace::enable();
+        trace::clear();
+        let on = engine(ExecMode::Diagonal, threads).process(&req).unwrap();
+        let spans = trace::len();
+        trace::disable();
+
+        let ctx = format!("threads {threads}");
+        assert_eq!(logit_bits(&off), logit_bits(&want), "off-path drifted: {ctx}");
+        assert_eq!(logit_bits(&on), logit_bits(&off), "tracing changed logits: {ctx}");
+        assert_eq!(on.generated, off.generated, "tracing changed tokens: {ctx}");
+        assert_eq!(on.greedy_tail, off.greedy_tail, "tracing changed greedy tail: {ctx}");
+        assert_eq!(on.generated, want.generated, "{ctx}");
+        assert!(spans > 0, "tracing on recorded nothing: {ctx}");
+    }
+}
+
+/// A packed 4-request burst through the serving wavefront, traced:
+/// the export is valid Chrome JSON, every request's engine-assigned
+/// trace id carries prefill + decode spans nested inside its request
+/// span, lanes map to distinct tids, and the outputs still match solo
+/// untraced runs bit for bit.
+#[test]
+fn packed_burst_traces_every_request_and_stays_exact() {
+    let _g = lock();
+    trace::enable();
+    trace::clear();
+
+    let n_requests = 4usize;
+    let requests: Vec<GenerateRequest> = (0..n_requests)
+        .map(|i| GenerateRequest::new(i as u64, toks(2 * 8 + i, 40 + i as u64)).generate(5))
+        .collect();
+    let queue: RequestQueue<(GenerateRequest, u64)> = RequestQueue::new(n_requests);
+    for req in &requests {
+        queue.push((req.clone(), req.id)).unwrap();
+    }
+    queue.close();
+
+    let cfg = test_config();
+    let backend = NativeBackend::new(cfg.clone(), Params::random(&cfg, 77));
+    let mut eng = InferenceEngine::new(backend, ExecMode::Diagonal).with_lanes(2);
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    eng.serve_queue(&queue, |t, ev| match ev {
+        Event::Done { stats } => done.push((*t, *stats)),
+        Event::Error { error } => panic!("request {t} failed: {error}"),
+        _ => {}
+    })
+    .unwrap();
+    let json = trace::export_chrome();
+    trace::disable();
+    assert_eq!(done.len(), n_requests);
+
+    // Traced packed outputs == solo untraced outputs.
+    done.sort_by_key(|(id, _)| *id);
+    for (id, got) in &done {
+        let want = engine(ExecMode::Diagonal, 1).process(&requests[*id as usize]).unwrap();
+        assert_eq!(got.generated, want.generated, "req {id}: tracing/packing drifted");
+        assert_eq!(got.greedy_tail, want.greedy_tail, "req {id}");
+    }
+
+    // The export parses and every event satisfies the Chrome schema.
+    let evs = Value::parse(&json).unwrap();
+    let evs = evs.as_arr().unwrap();
+    assert!(!evs.is_empty());
+    for ev in evs {
+        assert_eq!(ev.req("ph").unwrap().as_str().unwrap(), "X");
+        for key in ["name", "ts", "dur", "pid", "tid", "args"] {
+            assert!(ev.get(key).is_some(), "event missing {key}: {}", ev.to_json());
+        }
+    }
+    let named = |name: &str| -> Vec<&Value> {
+        evs.iter()
+            .filter(|e| e.req("name").unwrap().as_str().unwrap() == name)
+            .collect()
+    };
+    let arg = |e: &Value, k: &str| e.req("args").unwrap().req(k).unwrap().as_u64().unwrap();
+
+    // One completion request span per request, distinct trace ids,
+    // spanning at least two distinct lane tids.
+    let req_spans: Vec<&Value> = named("request")
+        .into_iter()
+        .filter(|e| e.req("args").unwrap().get("cancelled").is_none())
+        .collect();
+    assert_eq!(req_spans.len(), n_requests, "one request span per request");
+    let mut ids: Vec<u64> = req_spans.iter().map(|e| arg(e, "trace")).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n_requests, "trace ids must be distinct and nonzero");
+    assert!(ids.iter().all(|&t| t != 0 && t < (1 << 48)));
+    let mut lanes: Vec<u64> =
+        req_spans.iter().map(|e| e.req("tid").unwrap().as_u64().unwrap()).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    assert!(lanes.len() >= 2, "4 requests over 2 lanes must use both: {lanes:?}");
+
+    // Every trace id has admission, >= 1 prefill and >= 1 decode span,
+    // all nested inside its request span's [ts, ts + dur].
+    for rs in &req_spans {
+        let tid = arg(rs, "trace");
+        let lo = rs.req("ts").unwrap().as_u64().unwrap();
+        let hi = lo + rs.req("dur").unwrap().as_u64().unwrap();
+        for (name, at_least) in
+            [("admit", 1usize), ("prefill_segment", 1), ("decode_token", 1)]
+        {
+            let inner: Vec<&Value> =
+                named(name).into_iter().filter(|e| arg(e, "trace") == tid).collect();
+            assert!(
+                inner.len() >= at_least,
+                "trace {tid}: want >= {at_least} {name} spans, got {}",
+                inner.len()
+            );
+            for e in inner {
+                let ts = e.req("ts").unwrap().as_u64().unwrap();
+                let end = ts + e.req("dur").unwrap().as_u64().unwrap();
+                assert!(
+                    ts >= lo && end <= hi,
+                    "trace {tid}: {name} [{ts}, {end}] outside request [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    // The wavefront timeline rows landed on their reserved track with
+    // the per-iteration shape attrs.
+    let steps = named("wavefront_step");
+    assert!(!steps.is_empty(), "no wavefront_step rows");
+    for s in &steps {
+        assert_eq!(s.req("tid").unwrap().as_u64().unwrap(), trace::TID_WAVEFRONT);
+        for key in ["group", "padded", "launches", "kernel_ms", "in_flight"] {
+            assert!(s.req("args").unwrap().get(key).is_some(), "step row missing {key}");
+        }
+    }
+}
+
+/// Wire contract over TCP: a client-supplied `trace` id is echoed on
+/// the done frame and tags the server's spans; without one, the done
+/// frame carries NO trace key even while tracing is on (engine-assigned
+/// ids must never change output bytes). Latency histogram quantiles
+/// ride the stats block either way.
+#[test]
+fn wire_trace_id_echoes_end_to_end() {
+    let _g = lock();
+    trace::enable();
+    trace::clear();
+
+    let server = Server::start(engine(ExecMode::Diagonal, 1), "127.0.0.1:0", 8).unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+
+    // With an explicit trace id: echoed verbatim, spans tagged with it.
+    let done = c
+        .request_stream(
+            &Value::obj(vec![
+                ("id", Value::Num(5.0)),
+                ("tokens", Value::arr_u32(&toks(20, 9))),
+                ("max_new_tokens", Value::Num(4.0)),
+                ("trace", Value::Num(777.0)),
+            ]),
+            |_| {},
+        )
+        .unwrap();
+    assert_eq!(done.req("trace").unwrap().as_u64().unwrap(), 777);
+    let json = trace::export_chrome();
+    let evs = Value::parse(&json).unwrap();
+    let tagged = evs
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| {
+            e.req("args")
+                .ok()
+                .and_then(|a| a.get("trace"))
+                .and_then(|t| t.as_u64().ok())
+                == Some(777)
+        })
+        .count();
+    assert!(tagged >= 2, "want request + segment spans tagged 777, got {tagged}");
+
+    // Without one: no trace key on the done frame, tracing on or off.
+    let done = c
+        .request_stream(
+            &Value::obj(vec![
+                ("id", Value::Num(6.0)),
+                ("tokens", Value::arr_u32(&toks(20, 9))),
+                ("max_new_tokens", Value::Num(4.0)),
+            ]),
+            |_| {},
+        )
+        .unwrap();
+    assert!(
+        done.get("trace").is_none(),
+        "engine-assigned ids must not leak onto the wire: {}",
+        done.to_json()
+    );
+
+    // Latency histograms surface as quantiles in the stats block.
+    let stats = c
+        .roundtrip(&Value::obj(vec![("cmd", Value::Str("stats".into()))]))
+        .unwrap();
+    for key in [
+        "ttft_ms_p50",
+        "ttft_ms_p99",
+        "inter_token_ms_p50",
+        "queue_wait_ms_p50",
+        "queue_wait_ms_p99",
+    ] {
+        assert!(stats.get(key).is_some(), "stats missing {key}: {}", stats.to_json());
+    }
+    assert!(stats.req("ttft_ms_p50").unwrap().as_f64().unwrap() >= 0.0);
+
+    // The protocol's trace dump returns the same ring as a command.
+    let dump = c
+        .roundtrip(&Value::obj(vec![("cmd", Value::Str("trace".into()))]))
+        .unwrap();
+    assert!(dump.req("ok").unwrap().as_bool().unwrap());
+    assert!(dump.req("enabled").unwrap().as_bool().unwrap());
+    assert!(!dump.req("events").unwrap().as_arr().unwrap().is_empty());
+
+    trace::disable();
+    server.stop();
+}
+
+/// Tracing off at the wire level: the done frame still echoes a
+/// client-supplied trace id (the echo is protocol-level, not a trace
+/// feature), and nothing lands in the ring.
+#[test]
+fn trace_echo_works_with_collector_off() {
+    let _g = lock();
+    trace::disable();
+    trace::clear();
+
+    let server = Server::start(engine(ExecMode::Diagonal, 1), "127.0.0.1:0", 8).unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+    let done = c
+        .request_stream(
+            &Value::obj(vec![
+                ("id", Value::Num(7.0)),
+                ("tokens", Value::arr_u32(&toks(16, 2))),
+                ("trace", Value::Num(4242.0)),
+            ]),
+            |_| {},
+        )
+        .unwrap();
+    assert_eq!(done.req("trace").unwrap().as_u64().unwrap(), 4242);
+    assert_eq!(trace::len(), 0, "collector off must record nothing");
+    server.stop();
+}
